@@ -1,0 +1,80 @@
+//! END-TO-END DRIVER (the repo's validation workload, recorded in
+//! EXPERIMENTS.md): exercises all three layers on a real small
+//! workload —
+//!
+//!   1. loads the AOT JAX/Pallas artifacts via PJRT (Layer 1/2),
+//!   2. generates every benchmark's trace through the XLA `trace_gen`
+//!      executable and cross-checks a window against the rust oracle,
+//!   3. runs the full scheme battery (Base, THP, COLT, Cluster, RMM,
+//!      Anchor-Static sweep, |K|=2/3/4) through the coordinator, and
+//!   4. prints the paper's headline rows (Fig 8 / Table 4 demand row,
+//!      Table 6 predictor accuracy) plus throughput numbers.
+//!
+//!     make artifacts && cargo run --release --example e2e_paper
+//!
+//! Falls back to the native oracle if artifacts are missing (still a
+//! complete run, but then layer 1/2 are not exercised).
+
+use katlb::coordinator::{experiments, Config};
+use katlb::runtime::{generate_trace, NativeSource, Runtime, XlaSource};
+use katlb::workloads::benchmark;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut cfg = Config {
+        trace_len: 1 << 20,
+        epoch: 1 << 18,
+        workers: 0,
+        use_xla: true,
+        max_ws_pages: Some(1 << 18),
+    };
+
+    // --- layer 1/2: artifacts through PJRT ---
+    match Runtime::load_default() {
+        Ok(rt) => {
+            println!("[1/4] PJRT runtime up (platform={})", rt.platform());
+            let wl = benchmark("mcf").unwrap();
+            let t = Instant::now();
+            let xla = generate_trace(&mut XlaSource::new(&rt, wl.seed, wl.params), 1 << 18)?;
+            let dt = t.elapsed();
+            let native =
+                generate_trace(&mut NativeSource::new(wl.seed, wl.params, 1 << 16), 1 << 18)?;
+            assert_eq!(xla, native, "XLA and native trace streams must be bit-identical");
+            println!(
+                "[2/4] XLA trace_gen: {} vpns in {:?} ({:.1} M vpn/s), bit-exact vs oracle",
+                xla.len(),
+                dt,
+                xla.len() as f64 / dt.as_secs_f64() / 1e6
+            );
+        }
+        Err(e) => {
+            println!("[1/4] artifacts unavailable ({e:#}); using native oracle");
+            cfg.use_xla = false;
+        }
+    }
+
+    // --- layer 3: the full battery over all 16 benchmarks ---
+    let t = Instant::now();
+    let ctxs = experiments::demand_contexts(&cfg)?;
+    println!("[3/4] built 16 benchmark contexts in {:?}", t.elapsed());
+
+    let t = Instant::now();
+    let data = experiments::fig8(&ctxs, &cfg);
+    let total_accesses: u64 =
+        data.raw.iter().map(|(b, rs)| b.metrics.accesses * (1 + rs.len() as u64)).sum();
+    println!(
+        "[4/4] battery done in {:?} (~{:.1} M simulated accesses/s incl. sweep)",
+        t.elapsed(),
+        total_accesses as f64 / t.elapsed().as_secs_f64() / 1e6
+    );
+    println!();
+    println!("{}", data.table.render());
+    println!("{}", experiments::fig9(&data).render());
+    let (t10, t11) = experiments::fig10_11(&data);
+    println!("{}", t10.render());
+    println!("{}", t11.render());
+    println!("{}", experiments::table6(&data).render());
+    println!("total wall time {:?}", t0.elapsed());
+    Ok(())
+}

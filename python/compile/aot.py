@@ -1,0 +1,73 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Every entry point is lowered with ``return_tuple=True`` so the rust
+side always unwraps a tuple (``to_tuple1``/``to_tuple``).
+
+Also writes ``manifest.json`` recording shapes/dtypes per artifact; the
+rust runtime cross-checks it at load time so a stale artifact directory
+fails loudly instead of feeding garbage shapes to PJRT.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": {}}
+    for name, (fn, specs) in model.entry_points().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest["constants"] = {
+        "BATCH": model.BATCH,
+        "NPAGES": model.NPAGES,
+        "MAXK": model.MAXK,
+        "SENTINEL": model.SENTINEL,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: contiguity-chunk boundary detection.
+
+Definition 1 of the paper: a contiguity chunk is a maximal run of pages
+whose VPNs *and* PPNs are both contiguously mapped.  Given the mapping
+sorted by VPN, page i starts a new chunk iff
+
+    vpn[i] != vpn[i-1] + 1   or   ppn[i] != ppn[i-1] + 1.
+
+The kernel is element-wise over (vpn, ppn, prev_vpn, prev_ppn); the L2
+model (``model.py``) materializes the shifted arrays so no cross-block
+halo is needed (BlockSpec stays a plain 1-D tiling).  Chunk sizes /
+histograms (Algorithm 3 input, Figures 2-3) are then a segmented count
+done by the caller (rust) or by ``ref.chunk_sizes`` in tests.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mapping length the AOT artifact is lowered for (pages). Shorter
+# mappings are padded by the caller with SENTINEL, which always opens a
+# boundary, so padding never merges with real chunks.
+NPAGES = 1 << 18
+BLOCK = 1 << 14
+
+# Sentinel VPN/PPN for padding: -2 (0xFFFFFFFE). prev+1 == -1 never
+# equals a real entry, and sentinel entries themselves are flagged as
+# boundaries which the caller discards via the valid-length count.
+SENTINEL = -2
+
+
+def _bounds_block(vpn, ppn, pvpn, pppn):
+    one = jnp.uint32(1)
+    brk = (vpn != pvpn + one) | (ppn != pppn + one)
+    return brk.astype(jnp.int32)
+
+
+def _kernel(vpn_ref, ppn_ref, pvpn_ref, pppn_ref, out_ref):
+    out_ref[...] = _bounds_block(
+        vpn_ref[...].astype(jnp.uint32),
+        ppn_ref[...].astype(jnp.uint32),
+        pvpn_ref[...].astype(jnp.uint32),
+        pppn_ref[...].astype(jnp.uint32),
+    )
+
+
+def chunk_bounds(vpn, ppn, prev_vpn, prev_ppn):
+    """Flag chunk-starting pages.
+
+    All args int32[NPAGES]; prev_* are the arrays shifted right by one
+    with prev[0] = SENTINEL (so index 0 is always a boundary).
+
+    Returns int32[NPAGES]: 1 where a new contiguity chunk begins.
+    """
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(NPAGES // BLOCK,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((NPAGES,), jnp.int32),
+        interpret=True,
+    )(vpn, ppn, prev_vpn, prev_ppn)

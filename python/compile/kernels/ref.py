@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Each function here is an independent re-implementation (no pallas, no
+shared block helpers except where noted) used by pytest + hypothesis to
+validate the kernels, and re-used by ``model.py`` tests to validate the
+AOT artifacts' numerics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mix32_ref(x):
+    """NumPy uint32 reference of the splitmix/wang finalizer."""
+    with np.errstate(over="ignore"):
+        x = np.asarray(x, dtype=np.uint32)
+        x = x ^ (x >> np.uint32(16))
+        x = (x * np.uint32(0x7FEB352D)).astype(np.uint32)
+        x = x ^ (x >> np.uint32(15))
+        x = (x * np.uint32(0x846CA68B)).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+        return x
+
+
+def trace_gen_ref(seed, offset, params, batch):
+    """NumPy reference of kernels.trace_gen for ``batch`` accesses."""
+    with np.errstate(over="ignore"):
+        p = np.asarray(params, dtype=np.int64).astype(np.uint32)
+        ws, hot, stride = p[0], p[1], p[2]
+        t_seq, t_stride, t_hot = p[3], p[4], p[5]
+        base, hot_base, rep, burst = p[6], p[7], p[8], p[9]
+
+        gi = (
+            np.arange(batch, dtype=np.uint32)
+            + np.uint32(np.int64(offset) & 0xFFFFFFFF)
+        )
+        seed32 = np.uint32(np.int64(seed) & 0xFFFFFFFF)
+        bi = gi >> burst
+        sel = mix32_ref(mix32_ref(bi ^ seed32) ^ np.uint32(0x9E3779B9)) & np.uint32(0xFF)
+        page_i = gi >> rep
+        r2 = mix32_ref(
+            (mix32_ref(page_i ^ seed32) + np.uint32(0x85EBCA6B)).astype(np.uint32)
+        )
+        v_seq = base + page_i % ws
+        v_str = base + (page_i * stride).astype(np.uint32) % ws
+        v_hot = hot_base + r2 % hot
+        v_cold = base + r2 % ws
+
+        vpn = np.where(
+            sel < t_seq,
+            v_seq,
+            np.where(sel < t_stride, v_str, np.where(sel < t_hot, v_hot, v_cold)),
+        )
+        return vpn.astype(np.int32)
+
+
+def chunk_bounds_ref(vpn, ppn):
+    """NumPy reference: 1 where a contiguity chunk begins (Definition 1)."""
+    vpn = np.asarray(vpn, dtype=np.int64)
+    ppn = np.asarray(ppn, dtype=np.int64)
+    brk = np.ones(len(vpn), dtype=np.int32)
+    if len(vpn) > 1:
+        cont = (vpn[1:] == vpn[:-1] + 1) & (ppn[1:] == ppn[:-1] + 1)
+        brk[1:] = (~cont).astype(np.int32)
+    return brk
+
+
+def chunk_sizes(vpn, ppn):
+    """Chunk sizes (Definition 1) from a VPN-sorted mapping."""
+    brk = chunk_bounds_ref(vpn, ppn)
+    starts = np.flatnonzero(brk)
+    ends = np.append(starts[1:], len(vpn))
+    return (ends - starts).astype(np.int64)
+
+
+def align_batch_ref(vpn, ks):
+    """NumPy reference of kernels.align.align_batch."""
+    vpn = np.asarray(vpn, dtype=np.int64).astype(np.uint32)
+    ks = np.asarray(ks, dtype=np.int64).astype(np.uint32)
+    mask = ((np.uint32(1) << ks) - np.uint32(1)).astype(np.uint32)
+    aligned = (vpn[None, :] & ~mask[:, None]).astype(np.int32)
+    delta = (vpn[None, :] & mask[:, None]).astype(np.int32)
+    return aligned, delta
+
+
+def trace_gen_jnp(seed, offset, params, batch):
+    """jnp (traceable) reference used to A/B the lowered HLO itself."""
+    from . import trace_gen as tg
+
+    gi = jnp.arange(batch, dtype=jnp.uint32) + offset.astype(jnp.uint32)[0]
+    return tg._trace_block(
+        gi, seed.astype(jnp.uint32)[0], params.astype(jnp.uint32)
+    ).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: synthetic memory-access trace generation.
+
+This is the compute hot-spot of the reproduction: the paper drives its
+TLB simulator with 10B-instruction Pin traces; we generate equivalent
+page-level access streams from parameterized workload descriptors.  The
+kernel is a pure element-wise integer pipeline (counter-based PRNG +
+pattern mixing), so it blocks trivially over the batch dimension.
+
+Determinism contract: the rust-native oracle
+(``rust/src/workloads/tracegen.rs``) implements bit-for-bit identical
+uint32 arithmetic; an integration test asserts the XLA-produced stream
+equals the rust stream.
+
+Parameter vector layout (uint32[16], passed as int32 and bitcast):
+
+  idx  meaning
+  0    ws_pages      working-set size in pages (>= 1)
+  1    hot_pages     hot-region size in pages (>= 1)
+  2    stride        stride in pages for the strided stream (>= 1)
+  3    t_seq         pattern threshold: sel < t_seq        -> sequential
+  4    t_stride      cumulative:        sel < t_stride     -> strided
+  5    t_hot         cumulative:        sel < t_hot        -> hot random
+                     (else cold random over the working set)
+  6    base_vpn      first VPN of the working set
+  7    hot_base_vpn  first VPN of the hot region
+  8    repeat_shift  seq/stride streams advance one page every
+                     2^repeat_shift accesses (temporal locality knob)
+  9    burst_shift   pattern re-selection period: the stream stays in
+                     one pattern for 2^burst_shift accesses (spatial
+                     run-locality knob; real programs switch streams in
+                     bursts, not per access)
+  10..15 reserved (must be 0)
+
+Pattern selector ``sel`` is 8-bit (0..=255); thresholds are cumulative.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch (trace chunk) length the AOT artifact is lowered for, and the
+# Pallas block size.  BLOCK * 4B * O(4) live arrays ~= 128KiB << 16MiB
+# VMEM; see DESIGN.md section "Hardware adaptation".
+BATCH = 1 << 16
+BLOCK = 1 << 13
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+_C2 = 0x85EBCA6B
+
+
+def mix32(x):
+    """splitmix/wang-style 32-bit finalizer (uint32 in, uint32 out)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _trace_block(gi, seed, p):
+    """Compute VPNs for global indices ``gi`` (uint32 vector).
+
+    Shared by the Pallas kernel body and the pure-jnp reference so the
+    two cannot drift; ``ref.py`` re-exports this under test.
+    """
+    ws = p[0]
+    hot = p[1]
+    stride = p[2]
+    t_seq = p[3]
+    t_stride = p[4]
+    t_hot = p[5]
+    base = p[6]
+    hot_base = p[7]
+    rep = p[8]
+    burst = p[9]
+
+    bi = gi >> burst  # burst index: pattern fixed within a burst
+    sel = mix32(mix32(bi ^ seed) ^ jnp.uint32(_GOLDEN)) & jnp.uint32(0xFF)
+    page_i = gi >> rep  # temporal locality: dwell 2^rep accesses per page
+    # random streams also dwell per page_i (object-level locality)
+    r2 = mix32(mix32(page_i ^ seed) + jnp.uint32(_C2))
+    v_seq = base + page_i % ws
+    v_str = base + (page_i * stride) % ws
+    v_hot = hot_base + r2 % hot
+    v_cold = base + r2 % ws
+
+    vpn = jnp.where(
+        sel < t_seq,
+        v_seq,
+        jnp.where(sel < t_stride, v_str, jnp.where(sel < t_hot, v_hot, v_cold)),
+    )
+    return vpn
+
+
+def _kernel(seed_ref, off_ref, params_ref, out_ref):
+    blk = pl.program_id(0)
+    seed = seed_ref[0].astype(jnp.uint32)
+    off = off_ref[0].astype(jnp.uint32)
+    p = params_ref[...].astype(jnp.uint32)
+    gi = (
+        jnp.arange(BLOCK, dtype=jnp.uint32)
+        + jnp.uint32(blk * BLOCK)
+        + off
+    )
+    out_ref[...] = _trace_block(gi, seed, p).astype(jnp.int32)
+
+
+def trace_gen(seed, offset, params):
+    """Generate one BATCH-long chunk of page-level VPNs.
+
+    Args:
+      seed:   int32[1]  — stream seed (uint32 bit pattern).
+      offset: int32[1]  — global index of the first access in this chunk.
+      params: int32[16] — workload descriptor, see module docstring.
+
+    Returns:
+      int32[BATCH] — VPNs (non-negative; fits in 31 bits by contract:
+      base_vpn + ws_pages < 2^31).
+    """
+    return pl.pallas_call(
+        _kernel,
+        grid=(BATCH // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(seed, offset, params)

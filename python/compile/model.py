@@ -1,0 +1,65 @@
+"""Layer-2 JAX model: the AOT entry points the rust runtime executes.
+
+Three compute graphs, each composed from the Layer-1 Pallas kernels and
+lowered once by ``aot.py`` to HLO text:
+
+  * ``trace_batch``     — one trace chunk of BATCH page-level VPNs
+                          (drives the TLB simulator; the hot path).
+  * ``mapping_bounds``  — contiguity-chunk boundary flags over a
+                          mapping (Figures 2/3, Algorithm 3 input).
+  * ``alignment_batch`` — per-alignment aligned-VPN/delta annotation of
+                          a trace chunk (Table 6 / Figure 7 analyses).
+
+Python runs only at build time; the rust coordinator loads the lowered
+HLO via PJRT and calls it on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import align as align_k
+from .kernels import contiguity as contig_k
+from .kernels import trace_gen as trace_k
+
+BATCH = trace_k.BATCH
+NPAGES = contig_k.NPAGES
+MAXK = align_k.MAXK
+SENTINEL = contig_k.SENTINEL
+
+
+def trace_batch(seed, offset, params):
+    """int32[1], int32[1], int32[16] -> int32[BATCH] VPN chunk."""
+    return trace_k.trace_gen(seed, offset, params)
+
+
+def mapping_bounds(vpn, ppn):
+    """int32[NPAGES] x2 (VPN-sorted, SENTINEL-padded) -> int32[NPAGES].
+
+    The shifted ``prev`` arrays are built here (one concatenate each)
+    so the Pallas kernel stays a halo-free 1-D tiling; XLA fuses the
+    pad+slice into the surrounding elementwise graph.
+    """
+    sent = jnp.full((1,), SENTINEL, dtype=jnp.int32)
+    prev_vpn = jnp.concatenate([sent, vpn[:-1]])
+    prev_ppn = jnp.concatenate([sent, ppn[:-1]])
+    return contig_k.chunk_bounds(vpn, ppn, prev_vpn, prev_ppn)
+
+
+def alignment_batch(vpn, ks):
+    """int32[BATCH], int32[MAXK] -> (int32[MAXK,BATCH], int32[MAXK,BATCH])."""
+    return align_k.align_batch(vpn, ks)
+
+
+# ---------------------------------------------------------------------------
+# Example arguments (shape specs) for AOT lowering — single source of
+# truth shared by aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+def entry_points():
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return {
+        "trace_gen": (trace_batch, (s((1,), i32), s((1,), i32), s((16,), i32))),
+        "contiguity": (mapping_bounds, (s((NPAGES,), i32), s((NPAGES,), i32))),
+        "align": (alignment_batch, (s((BATCH,), i32), s((MAXK,), i32))),
+    }

@@ -1,0 +1,72 @@
+"""K-bit alignment kernel vs oracle (Algorithms 1/2 arithmetic)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+B = model.BATCH
+MAXK = model.MAXK
+
+
+def run_kernel(vpn, ks):
+    a, d = model.alignment_batch(
+        jnp.array(vpn, dtype=jnp.int32), jnp.array(ks, dtype=jnp.int32)
+    )
+    return np.asarray(a), np.asarray(d)
+
+
+class TestKernelVsRef:
+    def test_basic(self):
+        vpn = np.arange(B, dtype=np.int32)
+        ks = [0, 2, 4, 8]
+        a, d = run_kernel(vpn, ks)
+        ar, dr = ref.align_batch_ref(vpn, ks)
+        assert np.array_equal(a, ar) and np.array_equal(d, dr)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        ks=st.lists(st.integers(0, 20), min_size=MAXK, max_size=MAXK),
+    )
+    def test_hypothesis(self, seed, ks):
+        rng = np.random.default_rng(seed)
+        vpn = rng.integers(0, 2**31 - 1, size=B).astype(np.int32)
+        a, d = run_kernel(vpn, ks)
+        ar, dr = ref.align_batch_ref(vpn, ks)
+        assert np.array_equal(a, ar) and np.array_equal(d, dr)
+
+
+class TestAlignmentInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(0, 20))
+    def test_aligned_plus_delta_reconstructs(self, seed, k):
+        rng = np.random.default_rng(seed)
+        vpn = rng.integers(0, 2**30, size=B).astype(np.int32)
+        a, d = run_kernel(vpn, [k, 0, 0, 0])
+        assert np.array_equal(a[0] + d[0], vpn)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(0, 20))
+    def test_k_lsb_cleared_and_delta_bounded(self, seed, k):
+        rng = np.random.default_rng(seed)
+        vpn = rng.integers(0, 2**30, size=B).astype(np.int32)
+        a, d = run_kernel(vpn, [k, 0, 0, 0])
+        assert (a[0] & ((1 << k) - 1) == 0).all()
+        assert (d[0] >= 0).all() and (d[0] < (1 << k)).all()
+
+    def test_k0_slot_is_identity(self):
+        vpn = np.arange(B, dtype=np.int32)
+        a, d = run_kernel(vpn, [0, 0, 0, 0])
+        assert np.array_equal(a[0], vpn) and (d == 0).all()
+
+    def test_rightward_compatible_rule(self):
+        """If a VPN is a-bit aligned and a > b it is also b-bit aligned
+        (paper §3.1): delta_b == 0 whenever delta_a == 0 for b < a."""
+        vpn = (np.arange(B, dtype=np.int32) << 6)  # all 6-bit aligned
+        a, d = run_kernel(vpn, [6, 4, 2, 1])
+        assert (d == 0).all()
+        for row in a:
+            assert np.array_equal(row, vpn)

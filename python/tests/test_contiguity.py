@@ -1,0 +1,103 @@
+"""Contiguity-chunk boundary kernel vs oracle (Definition 1)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+N = model.NPAGES
+SENT = model.SENTINEL
+
+
+def run_kernel(vpn, ppn):
+    """Pad to the artifact shape with SENTINEL and run the L2 graph."""
+    n = len(vpn)
+    v = np.full(N, SENT, dtype=np.int32)
+    p = np.full(N, SENT, dtype=np.int32)
+    v[:n] = vpn
+    p[:n] = ppn
+    out = model.mapping_bounds(jnp.array(v), jnp.array(p))
+    return np.asarray(out)[:n]
+
+
+def random_mapping(rng, nchunks, max_chunk):
+    """Build a VPN-sorted mapping from random contiguity chunks."""
+    sizes = rng.integers(1, max_chunk + 1, size=nchunks)
+    vpns, ppns = [], []
+    v = rng.integers(0, 1000)
+    pbase = 0
+    for s in sizes:
+        # random physical placement; +2 gap guarantees chunks do not merge
+        pbase += int(rng.integers(2, 100))
+        vpns.extend(range(v, v + int(s)))
+        ppns.extend(range(pbase, pbase + int(s)))
+        pbase += int(s)
+        v += int(s) + int(rng.integers(1, 3))  # virtual gap: new chunk
+    return np.array(vpns, dtype=np.int32), np.array(ppns, dtype=np.int32), sizes
+
+
+class TestKernelVsRef:
+    def test_identity_mapping_one_chunk(self):
+        vpn = np.arange(1000, dtype=np.int32)
+        out = run_kernel(vpn, vpn)
+        assert out[0] == 1 and out[1:].sum() == 0
+
+    def test_paper_figure4_example(self):
+        """The Figure 4 page table: chunks 2,3,6 plus five singletons."""
+        vpn = np.arange(16, dtype=np.int32)
+        ppn = np.array(
+            [8, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7],
+            dtype=np.int32,
+        )
+        sizes = ref.chunk_sizes(vpn, ppn)
+        assert list(sizes) == [2, 1, 1, 3, 1, 6, 1, 1]
+        assert np.array_equal(run_kernel(vpn, ppn), ref.chunk_bounds_ref(vpn, ppn))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nchunks=st.integers(1, 200),
+        max_chunk=st.integers(1, 1024),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_random_chunks(self, nchunks, max_chunk, seed):
+        rng = np.random.default_rng(seed)
+        vpn, ppn, sizes = random_mapping(rng, nchunks, max_chunk)
+        if len(vpn) > N:
+            vpn, ppn = vpn[:N], ppn[:N]
+        out = run_kernel(vpn, ppn)
+        assert np.array_equal(out, ref.chunk_bounds_ref(vpn, ppn))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 4096))
+    def test_hypothesis_random_ppns(self, seed, n):
+        rng = np.random.default_rng(seed)
+        vpn = np.sort(rng.choice(1 << 20, size=n, replace=False)).astype(np.int32)
+        ppn = rng.integers(0, 1 << 20, size=n).astype(np.int32)
+        assert np.array_equal(run_kernel(vpn, ppn), ref.chunk_bounds_ref(vpn, ppn))
+
+
+class TestChunkProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(nchunks=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+    def test_partition(self, nchunks, seed):
+        """Chunk sizes partition the mapping (Definition 1: maximal,
+        non-nested)."""
+        rng = np.random.default_rng(seed)
+        vpn, ppn, gen_sizes = random_mapping(rng, nchunks, 64)
+        sizes = ref.chunk_sizes(vpn, ppn)
+        assert sizes.sum() == len(vpn)
+        assert list(sizes) == list(gen_sizes)
+
+    def test_sentinel_padding_isolated(self):
+        """Padding must contribute exactly one boundary per pad page and
+        never merge with real entries."""
+        vpn = np.arange(10, dtype=np.int32)
+        out_short = run_kernel(vpn, vpn)
+        v = np.full(N, SENT, dtype=np.int32)
+        v[:10] = vpn
+        full = np.asarray(model.mapping_bounds(jnp.array(v), jnp.array(v)))
+        assert np.array_equal(full[:10], out_short)
+        # sentinel region: vpn[i] == prev+1 never holds (-2 != -2+1)
+        assert (full[10:] == 1).all()

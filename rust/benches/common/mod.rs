@@ -1,0 +1,65 @@
+//! Minimal bench harness (criterion is unavailable in the offline
+//! build): warmup + N timed runs, reporting min/median/mean and
+//! derived throughput.  Used by every `cargo bench` target.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self, per_item: Option<(u64, &str)>) {
+        let line = match per_item {
+            Some((n, unit)) => {
+                let per = self.median_ns / n as f64;
+                let thru = 1e9 / per;
+                format!(
+                    "{:<44} median {:>12.1} ns   {:>8.2} ns/{}   {:>10.2} M{}/s",
+                    self.name,
+                    self.median_ns,
+                    per,
+                    unit,
+                    thru / 1e6,
+                    unit
+                )
+            }
+            None => format!(
+                "{:<44} median {:>12.1} ns  (min {:.1}, mean {:.1})",
+                self.name, self.median_ns, self.min_ns, self.mean_ns
+            ),
+        };
+        println!("{line}");
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

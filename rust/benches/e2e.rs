@@ -1,0 +1,38 @@
+//! End-to-end simulation throughput: full engine over a benchmark
+//! trace, per scheme.  §Perf headline: simulated accesses/second.
+
+mod common;
+use common::bench;
+
+use katlb::coordinator::{run_cell, BenchContext, Config, SchemeKind};
+use katlb::workloads::benchmark;
+use std::sync::Arc;
+
+fn main() {
+    println!("# e2e — full-engine simulation throughput");
+    let cfg = Config {
+        trace_len: 1 << 19,
+        epoch: 1 << 17,
+        workers: 1,
+        use_xla: false,
+        max_ws_pages: Some(1 << 16),
+    };
+    let ctx = Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap());
+    let n = ctx.trace.len() as u64;
+
+    for kind in [
+        SchemeKind::Base,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorFixed(64),
+        SchemeKind::KAligned(2),
+        SchemeKind::KAligned(4),
+    ] {
+        let r = bench(&format!("engine e2e [{}] (512K accesses)", kind.label()), 1, 5, || {
+            let res = run_cell(&ctx, kind);
+            std::hint::black_box(res.misses());
+        });
+        r.print(Some((n, "acc")));
+    }
+}

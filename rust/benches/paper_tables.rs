@@ -1,0 +1,57 @@
+//! Paper-table regeneration bench: times each experiment driver at a
+//! reduced scale and prints the tables it produces.  `cargo bench`
+//! therefore regenerates every table/figure (small config); the
+//! full-scale run is `repro all`.
+
+mod common;
+use common::bench;
+
+use katlb::coordinator::{experiments, Config};
+
+fn main() {
+    println!("# paper_tables — experiment drivers at bench scale");
+    let cfg = Config {
+        trace_len: 1 << 16,
+        epoch: 1 << 14,
+        workers: 1,
+        use_xla: false,
+        max_ws_pages: Some(1 << 14),
+    };
+
+    let r = bench("fig2 (contiguity histograms, 15 benchmarks)", 0, 3, || {
+        let t = experiments::fig2(&cfg).unwrap();
+        std::hint::black_box(t.rows.len());
+    });
+    r.print(None);
+
+    let mut ctxs = None;
+    let r = bench("context build (16 benchmarks)", 0, 1, || {
+        ctxs = Some(experiments::demand_contexts(&cfg).unwrap());
+    });
+    r.print(None);
+    let ctxs = ctxs.unwrap();
+
+    let mut data = None;
+    let r = bench("fig8 battery (16 bench x 9 schemes + sweep)", 0, 1, || {
+        data = Some(experiments::fig8(&ctxs, &cfg));
+    });
+    r.print(None);
+    let data = data.unwrap();
+
+    let r = bench("fig9/fig10/table6 (derived)", 0, 3, || {
+        let _ = experiments::fig9(&data);
+        let _ = experiments::fig10_11(&data);
+        std::hint::black_box(experiments::table6(&data).rows.len());
+    });
+    r.print(None);
+
+    let r = bench("table5 (coverage)", 0, 1, || {
+        std::hint::black_box(experiments::table5(&ctxs, &cfg).rows.len());
+    });
+    r.print(None);
+
+    println!();
+    println!("{}", data.table.render());
+    println!("{}", experiments::table6(&data).render());
+    println!("{}", experiments::initcost_table().render());
+}

@@ -1,0 +1,108 @@
+//! Microbenchmarks of the L3 hot path: TLB lookup/insert, per-scheme
+//! L2 lookup, page-table walk, engine access loop.  These are the
+//! §Perf targets for the rust layer.
+
+mod common;
+use common::{bench, black_box};
+
+use katlb::mem::histogram::ContigHistogram;
+use katlb::mem::mapgen::{self, SyntheticKind};
+use katlb::pagetable::PageTable;
+use katlb::prng::Rng;
+use katlb::schemes::anchor::{Anchor, Mode};
+use katlb::schemes::base::BaseL2;
+use katlb::schemes::colt::Colt;
+use katlb::schemes::kaligned::KAligned;
+use katlb::schemes::Scheme;
+use katlb::sim::Engine;
+use katlb::tlb::SetAssocTlb;
+
+const N: usize = 1 << 16;
+
+fn main() {
+    println!("# tlb_hotpath — L3 microbenchmarks");
+
+    // raw set-associative TLB
+    let mut tlb: SetAssocTlb<u64> = SetAssocTlb::new(1024, 8);
+    let mut rng = Rng::new(1);
+    let keys: Vec<u64> = (0..N).map(|_| rng.below(1 << 20)).collect();
+    for &k in &keys {
+        tlb.insert((k & 127) as usize, k, k);
+    }
+    bench("sa_tlb::lookup (64K mixed keys)", 3, 15, || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            if let Some(&v) = tlb.lookup((k & 127) as usize, k) {
+                acc ^= v;
+            }
+        }
+        black_box(acc);
+    })
+    .print(Some((N as u64, "op")));
+
+    bench("sa_tlb::insert (64K mixed keys)", 3, 15, || {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(1024, 8);
+        for &k in &keys {
+            t.insert((k & 127) as usize, k, k);
+        }
+        black_box(t.occupancy());
+    })
+    .print(Some((N as u64, "op")));
+
+    // page-table walk (hashmap translate)
+    let mapping = mapgen::synthetic(SyntheticKind::Mixed, 1 << 18, 7);
+    let pt = PageTable::from_mapping(&mapping);
+    let vpns: Vec<u64> = {
+        let mut r = Rng::new(2);
+        (0..N).map(|_| mapping.pages()[r.below(mapping.len() as u64) as usize].0).collect()
+    };
+    bench("pagetable::translate (64K random)", 3, 15, || {
+        let mut acc = 0u64;
+        for &v in &vpns {
+            acc ^= pt.translate(v).unwrap_or(0);
+        }
+        black_box(acc);
+    })
+    .print(Some((N as u64, "walk")));
+
+    // per-scheme L2 lookup+fill under a realistic miss mix
+    let hist = ContigHistogram::from_mapping(&mapping);
+    let schemes: Vec<(&str, Box<dyn Scheme>)> = vec![
+        ("base", Box::new(BaseL2::new())),
+        ("colt", Box::new(Colt::new())),
+        ("anchor(d=64)", Box::new(Anchor::new(64, Mode::Static))),
+        ("kaligned(psi=4)", Box::new(KAligned::from_histogram(&hist, 4))),
+    ];
+    for (name, mut s) in schemes {
+        bench(&format!("scheme::{name} lookup+fill (64K)"), 3, 10, || {
+            for &v in &vpns {
+                if !s.lookup(v).is_hit() {
+                    s.fill(v, &pt);
+                }
+            }
+        })
+        .print(Some((N as u64, "acc")));
+    }
+
+    // full engine loop (the end-to-end per-access cost)
+    for (name, scheme) in [
+        ("base", Box::new(BaseL2::new()) as Box<dyn Scheme>),
+        ("kaligned", Box::new(KAligned::from_histogram(&hist, 4)) as Box<dyn Scheme>),
+    ] {
+        let mut eng = Engine::new(scheme, &pt);
+        eng.verify = false;
+        bench(&format!("engine::access loop [{name}] (64K)"), 3, 10, || {
+            for &v in &vpns {
+                eng.access(v);
+            }
+        })
+        .print(Some((N as u64, "acc")));
+        let m = eng.metrics();
+        println!(
+            "    ({} accesses, {:.1}% L1 hits, {:.1}% walks)",
+            m.accesses,
+            100.0 * m.l1_hits as f64 / m.accesses as f64,
+            100.0 * m.walks as f64 / m.accesses as f64
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Trace-generation benchmarks: rust-native oracle vs the AOT XLA
+//! artifact through PJRT.  The XLA path is the request-path use of the
+//! L1/L2 layers; its throughput bounds how fast the coordinator can
+//! feed simulations.
+
+mod common;
+use common::{bench, black_box};
+
+use katlb::runtime::{NativeSource, Runtime, TraceSource, XlaSource};
+use katlb::workloads::benchmark;
+
+fn main() {
+    println!("# tracegen — native oracle vs XLA artifact");
+    let wl = benchmark("mcf").unwrap();
+    let chunk = 1 << 16;
+
+    let mut native = NativeSource::new(wl.seed, wl.params, chunk);
+    let mut buf = vec![0u32; chunk];
+    bench("native trace chunk (64K vpns)", 3, 30, || {
+        native.next_chunk_into(&mut buf).unwrap();
+        black_box(buf[0]);
+    })
+    .print(Some((chunk as u64, "vpn")));
+
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let mut xla = XlaSource::new(&rt, wl.seed, wl.params);
+            let mut buf = vec![0u32; rt.manifest.batch];
+            bench("xla trace chunk (64K vpns, PJRT)", 3, 30, || {
+                xla.next_chunk_into(&mut buf).unwrap();
+                black_box(buf[0]);
+            })
+            .print(Some((rt.manifest.batch as u64, "vpn")));
+
+            // contiguity artifact over a full window
+            let m = katlb::mem::mapgen::synthetic(
+                katlb::mem::mapgen::SyntheticKind::Mixed,
+                rt.manifest.npages as u64,
+                3,
+            );
+            let (v, p) = m.to_arrays(rt.manifest.npages, rt.manifest.sentinel as i32);
+            bench("xla contiguity window (256K pages)", 2, 10, || {
+                black_box(rt.chunk_bounds(&v, &p).unwrap().len());
+            })
+            .print(Some((rt.manifest.npages as u64, "page")));
+
+            // align artifact
+            let vpns: Vec<i32> = (0..rt.manifest.batch as i32).collect();
+            bench("xla align batch (64K x 4 ks)", 2, 10, || {
+                black_box(rt.align_batch(&vpns, &[9, 6, 4, 0]).unwrap().0.len());
+            })
+            .print(Some((rt.manifest.batch as u64, "vpn")));
+        }
+        Err(e) => println!("(xla artifacts unavailable, skipping PJRT benches: {e:#})"),
+    }
+}

@@ -1,0 +1,557 @@
+//! Experiment drivers: one function per table/figure of the paper's
+//! evaluation (see DESIGN.md §Experiment-index).  Each returns a
+//! rendered [`Table`] whose rows/series mirror what the paper reports.
+
+use super::report::{bar, pct, ratio, Table};
+use super::{run_anchor_static, run_cell, run_cells, BenchContext, CellResult, Config, SchemeKind};
+use crate::mem::histogram::ContigHistogram;
+use crate::mem::mapgen::{self, SyntheticKind};
+use crate::pagetable::aligned::init_cost;
+use crate::pagetable::PageTable;
+use crate::runtime::{generate_trace, NativeSource, Runtime, XlaSource};
+use crate::workloads::{all_benchmarks, Workload};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The scheme columns of Figure 8 / Table 4, in paper order.
+fn prior_schemes() -> Vec<SchemeKind> {
+    vec![SchemeKind::Thp, SchemeKind::Rmm, SchemeKind::Colt, SchemeKind::Cluster]
+}
+
+fn k_schemes() -> Vec<SchemeKind> {
+    vec![SchemeKind::KAligned(2), SchemeKind::KAligned(3), SchemeKind::KAligned(4)]
+}
+
+/// Build demand-mapping contexts for all 16 benchmarks (shared across
+/// experiments — call once).
+pub fn demand_contexts(cfg: &Config) -> Result<Vec<Arc<BenchContext>>> {
+    BenchContext::build_all(&all_benchmarks(), cfg)
+}
+
+/// Build a context over a synthetic Table 3 mapping for one workload.
+pub fn synthetic_context(
+    wl: &Workload,
+    kind: SyntheticKind,
+    cfg: &Config,
+    rt: Option<&Runtime>,
+) -> Result<Arc<BenchContext>> {
+    let mut wl = wl.clone();
+    if let Some(cap) = cfg.max_ws_pages {
+        if (wl.params.ws_pages as u64) > cap {
+            wl.params.ws_pages = cap as u32;
+            wl.params.hot_base_vpn = (cap / 3) as u32;
+            wl.params.hot_pages = wl.params.hot_pages.min((cap / 4) as u32).max(1);
+        }
+    }
+    let mapping = mapgen::synthetic(kind, wl.params.ws_pages as u64, wl.seed as u64);
+    let mut mapping_thp = mapping.clone();
+    mapping_thp.promote_thp();
+    let pt = PageTable::from_mapping(&mapping);
+    let pt_thp = PageTable::from_mapping(&mapping_thp);
+    let hist = ContigHistogram::from_mapping(&mapping);
+    let hist_thp = ContigHistogram::from_mapping(&mapping_thp);
+    let mut trace = match rt {
+        Some(rt) => generate_trace(&mut XlaSource::new(rt, wl.seed, wl.params), cfg.trace_len)?,
+        None => {
+            generate_trace(&mut NativeSource::new(wl.seed, wl.params, 1 << 16), cfg.trace_len)?
+        }
+    };
+    super::remap_indices_to_vpns(&mut trace, &mapping);
+    Ok(Arc::new(BenchContext {
+        workload: wl,
+        mapping,
+        mapping_thp,
+        pt,
+        pt_thp,
+        hist,
+        hist_thp,
+        trace,
+    }))
+}
+
+/// Run the full scheme battery over one context: Base + priors +
+/// Anchor-Static sweep + K-variants.  Returns (base, results).
+fn battery(ctx: &Arc<BenchContext>, cfg: &Config) -> (CellResult, Vec<CellResult>) {
+    let w = cfg.effective_workers();
+    let base = run_cell(ctx, SchemeKind::Base);
+    let mut cells: Vec<(Arc<BenchContext>, SchemeKind)> = Vec::new();
+    for k in prior_schemes().into_iter().chain(k_schemes()) {
+        cells.push((Arc::clone(ctx), k));
+    }
+    let mut results = run_cells(cells, w);
+    let anchor = run_anchor_static(ctx, w);
+    results.insert(4, anchor); // after the priors, before K variants
+    (base, results)
+}
+
+/// Relative misses vs base (paper's headline normalization).
+fn rel(r: &CellResult, base: &CellResult) -> f64 {
+    r.misses() as f64 / base.misses().max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1: prior techniques on the four synthetic contiguity types
+// ---------------------------------------------------------------------------
+
+pub fn fig1(cfg: &Config) -> Result<Table> {
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    // a representative subset keeps Figure 1 cheap (the full per-
+    // mapping average is Table 4's job)
+    let wls: Vec<Workload> = all_benchmarks()
+        .into_iter()
+        .filter(|w| ["astar", "mcf", "omnetpp", "gromacs"].contains(&w.name))
+        .collect();
+    let mut t = Table::new(
+        "Figure 1: relative TLB misses of existing techniques per contiguity type",
+        &["THP", "RMM", "COLT", "Cluster", "Anchor-Dyn"],
+    );
+    for kind in SyntheticKind::ALL {
+        let mut sums = vec![0.0f64; 5];
+        for wl in &wls {
+            let ctx = synthetic_context(wl, kind, cfg, rt.as_ref())?;
+            let base = run_cell(&ctx, SchemeKind::Base);
+            let kinds = [
+                SchemeKind::Thp,
+                SchemeKind::Rmm,
+                SchemeKind::Colt,
+                SchemeKind::Cluster,
+                SchemeKind::AnchorDynamic,
+            ];
+            let rs = run_cells(
+                kinds.iter().map(|&k| (Arc::clone(&ctx), k)).collect(),
+                cfg.effective_workers(),
+            );
+            for (i, r) in rs.iter().enumerate() {
+                sums[i] += rel(r, &base);
+            }
+        }
+        t.row(
+            kind.label(),
+            sums.iter().map(|s| pct(s / wls.len() as f64)).collect(),
+        );
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 2/3: contiguity-chunk distributions (THP off / on)
+// ---------------------------------------------------------------------------
+
+fn contiguity_figure(cfg: &Config, thp: bool, title: &str) -> Result<Table> {
+    let mut t = Table::new(title, &["1", "2-63", "64-511", ">=512", "mixed?"]);
+    for wl in crate::workloads::spec::figure23_benchmarks() {
+        let mut d = wl.demand.clone();
+        if let Some(cap) = cfg.max_ws_pages {
+            d.total_pages = d.total_pages.min(cap);
+        }
+        let m = if thp { mapgen::demand_thp(&d, wl.seed as u64) } else { mapgen::demand(&d, wl.seed as u64) };
+        let h = ContigHistogram::from_mapping(&m);
+        let counts = h.class_counts();
+        // the paper's y-axis is log2(n+1)
+        let mut cells: Vec<String> = counts
+            .iter()
+            .map(|(_, n)| format!("{:.1}", ((n + 1) as f64).log2()))
+            .collect();
+        cells.push(if h.is_mixed() { "yes".into() } else { "no".into() });
+        t.row(wl.name, cells);
+    }
+    Ok(t)
+}
+
+pub fn fig2(cfg: &Config) -> Result<Table> {
+    contiguity_figure(cfg, false, "Figure 2: log2(chunks+1) per contiguity class, THP off")
+}
+
+pub fn fig3(cfg: &Config) -> Result<Table> {
+    contiguity_figure(cfg, true, "Figure 3: log2(chunks+1) per contiguity class, THP on")
+}
+
+// ---------------------------------------------------------------------------
+// Figure 8 + Table 4 (demand row) — relative misses, all schemes
+// ---------------------------------------------------------------------------
+
+pub struct Fig8Data {
+    pub table: Table,
+    /// per benchmark: (base, battery results)
+    pub raw: Vec<(CellResult, Vec<CellResult>)>,
+}
+
+pub fn fig8(ctxs: &[Arc<BenchContext>], cfg: &Config) -> Fig8Data {
+    let cols =
+        ["THP", "RMM", "COLT", "Cluster", "Anchor-Static", "|K|=2", "|K|=3", "|K|=4"];
+    let mut t = Table::new(
+        "Figure 8: relative TLB misses vs Base (demand mapping)",
+        &cols,
+    );
+    let mut raw = Vec::new();
+    for ctx in ctxs {
+        let (base, results) = battery(ctx, cfg);
+        t.row(
+            &base.benchmark,
+            results.iter().map(|r| pct(rel(r, &base))).collect(),
+        );
+        raw.push((base, results));
+    }
+    // mean row
+    let ncols = cols.len();
+    let mut sums = vec![0.0; ncols];
+    for (base, results) in &raw {
+        for (i, r) in results.iter().enumerate() {
+            sums[i] += rel(r, base);
+        }
+    }
+    t.row(
+        "MEAN",
+        sums.iter().map(|s| pct(s / raw.len() as f64)).collect(),
+    );
+    Fig8Data { table: t, raw }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 9: |K| scaling vs Anchor-Static
+// ---------------------------------------------------------------------------
+
+pub fn fig9(data: &Fig8Data) -> Table {
+    let mut t = Table::new(
+        "Figure 9: relative misses vs Anchor-Static",
+        &["|K|=2", "|K|=3", "|K|=4"],
+    );
+    for (_base, results) in &data.raw {
+        let anchor = results.iter().find(|r| r.scheme == "Anchor-Static").unwrap();
+        let ks: Vec<&CellResult> =
+            results.iter().filter(|r| matches!(r.kind, SchemeKind::KAligned(_))).collect();
+        t.row(
+            &anchor.benchmark,
+            ks.iter()
+                .map(|r| pct(r.misses() as f64 / anchor.misses().max(1) as f64))
+                .collect(),
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Figures 10/11: translation CPI breakdown
+// ---------------------------------------------------------------------------
+
+pub fn fig10_11(data: &Fig8Data) -> (Table, Table) {
+    let fmt = |r: &CellResult| -> String {
+        let (h, c, w) = r.metrics.cpi_breakdown(r.ipa);
+        format!("{:.3}+{:.3}+{:.3}={:.3}", h, c, w, h + c + w)
+    };
+    let mut t10 = Table::new(
+        "Figure 10: translation CPI (hit+coalesced+walk) — prior schemes",
+        &["Base", "THP", "RMM", "COLT", "Cluster", "Anchor-Static"],
+    );
+    let mut t11 = Table::new(
+        "Figure 11: translation CPI (hit+coalesced+walk) — K Aligned",
+        &["|K|=2", "|K|=3", "|K|=4"],
+    );
+    for (base, results) in &data.raw {
+        let mut cells = vec![fmt(base)];
+        cells.extend(results.iter().take(5).map(fmt));
+        t10.row(&base.benchmark, cells);
+        t11.row(
+            &base.benchmark,
+            results
+                .iter()
+                .filter(|r| matches!(r.kind, SchemeKind::KAligned(_)))
+                .map(fmt)
+                .collect(),
+        );
+    }
+    (t10, t11)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: mean relative misses for demand + synthetic mappings
+// ---------------------------------------------------------------------------
+
+pub fn table4(ctxs: &[Arc<BenchContext>], cfg: &Config, demand_data: &Fig8Data) -> Result<Table> {
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let cols = [
+        "Base", "THP", "RMM", "COLT", "Cluster", "Anchor-Static", "|K|=2", "|K|=3", "|K|=4",
+    ];
+    let mut t = Table::new("Table 4: mean relative misses per mapping", &cols);
+
+    let mean_row = |raw: &[(CellResult, Vec<CellResult>)]| -> Vec<String> {
+        let mut cells = vec![pct(1.0)];
+        let n = raw.len() as f64;
+        for i in 0..raw[0].1.len() {
+            let s: f64 = raw.iter().map(|(b, rs)| rel(&rs[i], b)).sum();
+            cells.push(pct(s / n));
+        }
+        cells
+    };
+    t.row("Demand", mean_row(&demand_data.raw));
+
+    // synthetic rows on a representative subset (full sweep is the
+    // e2e example's job; Table 4 reports means)
+    let wls: Vec<Workload> = all_benchmarks()
+        .into_iter()
+        .filter(|w| ["astar", "mcf", "omnetpp", "gromacs", "sjeng", "bwaves"].contains(&w.name))
+        .collect();
+    let _ = ctxs;
+    for kind in SyntheticKind::ALL {
+        let mut raw = Vec::new();
+        for wl in &wls {
+            let ctx = synthetic_context(wl, kind, cfg, rt.as_ref())?;
+            raw.push(battery(&ctx, cfg));
+        }
+        t.row(kind.label(), mean_row(&raw));
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: relative translation coverage
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctxs: &[Arc<BenchContext>], cfg: &Config) -> Table {
+    let mut t = Table::new(
+        "Table 5: relative L2 translation coverage (vs Base = 1024 entries)",
+        &["Base", "COLT", "Anchor-Static", "|K|=2 Aligned"],
+    );
+    let w = cfg.effective_workers();
+    for ctx in ctxs {
+        let base = run_cell(ctx, SchemeKind::Base);
+        let colt = run_cell(ctx, SchemeKind::Colt);
+        let anchor = run_anchor_static(ctx, w);
+        let k2 = run_cell(ctx, SchemeKind::KAligned(2));
+        let b = base.metrics.mean_coverage_pages().max(1.0);
+        t.row(
+            &base.benchmark,
+            vec![
+                ratio(1.0),
+                ratio(colt.metrics.mean_coverage_pages() / b),
+                ratio(anchor.metrics.mean_coverage_pages() / b),
+                ratio(k2.metrics.mean_coverage_pages() / b),
+            ],
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: predictor accuracy vs |K|
+// ---------------------------------------------------------------------------
+
+pub fn table6(data: &Fig8Data) -> Table {
+    let mut t = Table::new(
+        "Table 6: alignment-predictor accuracy (first-probe aligned hits)",
+        &["|K|=2", "|K|=3", "|K|=4"],
+    );
+    let mut sums = vec![0.0f64; 3];
+    let mut counts = vec![0usize; 3];
+    for (base, results) in &data.raw {
+        let mut cells = Vec::new();
+        for (i, r) in results
+            .iter()
+            .filter(|r| matches!(r.kind, SchemeKind::KAligned(_)))
+            .enumerate()
+        {
+            match r.predictor {
+                Some((c, tot)) if tot > 0 => {
+                    let acc = c as f64 / tot as f64;
+                    sums[i] += acc;
+                    counts[i] += 1;
+                    cells.push(pct(acc));
+                }
+                _ => cells.push("n/a".into()),
+            }
+        }
+        t.row(&base.benchmark, cells);
+    }
+    t.row(
+        "average",
+        sums.iter()
+            .zip(&counts)
+            .map(|(s, &n)| if n > 0 { pct(s / n as f64) } else { "n/a".into() })
+            .collect(),
+    );
+    t
+}
+
+// ---------------------------------------------------------------------------
+// §3.4: aligned-entry initialization cost
+// ---------------------------------------------------------------------------
+
+pub fn initcost_table() -> Table {
+    let pages_18gb = 18 * 1024 * 1024 / 4;
+    let mut t = Table::new(
+        "§3.4: aligned-entry initialization cost (18 GB mapping)",
+        &["entries", "est. ms", "bar"],
+    );
+    for (label, ks) in [
+        ("K={4}", vec![4u32]),
+        ("K={4,5}", vec![4, 5]),
+        ("K={4,5,6,7,8,9}", vec![4, 5, 6, 7, 8, 9]),
+        ("K={3,4}", vec![3, 4]),
+        ("K={5,6}", vec![5, 6]),
+        ("K={8,9}", vec![8, 9]),
+    ] {
+        let (entries, ms) = init_cost(pages_18gb, &ks);
+        t.row(label, vec![entries.to_string(), format!("{ms:.1}"), bar(ms / 400.0, 30)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::benchmark;
+
+    fn tiny() -> Config {
+        Config {
+            trace_len: 1 << 13,
+            epoch: 1 << 11,
+            workers: 2,
+            use_xla: false,
+            max_ws_pages: Some(1 << 12),
+        }
+    }
+
+    #[test]
+    fn fig2_renders_15_rows() {
+        let t = fig2(&tiny()).unwrap();
+        assert_eq!(t.rows.len(), 15);
+        assert!(t.render().contains("mixed?"));
+    }
+
+    #[test]
+    fn synthetic_context_has_requested_contiguity() {
+        let wl = benchmark("astar").unwrap();
+        let ctx = synthetic_context(&wl, SyntheticKind::Large, &tiny(), None).unwrap();
+        let sizes = ctx.mapping.chunk_sizes();
+        assert!(sizes[..sizes.len() - 1].iter().all(|&s| s >= 512));
+    }
+
+    #[test]
+    fn initcost_matches_paper_rows() {
+        let t = initcost_table();
+        assert_eq!(t.rows.len(), 6);
+        // K={4} row: 294912 entries
+        assert_eq!(t.rows[0].1[0], "294912");
+    }
+
+    #[test]
+    fn mini_battery_shapes_hold() {
+        // smallest end-to-end sanity: K-Aligned should beat Base
+        let cfg = tiny();
+        let ctx = Arc::new(
+            BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap(),
+        );
+        let base = run_cell(&ctx, SchemeKind::Base);
+        let k2 = run_cell(&ctx, SchemeKind::KAligned(2));
+        assert!(
+            k2.misses() < base.misses(),
+            "K-Aligned {} must beat Base {}",
+            k2.misses(),
+            base.misses()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (DESIGN.md §Perf / §3.5 future work)
+// ---------------------------------------------------------------------------
+
+/// Ablation battery over one benchmark:
+/// * θ sweep for Algorithm 3 (how K grows and what it buys),
+/// * predictor on/off (§3.2),
+/// * §3.5 parallel-walk latency variant.
+pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
+    use crate::schemes::determine_k::determine_k;
+    use crate::schemes::kaligned::KAligned;
+    use crate::sim::{Engine, Latency};
+
+    let wl = crate::workloads::benchmark(bench_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let ctx = BenchContext::build(wl, cfg, rt.as_ref())?;
+    let mut out = Vec::new();
+
+    // --- θ sweep ---
+    let mut t = Table::new(
+        &format!("Ablation: Algorithm 3 θ sweep ({bench_name})"),
+        &["K", "misses", "rel vs θ=0.9"],
+    );
+    let mut misses_at_theta9 = None;
+    for theta in [0.5, 0.7, 0.9, 0.99] {
+        let ks = determine_k(&ctx.hist_thp, theta, 4);
+        let scheme = KAligned::with_k(ks.clone(), 4);
+        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
+        eng.verify = false;
+        eng.run(&ctx.trace);
+        let (m, _) = eng.finish();
+        if (theta - 0.9).abs() < 1e-9 {
+            misses_at_theta9 = Some(m.misses());
+        }
+        t.row(
+            &format!("theta={theta}"),
+            vec![
+                format!("{ks:?}"),
+                m.misses().to_string(),
+                misses_at_theta9
+                    .map(|b| pct(m.misses() as f64 / b.max(1) as f64))
+                    .unwrap_or_else(|| "-".into()),
+            ],
+        );
+    }
+    out.push(t);
+
+    // --- predictor on/off ---
+    let mut t = Table::new(
+        &format!("Ablation: §3.2 predictor ({bench_name}, psi=4)"),
+        &["probes/aligned-hit", "extra-probe cycles", "CPI"],
+    );
+    for (label, use_pred) in [("predictor ON", true), ("predictor OFF", false)] {
+        let mut scheme = KAligned::from_histogram(&ctx.hist_thp, 4);
+        if !use_pred {
+            scheme = scheme.without_predictor();
+        }
+        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
+        eng.verify = false;
+        eng.run(&ctx.trace);
+        let (m, _) = eng.finish();
+        let pph = if m.l2_coalesced_hits > 0 {
+            m.aligned_probes as f64 / m.l2_coalesced_hits as f64
+        } else {
+            0.0
+        };
+        t.row(
+            label,
+            vec![
+                ratio(pph),
+                m.cycles_extra_probes.to_string(),
+                format!("{:.4}", m.cpi(ctx.workload.ipa)),
+            ],
+        );
+    }
+    out.push(t);
+
+    // --- §3.5 parallel walk ---
+    let mut t = Table::new(
+        &format!("Ablation: §3.5 walk/aligned-lookup overlap ({bench_name}, psi=4)"),
+        &["CPI", "walk+probe cycles"],
+    );
+    for (label, lat) in [
+        ("serial (paper default)", Latency::default()),
+        ("parallel walk (§3.5)", Latency::with_parallel_walk()),
+    ] {
+        let scheme = KAligned::from_histogram(&ctx.hist_thp, 4);
+        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp).with_latency(lat);
+        eng.verify = false;
+        eng.run(&ctx.trace);
+        let (m, _) = eng.finish();
+        t.row(
+            label,
+            vec![
+                format!("{:.4}", m.cpi(ctx.workload.ipa)),
+                (m.cycles_walk + m.cycles_extra_probes).to_string(),
+            ],
+        );
+    }
+    out.push(t);
+    Ok(out)
+}

@@ -1,0 +1,356 @@
+//! The experiment coordinator (Layer-3): builds experiment *cells*
+//! (benchmark × scheme × mapping), generates each benchmark's trace
+//! once (through the XLA runtime when artifacts are present, else the
+//! native oracle), fans cells out to a worker pool over shared
+//! read-only state, and aggregates per-cell metrics into the paper's
+//! tables and figures.
+
+pub mod experiments;
+pub mod report;
+
+use crate::mem::histogram::ContigHistogram;
+use crate::mem::mapgen;
+use crate::mem::mapping::MemoryMapping;
+use crate::pagetable::PageTable;
+use crate::runtime::{generate_trace, NativeSource, Runtime, TraceSource, XlaSource};
+use crate::schemes::anchor::{Anchor, Mode};
+use crate::schemes::base::BaseL2;
+use crate::schemes::cluster::Cluster;
+use crate::schemes::colt::Colt;
+use crate::schemes::kaligned::KAligned;
+use crate::schemes::rmm::Rmm;
+use crate::schemes::Scheme;
+use crate::sim::{Engine, Metrics};
+use crate::workloads::Workload;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Scheme selector for a cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    Base,
+    Thp,
+    Colt,
+    Cluster,
+    Rmm,
+    /// one fixed anchor distance (the coordinator sweeps these for
+    /// "Anchor-Static")
+    AnchorFixed(u64),
+    AnchorDynamic,
+    /// K-bit Aligned with |K| <= psi
+    KAligned(usize),
+}
+
+impl SchemeKind {
+    pub fn label(&self) -> String {
+        match self {
+            SchemeKind::Base => "Base".into(),
+            SchemeKind::Thp => "THP".into(),
+            SchemeKind::Colt => "COLT".into(),
+            SchemeKind::Cluster => "Cluster".into(),
+            SchemeKind::Rmm => "RMM".into(),
+            SchemeKind::AnchorFixed(d) => format!("Anchor(d={d})"),
+            SchemeKind::AnchorDynamic => "Anchor-Dynamic".into(),
+            SchemeKind::KAligned(psi) => format!("|K|={psi} Aligned"),
+        }
+    }
+
+    /// Does the scheme run on the THP-promoted mapping?  Base runs on
+    /// the unpromoted mapping; everything else gets THP support (§4.1:
+    /// "with the support of THP" for the coalescing baselines).
+    pub fn uses_thp(&self) -> bool {
+        !matches!(self, SchemeKind::Base)
+    }
+
+    /// Instantiate the scheme over a mapping.
+    pub fn build(&self, mapping: &MemoryMapping, hist: &ContigHistogram) -> Box<dyn Scheme> {
+        match *self {
+            SchemeKind::Base => Box::new(BaseL2::new()),
+            SchemeKind::Thp => Box::new(BaseL2::named("THP")),
+            SchemeKind::Colt => Box::new(Colt::new()),
+            SchemeKind::Cluster => Box::new(Cluster::new()),
+            SchemeKind::Rmm => Box::new(Rmm::new(mapping)),
+            SchemeKind::AnchorFixed(d) => Box::new(Anchor::new(d, Mode::Static)),
+            SchemeKind::AnchorDynamic => {
+                let d = crate::pagetable::anchor::select_distance(hist);
+                Box::new(Anchor::new(d, Mode::Dynamic))
+            }
+            SchemeKind::KAligned(psi) => Box::new(KAligned::from_histogram(hist, psi)),
+        }
+    }
+}
+
+/// Global run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// accesses per benchmark trace
+    pub trace_len: usize,
+    /// accesses between epoch callbacks (coverage sampling, dynamic
+    /// schemes)
+    pub epoch: u64,
+    /// worker threads (0 = available parallelism)
+    pub workers: usize,
+    /// route trace generation through the AOT artifacts (fails if
+    /// artifacts are missing); false = rust oracle (bit-identical)
+    pub use_xla: bool,
+    /// cap benchmark working sets (quick mode for CI)
+    pub max_ws_pages: Option<u64>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            trace_len: 1 << 21,
+            epoch: 1 << 19,
+            workers: 0,
+            use_xla: true,
+            max_ws_pages: None,
+        }
+    }
+}
+
+impl Config {
+    pub fn quick() -> Self {
+        Config {
+            trace_len: 1 << 18,
+            epoch: 1 << 16,
+            workers: 0,
+            use_xla: false,
+            max_ws_pages: Some(1 << 16),
+        }
+    }
+
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
+/// Everything shared by the cells of one benchmark.
+pub struct BenchContext {
+    pub workload: Workload,
+    pub mapping: MemoryMapping,
+    pub mapping_thp: MemoryMapping,
+    pub pt: PageTable,
+    pub pt_thp: PageTable,
+    pub hist: ContigHistogram,
+    pub hist_thp: ContigHistogram,
+    pub trace: Vec<u32>,
+}
+
+impl BenchContext {
+    /// Build the context: demand mapping (± THP), page tables,
+    /// histograms, and the shared trace.
+    pub fn build(mut wl: Workload, cfg: &Config, rt: Option<&Runtime>) -> Result<BenchContext> {
+        if let Some(cap) = cfg.max_ws_pages {
+            if wl.demand.total_pages > cap {
+                wl.demand.total_pages = cap;
+                wl.params.ws_pages = cap as u32;
+                wl.params.hot_pages = wl.params.hot_pages.min((cap / 4) as u32).max(1);
+                wl.params.hot_base_vpn = (cap / 3) as u32;
+            }
+        }
+        let mapping = mapgen::demand(&wl.demand, wl.seed as u64);
+        let mut mapping_thp = mapping.clone();
+        mapping_thp.promote_thp();
+        let pt = PageTable::from_mapping(&mapping);
+        let pt_thp = PageTable::from_mapping(&mapping_thp);
+        let hist = ContigHistogram::from_mapping(&mapping);
+        let hist_thp = ContigHistogram::from_mapping(&mapping_thp);
+        // the trace addresses page *indices* [0, ws); the demand
+        // mapping may have stopped short on OOM — clamp the descriptor
+        let mapped = mapping.len() as u32;
+        if mapped < wl.params.ws_pages {
+            wl.params.ws_pages = mapped;
+            wl.params.hot_base_vpn = mapped / 3;
+            wl.params.hot_pages = wl.params.hot_pages.min(mapped - wl.params.hot_base_vpn).max(1);
+        }
+        let mut trace = match rt {
+            Some(rt) => {
+                let mut src = XlaSource::new(rt, wl.seed, wl.params);
+                generate_trace(&mut src, cfg.trace_len)?
+            }
+            None => {
+                let mut src = NativeSource::new(wl.seed, wl.params, 1 << 16);
+                generate_trace(&mut src, cfg.trace_len)?
+            }
+        };
+        remap_indices_to_vpns(&mut trace, &mapping);
+        Ok(BenchContext { workload: wl, mapping, mapping_thp, pt, pt_thp, hist, hist_thp, trace })
+    }
+
+    /// Build contexts for many workloads, loading the runtime once.
+    pub fn build_all(wls: &[Workload], cfg: &Config) -> Result<Vec<Arc<BenchContext>>> {
+        let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+        wls.iter()
+            .map(|w| BenchContext::build(w.clone(), cfg, rt.as_ref()).map(Arc::new))
+            .collect()
+    }
+}
+
+/// The trace kernel emits working-set page *indices*; resolve them to
+/// the mapping's VPNs (the VA layout has alignment holes — see
+/// `mem::mapgen` module docs).  Indices are clamped to the mapped
+/// count, which only matters if the mapping ran out of memory.
+pub fn remap_indices_to_vpns(trace: &mut [u32], mapping: &MemoryMapping) {
+    let pages = mapping.pages();
+    let last = pages.len() - 1;
+    for t in trace.iter_mut() {
+        *t = pages[(*t as usize).min(last)].0 as u32;
+    }
+}
+
+/// One experiment cell result.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub benchmark: String,
+    pub scheme: String,
+    pub kind: SchemeKind,
+    pub metrics: Metrics,
+    pub ipa: f64,
+    pub predictor: Option<(u64, u64)>,
+    pub kset: Option<Vec<u32>>,
+}
+
+impl CellResult {
+    pub fn misses(&self) -> u64 {
+        self.metrics.misses()
+    }
+}
+
+/// Run one cell: an engine over the benchmark's shared trace.
+pub fn run_cell(ctx: &BenchContext, kind: SchemeKind) -> CellResult {
+    let (mapping, pt, hist) = if kind.uses_thp() {
+        (&ctx.mapping_thp, &ctx.pt_thp, &ctx.hist_thp)
+    } else {
+        (&ctx.mapping, &ctx.pt, &ctx.hist)
+    };
+    let scheme = kind.build(mapping, hist);
+    let mut eng = Engine::new(scheme, pt).with_epoch(1 << 19, hist.clone());
+    eng.verify = false; // correctness is covered by tests; keep sims fast
+    eng.run(&ctx.trace);
+    let (metrics, scheme) = eng.finish();
+    CellResult {
+        benchmark: ctx.workload.name.to_string(),
+        scheme: scheme.name(),
+        kind,
+        metrics,
+        ipa: ctx.workload.ipa,
+        predictor: scheme.predictor_stats(),
+        kset: scheme.kset(),
+    }
+}
+
+/// Fan cells out over a worker pool (std threads; results come back in
+/// submission order).
+pub fn run_cells(
+    cells: Vec<(Arc<BenchContext>, SchemeKind)>,
+    workers: usize,
+) -> Vec<CellResult> {
+    let n = cells.len();
+    let cells = Arc::new(cells);
+    let next = Arc::new(AtomicUsize::new(0));
+    let results: Arc<Vec<std::sync::Mutex<Option<CellResult>>>> =
+        Arc::new((0..n).map(|_| std::sync::Mutex::new(None)).collect());
+    let nw = workers.max(1).min(n.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..nw {
+            let cells = Arc::clone(&cells);
+            let next = Arc::clone(&next);
+            let results = Arc::clone(&results);
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let (ctx, kind) = &cells[i];
+                let r = run_cell(ctx, *kind);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    Arc::try_unwrap(results)
+        .expect("workers joined")
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell completed"))
+        .collect()
+}
+
+/// Anchor-Static = best fixed distance per benchmark (the paper's
+/// "exhaustively tries all possible anchor distances").
+pub fn run_anchor_static(ctx: &Arc<BenchContext>, workers: usize) -> CellResult {
+    let cells: Vec<(Arc<BenchContext>, SchemeKind)> =
+        crate::pagetable::anchor::DIST_CANDIDATES
+            .iter()
+            .map(|&d| (Arc::clone(ctx), SchemeKind::AnchorFixed(d)))
+            .collect();
+    let mut results = run_cells(cells, workers);
+    results.sort_by_key(|r| r.misses());
+    let mut best = results.into_iter().next().expect("at least one distance");
+    best.scheme = "Anchor-Static".to_string();
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::benchmark;
+
+    fn tiny_cfg() -> Config {
+        Config {
+            trace_len: 1 << 14,
+            epoch: 1 << 12,
+            workers: 2,
+            use_xla: false,
+            max_ws_pages: Some(1 << 13),
+        }
+    }
+
+    #[test]
+    fn context_builds_and_trace_in_range() {
+        let cfg = tiny_cfg();
+        let ctx = BenchContext::build(benchmark("povray").unwrap(), &cfg, None).unwrap();
+        assert_eq!(ctx.trace.len(), cfg.trace_len);
+        // every trace VPN is mapped (indices were remapped to VPNs)
+        for &v in ctx.trace.iter() {
+            assert!(ctx.pt.translate(v as u64).is_some(), "vpn {v} unmapped");
+        }
+    }
+
+    #[test]
+    fn run_cell_produces_metrics() {
+        let cfg = tiny_cfg();
+        let ctx = Arc::new(BenchContext::build(benchmark("hmmer").unwrap(), &cfg, None).unwrap());
+        let r = run_cell(&ctx, SchemeKind::Base);
+        assert_eq!(r.metrics.accesses as usize, cfg.trace_len);
+        assert!(r.metrics.walks > 0);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let cfg = tiny_cfg();
+        let ctx = Arc::new(BenchContext::build(benchmark("sjeng").unwrap(), &cfg, None).unwrap());
+        let kinds = [SchemeKind::Base, SchemeKind::Colt, SchemeKind::KAligned(2)];
+        let serial: Vec<CellResult> = kinds.iter().map(|&k| run_cell(&ctx, k)).collect();
+        let par = run_cells(kinds.iter().map(|&k| (Arc::clone(&ctx), k)).collect(), 3);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.metrics, b.metrics, "{}", a.scheme);
+        }
+    }
+
+    #[test]
+    fn anchor_static_picks_best_distance() {
+        let cfg = tiny_cfg();
+        let ctx = Arc::new(BenchContext::build(benchmark("bzip2").unwrap(), &cfg, None).unwrap());
+        let best = run_anchor_static(&ctx, 4);
+        assert_eq!(best.scheme, "Anchor-Static");
+        // best must not lose to a couple of spot-checked distances
+        for d in [4u64, 64, 512] {
+            let r = run_cell(&ctx, SchemeKind::AnchorFixed(d));
+            assert!(best.misses() <= r.misses(), "d={d}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Plain-text table/figure formatting: each experiment prints the same
+//! rows/series the paper reports.
+
+/// A rendered table: header + rows of (label, cells).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), cells));
+    }
+
+    pub fn render(&self) -> String {
+        let mut w0 = "".len().max(self.rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0));
+        w0 = w0.max(12);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for (_, cells) in &self.rows {
+            for (i, c) in cells.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        out.push_str(&format!("{:<w0$}", "", w0 = w0 + 2));
+        for (c, w) in self.columns.iter().zip(&widths) {
+            out.push_str(&format!("{:>w$}  ", c, w = w));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(w0 + 2 + widths.iter().map(|w| w + 2).sum::<usize>()));
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{:<w0$}", label, w0 = w0 + 2));
+            for (c, w) in cells.iter().zip(&widths) {
+                out.push_str(&format!("{:>w$}  ", c, w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Percentage string like the paper's "30.8%".
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Ratio with two decimals (Table 5 style).
+pub fn ratio(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+/// Simple ASCII bar for figure-style output.
+pub fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(n), ".".repeat(width - n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.row("x", vec!["1".into(), "2".into()]);
+        t.row("longlabel", vec!["10".into(), "20000".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // all data lines same width
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("x", vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.308), "30.8%");
+        assert_eq!(ratio(23.441), "23.44");
+        assert_eq!(bar(0.5, 10), "#####.....");
+        assert_eq!(bar(2.0, 4), "####");
+    }
+}

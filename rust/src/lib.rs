@@ -1,0 +1,56 @@
+//! # katlb — K-bit Aligned TLB reproduction
+//!
+//! Full reproduction of *"Coalesced TLB to Exploit Diverse Contiguity of
+//! Memory Mapping"* (CS.DC 2019): a trace-driven TLB simulator with every
+//! baseline the paper compares against (Base, THP, COLT, Cluster, RMM,
+//! Anchor static/dynamic) and the paper's contribution, the **K-bit
+//! Aligned TLB** (Algorithms 1–3 + the alignment predictor).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * [`runtime`] loads AOT-compiled JAX/Pallas artifacts (HLO text) via
+//!   the PJRT C API and executes them from rust — python never runs at
+//!   simulation time.
+//! * [`workloads`] + the `trace_gen` artifact produce page-level access
+//!   streams for 16 benchmark proxies (SPEC2006 + graph500 + gups).
+//! * [`coordinator`] fans experiment cells (benchmark × scheme ×
+//!   mapping) out to worker threads and regenerates every table and
+//!   figure of the paper's evaluation.
+//!
+//! Quickstart:
+//! ```no_run
+//! use katlb::prelude::*;
+//! let mapping = katlb::mem::mapgen::synthetic(
+//!     katlb::mem::mapgen::SyntheticKind::Mixed, 1 << 18, 42);
+//! let pt = katlb::pagetable::PageTable::from_mapping(&mapping);
+//! let mut eng = katlb::sim::Engine::new(
+//!     katlb::schemes::kaligned::KAligned::boxed_from_pt(&pt, 2),
+//!     &pt,
+//! );
+//! ```
+
+pub mod coordinator;
+pub mod mem;
+pub mod pagetable;
+pub mod prng;
+pub mod runtime;
+pub mod schemes;
+pub mod sim;
+pub mod testutil;
+pub mod tlb;
+pub mod workloads;
+
+/// Virtual page number (4KB granularity).
+pub type Vpn = u64;
+/// Physical page number (4KB granularity).
+pub type Ppn = u64;
+
+/// Pages per 2MB huge page (x86-64).
+pub const HUGE_PAGES: u64 = 512;
+
+pub mod prelude {
+    pub use crate::mem::mapping::MemoryMapping;
+    pub use crate::pagetable::PageTable;
+    pub use crate::schemes::Scheme;
+    pub use crate::sim::{Engine, Metrics};
+    pub use crate::{Ppn, Vpn, HUGE_PAGES};
+}

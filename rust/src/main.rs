@@ -1,0 +1,164 @@
+//! `repro` — the leader binary: regenerates every table and figure of
+//! the paper from the CLI.
+//!
+//! Usage:
+//!   repro <command> [--quick] [--no-xla] [--trace-len N] [--workers N]
+//!
+//! Commands:
+//!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
+//!   all        — everything above, in order
+//!   smoke      — load artifacts, run one XLA trace chunk, print stats
+
+use anyhow::{bail, Result};
+use katlb::coordinator::{experiments, Config};
+use katlb::runtime::Runtime;
+use std::time::Instant;
+
+fn parse_args() -> Result<(String, Config)> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut cfg = Config::default();
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--quick" => {
+                let q = Config::quick();
+                cfg.trace_len = q.trace_len;
+                cfg.epoch = q.epoch;
+                cfg.max_ws_pages = q.max_ws_pages;
+            }
+            "--no-xla" => cfg.use_xla = false,
+            "--trace-len" => {
+                cfg.trace_len = args
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--trace-len needs a value"))?
+                    .parse()?
+            }
+            "--workers" => {
+                cfg.workers = args
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--workers needs a value"))?
+                    .parse()?
+            }
+            "--max-ws" => {
+                cfg.max_ws_pages = Some(
+                    args.next()
+                        .ok_or_else(|| anyhow::anyhow!("--max-ws needs a value"))?
+                        .parse()?,
+                )
+            }
+            other => bail!("unknown flag {other}"),
+        }
+    }
+    Ok((cmd, cfg))
+}
+
+fn needs_demand(cmd: &str) -> bool {
+    matches!(cmd, "fig8" | "fig9" | "fig10" | "table4" | "table5" | "table6" | "all")
+}
+
+fn main() -> Result<()> {
+    let (cmd, cfg) = parse_args()?;
+    let t0 = Instant::now();
+    eprintln!(
+        "# repro {cmd} — trace_len={} workers={} xla={} {}",
+        cfg.trace_len,
+        cfg.effective_workers(),
+        cfg.use_xla,
+        cfg.max_ws_pages.map(|c| format!("max_ws={c}")).unwrap_or_default()
+    );
+
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!(
+                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|all|smoke> \
+                 [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES]"
+            );
+            return Ok(());
+        }
+        "smoke" => {
+            let rt = Runtime::load_default()?;
+            eprintln!("platform = {}", rt.platform());
+            let params = katlb::workloads::benchmark("mcf").unwrap().params;
+            let t = Instant::now();
+            let chunk = rt.trace_chunk(42, 0, &params.to_i32())?;
+            eprintln!(
+                "trace_gen: {} vpns in {:?} (first 8: {:?})",
+                chunk.len(),
+                t.elapsed(),
+                &chunk[..8]
+            );
+            return Ok(());
+        }
+        "initcost" => {
+            println!("{}", experiments::initcost_table().render());
+            return Ok(());
+        }
+        "ablate" => {
+            for t in experiments::ablate(&cfg, "gromacs")? {
+                println!("{}", t.render());
+            }
+            for t in experiments::ablate(&cfg, "mcf")? {
+                println!("{}", t.render());
+            }
+        }
+        "fig1" => {
+            println!("{}", experiments::fig1(&cfg)?.render());
+        }
+        "fig2" => {
+            println!("{}", experiments::fig2(&cfg)?.render());
+        }
+        "fig3" => {
+            println!("{}", experiments::fig3(&cfg)?.render());
+        }
+        _ if needs_demand(&cmd) => {
+            eprintln!("# building 16 benchmark contexts (mappings + traces)...");
+            let ctxs = experiments::demand_contexts(&cfg)?;
+            eprintln!("# contexts ready at {:?}", t0.elapsed());
+            match cmd.as_str() {
+                "fig8" => {
+                    println!("{}", experiments::fig8(&ctxs, &cfg).table.render());
+                }
+                "fig9" => {
+                    let d = experiments::fig8(&ctxs, &cfg);
+                    println!("{}", experiments::fig9(&d).render());
+                }
+                "fig10" => {
+                    let d = experiments::fig8(&ctxs, &cfg);
+                    let (t10, t11) = experiments::fig10_11(&d);
+                    println!("{}", t10.render());
+                    println!("{}", t11.render());
+                }
+                "table4" => {
+                    let d = experiments::fig8(&ctxs, &cfg);
+                    println!("{}", experiments::table4(&ctxs, &cfg, &d)?.render());
+                }
+                "table5" => {
+                    println!("{}", experiments::table5(&ctxs, &cfg).render());
+                }
+                "table6" => {
+                    let d = experiments::fig8(&ctxs, &cfg);
+                    println!("{}", experiments::table6(&d).render());
+                }
+                "all" => {
+                    println!("{}", experiments::fig2(&cfg)?.render());
+                    println!("{}", experiments::fig3(&cfg)?.render());
+                    println!("{}", experiments::fig1(&cfg)?.render());
+                    let d = experiments::fig8(&ctxs, &cfg);
+                    println!("{}", d.table.render());
+                    println!("{}", experiments::fig9(&d).render());
+                    let (t10, t11) = experiments::fig10_11(&d);
+                    println!("{}", t10.render());
+                    println!("{}", t11.render());
+                    println!("{}", experiments::table4(&ctxs, &cfg, &d)?.render());
+                    println!("{}", experiments::table5(&ctxs, &cfg).render());
+                    println!("{}", experiments::table6(&d).render());
+                    println!("{}", experiments::initcost_table().render());
+                }
+                _ => unreachable!(),
+            }
+        }
+        other => bail!("unknown command {other} (try `repro help`)"),
+    }
+    eprintln!("# done in {:?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,338 @@
+//! Physical-frame buddy allocator (Linux-style, orders 0..=MAX_ORDER).
+//!
+//! This is the substrate that makes the "demand" mapping realistic: the
+//! contiguity a process observes is whatever runs of physical frames the
+//! buddy system can hand out, and long-running fragmentation (simulated
+//! by [`BuddyAllocator::fragment`]) caps the achievable run lengths —
+//! exactly the mechanism the paper names as the source of *mixed
+//! contiguity* (§2).
+
+use crate::prng::Rng;
+use std::collections::BTreeSet;
+
+/// Largest block order (2^10 frames = 4MB with 4KB frames).
+pub const MAX_ORDER: u32 = 10;
+
+/// A run of physically contiguous frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Buddy allocator over `total_frames` physical frames.
+///
+/// Free blocks of order `o` (2^o frames, start aligned to 2^o) live in
+/// `free[o]`; allocation splits larger blocks, freeing coalesces with
+/// the buddy block when possible.
+pub struct BuddyAllocator {
+    free: Vec<BTreeSet<u64>>,
+    total_frames: u64,
+    free_frames: u64,
+}
+
+impl BuddyAllocator {
+    /// New allocator with all frames free. `total_frames` is rounded
+    /// down to a multiple of the max block size.
+    pub fn new(total_frames: u64) -> Self {
+        let block = 1u64 << MAX_ORDER;
+        let total = (total_frames / block) * block;
+        assert!(total > 0, "need at least one max-order block");
+        let mut free: Vec<BTreeSet<u64>> = (0..=MAX_ORDER).map(|_| BTreeSet::new()).collect();
+        let mut start = 0;
+        while start < total {
+            free[MAX_ORDER as usize].insert(start);
+            start += block;
+        }
+        BuddyAllocator { free, total_frames: total, free_frames: total }
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.total_frames
+    }
+
+    pub fn free_frames(&self) -> u64 {
+        self.free_frames
+    }
+
+    /// Allocate one block of `order`, splitting larger blocks as needed.
+    pub fn alloc_block(&mut self, order: u32) -> Option<u64> {
+        assert!(order <= MAX_ORDER);
+        let mut o = order;
+        // find the smallest non-empty order >= requested
+        while o <= MAX_ORDER && self.free[o as usize].is_empty() {
+            o += 1;
+        }
+        if o > MAX_ORDER {
+            return None;
+        }
+        let start = *self.free[o as usize].iter().next().unwrap();
+        self.free[o as usize].remove(&start);
+        // split down to the requested order
+        while o > order {
+            o -= 1;
+            let buddy = start + (1u64 << o);
+            self.free[o as usize].insert(buddy);
+        }
+        self.free_frames -= 1u64 << order;
+        Some(start)
+    }
+
+    /// Free one block of `order` at `start` (must be order-aligned and
+    /// previously allocated), coalescing with free buddies.
+    pub fn free_block(&mut self, mut start: u64, order: u32) {
+        assert!(order <= MAX_ORDER);
+        assert_eq!(start & ((1u64 << order) - 1), 0, "misaligned free");
+        self.free_frames += 1u64 << order;
+        let mut o = order;
+        while o < MAX_ORDER {
+            let buddy = start ^ (1u64 << o);
+            if self.free[o as usize].remove(&buddy) {
+                start = start.min(buddy);
+                o += 1;
+            } else {
+                break;
+            }
+        }
+        self.free[o as usize].insert(start);
+    }
+
+    /// Allocate `n` frames as a list of physically contiguous runs,
+    /// preferring large blocks (greedy, like high-order first
+    /// allocation).  Adjacent blocks that happen to be physically
+    /// contiguous are merged into a single run — this is the mechanism
+    /// that produces "medium" contiguity chunks bigger than a single
+    /// buddy block.  Returns None (and rolls back) if memory is
+    /// exhausted.
+    pub fn alloc_run(&mut self, n: u64) -> Option<Vec<Run>> {
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        if n > self.free_frames {
+            return None;
+        }
+        let mut runs: Vec<Run> = Vec::new();
+        let mut remaining = n;
+        while remaining > 0 {
+            let want = remaining.min(1u64 << MAX_ORDER);
+            // largest order that fits in `remaining`
+            let order = 63 - want.leading_zeros();
+            // find the largest available order <= order, else any order
+            let mut o = order.min(MAX_ORDER);
+            let got = loop {
+                if let Some(s) = self.alloc_block(o) {
+                    break Some((s, o));
+                }
+                if o == 0 {
+                    break None;
+                }
+                o -= 1;
+            };
+            let (start, o) = match got {
+                Some(x) => x,
+                None => {
+                    // roll back everything allocated so far
+                    for r in &runs {
+                        self.free_frames_range(r.start, r.len);
+                    }
+                    return None;
+                }
+            };
+            let len = (1u64 << o).min(remaining);
+            // give back the unused tail of the block frame-by-frame
+            let mut extra = start + len;
+            let end = start + (1u64 << o);
+            while extra < end {
+                self.free_block(extra, 0);
+                extra += 1;
+            }
+            self.free_frames -= 0; // bookkeeping handled in alloc/free
+            // merge with previous run if physically adjacent
+            if let Some(last) = runs.last_mut() {
+                if last.start + last.len == start {
+                    last.len += len;
+                } else {
+                    runs.push(Run { start, len });
+                }
+            } else {
+                runs.push(Run { start, len });
+            }
+            remaining -= len;
+        }
+        Some(runs)
+    }
+
+    /// Free an arbitrary frame range (decomposes into aligned blocks).
+    pub fn free_frames_range(&mut self, start: u64, len: u64) {
+        let mut s = start;
+        let end = start + len;
+        while s < end {
+            // largest aligned block that fits
+            let align = if s == 0 { MAX_ORDER } else { s.trailing_zeros().min(MAX_ORDER) };
+            let mut o = align;
+            while (1u64 << o) > end - s {
+                o -= 1;
+            }
+            self.free_block(s, o);
+            s += 1u64 << o;
+        }
+    }
+
+    /// Simulate long-running fragmentation: pin *all* of memory, then
+    /// free random runs of mean length `run_len` frames until
+    /// `keep_free_permille` of memory is free again.  The surviving
+    /// pinned frames sit between the freed runs, capping the
+    /// contiguity the allocator can hand out afterwards — larger
+    /// `run_len` models a less fragmented system.
+    pub fn fragment(&mut self, rng: &mut Rng, keep_free_permille: u64, run_len: u64) {
+        let run_len = run_len.max(1);
+        // drain every free block: everything is now "pinned"
+        let mut drained = true;
+        while drained {
+            drained = false;
+            for o in (0..=MAX_ORDER).rev() {
+                if let Some(&s) = self.free[o as usize].iter().next() {
+                    self.free[o as usize].remove(&s);
+                    self.free_frames -= 1u64 << o;
+                    drained = true;
+                    break;
+                }
+            }
+        }
+        // freed-bitmap so runs never double-free
+        let words = (self.total_frames as usize).div_ceil(64);
+        let mut freed = vec![0u64; words];
+        let target_free = self.total_frames * keep_free_permille / 1000;
+        let mut guard = 0u64;
+        while self.free_frames < target_free && guard < self.total_frames * 4 {
+            let start = rng.below(self.total_frames);
+            let len = rng.range(1, run_len * 2); // mean ≈ run_len
+            let end = (start + len).min(self.total_frames);
+            for f in start..end {
+                let (w, b) = ((f / 64) as usize, f % 64);
+                if freed[w] & (1 << b) == 0 {
+                    freed[w] |= 1 << b;
+                    self.free_block(f, 0);
+                }
+                guard += 1;
+            }
+            guard += 1;
+        }
+    }
+
+    /// Sanity check: free-list blocks are aligned, disjoint, and the
+    /// free-frame count matches. Used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = 0u64;
+        let mut frames: Vec<(u64, u64)> = Vec::new();
+        for (o, set) in self.free.iter().enumerate() {
+            for &s in set {
+                if s & ((1u64 << o) - 1) != 0 {
+                    return Err(format!("misaligned block {s} at order {o}"));
+                }
+                if s + (1u64 << o) > self.total_frames {
+                    return Err(format!("block {s} order {o} out of range"));
+                }
+                frames.push((s, s + (1u64 << o)));
+                seen += 1u64 << o;
+            }
+        }
+        if seen != self.free_frames {
+            return Err(format!("free count mismatch: {} vs {}", seen, self.free_frames));
+        }
+        frames.sort_unstable();
+        for w in frames.windows(2) {
+            if w[0].1 > w[1].0 {
+                return Err(format!("overlapping free blocks {:?} {:?}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut b = BuddyAllocator::new(1 << 14);
+        let total = b.free_frames();
+        let blk = b.alloc_block(3).unwrap();
+        assert_eq!(b.free_frames(), total - 8);
+        b.free_block(blk, 3);
+        assert_eq!(b.free_frames(), total);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_and_coalesce() {
+        let mut b = BuddyAllocator::new(1 << MAX_ORDER);
+        let a0 = b.alloc_block(0).unwrap();
+        let a1 = b.alloc_block(0).unwrap();
+        assert_eq!(a1, a0 ^ 1, "buddies allocated first");
+        b.free_block(a0, 0);
+        b.free_block(a1, 0);
+        b.check_invariants().unwrap();
+        // after coalescing we can allocate the max block again
+        assert!(b.alloc_block(MAX_ORDER).is_some());
+    }
+
+    #[test]
+    fn alloc_run_exact_and_contiguous() {
+        let mut b = BuddyAllocator::new(1 << 14);
+        let runs = b.alloc_run(1000).unwrap();
+        let total: u64 = runs.iter().map(|r| r.len).sum();
+        assert_eq!(total, 1000);
+        // fresh allocator: everything is contiguous, so one run
+        assert_eq!(runs.len(), 1);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alloc_run_exhaustion_rolls_back() {
+        let mut b = BuddyAllocator::new(1 << MAX_ORDER);
+        let free_before = b.free_frames();
+        assert!(b.alloc_run(free_before + 1).is_none());
+        assert_eq!(b.free_frames(), free_before);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fragmentation_caps_runs() {
+        let mut rng = Rng::new(42);
+        let mut b = BuddyAllocator::new(1 << 16);
+        b.fragment(&mut rng, 500, 900);
+        b.check_invariants().unwrap();
+        let runs = b.alloc_run(4096).unwrap();
+        assert!(runs.len() > 1, "fragmented memory must yield split runs");
+    }
+
+    #[test]
+    fn property_random_alloc_free() {
+        // randomized invariant check (proptest substitute)
+        let mut rng = Rng::new(7);
+        for case in 0..50 {
+            let mut b = BuddyAllocator::new(1 << 13);
+            let mut live: Vec<(u64, u32)> = Vec::new();
+            for _ in 0..200 {
+                if rng.chance(6, 10) || live.is_empty() {
+                    let o = rng.below(MAX_ORDER as u64 + 1) as u32;
+                    if let Some(s) = b.alloc_block(o) {
+                        live.push((s, o));
+                    }
+                } else {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (s, o) = live.swap_remove(i);
+                    b.free_block(s, o);
+                }
+            }
+            b.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            for (s, o) in live {
+                b.free_block(s, o);
+            }
+            b.check_invariants().unwrap();
+            assert_eq!(b.free_frames(), b.total_frames());
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Contiguity histogram — the OS-maintained statistic Algorithm 3
+//! consumes, and the data behind Figures 2/3.
+
+use super::mapping::MemoryMapping;
+use std::collections::BTreeMap;
+
+/// The paper's four contiguity classes (§2.1 / Figures 2-3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ContigClass {
+    /// size 1: no exploitable contiguity
+    Single,
+    /// 2..=63 pages
+    Small,
+    /// 64..=511 pages
+    Medium,
+    /// >= 512 pages
+    Large,
+}
+
+impl ContigClass {
+    pub fn of(size: u64) -> Self {
+        match size {
+            0 => unreachable!("chunks are non-empty"),
+            1 => ContigClass::Single,
+            2..=63 => ContigClass::Small,
+            64..=511 => ContigClass::Medium,
+            _ => ContigClass::Large,
+        }
+    }
+
+    pub const ALL: [ContigClass; 4] =
+        [ContigClass::Single, ContigClass::Small, ContigClass::Medium, ContigClass::Large];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ContigClass::Single => "1",
+            ContigClass::Small => "2-63",
+            ContigClass::Medium => "64-511",
+            ContigClass::Large => ">=512",
+        }
+    }
+}
+
+/// Histogram of contiguity-chunk sizes: `(size, freq)` pairs, exactly
+/// the structure Algorithm 3 takes as input.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ContigHistogram {
+    counts: BTreeMap<u64, u64>,
+}
+
+impl ContigHistogram {
+    pub fn from_mapping(m: &MemoryMapping) -> Self {
+        let mut counts = BTreeMap::new();
+        for c in m.chunks() {
+            *counts.entry(c.len).or_insert(0) += 1;
+        }
+        ContigHistogram { counts }
+    }
+
+    pub fn from_sizes(sizes: &[u64]) -> Self {
+        let mut counts = BTreeMap::new();
+        for &s in sizes {
+            *counts.entry(s).or_insert(0) += 1;
+        }
+        ContigHistogram { counts }
+    }
+
+    /// `(size, freq)` pairs in ascending size order.
+    pub fn pairs(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().map(|(&s, &f)| (s, f))
+    }
+
+    pub fn total_chunks(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Total pages covered by all chunks (Algorithm 3's
+    /// `total_contiguity`).
+    pub fn total_pages(&self) -> u64 {
+        self.counts.iter().map(|(&s, &f)| s * f).sum()
+    }
+
+    /// Chunk counts per paper class (a Figure 2/3 column).
+    pub fn class_counts(&self) -> [(ContigClass, u64); 4] {
+        let mut out = [
+            (ContigClass::Single, 0),
+            (ContigClass::Small, 0),
+            (ContigClass::Medium, 0),
+            (ContigClass::Large, 0),
+        ];
+        for (&s, &f) in &self.counts {
+            let c = ContigClass::of(s);
+            let slot = out.iter_mut().find(|(k, _)| *k == c).unwrap();
+            slot.1 += f;
+        }
+        out
+    }
+
+    /// Number of distinct contiguity classes with at least one chunk of
+    /// size >= 2 — "mixed contiguity" means more than one (§2.2).
+    pub fn n_types(&self) -> usize {
+        self.class_counts()
+            .iter()
+            .filter(|(k, n)| *n > 0 && *k != ContigClass::Single)
+            .count()
+    }
+
+    pub fn is_mixed(&self) -> bool {
+        self.n_types() > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{Ppn, Vpn};
+
+    fn mapping_with_sizes(sizes: &[u64]) -> MemoryMapping {
+        let mut pages = Vec::new();
+        let mut v: Vpn = 0;
+        let mut p: Ppn = 1_000_000;
+        for &s in sizes {
+            for j in 0..s {
+                pages.push((v + j, p + j));
+            }
+            v += s + 1; // virtual gap: next chunk cannot merge
+            p += s + 2;
+        }
+        MemoryMapping::new(pages)
+    }
+
+    #[test]
+    fn classes_match_paper_ranges() {
+        assert_eq!(ContigClass::of(1), ContigClass::Single);
+        assert_eq!(ContigClass::of(2), ContigClass::Small);
+        assert_eq!(ContigClass::of(63), ContigClass::Small);
+        assert_eq!(ContigClass::of(64), ContigClass::Medium);
+        assert_eq!(ContigClass::of(511), ContigClass::Medium);
+        assert_eq!(ContigClass::of(512), ContigClass::Large);
+        assert_eq!(ContigClass::of(100_000), ContigClass::Large);
+    }
+
+    #[test]
+    fn histogram_counts_and_totals() {
+        let m = mapping_with_sizes(&[16, 16, 128, 600, 1, 1, 1]);
+        let h = ContigHistogram::from_mapping(&m);
+        assert_eq!(h.total_chunks(), 7);
+        assert_eq!(h.total_pages(), 16 + 16 + 128 + 600 + 3);
+        let classes = h.class_counts();
+        assert_eq!(classes[0].1, 3); // singles
+        assert_eq!(classes[1].1, 2); // small
+        assert_eq!(classes[2].1, 1); // medium
+        assert_eq!(classes[3].1, 1); // large
+    }
+
+    #[test]
+    fn mixed_detection() {
+        assert!(ContigHistogram::from_mapping(&mapping_with_sizes(&[16, 128])).is_mixed());
+        assert!(!ContigHistogram::from_mapping(&mapping_with_sizes(&[16, 16])).is_mixed());
+        assert!(!ContigHistogram::from_mapping(&mapping_with_sizes(&[1, 1, 16])).is_mixed());
+    }
+
+    #[test]
+    fn from_sizes_equals_from_mapping() {
+        let sizes = [4u64, 4, 9, 300];
+        let m = mapping_with_sizes(&sizes);
+        assert_eq!(
+            ContigHistogram::from_mapping(&m),
+            ContigHistogram::from_sizes(&sizes)
+        );
+    }
+}

@@ -1,0 +1,365 @@
+//! Mapping generators: the four synthetic mappings of Table 3 and the
+//! buddy-allocator-backed "demand" mapping standing in for the paper's
+//! pagemap captures (see DESIGN.md §Substitutions).
+//!
+//! Virtual placement models the OS support the paper's Algorithms 1/3
+//! presuppose ("every contiguity of chunks covered by its matching
+//! aligned entry", §3.3): each physically contiguous extent is placed
+//! at a VA aligned to the power of two containing it (capped at the
+//! 2^11 ceiling of Table 1), the way mmap/THP align large extents in
+//! practice.  This leaves VA holes between extents; the trace layer
+//! addresses the working set by *page index* and the coordinator
+//! remaps indices to VPNs, so traces never touch a hole.
+
+use super::buddy::BuddyAllocator;
+use super::mapping::MemoryMapping;
+use crate::prng::Rng;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+/// Table 3: synthetic contiguity types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyntheticKind {
+    /// chunks of 1-63 pages
+    Small,
+    /// chunks of 64-511 pages
+    Medium,
+    /// chunks of 512-1024 pages
+    Large,
+    /// 0.4 small + 0.4 medium + 0.2 large (weights in pages)
+    Mixed,
+}
+
+impl SyntheticKind {
+    pub const ALL: [SyntheticKind; 4] = [
+        SyntheticKind::Small,
+        SyntheticKind::Medium,
+        SyntheticKind::Large,
+        SyntheticKind::Mixed,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SyntheticKind::Small => "Small",
+            SyntheticKind::Medium => "Medium",
+            SyntheticKind::Large => "Large",
+            SyntheticKind::Mixed => "Mixed",
+        }
+    }
+}
+
+/// Draw the next chunk size.  For `Mixed`, Table 3's 0.4/0.4/0.2
+/// weights are *page* fractions, so the class is chosen by largest
+/// page deficit against the targets (a weighted-by-count draw would
+/// skew pages heavily toward the large class).
+fn draw_chunk(kind: SyntheticKind, rng: &mut Rng, class_pages: &mut [u64; 3]) -> u64 {
+    let class = match kind {
+        SyntheticKind::Small => 0,
+        SyntheticKind::Medium => 1,
+        SyntheticKind::Large => 2,
+        SyntheticKind::Mixed => {
+            let total: u64 = class_pages.iter().sum::<u64>() + 1;
+            let targets = [4u64, 4, 2]; // tenths
+            (0..3)
+                .max_by_key(|&c| {
+                    targets[c] as i128 * total as i128 - 10 * class_pages[c] as i128
+                })
+                .unwrap()
+        }
+    };
+    let s = match class {
+        0 => rng.range(1, 63),
+        1 => rng.range(64, 511),
+        _ => rng.range(512, 1024),
+    };
+    class_pages[class] += s;
+    s
+}
+
+/// Table 1's alignment ceiling: no chunk needs a VA alignment beyond
+/// 2^11 pages.
+pub const ALIGN_CAP: u64 = 1 << 11;
+
+/// VA alignment the OS gives an extent of `len` pages: 2^k for the
+/// Table 1 alignment k matching the extent size (§3.3's placement
+/// assumption — "every contiguity of chunks covered by its matching
+/// aligned entry" requires the chunk to *contain* its k-bit aligned
+/// VPN at its start).
+#[inline]
+pub fn extent_alignment(len: u64) -> u64 {
+    match len {
+        0 | 1 => 1,
+        2..=16 => 1 << 4,
+        17..=64 => 1 << 6,
+        65..=128 => 1 << 7,
+        129..=256 => 1 << 8,
+        257..=512 => 1 << 9,
+        513..=1024 => 1 << 10,
+        _ => ALIGN_CAP,
+    }
+}
+
+fn align_up(x: u64, a: u64) -> u64 {
+    debug_assert!(a.is_power_of_two());
+    (x + a - 1) & !(a - 1)
+}
+
+/// Generate a synthetic mapping (Table 3) of `npages` pages.
+///
+/// Each chunk is placed at a VA aligned to its containing power of two
+/// (see module docs) and at a physical address with the same
+/// 512-alignment residue, so THP promotion (when the experiment asks
+/// for it) can capture aligned interiors.  A ≥2-frame physical gap
+/// keeps chunks from merging.
+pub fn synthetic(kind: SyntheticKind, npages: u64, seed: u64) -> MemoryMapping {
+    let mut rng = Rng::new(seed ^ 0xA11C_ED);
+    let mut pages: Vec<(Vpn, Ppn)> = Vec::with_capacity(npages as usize);
+    let mut v: Vpn = 0;
+    let mut pcursor: Ppn = 0;
+    let mut mapped = 0u64;
+    let mut class_pages = [0u64; 3];
+    while mapped < npages {
+        let want = draw_chunk(kind, &mut rng, &mut class_pages).min(npages - mapped);
+        v = align_up(v, extent_alignment(want));
+        // gap keeps chunks physically separate
+        let mut pstart = pcursor + rng.range(2, 64);
+        if want >= HUGE_PAGES {
+            // match the 512-residue so VA-aligned interiors are also
+            // physically 512-aligned (THP promotable)
+            let need = v % HUGE_PAGES;
+            let have = pstart % HUGE_PAGES;
+            pstart += (need + HUGE_PAGES - have) % HUGE_PAGES;
+            if pstart <= pcursor + 1 {
+                pstart += HUGE_PAGES;
+            }
+        }
+        for j in 0..want {
+            pages.push((v + j, pstart + j));
+        }
+        v += want;
+        mapped += want;
+        pcursor = pstart + want;
+    }
+    MemoryMapping::new(pages)
+}
+
+/// Parameters of the demand-paging model for one workload.
+///
+/// `regions` are (lo, hi, weight) triples: allocation-request sizes in
+/// pages are drawn uniformly from a weighted choice of ranges, like a
+/// process interleaving large mallocs/mmaps with small ones.
+/// Fragmentation (`frag_*`, per-mille) is applied to the buddy
+/// allocator before the process starts, standing in for a long-running
+/// system (§2.1).
+#[derive(Clone, Debug)]
+pub struct DemandProfile {
+    pub total_pages: u64,
+    pub regions: Vec<(u64, u64, u64)>,
+    /// per-mille of memory left free after background fragmentation
+    pub frag_keep_free: u64,
+    /// mean free-run length (frames) the fragmented system exposes
+    pub frag_run: u64,
+}
+
+impl DemandProfile {
+    /// A generic mixed-contiguity profile (used by tests/examples).
+    pub fn generic(total_pages: u64) -> Self {
+        DemandProfile {
+            total_pages,
+            regions: vec![(1, 8, 30), (8, 64, 30), (64, 512, 25), (512, 4096, 15)],
+            frag_keep_free: 700,
+            frag_run: 96,
+        }
+    }
+}
+
+/// Generate a "demand" mapping: fragment physical memory, then serve
+/// the process' allocation requests from the buddy allocator.  Each
+/// physically-contiguous run the allocator returns becomes one
+/// contiguity chunk, which is how real mappings end up with *mixed*
+/// contiguity.
+pub fn demand(profile: &DemandProfile, seed: u64) -> MemoryMapping {
+    let mut rng = Rng::new(seed ^ 0xDE4A_0D);
+    // physical memory: 4x the working set so fragmentation has room
+    let frames = (profile.total_pages * 4).next_power_of_two().max(1 << 12);
+    let mut buddy = BuddyAllocator::new(frames);
+    buddy.fragment(&mut rng, profile.frag_keep_free, profile.frag_run);
+
+    let weights: Vec<u64> = profile.regions.iter().map(|&(_, _, w)| w).collect();
+    let mut pages: Vec<(Vpn, Ppn)> = Vec::with_capacity(profile.total_pages as usize);
+    let mut v: Vpn = 0;
+    let mut mapped = 0u64;
+    while mapped < profile.total_pages {
+        let (lo, hi, _) = profile.regions[rng.weighted(&weights)];
+        let want = rng.range(lo, hi).min(profile.total_pages - mapped);
+        match buddy.alloc_run(want) {
+            Some(runs) => {
+                // each physically contiguous run becomes one VA extent,
+                // aligned to its containing power of two (module docs);
+                // physical 512-residue matched for THP promotability
+                for r in runs {
+                    v = align_up(v, extent_alignment(r.len));
+                    if r.len >= HUGE_PAGES {
+                        // usually a no-op (buddy runs of >=512 start on
+                        // an order-9 boundary), but fragmented merges can
+                        // start unaligned — match the residue anyway
+                        let shift = (HUGE_PAGES + r.start % HUGE_PAGES - v % HUGE_PAGES)
+                            % HUGE_PAGES;
+                        v += shift;
+                    }
+                    for j in 0..r.len {
+                        pages.push((v, r.start + j));
+                        v += 1;
+                    }
+                    mapped += r.len;
+                }
+            }
+            None => break, // out of memory: map what we have
+        }
+    }
+    MemoryMapping::new(pages)
+}
+
+/// Convenience: demand mapping with THP promotion applied (the paper's
+/// "real mapping ... with THP on" configuration).
+pub fn demand_thp(profile: &DemandProfile, seed: u64) -> MemoryMapping {
+    let mut m = demand(profile, seed);
+    m.promote_thp();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::histogram::ContigHistogram;
+
+    #[test]
+    fn synthetic_maps_exactly_npages_with_aligned_extents() {
+        for kind in SyntheticKind::ALL {
+            let m = synthetic(kind, 10_000, 1);
+            assert_eq!(m.len(), 10_000, "{kind:?}");
+            m.validate().unwrap();
+            // every chunk's VA start is aligned to its containing
+            // power of two (capped): the placement Algorithm 1 needs
+            for c in m.chunks() {
+                let a = extent_alignment(c.len);
+                assert_eq!(c.vstart % a, 0, "{kind:?}: chunk {c:?} misaligned");
+            }
+        }
+    }
+
+    #[test]
+    fn extent_alignment_mirrors_table1() {
+        assert_eq!(extent_alignment(1), 1);
+        assert_eq!(extent_alignment(2), 16);
+        assert_eq!(extent_alignment(16), 16);
+        assert_eq!(extent_alignment(17), 64);
+        assert_eq!(extent_alignment(500), 512);
+        assert_eq!(extent_alignment(513), 1024);
+        assert_eq!(extent_alignment(5000), ALIGN_CAP);
+    }
+
+    #[test]
+    fn synthetic_chunk_sizes_in_range() {
+        let m = synthetic(SyntheticKind::Small, 50_000, 2);
+        // all chunks except possibly the clipped last one
+        let sizes = m.chunk_sizes();
+        for &s in &sizes[..sizes.len() - 1] {
+            assert!((1..=63).contains(&s), "small chunk {s}");
+        }
+        let m = synthetic(SyntheticKind::Medium, 50_000, 3);
+        let sizes = m.chunk_sizes();
+        for &s in &sizes[..sizes.len() - 1] {
+            assert!((64..=511).contains(&s), "medium chunk {s}");
+        }
+        let m = synthetic(SyntheticKind::Large, 50_000, 4);
+        let sizes = m.chunk_sizes();
+        for &s in &sizes[..sizes.len() - 1] {
+            assert!((512..=1024).contains(&s), "large chunk {s}");
+        }
+    }
+
+    #[test]
+    fn mixed_is_mixed() {
+        let m = synthetic(SyntheticKind::Mixed, 200_000, 5);
+        let h = ContigHistogram::from_mapping(&m);
+        assert!(h.is_mixed(), "Table 3 mixed mapping must show mixed contiguity");
+        assert!(h.n_types() == 3);
+    }
+
+    #[test]
+    fn mixed_weights_roughly_hold() {
+        let m = synthetic(SyntheticKind::Mixed, 500_000, 6);
+        let mut pages_by_class = [0u64; 3]; // small, medium, large
+        let sizes = m.chunk_sizes();
+        for &s in &sizes {
+            if s < 64 {
+                pages_by_class[0] += s;
+            } else if s < 512 {
+                pages_by_class[1] += s;
+            } else {
+                pages_by_class[2] += s;
+            }
+        }
+        let total: u64 = pages_by_class.iter().sum();
+        let frac = |x: u64| x as f64 / total as f64;
+        assert!((frac(pages_by_class[0]) - 0.4).abs() < 0.08);
+        assert!((frac(pages_by_class[1]) - 0.4).abs() < 0.08);
+        assert!((frac(pages_by_class[2]) - 0.2).abs() < 0.08);
+    }
+
+    #[test]
+    fn large_synthetic_promotes_thp() {
+        let mut m = synthetic(SyntheticKind::Large, 100_000, 7);
+        let n = m.promote_thp();
+        assert!(n > 50, "large chunks must yield huge pages, got {n}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn demand_mapping_is_mixed_and_valid() {
+        let m = demand(&DemandProfile::generic(1 << 16), 8);
+        assert!(m.len() as u64 >= (1 << 16) - 4096, "mapped most of the ws");
+        m.validate().unwrap();
+        let h = ContigHistogram::from_mapping(&m);
+        assert!(h.is_mixed(), "demand paging must produce mixed contiguity");
+    }
+
+    #[test]
+    fn demand_thp_promotes_some() {
+        let mut profile = DemandProfile::generic(1 << 17);
+        profile.frag_keep_free = 900; // lightly fragmented: big runs exist
+        profile.frag_run = 2048;
+        let m = demand_thp(&profile, 9);
+        assert!(!m.huge_regions().is_empty(), "expected some THP promotion");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn determinism() {
+        let a = synthetic(SyntheticKind::Mixed, 30_000, 42);
+        let b = synthetic(SyntheticKind::Mixed, 30_000, 42);
+        assert_eq!(a.pages(), b.pages());
+        let c = demand(&DemandProfile::generic(1 << 14), 42);
+        let d = demand(&DemandProfile::generic(1 << 14), 42);
+        assert_eq!(c.pages(), d.pages());
+    }
+
+    #[test]
+    fn heavier_fragmentation_smaller_chunks() {
+        let mut light = DemandProfile::generic(1 << 16);
+        light.frag_keep_free = 950;
+        light.frag_run = 2048;
+        let mut heavy = DemandProfile::generic(1 << 16);
+        heavy.frag_keep_free = 500;
+        heavy.frag_run = 8;
+        let hl = ContigHistogram::from_mapping(&demand(&light, 10));
+        let hh = ContigHistogram::from_mapping(&demand(&heavy, 10));
+        let mean = |h: &ContigHistogram| h.total_pages() as f64 / h.total_chunks() as f64;
+        assert!(
+            mean(&hl) > mean(&hh),
+            "fragmentation must shrink mean chunk size ({} vs {})",
+            mean(&hl),
+            mean(&hh)
+        );
+    }
+}

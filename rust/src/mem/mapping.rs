@@ -1,0 +1,292 @@
+//! The vpn→ppn memory mapping model and Definition 1 contiguity chunks.
+
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+/// A contiguity chunk (Definition 1): `len` pages starting at
+/// (`vstart`, `pstart`) where both VPNs and PPNs are contiguous, and
+/// maximal (not contained in a larger chunk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub vstart: Vpn,
+    pub pstart: Ppn,
+    pub len: u64,
+}
+
+/// A process' memory mapping at 4KB granularity, sorted by VPN, plus
+/// the set of THP-promoted 2MB regions.
+///
+/// Invariants (checked by [`MemoryMapping::validate`]):
+/// * `pages` strictly increasing in VPN, no duplicate VPN or PPN;
+/// * every huge-region start is 512-aligned in both VPN and PPN and all
+///   512 base pages are present and contiguous.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryMapping {
+    pages: Vec<(Vpn, Ppn)>,
+    huge: Vec<Vpn>, // sorted start VPNs of 2MB regions
+}
+
+impl MemoryMapping {
+    pub fn new(mut pages: Vec<(Vpn, Ppn)>) -> Self {
+        pages.sort_unstable_by_key(|&(v, _)| v);
+        MemoryMapping { pages, huge: Vec::new() }
+    }
+
+    pub fn pages(&self) -> &[(Vpn, Ppn)] {
+        &self.pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Translate via binary search (the simulator's ground truth).
+    pub fn translate(&self, vpn: Vpn) -> Option<Ppn> {
+        self.pages
+            .binary_search_by_key(&vpn, |&(v, _)| v)
+            .ok()
+            .map(|i| self.pages[i].1)
+    }
+
+    /// Start VPNs of THP-promoted 2MB regions (sorted).
+    pub fn huge_regions(&self) -> &[Vpn] {
+        &self.huge
+    }
+
+    /// Is `vpn` backed by a 2MB huge page?
+    pub fn is_huge(&self, vpn: Vpn) -> bool {
+        let base = vpn & !(HUGE_PAGES - 1);
+        self.huge.binary_search(&base).is_ok()
+    }
+
+    /// Promote every fully-backed, both-sides-512-aligned region to a
+    /// huge page (the THP daemon's behaviour; paper Figure 3 / the
+    /// "THP on" mappings).  Returns the number of promoted regions.
+    pub fn promote_thp(&mut self) -> usize {
+        self.huge.clear();
+        let mut i = 0;
+        while i < self.pages.len() {
+            let (v, p) = self.pages[i];
+            let aligned = v % HUGE_PAGES == 0 && p % HUGE_PAGES == 0;
+            if aligned && i + (HUGE_PAGES as usize) <= self.pages.len() {
+                let mut ok = true;
+                for j in 1..HUGE_PAGES {
+                    let (vj, pj) = self.pages[i + j as usize];
+                    if vj != v + j || pj != p + j {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.huge.push(v);
+                    i += HUGE_PAGES as usize;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        self.huge.len()
+    }
+
+    /// Iterate contiguity chunks (Definition 1).
+    pub fn chunks(&self) -> ChunkIter<'_> {
+        ChunkIter { pages: &self.pages, i: 0 }
+    }
+
+    /// Chunk sizes, in VPN order.
+    pub fn chunk_sizes(&self) -> Vec<u64> {
+        self.chunks().map(|c| c.len).collect()
+    }
+
+    /// The chunk containing `vpn`, if mapped (used by RMM's range fill).
+    pub fn chunk_of(&self, vpn: Vpn) -> Option<Chunk> {
+        let mut i = self.pages.binary_search_by_key(&vpn, |&(v, _)| v).ok()?;
+        // walk left to the chunk start
+        while i > 0 {
+            let (v, p) = self.pages[i];
+            let (pv, pp) = self.pages[i - 1];
+            if pv + 1 == v && pp + 1 == p {
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+        let (vstart, pstart) = self.pages[i];
+        let mut len = 1;
+        while i + (len as usize) < self.pages.len() {
+            let (v, p) = self.pages[i + len as usize];
+            if v == vstart + len && p == pstart + len {
+                len += 1;
+            } else {
+                break;
+            }
+        }
+        Some(Chunk { vstart, pstart, len })
+    }
+
+    /// Mapping as parallel i32 arrays padded with `sentinel` to
+    /// `n` entries — the input layout of the `contiguity` AOT artifact.
+    pub fn to_arrays(&self, n: usize, sentinel: i32) -> (Vec<i32>, Vec<i32>) {
+        assert!(self.pages.len() <= n, "mapping larger than artifact shape");
+        let mut v = vec![sentinel; n];
+        let mut p = vec![sentinel; n];
+        for (i, &(vpn, ppn)) in self.pages.iter().enumerate() {
+            v[i] = vpn as i32;
+            p[i] = ppn as i32;
+        }
+        (v, p)
+    }
+
+    /// Check structural invariants; returns a description of the first
+    /// violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for w in self.pages.windows(2) {
+            if w[0].0 >= w[1].0 {
+                return Err(format!("VPNs not strictly increasing at {:?}", w));
+            }
+        }
+        let mut ppns: Vec<Ppn> = self.pages.iter().map(|&(_, p)| p).collect();
+        ppns.sort_unstable();
+        for w in ppns.windows(2) {
+            if w[0] == w[1] {
+                return Err(format!("duplicate PPN {}", w[0]));
+            }
+        }
+        for &h in &self.huge {
+            if h % HUGE_PAGES != 0 {
+                return Err(format!("huge region {h} not 512-aligned"));
+            }
+            let p0 = self
+                .translate(h)
+                .ok_or_else(|| format!("huge region {h} not mapped"))?;
+            if p0 % HUGE_PAGES != 0 {
+                return Err(format!("huge region {h} has misaligned PPN {p0}"));
+            }
+            for j in 1..HUGE_PAGES {
+                if self.translate(h + j) != Some(p0 + j) {
+                    return Err(format!("huge region {h} not contiguous at +{j}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+pub struct ChunkIter<'a> {
+    pages: &'a [(Vpn, Ppn)],
+    i: usize,
+}
+
+impl Iterator for ChunkIter<'_> {
+    type Item = Chunk;
+
+    fn next(&mut self) -> Option<Chunk> {
+        if self.i >= self.pages.len() {
+            return None;
+        }
+        let (vstart, pstart) = self.pages[self.i];
+        let mut len = 1u64;
+        while self.i + (len as usize) < self.pages.len() {
+            let (v, p) = self.pages[self.i + len as usize];
+            if v == vstart + len && p == pstart + len {
+                len += 1;
+            } else {
+                break;
+            }
+        }
+        self.i += len as usize;
+        Some(Chunk { vstart, pstart, len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    /// Figure 4's page table (VPN 0..16).
+    pub fn figure4() -> MemoryMapping {
+        let ppns = [8, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        MemoryMapping::new((0..16).map(|v| (v as Vpn, ppns[v] as Ppn)).collect())
+    }
+
+    #[test]
+    fn figure4_chunks() {
+        let m = figure4();
+        assert_eq!(m.chunk_sizes(), vec![2, 1, 1, 3, 1, 6, 1, 1]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn translate_hits_and_misses() {
+        let m = figure4();
+        assert_eq!(m.translate(0), Some(8));
+        assert_eq!(m.translate(13), Some(15));
+        assert_eq!(m.translate(16), None);
+    }
+
+    #[test]
+    fn chunk_of_matches_iteration() {
+        let m = figure4();
+        let all: Vec<Chunk> = m.chunks().collect();
+        for c in &all {
+            for d in 0..c.len {
+                assert_eq!(m.chunk_of(c.vstart + d), Some(*c));
+            }
+        }
+        assert_eq!(m.chunk_of(99), None);
+    }
+
+    #[test]
+    fn chunks_partition_mapping() {
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let n = rng.range(1, 2000);
+            let mut ppns: Vec<Ppn> = (0..n).collect();
+            rng.shuffle(&mut ppns);
+            let m = MemoryMapping::new((0..n).map(|v| (v, ppns[v as usize])).collect());
+            let sizes = m.chunk_sizes();
+            assert_eq!(sizes.iter().sum::<u64>(), n);
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn thp_promotion_requires_alignment_and_backing() {
+        // identity mapping over 2 huge regions: both promote
+        let n = 2 * HUGE_PAGES;
+        let mut m = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
+        assert_eq!(m.promote_thp(), 2);
+        assert!(m.is_huge(0) && m.is_huge(HUGE_PAGES + 3));
+        m.validate().unwrap();
+
+        // shift physical by 1: contiguous but misaligned -> no promotion
+        let mut m = MemoryMapping::new((0..n).map(|v| (v, v + 1)).collect());
+        assert_eq!(m.promote_thp(), 0);
+
+        // hole in the middle -> region not fully backed
+        let mut pages: Vec<(Vpn, Ppn)> = (0..HUGE_PAGES).map(|v| (v, v)).collect();
+        pages.remove(100);
+        let mut m = MemoryMapping::new(pages);
+        assert_eq!(m.promote_thp(), 0);
+    }
+
+    #[test]
+    fn to_arrays_pads_with_sentinel() {
+        let m = figure4();
+        let (v, p) = m.to_arrays(32, -2);
+        assert_eq!(v[0], 0);
+        assert_eq!(p[15], 7);
+        assert!(v[16..].iter().all(|&x| x == -2));
+        assert!(p[16..].iter().all(|&x| x == -2));
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_ppn() {
+        let m = MemoryMapping::new(vec![(0, 5), (1, 5)]);
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Memory-mapping substrate: the physical buddy allocator, the
+//! vpn→ppn mapping model (Definition 1 contiguity chunks), mapping
+//! generators (synthetic per Table 3 + demand-paging model for the
+//! "real mapping"), and the contiguity histogram (Algorithm 3 input,
+//! Figures 2/3).
+
+pub mod buddy;
+pub mod histogram;
+pub mod mapgen;
+pub mod mapping;
+
+pub use histogram::ContigHistogram;
+pub use mapping::MemoryMapping;

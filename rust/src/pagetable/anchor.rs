@@ -1,0 +1,157 @@
+//! Anchored page table (the Anchor baseline's substrate, [30]):
+//! uniformly distributed anchor entries every `dist` pages record the
+//! local contiguity up to the next anchor, plus the dynamic
+//! anchor-distance selection the hybrid-coalescing paper uses.
+
+use super::PageTable;
+use crate::mem::histogram::ContigHistogram;
+use crate::Vpn;
+
+/// The anchor VPN covering `vpn` for anchor distance `dist` (pow2).
+#[inline(always)]
+pub fn anchor_vpn(vpn: Vpn, dist: u64) -> Vpn {
+    debug_assert!(dist.is_power_of_two());
+    vpn & !(dist - 1)
+}
+
+/// Does the anchor entry for `vpn` cover it?  Returns the anchor's
+/// `(anchor_vpn, contiguity)` if so.
+pub fn select_anchor(pt: &PageTable, vpn: Vpn, dist: u64) -> Option<(Vpn, u64)> {
+    let av = anchor_vpn(vpn, dist);
+    let c = pt.anchor_contiguity(av, dist);
+    if c > vpn - av {
+        Some((av, c))
+    } else {
+        None
+    }
+}
+
+/// Candidate anchor distances the dynamic scheme searches over
+/// (2^1 ..= 2^11 pages, i.e. 8KB..8MB regions).
+pub const DIST_CANDIDATES: [u64; 11] =
+    [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+
+/// Estimated pages an anchored page table with distance `d` covers,
+/// assuming chunks start uniformly at random relative to the anchor
+/// grid: a chunk of size s loses on average `(d-1)/2` head pages
+/// before its first anchor.
+pub fn estimate_anchor_coverage(hist: &ContigHistogram, d: u64) -> f64 {
+    let mut covered = 0.0;
+    for (size, freq) in hist.pairs() {
+        if size < 2 {
+            continue;
+        }
+        let head = ((d - 1) as f64 / 2.0).min(size as f64);
+        covered += (size as f64 - head).max(0.0) * freq as f64;
+    }
+    covered
+}
+
+/// Estimated covered pages *per anchor entry* — the quantity the
+/// dynamic selection optimizes: small distances cover everything but
+/// burn one TLB entry per few pages (no better than regular entries),
+/// oversized distances lose whole chunks to the uncovered head.  The
+/// optimum sits near the dominant chunk size, which is exactly the
+/// hybrid-coalescing paper's intent.
+pub fn estimate_coverage_per_entry(hist: &ContigHistogram, d: u64) -> f64 {
+    let mut score = 0.0;
+    for (size, freq) in hist.pairs() {
+        if size < 2 {
+            continue;
+        }
+        let head = ((d - 1) as f64 / 2.0).min(size as f64);
+        let covered = (size as f64 - head).max(0.0);
+        let anchors = (size as f64 / d as f64).ceil().max(1.0);
+        score += freq as f64 * covered / anchors;
+    }
+    score
+}
+
+/// The dynamic distance-selection step: pick the candidate distance
+/// maximizing covered-pages-per-entry, breaking ties toward larger
+/// distances (fewer anchor entries to maintain).
+pub fn select_distance(hist: &ContigHistogram) -> u64 {
+    let mut best = (f64::MIN, 2u64);
+    for &d in &DIST_CANDIDATES {
+        let c = estimate_coverage_per_entry(hist, d);
+        if c > best.0 || (c == best.0 && d > best.1) {
+            best = (c, d);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+    use crate::Ppn;
+
+    fn mapping_with_sizes(sizes: &[u64]) -> MemoryMapping {
+        let mut pages = Vec::new();
+        let mut v: Vpn = 0;
+        let mut p: Ppn = 0;
+        for &s in sizes {
+            p += 7; // physical gap
+            for j in 0..s {
+                pages.push((v + j, p + j));
+            }
+            v += s;
+            p += s;
+        }
+        MemoryMapping::new(pages)
+    }
+
+    #[test]
+    fn anchor_vpn_grid() {
+        assert_eq!(anchor_vpn(13, 8), 8);
+        assert_eq!(anchor_vpn(16, 8), 16);
+        assert_eq!(anchor_vpn(7, 16), 0);
+    }
+
+    #[test]
+    fn anchor_covers_within_run() {
+        let m = mapping_with_sizes(&[32]);
+        let pt = PageTable::from_mapping(&m);
+        // dist 16: anchor at 16 covers 16..32
+        assert_eq!(select_anchor(&pt, 20, 16), Some((16, 16)));
+        assert_eq!(select_anchor(&pt, 3, 16), Some((0, 16)));
+    }
+
+    #[test]
+    fn anchor_misses_across_chunk_boundary() {
+        // chunks of 8 pages each; anchor dist 16 spans two chunks:
+        // pages past the first chunk are not covered by the anchor
+        let m = mapping_with_sizes(&[8, 8, 8, 8]);
+        let pt = PageTable::from_mapping(&m);
+        assert_eq!(select_anchor(&pt, 4, 16), Some((0, 8)));
+        assert_eq!(select_anchor(&pt, 12, 16), None, "chunk smaller than distance is lost");
+        // matching distance 8 captures it — the paper's point about
+        // needing the right anchor density
+        assert_eq!(select_anchor(&pt, 12, 8), Some((8, 8)));
+    }
+
+    #[test]
+    fn select_distance_tracks_chunk_size() {
+        // uniform chunks of 16: best distance should be ~16
+        let h = ContigHistogram::from_sizes(&vec![16u64; 100]);
+        let d = select_distance(&h);
+        assert!(
+            (8..=32).contains(&d),
+            "distance {d} should sit near the chunk size 16"
+        );
+        // huge chunks: larger distance wins
+        let h = ContigHistogram::from_sizes(&vec![2048u64; 50]);
+        assert!(select_distance(&h) >= 512);
+    }
+
+    #[test]
+    fn coverage_estimate_monotone_in_chunk_size() {
+        let small = ContigHistogram::from_sizes(&vec![4u64; 100]);
+        let large = ContigHistogram::from_sizes(&vec![1024u64; 100]);
+        let d = 64;
+        assert!(
+            estimate_anchor_coverage(&large, d) > estimate_anchor_coverage(&small, d)
+        );
+    }
+}

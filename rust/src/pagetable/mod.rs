@@ -1,0 +1,158 @@
+//! Page table with per-entry contiguity (Figure 7): the structure both
+//! the page-table walker and the OS fill path (Algorithm 1) read.
+
+pub mod aligned;
+pub mod anchor;
+pub mod fastmap;
+
+use crate::mem::mapping::MemoryMapping;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+use fastmap::FastMap;
+
+/// One page table entry: translation + the contiguity property value
+/// (§3.1): the number of following pages (including this one) whose
+/// VPNs and PPNs are both contiguous — i.e. the forward run length
+/// within this entry's contiguity chunk.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Pte {
+    pub ppn: Ppn,
+    pub run: u32,
+}
+
+/// Flat page table for one process. Simulator ground truth: every
+/// scheme's translation result is asserted against [`PageTable::translate`].
+pub struct PageTable {
+    map: FastMap<Pte>,
+    huge: Vec<Vpn>, // sorted huge-region start VPNs (2MB mappings)
+    npages: u64,
+}
+
+impl PageTable {
+    /// Build from a mapping, computing every entry's forward run
+    /// length with one reverse sweep (O(n)).
+    pub fn from_mapping(m: &MemoryMapping) -> Self {
+        let pages = m.pages();
+        let mut map = FastMap::with_capacity(pages.len());
+        let mut run_next: u32 = 0;
+        for i in (0..pages.len()).rev() {
+            let (v, p) = pages[i];
+            let contiguous_with_next = i + 1 < pages.len() && {
+                let (vn, pn) = pages[i + 1];
+                vn == v + 1 && pn == p + 1
+            };
+            let run = if contiguous_with_next { run_next.saturating_add(1) } else { 1 };
+            run_next = run;
+            map.insert(v, Pte { ppn: p, run });
+        }
+        PageTable { map, huge: m.huge_regions().to_vec(), npages: pages.len() as u64 }
+    }
+
+    pub fn npages(&self) -> u64 {
+        self.npages
+    }
+
+    /// Ground-truth translation (what a full walk returns).
+    #[inline]
+    pub fn translate(&self, vpn: Vpn) -> Option<Ppn> {
+        self.map.get(vpn).map(|e| e.ppn)
+    }
+
+    #[inline]
+    pub fn entry(&self, vpn: Vpn) -> Option<Pte> {
+        self.map.get(vpn).copied()
+    }
+
+    /// Forward run length from `vpn` (0 if unmapped).
+    #[inline]
+    pub fn run_len(&self, vpn: Vpn) -> u32 {
+        self.map.get(vpn).map_or(0, |e| e.run)
+    }
+
+    /// Is `vpn` inside a THP-promoted 2MB region?
+    #[inline]
+    pub fn is_huge(&self, vpn: Vpn) -> bool {
+        if self.huge.is_empty() {
+            return false;
+        }
+        let base = vpn & !(HUGE_PAGES - 1);
+        self.huge.binary_search(&base).is_ok()
+    }
+
+    pub fn huge_regions(&self) -> &[Vpn] {
+        &self.huge
+    }
+
+    /// Contiguity value stored in a k-bit aligned entry (§3.1): pages
+    /// contiguously mapped in the next 2^k pages starting from the
+    /// aligned entry, 0 if the aligned VPN itself is unmapped.
+    #[inline]
+    pub fn aligned_contiguity(&self, aligned_vpn: Vpn, k: u32) -> u64 {
+        debug_assert_eq!(aligned_vpn & ((1u64 << k) - 1), 0);
+        (self.run_len(aligned_vpn) as u64).min(1u64 << k)
+    }
+
+    /// Contiguity value of an anchor entry with anchor distance
+    /// `dist` (power of two): run from the anchor, capped at the next
+    /// anchor.
+    #[inline]
+    pub fn anchor_contiguity(&self, anchor_vpn: Vpn, dist: u64) -> u64 {
+        debug_assert_eq!(anchor_vpn & (dist - 1), 0);
+        (self.run_len(anchor_vpn) as u64).min(dist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn figure4_pt() -> PageTable {
+        let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        let m = MemoryMapping::new((0..16).map(|v| (v, ppns[v as usize])).collect());
+        PageTable::from_mapping(&m)
+    }
+
+    #[test]
+    fn figure4_run_lengths() {
+        let pt = figure4_pt();
+        // chunks: [0,1] [2] [3] [4,5,6] [7] [8..14) [14] [15]
+        assert_eq!(pt.run_len(0), 2);
+        assert_eq!(pt.run_len(1), 1);
+        assert_eq!(pt.run_len(2), 1);
+        assert_eq!(pt.run_len(4), 3);
+        assert_eq!(pt.run_len(5), 2);
+        assert_eq!(pt.run_len(8), 6);
+        assert_eq!(pt.run_len(13), 1);
+        assert_eq!(pt.run_len(99), 0);
+    }
+
+    #[test]
+    fn figure4_aligned_contiguity() {
+        let pt = figure4_pt();
+        // paper: VPN 8 is 3-bit aligned with contiguity 6
+        assert_eq!(pt.aligned_contiguity(8, 3), 6);
+        // VPN 4 is 2-bit aligned with contiguity 3
+        assert_eq!(pt.aligned_contiguity(4, 2), 3);
+        // VPN 0: run 2, capped at 2^1 for 1-bit alignment
+        assert_eq!(pt.aligned_contiguity(0, 1), 2);
+        assert_eq!(pt.aligned_contiguity(0, 3), 2);
+    }
+
+    #[test]
+    fn run_capped_by_alignment_window() {
+        // identity mapping: run at 0 is 64, 2-bit aligned caps at 4
+        let m = MemoryMapping::new((0..64).map(|v| (v, v)).collect());
+        let pt = PageTable::from_mapping(&m);
+        assert_eq!(pt.run_len(0), 64);
+        assert_eq!(pt.aligned_contiguity(0, 2), 4);
+        assert_eq!(pt.aligned_contiguity(0, 6), 64);
+        assert_eq!(pt.anchor_contiguity(0, 16), 16);
+        assert_eq!(pt.anchor_contiguity(48, 16), 16);
+    }
+
+    #[test]
+    fn translate_matches_mapping() {
+        let pt = figure4_pt();
+        assert_eq!(pt.translate(7), Some(3));
+        assert_eq!(pt.translate(16), None);
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! the rust hot path.  Python never runs here — `make artifacts` is the
+//! only place jax executes (see /opt/xla-example/README.md for the
+//! HLO-text interchange rationale).
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The loaded artifact set: one compiled PJRT executable per entry
+/// point, plus the manifest constants used for shape checks.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> PathBuf {
+    // target binaries run from the workspace root; tests may run from
+    // elsewhere, so walk up looking for artifacts/manifest.json
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+impl Runtime {
+    /// Load and compile all artifacts listed in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::parse(&mtext)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for (name, spec) in &manifest.entries {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, manifest })
+    }
+
+    /// Load from the default location.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&default_artifact_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes.get(name).ok_or_else(|| anyhow!("artifact {name} not loaded"))
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.exe(name)?;
+        let bufs = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        Ok(lit)
+    }
+
+    /// Execute the `trace_gen` artifact: one BATCH-long chunk of VPNs.
+    pub fn trace_chunk(&self, seed: i32, offset: i32, params: &[i32; 16]) -> Result<Vec<i32>> {
+        let lit = self.run(
+            "trace_gen",
+            &[
+                xla::Literal::vec1(&[seed]),
+                xla::Literal::vec1(&[offset]),
+                xla::Literal::vec1(&params[..]),
+            ],
+        )?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let v = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if v.len() != self.manifest.batch {
+            bail!("trace_gen returned {} values, expected {}", v.len(), self.manifest.batch);
+        }
+        Ok(v)
+    }
+
+    /// Execute the `contiguity` artifact: chunk-boundary flags for a
+    /// SENTINEL-padded mapping of exactly NPAGES entries.
+    pub fn chunk_bounds(&self, vpn: &[i32], ppn: &[i32]) -> Result<Vec<i32>> {
+        let n = self.manifest.npages;
+        if vpn.len() != n || ppn.len() != n {
+            bail!("contiguity inputs must be padded to {n} entries");
+        }
+        let lit = self.run(
+            "contiguity",
+            &[xla::Literal::vec1(vpn), xla::Literal::vec1(ppn)],
+        )?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        Ok(out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?)
+    }
+
+    /// Execute the `align` artifact: per-alignment aligned VPN + delta
+    /// for a BATCH of VPNs.  `ks` uses 0 for unused slots.
+    pub fn align_batch(&self, vpn: &[i32], ks: &[i32; 4]) -> Result<(Vec<i32>, Vec<i32>)> {
+        if vpn.len() != self.manifest.batch {
+            bail!("align input must be one BATCH ({})", self.manifest.batch);
+        }
+        let lit = self.run("align", &[xla::Literal::vec1(vpn), xla::Literal::vec1(&ks[..])])?;
+        let (a, d) = lit.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        Ok((
+            a.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+            d.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+        ))
+    }
+}

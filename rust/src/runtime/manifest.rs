@@ -1,0 +1,352 @@
+//! Minimal JSON parser for `artifacts/manifest.json` (the build is
+//! offline — no serde), plus the typed manifest the runtime
+//! cross-checks before feeding PJRT.
+//!
+//! The parser handles the JSON subset `aot.py` emits (objects, arrays,
+//! strings with simple escapes, integers, floats, booleans, null) and
+//! is itself unit- and property-tested; it is not a general-purpose
+//! JSON library.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek().ok_or_else(|| anyhow!("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            m.insert(k, self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => bail!("expected , or }} at byte {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut a = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.ws();
+            a.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                _ => bail!("expected , or ] at byte {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek().ok_or_else(|| anyhow!("unterminated string"))? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match self.peek().ok_or_else(|| anyhow!("bad escape"))? {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        c => bail!("unsupported escape \\{}", c as char),
+                    }
+                    self.i += 1;
+                }
+                _ => {
+                    // consume one UTF-8 scalar
+                    let rest = std::str::from_utf8(&self.b[self.i..])?;
+                    let ch = rest.chars().next().unwrap();
+                    s.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>()?))
+    }
+}
+
+/// One artifact entry of the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntrySpec {
+    pub file: String,
+    pub sha256: String,
+    /// (shape, dtype) per input
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// The typed view of manifest.json the runtime validates against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub batch: usize,
+    pub npages: usize,
+    pub maxk: usize,
+    pub sentinel: i64,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format must be hlo-text");
+        }
+        let consts = j.get("constants").ok_or_else(|| anyhow!("missing constants"))?;
+        let c = |k: &str| -> Result<u64> {
+            consts.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("missing constant {k}"))
+        };
+        let sentinel = match consts.get("SENTINEL") {
+            Some(Json::Num(n)) => *n as i64,
+            _ => bail!("missing SENTINEL"),
+        };
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries").and_then(Json::as_obj).ok_or_else(|| anyhow!("missing entries"))? {
+            let file = e.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: file"))?;
+            let sha = e.get("sha256").and_then(Json::as_str).unwrap_or_default();
+            let mut inputs = Vec::new();
+            for inp in e.get("inputs").and_then(Json::as_arr).ok_or_else(|| anyhow!("{name}: inputs"))? {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: shape"))?
+                    .iter()
+                    .map(|x| x.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = inp.get("dtype").and_then(Json::as_str).unwrap_or("int32").to_string();
+                inputs.push((shape, dtype));
+            }
+            entries.insert(
+                name.clone(),
+                EntrySpec { file: file.to_string(), sha256: sha.to_string(), inputs },
+            );
+        }
+        Ok(Manifest {
+            entries,
+            batch: c("BATCH")? as usize,
+            npages: c("NPAGES")? as usize,
+            maxk: c("MAXK")? as usize,
+            sentinel,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, {"b": "x"}], "c": {}}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[0], Json::Num(1.0));
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[1].get("b").unwrap().as_str(),
+            Some("x")
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_shape() {
+        let text = r#"{
+          "constants": {"BATCH": 65536, "MAXK": 4, "NPAGES": 262144, "SENTINEL": -2},
+          "entries": {
+            "trace_gen": {
+              "file": "trace_gen.hlo.txt",
+              "inputs": [
+                {"dtype": "int32", "shape": [1]},
+                {"dtype": "int32", "shape": [1]},
+                {"dtype": "int32", "shape": [16]}
+              ],
+              "sha256": "abc"
+            }
+          },
+          "format": "hlo-text",
+          "return_tuple": true
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.batch, 65536);
+        assert_eq!(m.npages, 262144);
+        assert_eq!(m.sentinel, -2);
+        let e = &m.entries["trace_gen"];
+        assert_eq!(e.file, "trace_gen.hlo.txt");
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[2].0, vec![16]);
+    }
+
+    #[test]
+    fn property_roundtrip_random_objects() {
+        use crate::prng::Rng;
+        // generate random JSON-ish strings from a tiny grammar and
+        // confirm the parser never panics (errors are fine)
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let len = rng.range(0, 40) as usize;
+            let chars = b"{}[]\",:0123456789.ab\\ntrueflsn ";
+            let s: String = (0..len)
+                .map(|_| chars[rng.below(chars.len() as u64) as usize] as char)
+                .collect();
+            let _ = Json::parse(&s); // must not panic
+        }
+    }
+}

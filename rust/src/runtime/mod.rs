@@ -1,0 +1,57 @@
+//! PJRT runtime layer: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them via the `xla` crate on
+//! the CPU PJRT client.  This is the only boundary between the rust
+//! coordinator and the JAX/Pallas compute — python never runs at
+//! simulation time.
+
+pub mod client;
+pub mod manifest;
+pub mod trace;
+
+pub use client::{default_artifact_dir, Runtime};
+pub use manifest::Manifest;
+pub use trace::{generate_trace, NativeSource, TraceSource, XlaSource};
+
+use crate::mem::mapping::MemoryMapping;
+use anyhow::Result;
+
+/// Contiguity-chunk sizes of a mapping computed through the XLA
+/// `contiguity` artifact (Figures 2/3 through the AOT path).
+///
+/// Mappings larger than the artifact shape are processed in windows
+/// that overlap by one page: the kernel flags window-index 0 as a
+/// boundary unconditionally (its `prev` is the sentinel), so each
+/// window after the first re-submits the preceding page at index 0
+/// and we discard that flag when stitching.
+pub fn chunk_sizes_xla(rt: &Runtime, m: &MemoryMapping) -> Result<Vec<u64>> {
+    let n = rt.manifest.npages;
+    let sent = rt.manifest.sentinel as i32;
+    let pages = m.pages();
+    let mut sizes: Vec<u64> = Vec::new();
+    let mut start = 0usize; // index of the first *new* page this window
+    while start < pages.len() {
+        let overlap = usize::from(start > 0);
+        let win_lo = start - overlap;
+        let end = (win_lo + n).min(pages.len());
+        let mut v = vec![sent; n];
+        let mut p = vec![sent; n];
+        for (i, &(vpn, ppn)) in pages[win_lo..end].iter().enumerate() {
+            v[i] = vpn as i32;
+            p[i] = ppn as i32;
+        }
+        let flags = rt.chunk_bounds(&v, &p)?;
+        let valid = end - win_lo;
+        for &f in &flags[overlap..valid] {
+            if f != 0 {
+                sizes.push(1);
+            } else {
+                *sizes.last_mut().expect("continuation without prior chunk") += 1;
+            }
+        }
+        start = end;
+    }
+    Ok(sizes)
+}
+
+// Runtime-dependent tests live in rust/tests/xla_roundtrip.rs so
+// `cargo test --lib` stays artifact-free.

@@ -1,0 +1,121 @@
+//! Trace sources: the XLA-backed generator (the request-path use of
+//! the AOT artifacts) and the rust-native oracle, behind one trait so
+//! the coordinator picks whichever is available.  An integration test
+//! asserts the two are bit-identical.
+
+use super::client::Runtime;
+use crate::workloads::tracegen::{NativeTraceGen, TraceParams};
+use anyhow::Result;
+
+/// A stream of page-level VPN chunks.
+pub trait TraceSource {
+    /// Fill `out` with the next chunk. `out.len()` must equal
+    /// [`TraceSource::chunk_len`].
+    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()>;
+    fn chunk_len(&self) -> usize;
+}
+
+/// Rust-native source (oracle / fallback).
+pub struct NativeSource {
+    inner: NativeTraceGen,
+    chunk: usize,
+}
+
+impl NativeSource {
+    pub fn new(seed: u32, params: TraceParams, chunk: usize) -> Self {
+        NativeSource { inner: NativeTraceGen::new(seed, params), chunk }
+    }
+}
+
+impl TraceSource for NativeSource {
+    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()> {
+        debug_assert_eq!(out.len(), self.chunk);
+        self.inner.next_chunk_into(out);
+        Ok(())
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.chunk
+    }
+}
+
+/// XLA-backed source: each chunk is one execution of the `trace_gen`
+/// artifact on the PJRT CPU client.
+pub struct XlaSource<'rt> {
+    rt: &'rt Runtime,
+    seed: i32,
+    offset: u32,
+    params: [i32; 16],
+}
+
+impl<'rt> XlaSource<'rt> {
+    pub fn new(rt: &'rt Runtime, seed: u32, params: TraceParams) -> Self {
+        params.validate().expect("invalid trace params");
+        XlaSource { rt, seed: seed as i32, offset: 0, params: params.to_i32() }
+    }
+}
+
+impl TraceSource for XlaSource<'_> {
+    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()> {
+        debug_assert_eq!(out.len(), self.rt.manifest.batch);
+        let v = self.rt.trace_chunk(self.seed, self.offset as i32, &self.params)?;
+        for (o, x) in out.iter_mut().zip(v) {
+            *o = x as u32;
+        }
+        self.offset = self.offset.wrapping_add(out.len() as u32);
+        Ok(())
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.rt.manifest.batch
+    }
+}
+
+/// Generate a full trace of `n` accesses (rounded up to whole chunks,
+/// then truncated).
+pub fn generate_trace(src: &mut dyn TraceSource, n: usize) -> Result<Vec<u32>> {
+    let chunk = src.chunk_len();
+    let mut out = vec![0u32; n.div_ceil(chunk) * chunk];
+    for c in out.chunks_mut(chunk) {
+        src.next_chunk_into(c)?;
+    }
+    out.truncate(n);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TraceParams {
+        TraceParams {
+            ws_pages: 10_000,
+            hot_pages: 128,
+            stride: 5,
+            t_seq: 100,
+            t_stride: 150,
+            t_hot: 220,
+            base_vpn: 0,
+            hot_base_vpn: 100,
+            repeat_shift: 1,
+            burst_shift: 6,
+        }
+    }
+
+    #[test]
+    fn native_source_chunks_continuously() {
+        let mut s = NativeSource::new(1, params(), 512);
+        let t = generate_trace(&mut s, 2000).unwrap();
+        assert_eq!(t.len(), 2000);
+        let mut s2 = NativeSource::new(1, params(), 1000);
+        let t2 = generate_trace(&mut s2, 2000).unwrap();
+        assert_eq!(t, t2, "chunk size must not affect the stream");
+    }
+
+    #[test]
+    fn generate_trace_truncates() {
+        let mut s = NativeSource::new(2, params(), 512);
+        let t = generate_trace(&mut s, 700).unwrap();
+        assert_eq!(t.len(), 700);
+    }
+}

@@ -1,0 +1,247 @@
+//! Anchor [30] — hybrid TLB coalescing: anchor entries every `dist`
+//! pages record the local contiguity up to the next anchor; the L2
+//! holds regular + anchor entries; a regular miss triggers one anchor
+//! lookup.  Two modes:
+//! * **Static**: fixed distance; the coordinator sweeps all candidate
+//!   distances and reports the best ("Anchor-Static" in the paper).
+//! * **Dynamic**: re-selects the distance from the contiguity
+//!   histogram at every epoch (the paper's 1B-instruction interval),
+//!   paying a TLB shootdown on change.
+
+use super::{tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
+use crate::mem::histogram::ContigHistogram;
+use crate::pagetable::anchor::{anchor_vpn, select_anchor, select_distance};
+use crate::pagetable::PageTable;
+use crate::tlb::SetAssocTlb;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Entry {
+    #[default]
+    Invalid,
+    Page(Ppn),
+    Huge(Ppn),
+    /// Anchor entry: PPN of the anchor page + recorded contiguity.
+    Anchor { ppn: Ppn, contiguity: u32 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Static,
+    Dynamic,
+}
+
+pub struct Anchor {
+    tlb: SetAssocTlb<Entry>,
+    dist: u64,
+    log2d: u32,
+    mode: Mode,
+    /// number of distance changes (shootdowns) — §3.4-style cost
+    pub shootdowns: u64,
+}
+
+impl Anchor {
+    pub fn new(dist: u64, mode: Mode) -> Self {
+        assert!(dist.is_power_of_two() && dist >= 2);
+        Anchor {
+            tlb: SetAssocTlb::new(1024, 8),
+            dist,
+            log2d: dist.trailing_zeros(),
+            mode,
+            shootdowns: 0,
+        }
+    }
+
+    pub fn dist(&self) -> u64 {
+        self.dist
+    }
+
+    #[inline]
+    fn set4k(&self, vpn: Vpn) -> usize {
+        (vpn & self.tlb.set_mask()) as usize
+    }
+
+    #[inline]
+    fn set2m(&self, vpn: Vpn) -> usize {
+        ((vpn >> 9) & self.tlb.set_mask()) as usize
+    }
+
+    /// Anchor entries are indexed by the bits above the anchor offset
+    /// (the same trick as Figure 7's aligned indexing).
+    #[inline]
+    fn set_anchor(&self, vpn: Vpn) -> usize {
+        ((vpn >> self.log2d) & self.tlb.set_mask()) as usize
+    }
+}
+
+impl Scheme for Anchor {
+    fn name(&self) -> String {
+        match self.mode {
+            Mode::Static => format!("Anchor-Static(d={})", self.dist),
+            Mode::Dynamic => "Anchor-Dynamic".to_string(),
+        }
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let set = self.set4k(vpn);
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+            return Outcome::Regular { ppn };
+        }
+        let set = self.set2m(vpn);
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+            return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
+        }
+        // anchor lookup: one additional TLB access
+        let av = anchor_vpn(vpn, self.dist);
+        let set = self.set_anchor(vpn);
+        if let Some(&Entry::Anchor { ppn, contiguity }) =
+            self.tlb.lookup(set, tag_aligned(av, self.log2d))
+        {
+            let delta = vpn - av;
+            if (contiguity as u64) > delta {
+                return Outcome::Coalesced { ppn: ppn + delta, probes: 1 };
+            }
+        }
+        Outcome::Miss { probes: 1 }
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        if pt.is_huge(vpn) {
+            let base_vpn = vpn & !(HUGE_PAGES - 1);
+            let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            return;
+        }
+        if let Some((av, c)) = select_anchor(pt, vpn, self.dist) {
+            let ppn = pt.translate(av).expect("anchor mapped");
+            self.tlb.insert(
+                self.set_anchor(vpn),
+                tag_aligned(av, self.log2d),
+                Entry::Anchor { ppn, contiguity: c as u32 },
+            );
+        } else if let Some(ppn) = pt.translate(vpn) {
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+        }
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        self.tlb
+            .iter_valid()
+            .map(|(_, _, e)| match e {
+                Entry::Page(_) => 1,
+                Entry::Huge(_) => HUGE_PAGES,
+                Entry::Anchor { contiguity, .. } => *contiguity as u64,
+                Entry::Invalid => 0,
+            })
+            .sum()
+    }
+
+    fn flush(&mut self) {
+        self.tlb.flush();
+    }
+
+    fn epoch(&mut self, _pt: &PageTable, hist: &ContigHistogram) {
+        if self.mode == Mode::Dynamic {
+            let d = select_distance(hist);
+            if d != self.dist {
+                self.dist = d;
+                self.log2d = d.trailing_zeros();
+                self.shootdowns += 1;
+                self.flush(); // distance change rewrites anchors: shootdown
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+
+    fn chunked_identityish(sizes: &[u64]) -> (MemoryMapping, PageTable) {
+        let mut pages = Vec::new();
+        let (mut v, mut p) = (0u64, 0u64);
+        for &s in sizes {
+            p += 5;
+            for j in 0..s {
+                pages.push((v + j, p + j));
+            }
+            v += s;
+            p += s;
+        }
+        let m = MemoryMapping::new(pages);
+        let pt = PageTable::from_mapping(&m);
+        (m, pt)
+    }
+
+    #[test]
+    fn anchor_hit_translates_run() {
+        let (_, pt) = chunked_identityish(&[32]);
+        let mut s = Anchor::new(16, Mode::Static);
+        s.fill(20, &pt); // anchor at 16 covers 16..32
+        match s.lookup(20) {
+            Outcome::Coalesced { ppn, probes } => {
+                assert_eq!(Some(ppn), pt.translate(20));
+                assert_eq!(probes, 1);
+            }
+            o => panic!("{o:?}"),
+        }
+        // whole covered window hits through one entry
+        for v in 16..32u64 {
+            assert!(s.lookup(v).is_hit(), "vpn {v}");
+        }
+        assert_eq!(s.lookup(32), Outcome::Miss { probes: 1 });
+    }
+
+    #[test]
+    fn chunk_smaller_than_distance_falls_back_to_regular() {
+        // chunks of 8, distance 16: pages 8..16 are beyond anchor 0's run
+        let (_, pt) = chunked_identityish(&[8, 8, 8, 8]);
+        let mut s = Anchor::new(16, Mode::Static);
+        s.fill(12, &pt); // anchor 0 contiguity=8 does not cover 12
+        assert_eq!(
+            s.lookup(12),
+            Outcome::Regular { ppn: pt.translate(12).unwrap() },
+            "regular entry expected"
+        );
+    }
+
+    #[test]
+    fn dynamic_adapts_distance_and_flushes() {
+        let (_, pt) = chunked_identityish(&[8, 8, 8, 8]);
+        let mut s = Anchor::new(1024, Mode::Dynamic);
+        s.fill(4, &pt);
+        assert!(s.lookup(4).is_hit());
+        let hist = ContigHistogram::from_sizes(&vec![8u64; 100]);
+        s.epoch(&pt, &hist);
+        assert!(s.dist() <= 16, "distance should shrink toward 8, got {}", s.dist());
+        assert_eq!(s.shootdowns, 1);
+        assert_eq!(s.lookup(4), Outcome::Miss { probes: 1 }, "flushed on change");
+    }
+
+    #[test]
+    fn static_mode_never_changes() {
+        let (_, pt) = chunked_identityish(&[8]);
+        let mut s = Anchor::new(64, Mode::Static);
+        let hist = ContigHistogram::from_sizes(&vec![8u64; 100]);
+        s.epoch(&pt, &hist);
+        assert_eq!(s.dist(), 64);
+        assert_eq!(s.shootdowns, 0);
+    }
+
+    #[test]
+    fn translations_correct_vs_pagetable() {
+        let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        let m = MemoryMapping::new((0..16).map(|v| (v, ppns[v as usize])).collect());
+        let pt = PageTable::from_mapping(&m);
+        for d in [2u64, 4, 8, 16] {
+            let mut s = Anchor::new(d, Mode::Static);
+            for v in 0..16u64 {
+                s.fill(v, &pt);
+                if let Some(ppn) = s.lookup(v).ppn() {
+                    assert_eq!(Some(ppn), pt.translate(v), "d={d} vpn={v}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Base (and THP) scheme: the unmodified 1024-entry 8-way L2 of
+//! Table 2, supporting 4KB and 2MB entries.  "THP" in the paper is
+//! exactly this hardware run over a THP-promoted mapping, so the same
+//! type serves both rows (the coordinator names it accordingly).
+
+use super::{tag_huge, tag_regular, Outcome, Scheme};
+use crate::pagetable::PageTable;
+use crate::tlb::SetAssocTlb;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Entry {
+    #[default]
+    Invalid,
+    Page(Ppn),
+    /// PPN of the huge region's first base page.
+    Huge(Ppn),
+}
+
+pub struct BaseL2 {
+    tlb: SetAssocTlb<Entry>,
+    label: &'static str,
+}
+
+impl BaseL2 {
+    pub fn new() -> Self {
+        Self::named("Base")
+    }
+
+    /// Same hardware, different experiment label (THP row).
+    pub fn named(label: &'static str) -> Self {
+        BaseL2 { tlb: SetAssocTlb::new(1024, 8), label }
+    }
+
+    #[inline]
+    fn set4k(&self, vpn: Vpn) -> usize {
+        (vpn & self.tlb.set_mask()) as usize
+    }
+
+    #[inline]
+    fn set2m(&self, vpn: Vpn) -> usize {
+        ((vpn >> 9) & self.tlb.set_mask()) as usize
+    }
+}
+
+impl Default for BaseL2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for BaseL2 {
+    fn name(&self) -> String {
+        self.label.to_string()
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        // 4KB and 2MB arrays probed in parallel in hardware: one access
+        let set = self.set4k(vpn);
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+            return Outcome::Regular { ppn };
+        }
+        let set = self.set2m(vpn);
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+            return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
+        }
+        Outcome::Miss { probes: 0 }
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        if pt.is_huge(vpn) {
+            let base_vpn = vpn & !(HUGE_PAGES - 1);
+            let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+        } else if let Some(ppn) = pt.translate(vpn) {
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+        }
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        self.tlb
+            .iter_valid()
+            .map(|(_, _, e)| match e {
+                Entry::Page(_) => 1,
+                Entry::Huge(_) => HUGE_PAGES,
+                Entry::Invalid => 0,
+            })
+            .sum()
+    }
+
+    fn flush(&mut self) {
+        self.tlb.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+
+    fn identity_pt(n: u64, thp: bool) -> PageTable {
+        let mut m = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
+        if thp {
+            m.promote_thp();
+        }
+        PageTable::from_mapping(&m)
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let pt = identity_pt(100, false);
+        let mut s = BaseL2::new();
+        assert_eq!(s.lookup(5), Outcome::Miss { probes: 0 });
+        s.fill(5, &pt);
+        assert_eq!(s.lookup(5), Outcome::Regular { ppn: 5 });
+        assert_eq!(s.coverage_pages(), 1);
+    }
+
+    #[test]
+    fn huge_entry_covers_512_pages() {
+        let pt = identity_pt(1024, true);
+        let mut s = BaseL2::new();
+        s.fill(700, &pt);
+        // one 2MB entry covers the whole second region
+        assert_eq!(s.lookup(700), Outcome::Regular { ppn: 700 });
+        assert_eq!(s.lookup(512), Outcome::Regular { ppn: 512 });
+        assert_eq!(s.lookup(1023), Outcome::Regular { ppn: 1023 });
+        assert_eq!(s.lookup(511), Outcome::Miss { probes: 0 });
+        assert_eq!(s.coverage_pages(), HUGE_PAGES);
+    }
+
+    #[test]
+    fn capacity_is_1024_entries() {
+        let pt = identity_pt(1 << 14, false);
+        let mut s = BaseL2::new();
+        for v in 0..1 << 14 {
+            s.fill(v, &pt);
+        }
+        assert_eq!(s.coverage_pages(), 1024);
+    }
+
+    #[test]
+    fn flush_drops_everything() {
+        let pt = identity_pt(64, false);
+        let mut s = BaseL2::new();
+        s.fill(1, &pt);
+        s.flush();
+        assert_eq!(s.lookup(1), Outcome::Miss { probes: 0 });
+        assert_eq!(s.coverage_pages(), 0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Cluster [32]: a separate clustered TLB (320 entries, 5-way,
+//! cluster-8) beside a 768-entry 6-way regular TLB (Table 2).  A
+//! cluster entry maps one 8-page virtual group whose pages all fall in
+//! a single 8-frame physical cluster: per-page 3-bit offsets + valid
+//! bits beside the shared physical cluster base.
+
+use super::{tag_huge, tag_regular, Outcome, Scheme};
+use crate::pagetable::PageTable;
+use crate::tlb::SetAssocTlb;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+const GROUP: u64 = 8;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Reg {
+    #[default]
+    Invalid,
+    Page(Ppn),
+    Huge(Ppn),
+}
+
+/// One clustered entry: valid mask + per-page offset in the physical
+/// cluster `pcluster` (frames `[pcluster*8, pcluster*8+8)`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Clu {
+    pcluster: u64,
+    valid: u8,
+    offs: [u8; 8],
+}
+
+pub struct Cluster {
+    reg: SetAssocTlb<Reg>,
+    clu: SetAssocTlb<Clu>,
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Cluster {
+            // 768 entries, 6-way => 128 sets; 320 entries, 5-way => 64 sets
+            reg: SetAssocTlb::new(768, 6),
+            clu: SetAssocTlb::new(320, 5),
+        }
+    }
+
+    #[inline]
+    fn set4k(&self, vpn: Vpn) -> usize {
+        (vpn & self.reg.set_mask()) as usize
+    }
+
+    #[inline]
+    fn set2m(&self, vpn: Vpn) -> usize {
+        ((vpn >> 9) & self.reg.set_mask()) as usize
+    }
+
+    #[inline]
+    fn setclu(&self, group: u64) -> usize {
+        (group & self.clu.set_mask()) as usize
+    }
+
+    /// Build the cluster entry for `vpn`'s group: pages whose PPN lies
+    /// in the same 8-frame cluster as `vpn`'s PPN.
+    fn make_cluster(pt: &PageTable, vpn: Vpn) -> Option<Clu> {
+        let ppn = pt.translate(vpn)?;
+        let pcluster = ppn / GROUP;
+        let gbase = vpn & !(GROUP - 1);
+        let mut e = Clu { pcluster, valid: 0, offs: [0; 8] };
+        for j in 0..GROUP {
+            if let Some(p) = pt.translate(gbase + j) {
+                if p / GROUP == pcluster {
+                    e.valid |= 1 << j;
+                    e.offs[j as usize] = (p % GROUP) as u8;
+                }
+            }
+        }
+        Some(e)
+    }
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for Cluster {
+    fn name(&self) -> String {
+        "Cluster".to_string()
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        // regular + clustered arrays probed in parallel
+        let set = self.set4k(vpn);
+        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn)) {
+            return Outcome::Regular { ppn };
+        }
+        let set = self.set2m(vpn);
+        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn)) {
+            return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
+        }
+        let group = vpn / GROUP;
+        let set = self.setclu(group);
+        if let Some(e) = self.clu.lookup(set, group) {
+            let j = (vpn % GROUP) as usize;
+            if e.valid & (1 << j) != 0 {
+                return Outcome::Coalesced {
+                    ppn: e.pcluster * GROUP + e.offs[j] as u64,
+                    probes: 1,
+                };
+            }
+        }
+        Outcome::Miss { probes: 0 }
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        if pt.is_huge(vpn) {
+            let base_vpn = vpn & !(HUGE_PAGES - 1);
+            let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
+            self.reg.insert(self.set2m(vpn), tag_huge(vpn), Reg::Huge(base_ppn));
+            return;
+        }
+        if let Some(e) = Self::make_cluster(pt, vpn) {
+            if e.valid.count_ones() >= 2 {
+                let group = vpn / GROUP;
+                self.clu.insert(self.setclu(group), group, e);
+            } else if let Some(ppn) = pt.translate(vpn) {
+                self.reg.insert(self.set4k(vpn), tag_regular(vpn), Reg::Page(ppn));
+            }
+        }
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        let r: u64 = self
+            .reg
+            .iter_valid()
+            .map(|(_, _, e)| match e {
+                Reg::Page(_) => 1,
+                Reg::Huge(_) => HUGE_PAGES,
+                Reg::Invalid => 0,
+            })
+            .sum();
+        let c: u64 = self.clu.iter_valid().map(|(_, _, e)| e.valid.count_ones() as u64).sum();
+        r + c
+    }
+
+    fn flush(&mut self) {
+        self.reg.flush();
+        self.clu.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+
+    #[test]
+    fn clustered_hit_with_permuted_offsets() {
+        // group 0 pages map into one physical cluster, permuted
+        let pages = vec![(0u64, 83), (1, 80), (2, 86), (3, 81), (4, 84), (5, 85), (6, 82), (7, 87)];
+        let pt = PageTable::from_mapping(&MemoryMapping::new(pages.clone()));
+        let mut s = Cluster::new();
+        s.fill(0, &pt);
+        for &(v, p) in &pages {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => assert_eq!(ppn, p, "vpn {v}"),
+                o => panic!("vpn {v}: {o:?}"),
+            }
+        }
+        assert_eq!(s.coverage_pages(), 8);
+    }
+
+    #[test]
+    fn pages_outside_cluster_not_covered() {
+        // vpn 0,1 in cluster 10; vpn 2 far away
+        let pages = vec![(0u64, 80), (1, 81), (2, 800)];
+        let pt = PageTable::from_mapping(&MemoryMapping::new(pages));
+        let mut s = Cluster::new();
+        s.fill(0, &pt);
+        assert!(s.lookup(0).is_hit());
+        assert!(s.lookup(1).is_hit());
+        assert_eq!(s.lookup(2), Outcome::Miss { probes: 0 });
+        // filling vpn 2 makes a singleton -> regular entry
+        s.fill(2, &pt);
+        assert_eq!(s.lookup(2), Outcome::Regular { ppn: 800 });
+    }
+
+    #[test]
+    fn translations_correct_vs_pagetable() {
+        let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        let m = MemoryMapping::new((0..16).map(|v| (v, ppns[v as usize])).collect());
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Cluster::new();
+        for v in 0..16u64 {
+            s.fill(v, &pt);
+            if let Some(ppn) = s.lookup(v).ppn() {
+                assert_eq!(Some(ppn), pt.translate(v), "vpn {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn separate_arrays_sizes() {
+        let s = Cluster::new();
+        assert_eq!(s.reg.entries(), 768);
+        assert_eq!(s.clu.entries(), 320);
+    }
+}

@@ -1,0 +1,146 @@
+//! Algorithm 3: determining **K** from the contiguity histogram, with
+//! the Table 1 size-range → alignment mapping, θ (coverage fraction at
+//! which K stops growing, 0.9 in the paper) and ψ (|K| upper bound).
+
+use crate::mem::histogram::ContigHistogram;
+
+/// Table 1: the matching alignment for a contiguity-chunk size.
+/// Size-1 chunks carry no exploitable contiguity and are excluded
+/// (they are served by regular entries).
+pub fn table1_alignment(size: u64) -> Option<u32> {
+    match size {
+        0 | 1 => None,
+        2..=16 => Some(4),
+        17..=64 => Some(6),
+        65..=128 => Some(7),
+        129..=256 => Some(8),
+        257..=512 => Some(9),
+        513..=1024 => Some(10),
+        _ => Some(11),
+    }
+}
+
+/// Default θ from the evaluation.
+pub const THETA: f64 = 0.9;
+
+/// Algorithm 3. Returns K sorted in *descending* order (the order
+/// Algorithm 1 probes).  `theta ∈ (0,1]`, `psi ≥ 1`.
+///
+/// total_contiguity counts pages in chunks of size ≥ 2 (coverable
+/// contiguity); including singletons would make θ unreachable on
+/// fragmented mappings and always inflate |K| to ψ.
+pub fn determine_k(hist: &ContigHistogram, theta: f64, psi: usize) -> Vec<u32> {
+    assert!(theta > 0.0 && theta <= 1.0);
+    assert!(psi >= 1);
+    // lines 2-9: accumulate per-alignment coverage weights
+    let mut weight: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
+    let mut total: u64 = 0;
+    for (size, freq) in hist.pairs() {
+        if let Some(k) = table1_alignment(size) {
+            let coverage = size * freq;
+            total += coverage;
+            *weight.entry(k).or_insert(0) += coverage;
+        }
+    }
+    if total == 0 {
+        return Vec::new();
+    }
+    // lines 10-18: greedy by descending coverage
+    let mut by_weight: Vec<(u32, u64)> = weight.into_iter().collect();
+    by_weight.sort_by(|a, b| b.1.cmp(&a.1).then(b.0.cmp(&a.0)));
+    let mut k = Vec::new();
+    let mut sum = 0u64;
+    for (align, cov) in by_weight {
+        k.push(align);
+        sum += cov;
+        if (sum as f64) > total as f64 * theta || k.len() >= psi {
+            break;
+        }
+    }
+    k.sort_unstable_by(|a, b| b.cmp(a));
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ranges() {
+        assert_eq!(table1_alignment(1), None);
+        assert_eq!(table1_alignment(2), Some(4));
+        assert_eq!(table1_alignment(16), Some(4));
+        assert_eq!(table1_alignment(17), Some(6));
+        assert_eq!(table1_alignment(64), Some(6));
+        assert_eq!(table1_alignment(65), Some(7));
+        assert_eq!(table1_alignment(128), Some(7));
+        assert_eq!(table1_alignment(256), Some(8));
+        assert_eq!(table1_alignment(512), Some(9));
+        assert_eq!(table1_alignment(1024), Some(10));
+        assert_eq!(table1_alignment(1025), Some(11));
+    }
+
+    #[test]
+    fn paper_example_sizes_16_and_128() {
+        // §3.3: "if the memory mapping is filled with the contiguity
+        // chunks of size 16 and 128 that cover more than 90% of
+        // contiguous pages, K = {4, 7} will be returned"
+        let mut sizes = vec![16u64; 100];
+        sizes.extend(vec![128u64; 100]);
+        let k = determine_k(&ContigHistogram::from_sizes(&sizes), THETA, 4);
+        assert_eq!(k, vec![7, 4]);
+    }
+
+    #[test]
+    fn theta_stops_growth() {
+        // one dominant size: a single alignment covers > 90%
+        let mut sizes = vec![32u64; 1000];
+        sizes.push(128);
+        let k = determine_k(&ContigHistogram::from_sizes(&sizes), THETA, 4);
+        assert_eq!(k, vec![6]);
+    }
+
+    #[test]
+    fn psi_caps_cardinality() {
+        // five distinct classes, each ~20% of pages: θ forces growth,
+        // ψ must cap it
+        let mut sizes = Vec::new();
+        sizes.extend(vec![8u64; 1600]); // k=4, 12800 pages
+        sizes.extend(vec![32u64; 400]); // k=6, 12800
+        sizes.extend(vec![100u64; 128]); // k=7, 12800
+        sizes.extend(vec![200u64; 64]); // k=8, 12800
+        sizes.extend(vec![400u64; 32]); // k=9, 12800
+        let h = ContigHistogram::from_sizes(&sizes);
+        for psi in 1..=4 {
+            let k = determine_k(&h, THETA, psi);
+            assert_eq!(k.len(), psi);
+        }
+    }
+
+    #[test]
+    fn descending_order_invariant() {
+        let mut sizes = vec![2u64; 10];
+        sizes.extend(vec![600u64; 10]);
+        sizes.extend(vec![70u64; 10]);
+        let k = determine_k(&ContigHistogram::from_sizes(&sizes), 1.0, 4);
+        let mut sorted = k.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(k, sorted);
+    }
+
+    #[test]
+    fn singletons_only_yields_empty_k() {
+        let k = determine_k(&ContigHistogram::from_sizes(&vec![1u64; 500]), THETA, 4);
+        assert!(k.is_empty());
+    }
+
+    #[test]
+    fn weights_are_pages_not_counts() {
+        // 100 chunks of 2 pages (200 pages, k=4) vs 1 chunk of 1024
+        // pages (k=10): the large chunk dominates by pages
+        let mut sizes = vec![2u64; 100];
+        sizes.push(1024);
+        let k = determine_k(&ContigHistogram::from_sizes(&sizes), 0.5, 1);
+        assert_eq!(k, vec![10]);
+    }
+}

@@ -1,0 +1,374 @@
+//! **K-bit Aligned TLB** — the paper's contribution (§3).
+//!
+//! * Fill (Algorithm 1): after a walk, the OS probes the K-bit aligned
+//!   page-table entries in descending-k order and inserts the first
+//!   whose contiguity covers the requested VPN (else a regular entry).
+//! * Lookup (Algorithm 2): on a regular L2 miss, probe the aligned
+//!   entries per alignment; a hit translates as
+//!   `PPN_aligned + (VPN - VPN_k)`.
+//! * Predictor (§3.2): the aligned lookup starts with the most
+//!   recently used alignment, finishing ~93% of aligned hits in one
+//!   probe (Table 6).
+//! * Determining K (Algorithm 3): from the OS contiguity histogram,
+//!   re-run at every epoch (the paper's 5B-instruction interval).
+//! * Indexing (Figure 7): a k-bit aligned entry is indexed by the VPN
+//!   bits directly above k ("to make full use of all TLB sets"); tags
+//!   carry the alignment so entries never alias.
+
+use super::determine_k::{determine_k, THETA};
+use super::predictor::AlignPredictor;
+use super::{tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
+use crate::mem::histogram::ContigHistogram;
+use crate::pagetable::aligned::{align_vpn, select_aligned};
+use crate::pagetable::PageTable;
+use crate::tlb::SetAssocTlb;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Entry {
+    #[default]
+    Invalid,
+    Page(Ppn),
+    Huge(Ppn),
+    /// k-bit aligned entry: PPN of the aligned page + contiguity
+    /// (pages contiguously mapped in the next 2^k, including itself).
+    Aligned { ppn: Ppn, contiguity: u32, k: u8 },
+}
+
+pub struct KAligned {
+    tlb: SetAssocTlb<Entry>,
+    /// K sorted descending (Algorithm 1/2 probe order)
+    ks: Vec<u32>,
+    psi: usize,
+    theta: f64,
+    predictor: AlignPredictor,
+    /// §3.2 ablation: false = plain descending-K aligned lookup
+    use_predictor: bool,
+    /// K recomputations that changed K (each costs a shootdown)
+    pub k_changes: u64,
+}
+
+impl KAligned {
+    /// Build with an explicit K (descending order enforced here).
+    pub fn with_k(mut ks: Vec<u32>, psi: usize) -> Self {
+        ks.sort_unstable_by(|a, b| b.cmp(a));
+        ks.dedup();
+        KAligned {
+            tlb: SetAssocTlb::new(1024, 8),
+            ks,
+            psi,
+            theta: THETA,
+            predictor: AlignPredictor::new(),
+            use_predictor: true,
+            k_changes: 0,
+        }
+    }
+
+    /// Disable the §3.2 predictor (ablation): the aligned lookup
+    /// always probes K in descending order.
+    pub fn without_predictor(mut self) -> Self {
+        self.use_predictor = false;
+        self
+    }
+
+    /// Build by running Algorithm 3 on the mapping behind `pt`
+    /// (the paper's initialization: K determined once the initial
+    /// allocation phase stabilizes).
+    pub fn from_histogram(hist: &ContigHistogram, psi: usize) -> Self {
+        Self::with_k(determine_k(hist, THETA, psi), psi)
+    }
+
+    /// Convenience used throughout benches/examples.
+    pub fn boxed_from_pt(pt: &PageTable, psi: usize) -> Box<dyn Scheme> {
+        // reconstruct the histogram from run lengths: chunk starts are
+        // pages whose run is not a continuation — cheaper to ask the
+        // mapping, but pt-only callers (engine) use this path
+        let _ = pt;
+        Box::new(Self::with_k(vec![4, 9], psi))
+    }
+
+    pub fn kset_desc(&self) -> &[u32] {
+        &self.ks
+    }
+
+    #[inline]
+    fn set4k(&self, vpn: Vpn) -> usize {
+        (vpn & self.tlb.set_mask()) as usize
+    }
+
+    #[inline]
+    fn set2m(&self, vpn: Vpn) -> usize {
+        ((vpn >> 9) & self.tlb.set_mask()) as usize
+    }
+
+    /// Figure 7's modified indexing: a k-bit aligned entry has its k
+    /// LSBs clear, so indexing it with the ordinary low VPN bits would
+    /// strand most sets ("to make full use of all TLB sets").  Each
+    /// aligned probe knows the alignment k it targets, so the index
+    /// uses the VPN bits directly above k.
+    #[inline]
+    fn set_aligned(&self, vpn: Vpn, k: u32) -> usize {
+        ((vpn >> k) & self.tlb.set_mask()) as usize
+    }
+}
+
+impl Scheme for KAligned {
+    fn name(&self) -> String {
+        format!("|K|={} Aligned", self.ks.len().max(1))
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        // --- regular look-up (Figure 6 left) ---
+        let set = self.set4k(vpn);
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+            return Outcome::Regular { ppn };
+        }
+        let set = self.set2m(vpn);
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+            return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
+        }
+        // --- aligned look-up (Algorithm 2), predictor first (§3.2),
+        // allocation-free (hot path) ---
+        let mut probes = 0u32;
+        let mut hit: Option<(u32, crate::Ppn)> = None;
+        let order: Box<dyn Iterator<Item = u32> + '_> = if self.use_predictor {
+            Box::new(self.predictor.probe_iter(&self.ks))
+        } else {
+            Box::new(self.ks.iter().copied())
+        };
+        for k in order {
+            let av = align_vpn(vpn, k);
+            let set = self.set_aligned(vpn, k);
+            probes += 1;
+            if let Some(&Entry::Aligned { ppn, contiguity, k: ek }) =
+                self.tlb.lookup(set, tag_aligned(av, k))
+            {
+                debug_assert_eq!(ek as u32, k);
+                let delta = vpn - av;
+                if (contiguity as u64) > delta {
+                    hit = Some((k, ppn + delta));
+                    break;
+                }
+            }
+        }
+        if let Some((k, ppn)) = hit {
+            self.predictor.record_hit(k, probes as usize - 1);
+            return Outcome::Coalesced { ppn, probes };
+        }
+        Outcome::Miss { probes }
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        if pt.is_huge(vpn) {
+            let base_vpn = vpn & !(HUGE_PAGES - 1);
+            let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            return;
+        }
+        // Algorithm 1: widest-covering aligned entry, else regular
+        if let Some((k, av, c)) = select_aligned(pt, vpn, &self.ks) {
+            let ppn = pt.translate(av).expect("aligned entry mapped");
+            self.tlb.insert(
+                self.set_aligned(vpn, k),
+                tag_aligned(av, k),
+                Entry::Aligned { ppn, contiguity: c as u32, k: k as u8 },
+            );
+        } else if let Some(ppn) = pt.translate(vpn) {
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+        }
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        self.tlb
+            .iter_valid()
+            .map(|(_, _, e)| match e {
+                Entry::Page(_) => 1,
+                Entry::Huge(_) => HUGE_PAGES,
+                Entry::Aligned { contiguity, .. } => *contiguity as u64,
+                Entry::Invalid => 0,
+            })
+            .sum()
+    }
+
+    fn flush(&mut self) {
+        self.tlb.flush();
+        self.predictor.reset();
+    }
+
+    /// Re-run Algorithm 3; on change, update aligned entries (§3.4)
+    /// and shoot down the TLB.
+    fn epoch(&mut self, _pt: &PageTable, hist: &ContigHistogram) {
+        let new_k = determine_k(hist, self.theta, self.psi);
+        if new_k != self.ks {
+            self.ks = new_k;
+            self.k_changes += 1;
+            self.flush();
+        }
+    }
+
+    fn predictor_stats(&self) -> Option<(u64, u64)> {
+        Some(self.predictor.stats())
+    }
+
+    fn kset(&self) -> Option<Vec<u32>> {
+        Some(self.ks.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+
+    fn figure4_pt() -> PageTable {
+        let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        let m = MemoryMapping::new((0..16).map(|v| (v, ppns[v as usize])).collect());
+        PageTable::from_mapping(&m)
+    }
+
+    #[test]
+    fn figure5_fill_and_translate_vpn13() {
+        // Figure 5: walk for VPN 13 fills the 3-bit aligned entry at
+        // VPN 8 (contiguity 6); afterwards VPN 8..14 all hit in L2.
+        let pt = figure4_pt();
+        let mut s = KAligned::with_k(vec![3, 2, 1], 4);
+        s.fill(13, &pt);
+        for v in 8..14u64 {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => {
+                    assert_eq!(Some(ppn), pt.translate(v), "vpn {v}")
+                }
+                o => panic!("vpn {v}: {o:?}"),
+            }
+        }
+        // VPN 14 is beyond contiguity 6
+        assert!(matches!(s.lookup(14), Outcome::Miss { .. }));
+    }
+
+    #[test]
+    fn no_alignment_covers_falls_back_to_regular() {
+        let pt = figure4_pt();
+        let mut s = KAligned::with_k(vec![3, 2, 1], 4);
+        // vpn 3 (ppn 0): its 1/2/3-bit aligned entries don't reach it
+        s.fill(3, &pt);
+        assert_eq!(s.lookup(3), Outcome::Regular { ppn: 0 });
+    }
+
+    #[test]
+    fn predictor_cuts_probes_on_locality() {
+        // chunk A [0,16): coverable by the k=4 entry at 0.
+        // chunk B [66,70): its 4-bit aligned VPN (64) is unmapped, so
+        // only the k=2 entry at 68 can cover 68/69.
+        let mut pages: Vec<(Vpn, Ppn)> = (0..16u64).map(|v| (v, 100 + v)).collect();
+        pages.extend((66..70u64).map(|v| (v, 500 + (v - 66))));
+        let pt = PageTable::from_mapping(&MemoryMapping::new(pages));
+        let mut s = KAligned::with_k(vec![4, 2], 4);
+        s.fill(1, &pt); // k=4 aligned entry at 0
+        s.fill(68, &pt); // k=2 aligned entry at 68
+        // first aligned hit probes k=4 first (descending K) and hits
+        assert!(matches!(s.lookup(3), Outcome::Coalesced { probes: 1, .. }));
+        // subsequent k=4 hits stay at one probe
+        assert!(matches!(s.lookup(5), Outcome::Coalesced { probes: 1, .. }));
+        // switching to chunk B: predictor says k=4, which misses -> 2 probes
+        assert!(matches!(s.lookup(69), Outcome::Coalesced { probes: 2, .. }));
+        // ...then the predictor follows the new alignment
+        assert!(matches!(s.lookup(68), Outcome::Coalesced { probes: 1, .. }));
+        let (correct, total) = s.predictor_stats().unwrap();
+        assert_eq!(total, 4);
+        assert_eq!(correct, 3);
+    }
+
+    #[test]
+    fn miss_costs_all_probes() {
+        let pt = figure4_pt();
+        let mut s = KAligned::with_k(vec![3, 2, 1], 4);
+        assert_eq!(s.lookup(9), Outcome::Miss { probes: 3 });
+    }
+
+    #[test]
+    fn epoch_rechoose_k_flushes() {
+        let pt = figure4_pt();
+        let mut s = KAligned::with_k(vec![3], 2);
+        s.fill(13, &pt);
+        assert!(s.lookup(13).is_hit());
+        let hist = ContigHistogram::from_sizes(&vec![16u64; 100]);
+        s.epoch(&pt, &hist);
+        assert_eq!(s.kset().unwrap(), vec![4]);
+        assert_eq!(s.k_changes, 1);
+        assert!(matches!(s.lookup(13), Outcome::Miss { .. }), "shootdown after K change");
+    }
+
+    #[test]
+    fn translations_always_match_pagetable() {
+        use crate::prng::Rng;
+        let mut rng = Rng::new(123);
+        for _ in 0..10 {
+            let n = 512u64;
+            let mut ppns: Vec<Ppn> = (0..n).collect();
+            // shuffle blocks to create mixed contiguity
+            let mut blocks: Vec<Vec<Ppn>> = Vec::new();
+            let mut i = 0;
+            while i < n {
+                let len = rng.range(1, 32).min(n - i);
+                blocks.push((i..i + len).collect());
+                i += len;
+            }
+            rng.shuffle(&mut blocks);
+            ppns.clear();
+            for b in &blocks {
+                ppns.extend(b);
+            }
+            let m = MemoryMapping::new((0..n).map(|v| (v, ppns[v as usize] + 10_000)).collect());
+            let pt = PageTable::from_mapping(&m);
+            let mut s = KAligned::with_k(vec![9, 6, 4, 2], 4);
+            for _ in 0..2000 {
+                let v = rng.below(n);
+                match s.lookup(v) {
+                    Outcome::Regular { ppn } | Outcome::Coalesced { ppn, .. } => {
+                        assert_eq!(Some(ppn), pt.translate(v), "vpn {v}")
+                    }
+                    Outcome::Miss { .. } => s.fill(v, &pt),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_grows_with_matching_alignment() {
+        // 512-page chunks at 512-aligned VPNs: one k=9 entry covers a
+        // whole chunk where a k=4 entry covers only 16 pages.  (With a
+        // tiny working set the Figure 7 indexing concentrates aligned
+        // entries in few sets — use enough chunks to fill them.)
+        let mut pages: Vec<(Vpn, Ppn)> = Vec::new();
+        let mut p = 0u64;
+        for c in 0..256u64 {
+            p += 7;
+            let vbase = c * 512;
+            for j in 0..512 {
+                pages.push((vbase + j, p + j));
+            }
+            p += 512;
+        }
+        let m = MemoryMapping::new(pages);
+        let pt = PageTable::from_mapping(&m);
+        let total = 256 * 512;
+        let mut cov = Vec::new();
+        for ks in [vec![4], vec![9, 4]] {
+            let mut s = KAligned::with_k(ks, 4);
+            let mut rng = crate::prng::Rng::new(5);
+            for _ in 0..50_000 {
+                let vpn = rng.below(total);
+                if !s.lookup(vpn).is_hit() {
+                    s.fill(vpn, &pt);
+                }
+            }
+            cov.push(s.coverage_pages());
+        }
+        assert!(
+            cov[1] > 2 * cov[0],
+            "K={{9,4}} coverage {} should dwarf K={{4}} {}",
+            cov[1],
+            cov[0]
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! L2 TLB schemes: the paper's baselines (Base, THP, COLT, Cluster,
+//! RMM, Anchor) and the contribution (K-bit Aligned).
+//!
+//! All schemes share the L1 (owned by the engine) and implement
+//! [`Scheme`]: an L2 lookup that reports *what it cost* (regular vs
+//! coalesced hit, number of extra aligned probes) and a fill invoked
+//! after a page-table walk.  Schemes may differ only in cost — every
+//! returned PPN is asserted against the page table by the engine.
+
+pub mod anchor;
+pub mod base;
+pub mod cluster;
+pub mod colt;
+pub mod determine_k;
+pub mod kaligned;
+pub mod predictor;
+pub mod rmm;
+
+use crate::mem::histogram::ContigHistogram;
+use crate::pagetable::PageTable;
+use crate::{Ppn, Vpn};
+
+/// Result of an L2 lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Regular L2 hit (Table 2: 7 cycles).
+    Regular { ppn: Ppn },
+    /// Coalesced/aligned/anchor/cluster/range hit (8 cycles for the
+    /// first coalesced probe, +7 per additional probe).
+    Coalesced { ppn: Ppn, probes: u32 },
+    /// Miss; `probes` coalesced probes were burned before giving up
+    /// (they precede the page-table walk, §3.5).
+    Miss { probes: u32 },
+}
+
+impl Outcome {
+    pub fn ppn(&self) -> Option<Ppn> {
+        match *self {
+            Outcome::Regular { ppn } | Outcome::Coalesced { ppn, .. } => Some(ppn),
+            Outcome::Miss { .. } => None,
+        }
+    }
+
+    pub fn is_hit(&self) -> bool {
+        !matches!(self, Outcome::Miss { .. })
+    }
+}
+
+/// An L2 TLB scheme under test.
+pub trait Scheme {
+    fn name(&self) -> String;
+
+    /// L2 lookup. Must not consult the page table (that is what the
+    /// walk is for) — only TLB state.
+    fn lookup(&mut self, vpn: Vpn) -> Outcome;
+
+    /// Fill after a page-table walk for `vpn` (the paper's Figure 5
+    /// flow; for K-Aligned this is Algorithm 1, run by the OS off the
+    /// critical path).
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable);
+
+    /// Pages translatable by resident L2 state (Table 5 coverage):
+    /// regular 4KB entry = 1, huge = 512, coalesced = its contiguity.
+    fn coverage_pages(&self) -> u64;
+
+    /// TLB shootdown.
+    fn flush(&mut self);
+
+    /// Epoch boundary (the paper re-runs Algorithm 3 every 5B
+    /// instructions; Anchor-dynamic re-selects its distance every 1B).
+    fn epoch(&mut self, _pt: &PageTable, _hist: &ContigHistogram) {}
+
+    /// (correct, total) first-probe predictions over aligned hits
+    /// (Table 6), if the scheme has a predictor.
+    fn predictor_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// The current K set, if the scheme is K-Aligned (Figure 9 info).
+    fn kset(&self) -> Option<Vec<u32>> {
+        None
+    }
+}
+
+/// Tag encoding shared by the single-array schemes: the kind lives in
+/// the low 6 bits so regular / huge / aligned(k) entries of the same
+/// set never alias.
+#[inline(always)]
+pub fn tag_regular(vpn: Vpn) -> u64 {
+    vpn << 6
+}
+
+#[inline(always)]
+pub fn tag_huge(vpn: Vpn) -> u64 {
+    (vpn >> 9) << 6 | 1
+}
+
+/// Aligned/anchor entry tag for alignment (or log2 distance) `k`.
+#[inline(always)]
+pub fn tag_aligned(aligned_vpn: Vpn, k: u32) -> u64 {
+    debug_assert!(k < 62);
+    (aligned_vpn << 6) | (2 + k as u64)
+}
+
+/// Group (cache-line) tag used by COLT/Cluster coalesced entries.
+#[inline(always)]
+pub fn tag_group(group: u64) -> u64 {
+    (group << 6) | 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_never_alias() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for vpn in 0..4096u64 {
+            assert!(seen.insert(tag_regular(vpn)));
+        }
+        for vpn in (0..4096u64 << 9).step_by(512) {
+            assert!(seen.insert(tag_huge(vpn)));
+        }
+        for k in 1..12u32 {
+            for vpn in (0..64u64).map(|x| x << k) {
+                assert!(seen.insert(tag_aligned(vpn, k)), "alias at k={k} vpn={vpn}");
+            }
+        }
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        assert_eq!(Outcome::Regular { ppn: 5 }.ppn(), Some(5));
+        assert_eq!(Outcome::Coalesced { ppn: 6, probes: 2 }.ppn(), Some(6));
+        assert_eq!(Outcome::Miss { probes: 1 }.ppn(), None);
+        assert!(Outcome::Regular { ppn: 0 }.is_hit());
+        assert!(!Outcome::Miss { probes: 0 }.is_hit());
+    }
+}

@@ -1,0 +1,189 @@
+//! RMM [20]: redundant memory mappings — the baseline L2 TLB plus a
+//! 32-entry fully-associative *range TLB* holding variable-sized
+//! contiguous ranges (Table 2).  Ranges are the mapping's contiguity
+//! chunks; with only 32 CAM entries the design pays off only when
+//! chunks are large (the paper's Figure 1/Table 4 point).
+
+use super::{tag_huge, tag_regular, Outcome, Scheme};
+use crate::mem::mapping::{Chunk, MemoryMapping};
+use crate::pagetable::PageTable;
+use crate::tlb::{RangeTlb, SetAssocTlb};
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+/// Chunks below this size are not worth a CAM entry; RMM's OS support
+/// targets large eagerly-paged ranges.
+pub const MIN_RANGE_PAGES: u64 = 512;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum Reg {
+    #[default]
+    Invalid,
+    Page(Ppn),
+    Huge(Ppn),
+}
+
+pub struct Rmm {
+    reg: SetAssocTlb<Reg>,
+    ranges: RangeTlb,
+    /// contiguity chunks sorted by vstart (the "redundant mapping"
+    /// table the OS maintains; consulted at fill time only)
+    chunks: Vec<Chunk>,
+}
+
+impl Rmm {
+    pub fn new(mapping: &MemoryMapping) -> Self {
+        Rmm {
+            reg: SetAssocTlb::new(1024, 8),
+            ranges: RangeTlb::new(32),
+            chunks: mapping.chunks().filter(|c| c.len >= MIN_RANGE_PAGES).collect(),
+        }
+    }
+
+    #[inline]
+    fn set4k(&self, vpn: Vpn) -> usize {
+        (vpn & self.reg.set_mask()) as usize
+    }
+
+    #[inline]
+    fn set2m(&self, vpn: Vpn) -> usize {
+        ((vpn >> 9) & self.reg.set_mask()) as usize
+    }
+
+    fn chunk_containing(&self, vpn: Vpn) -> Option<Chunk> {
+        let i = match self.chunks.binary_search_by_key(&vpn, |c| c.vstart) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let c = self.chunks[i];
+        (vpn < c.vstart + c.len).then_some(c)
+    }
+}
+
+impl Scheme for Rmm {
+    fn name(&self) -> String {
+        "RMM".to_string()
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let set = self.set4k(vpn);
+        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn)) {
+            return Outcome::Regular { ppn };
+        }
+        let set = self.set2m(vpn);
+        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn)) {
+            return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
+        }
+        // range TLB probed alongside (separate CAM hardware)
+        if let Some(ppn) = self.ranges.lookup(vpn) {
+            return Outcome::Coalesced { ppn, probes: 1 };
+        }
+        Outcome::Miss { probes: 0 }
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        if pt.is_huge(vpn) {
+            let base_vpn = vpn & !(HUGE_PAGES - 1);
+            let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
+            self.reg.insert(self.set2m(vpn), tag_huge(vpn), Reg::Huge(base_ppn));
+            return;
+        }
+        if let Some(c) = self.chunk_containing(vpn) {
+            self.ranges.insert(crate::tlb::range::RangeEntry {
+                vstart: c.vstart,
+                len: c.len,
+                pstart: c.pstart,
+            });
+            return;
+        }
+        if let Some(ppn) = pt.translate(vpn) {
+            self.reg.insert(self.set4k(vpn), tag_regular(vpn), Reg::Page(ppn));
+        }
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        let r: u64 = self
+            .reg
+            .iter_valid()
+            .map(|(_, _, e)| match e {
+                Reg::Page(_) => 1,
+                Reg::Huge(_) => HUGE_PAGES,
+                Reg::Invalid => 0,
+            })
+            .sum();
+        r + self.ranges.coverage_pages()
+    }
+
+    fn flush(&mut self) {
+        self.reg.flush();
+        self.ranges.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunked_mapping(sizes: &[u64]) -> MemoryMapping {
+        let mut pages = Vec::new();
+        let (mut v, mut p) = (0u64, 0u64);
+        for &s in sizes {
+            p += 3;
+            for j in 0..s {
+                pages.push((v + j, p + j));
+            }
+            v += s;
+            p += s;
+        }
+        MemoryMapping::new(pages)
+    }
+
+    #[test]
+    fn large_chunk_served_by_one_range() {
+        let m = chunked_mapping(&[600]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        s.fill(250, &pt);
+        for v in [0u64, 100, 599] {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => assert_eq!(Some(ppn), pt.translate(v)),
+                o => panic!("vpn {v}: {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn small_chunks_fall_back_to_regular() {
+        let m = chunked_mapping(&[8, 8, 8]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        s.fill(4, &pt);
+        // chunk of 8 < MIN_RANGE_PAGES: regular entry only for vpn 4
+        assert_eq!(s.lookup(4), Outcome::Regular { ppn: pt.translate(4).unwrap() });
+        assert_eq!(s.lookup(5), Outcome::Miss { probes: 0 });
+        assert_eq!(s.ranges.occupancy(), 0);
+    }
+
+    #[test]
+    fn range_capacity_thrashes_lru() {
+        // 40 chunks of 512: only 32 ranges fit
+        let m = chunked_mapping(&vec![512u64; 40]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        for i in 0..40u64 {
+            s.fill(i * 512, &pt);
+        }
+        assert_eq!(s.ranges.occupancy(), 32);
+    }
+
+    #[test]
+    fn chunk_containing_bounds() {
+        let m = chunked_mapping(&[512, 512]);
+        let s = Rmm::new(&m);
+        assert!(s.chunk_containing(0).is_some());
+        assert!(s.chunk_containing(511).is_some());
+        assert_eq!(s.chunk_containing(511).unwrap().vstart, 0);
+        assert_eq!(s.chunk_containing(512).unwrap().vstart, 512);
+        assert!(s.chunk_containing(5000).is_none());
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 2 latency parameters (cycles).
+
+/// Translation latencies (Table 2, lower part).  L1 access latency is
+/// hidden behind the cache access (§4.1) and contributes 0 cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Latency {
+    /// regular L2 hit
+    pub l2_hit: u64,
+    /// cluster/RMM/anchor/aligned/COLT coalesced hit (first probe)
+    pub coalesced_hit: u64,
+    /// each additional aligned-lookup probe (§4.2 "add 7 cycles for
+    /// each additional lookup")
+    pub extra_probe: u64,
+    /// full page-table walk
+    pub walk: u64,
+    /// §3.5 (future work): start the walk in parallel with the second
+    /// aligned probe, so only the first failed probe delays a miss.
+    pub parallel_walk: bool,
+}
+
+impl Default for Latency {
+    fn default() -> Self {
+        Latency { l2_hit: 7, coalesced_hit: 8, extra_probe: 7, walk: 50, parallel_walk: false }
+    }
+}
+
+impl Latency {
+    /// The §3.5 variant.
+    pub fn with_parallel_walk() -> Self {
+        Latency { parallel_walk: true, ..Latency::default() }
+    }
+}
+
+impl Latency {
+    /// Cycles for a regular L2 hit.
+    #[inline]
+    pub fn regular(&self) -> u64 {
+        self.l2_hit
+    }
+
+    /// Cycles for a coalesced hit reached on probe `probes` (1-based:
+    /// probes==1 means the first aligned probe succeeded → 8 cycles).
+    #[inline]
+    pub fn coalesced(&self, probes: u32) -> u64 {
+        debug_assert!(probes >= 1);
+        self.coalesced_hit + self.extra_probe * (probes as u64 - 1)
+    }
+
+    /// Cycles for an L2 miss that burned `probes` aligned probes
+    /// before walking.  Default: the walk starts after the aligned
+    /// lookup (§3.5's stated cost).  With `parallel_walk`, probes
+    /// beyond the first overlap the walk and are free.
+    #[inline]
+    pub fn miss(&self, probes: u32) -> u64 {
+        let charged = if self.parallel_walk { probes.min(1) } else { probes };
+        self.walk + self.extra_probe * charged as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values() {
+        let l = Latency::default();
+        assert_eq!(l.regular(), 7);
+        assert_eq!(l.coalesced(1), 8);
+        assert_eq!(l.coalesced(2), 15); // 8 + 7
+        assert_eq!(l.coalesced(4), 29);
+        assert_eq!(l.miss(0), 50);
+        assert_eq!(l.miss(3), 71);
+    }
+
+    #[test]
+    fn parallel_walk_hides_extra_probes() {
+        let l = Latency::with_parallel_walk();
+        assert_eq!(l.miss(0), 50);
+        assert_eq!(l.miss(1), 57);
+        assert_eq!(l.miss(4), 57, "probes past the first overlap the walk");
+        // hits are unaffected
+        assert_eq!(l.coalesced(3), 22);
+    }
+}

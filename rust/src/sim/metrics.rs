@@ -1,0 +1,176 @@
+//! Simulation metrics: the raw counters behind every table and figure
+//! of the paper's evaluation.
+
+use super::latency::Latency;
+
+/// Per-run counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub accesses: u64,
+    pub l1_hits: u64,
+    /// regular L2 hits (7 cycles)
+    pub l2_regular_hits: u64,
+    /// coalesced/aligned/anchor/cluster/range hits
+    pub l2_coalesced_hits: u64,
+    /// L2 misses = page-table walks
+    pub walks: u64,
+    /// total aligned-lookup probes issued (hits and misses)
+    pub aligned_probes: u64,
+
+    // cycle breakdown (Figures 10/11)
+    pub cycles_l2_hit: u64,
+    pub cycles_coalesced: u64,
+    pub cycles_extra_probes: u64,
+    pub cycles_walk: u64,
+
+    // coverage sampling (Table 5)
+    pub coverage_samples: u64,
+    pub coverage_sum_pages: u64,
+}
+
+impl Metrics {
+    /// L2 misses (the paper's "TLB misses" metric — Figures 1, 8, 9,
+    /// Table 4 all report L2 misses relative to Base).
+    pub fn misses(&self) -> u64 {
+        self.walks
+    }
+
+    pub fn l1_misses(&self) -> u64 {
+        self.accesses - self.l1_hits
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles_l2_hit + self.cycles_coalesced + self.cycles_extra_probes + self.cycles_walk
+    }
+
+    /// Translation CPI (Figures 10/11): translation cycles per
+    /// instruction, with `ipa` instructions per memory access.
+    pub fn cpi(&self, ipa: f64) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        self.total_cycles() as f64 / (self.accesses as f64 * ipa)
+    }
+
+    /// CPI breakdown (l2_hit, coalesced+extra, walk), same denominator.
+    pub fn cpi_breakdown(&self, ipa: f64) -> (f64, f64, f64) {
+        if self.accesses == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let d = self.accesses as f64 * ipa;
+        (
+            self.cycles_l2_hit as f64 / d,
+            (self.cycles_coalesced + self.cycles_extra_probes) as f64 / d,
+            self.cycles_walk as f64 / d,
+        )
+    }
+
+    /// Mean resident L2 coverage in pages (Table 5 numerator).
+    pub fn mean_coverage_pages(&self) -> f64 {
+        if self.coverage_samples == 0 {
+            return 0.0;
+        }
+        self.coverage_sum_pages as f64 / self.coverage_samples as f64
+    }
+
+    /// Record one access outcome.
+    pub(crate) fn record_l1_hit(&mut self) {
+        self.accesses += 1;
+        self.l1_hits += 1;
+    }
+
+    pub(crate) fn record_regular_hit(&mut self, lat: &Latency) {
+        self.accesses += 1;
+        self.l2_regular_hits += 1;
+        self.cycles_l2_hit += lat.regular();
+    }
+
+    pub(crate) fn record_coalesced_hit(&mut self, lat: &Latency, probes: u32) {
+        self.accesses += 1;
+        self.l2_coalesced_hits += 1;
+        self.aligned_probes += probes as u64;
+        self.cycles_coalesced += lat.coalesced_hit;
+        self.cycles_extra_probes += lat.extra_probe * (probes as u64).saturating_sub(1);
+    }
+
+    pub(crate) fn record_walk(&mut self, lat: &Latency, probes: u32) {
+        self.accesses += 1;
+        self.walks += 1;
+        self.aligned_probes += probes as u64;
+        self.cycles_walk += lat.walk;
+        // §3.5 parallel-walk: probes beyond the first overlap the walk
+        let charged = if lat.parallel_walk { probes.min(1) } else { probes };
+        self.cycles_extra_probes += lat.extra_probe * charged as u64;
+    }
+
+    pub(crate) fn record_coverage(&mut self, pages: u64) {
+        self.coverage_samples += 1;
+        self.coverage_sum_pages += pages;
+    }
+
+    /// Merge (for sharded runs).
+    pub fn merge(&mut self, o: &Metrics) {
+        self.accesses += o.accesses;
+        self.l1_hits += o.l1_hits;
+        self.l2_regular_hits += o.l2_regular_hits;
+        self.l2_coalesced_hits += o.l2_coalesced_hits;
+        self.walks += o.walks;
+        self.aligned_probes += o.aligned_probes;
+        self.cycles_l2_hit += o.cycles_l2_hit;
+        self.cycles_coalesced += o.cycles_coalesced;
+        self.cycles_extra_probes += o.cycles_extra_probes;
+        self.cycles_walk += o.cycles_walk;
+        self.coverage_samples += o.coverage_samples;
+        self.coverage_sum_pages += o.coverage_sum_pages;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_identities() {
+        let lat = Latency::default();
+        let mut m = Metrics::default();
+        m.record_l1_hit();
+        m.record_regular_hit(&lat);
+        m.record_coalesced_hit(&lat, 1);
+        m.record_coalesced_hit(&lat, 3);
+        m.record_walk(&lat, 2);
+        assert_eq!(m.accesses, 5);
+        assert_eq!(m.l1_misses(), 4);
+        assert_eq!(m.misses(), 1);
+        // cycles: 7 + 8 + (8+14) + (50+14) = 101
+        assert_eq!(m.total_cycles(), 7 + 8 + 8 + 14 + 50 + 14);
+    }
+
+    #[test]
+    fn cpi_denominator() {
+        let lat = Latency::default();
+        let mut m = Metrics::default();
+        for _ in 0..10 {
+            m.record_walk(&lat, 0);
+        }
+        // 10 walks * 50 cycles / (10 accesses * 5 ipa) = 10
+        assert!((m.cpi(5.0) - 10.0).abs() < 1e-12);
+        let (h, c, w) = m.cpi_breakdown(5.0);
+        assert_eq!(h, 0.0);
+        assert_eq!(c, 0.0);
+        assert!((w - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let lat = Latency::default();
+        let mut a = Metrics::default();
+        a.record_regular_hit(&lat);
+        let mut b = Metrics::default();
+        b.record_walk(&lat, 1);
+        b.record_coverage(100);
+        a.merge(&b);
+        assert_eq!(a.accesses, 2);
+        assert_eq!(a.walks, 1);
+        assert_eq!(a.mean_coverage_pages(), 100.0);
+    }
+}

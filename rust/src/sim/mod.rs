@@ -1,0 +1,11 @@
+//! The trace-driven simulation core: latency model (Table 2), metrics
+//! (misses, coverage, CPI breakdown, predictor accuracy) and the
+//! engine that drives L1 → L2 scheme → page-table walk per access.
+
+pub mod engine;
+pub mod latency;
+pub mod metrics;
+
+pub use engine::Engine;
+pub use latency::Latency;
+pub use metrics::Metrics;

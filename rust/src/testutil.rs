@@ -1,0 +1,59 @@
+//! Property-testing helper (proptest substitute — the build is fully
+//! offline, so we roll a small randomized-case runner around
+//! [`crate::prng::Rng`]).
+
+use crate::prng::Rng;
+
+/// Run `f` on `cases` seeded RNGs; panics carry the case index so a
+/// failure reproduces with `check_cases(1, seed + i, ...)`.
+pub fn check_cases(cases: usize, seed: u64, mut f: impl FnMut(&mut Rng, usize)) {
+    for i in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(i as u64));
+        f(&mut rng, i);
+    }
+}
+
+/// Generate a random mapping with `nchunks` contiguity chunks of sizes
+/// in `[lo, hi]`, dense virtual range starting at 0.
+pub fn random_chunked_mapping(
+    rng: &mut Rng,
+    nchunks: usize,
+    lo: u64,
+    hi: u64,
+) -> crate::mem::mapping::MemoryMapping {
+    let mut pages = Vec::new();
+    let mut v = 0u64;
+    let mut p = 0u64;
+    for _ in 0..nchunks {
+        let s = rng.range(lo, hi);
+        p += rng.range(2, 17); // physical gap: chunks never merge
+        for j in 0..s {
+            pages.push((v + j, p + j));
+        }
+        v += s;
+        p += s;
+    }
+    crate::mem::mapping::MemoryMapping::new(pages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_cases_runs_all() {
+        let mut n = 0;
+        check_cases(17, 1, |_, _| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    fn random_mapping_has_requested_chunks() {
+        let mut rng = Rng::new(2);
+        let m = random_chunked_mapping(&mut rng, 25, 4, 9);
+        let sizes = m.chunk_sizes();
+        assert_eq!(sizes.len(), 25);
+        assert!(sizes.iter().all(|&s| (4..=9).contains(&s)));
+        m.validate().unwrap();
+    }
+}

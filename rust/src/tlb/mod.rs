@@ -1,0 +1,228 @@
+//! TLB hardware models: generic set-associative arrays with true LRU,
+//! the split L1 (4KB + 2MB) shared by every scheme, and the
+//! fully-associative range TLB used by RMM.
+
+pub mod l1;
+pub mod range;
+
+pub use l1::L1Tlb;
+pub use range::RangeTlb;
+
+/// One way of a set-associative TLB.
+#[derive(Clone, Debug)]
+struct Slot<P> {
+    valid: bool,
+    tag: u64,
+    lru: u64,
+    data: P,
+}
+
+/// Generic set-associative TLB with true LRU replacement.
+///
+/// The caller owns the index/tag computation (schemes differ exactly
+/// there — Figure 7's modified indexing for aligned entries), the TLB
+/// owns placement, lookup and replacement.
+pub struct SetAssocTlb<P> {
+    sets: usize,
+    ways: usize,
+    slots: Vec<Slot<P>>,
+    tick: u64,
+}
+
+impl<P: Clone + Default> SetAssocTlb<P> {
+    /// `entries` must be divisible by `ways`; the number of sets must
+    /// be a power of two (hardware indexing).
+    pub fn new(entries: usize, ways: usize) -> Self {
+        assert!(entries % ways == 0, "entries {entries} % ways {ways}");
+        let sets = entries / ways;
+        assert!(sets.is_power_of_two(), "sets {sets} must be a power of two");
+        SetAssocTlb {
+            sets,
+            ways,
+            slots: vec![
+                Slot { valid: false, tag: 0, lru: 0, data: P::default() };
+                entries
+            ],
+            tick: 0,
+        }
+    }
+
+    #[inline]
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn entries(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    pub fn set_mask(&self) -> u64 {
+        self.sets as u64 - 1
+    }
+
+    /// Look `tag` up in `set`; on hit, refresh LRU and return the data.
+    #[inline]
+    pub fn lookup(&mut self, set: usize, tag: u64) -> Option<&P> {
+        debug_assert!(set < self.sets);
+        self.tick += 1;
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            let s = &mut self.slots[base + w];
+            if s.valid && s.tag == tag {
+                s.lru = self.tick;
+                return Some(&self.slots[base + w].data);
+            }
+        }
+        None
+    }
+
+    /// Probe without touching LRU (used by stats/tests).
+    pub fn peek(&self, set: usize, tag: u64) -> Option<&P> {
+        let base = set * self.ways;
+        (0..self.ways)
+            .map(|w| &self.slots[base + w])
+            .find(|s| s.valid && s.tag == tag)
+            .map(|s| &s.data)
+    }
+
+    /// Insert (tag, data) into `set`, replacing the LRU way.  If the
+    /// tag is already present its data is overwritten in place (no
+    /// duplicate ways).
+    pub fn insert(&mut self, set: usize, tag: u64, data: P) {
+        debug_assert!(set < self.sets);
+        self.tick += 1;
+        let base = set * self.ways;
+        // update in place if present
+        for w in 0..self.ways {
+            let s = &mut self.slots[base + w];
+            if s.valid && s.tag == tag {
+                s.data = data;
+                s.lru = self.tick;
+                return;
+            }
+        }
+        // otherwise evict LRU (invalid slots have lru==0, always oldest)
+        let mut victim = base;
+        for w in 1..self.ways {
+            let s = &self.slots[base + w];
+            if !s.valid {
+                victim = base + w;
+                break;
+            }
+            if s.lru < self.slots[victim].lru || !self.slots[victim].valid {
+                victim = base + w;
+            }
+        }
+        // ensure invalid-first even if way 0 is valid
+        for w in 0..self.ways {
+            if !self.slots[base + w].valid {
+                victim = base + w;
+                break;
+            }
+        }
+        self.slots[victim] = Slot { valid: true, tag, lru: self.tick, data };
+    }
+
+    /// Invalidate everything (TLB shootdown, §3.4).
+    pub fn flush(&mut self) {
+        for s in &mut self.slots {
+            s.valid = false;
+            s.lru = 0;
+        }
+    }
+
+    /// Iterate valid entries as (set, tag, data).
+    pub fn iter_valid(&self) -> impl Iterator<Item = (usize, u64, &P)> {
+        self.slots.iter().enumerate().filter(|(_, s)| s.valid).map(move |(i, s)| {
+            (i / self.ways, s.tag, &s.data)
+        })
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(64, 4);
+        t.insert(3, 100, 7);
+        assert_eq!(t.lookup(3, 100), Some(&7));
+        assert_eq!(t.lookup(3, 101), None);
+        assert_eq!(t.lookup(4, 100), None);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(8, 4); // 2 sets, 4 ways
+        for i in 0..4 {
+            t.insert(0, i, i);
+        }
+        // touch 0..3 except 1 => 1 is LRU
+        t.lookup(0, 0);
+        t.lookup(0, 2);
+        t.lookup(0, 3);
+        t.insert(0, 99, 99);
+        assert_eq!(t.lookup(0, 1), None, "LRU way must be evicted");
+        assert_eq!(t.lookup(0, 99), Some(&99));
+        assert!(t.lookup(0, 0).is_some());
+    }
+
+    #[test]
+    fn insert_same_tag_updates_in_place() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(8, 4);
+        t.insert(1, 5, 10);
+        t.insert(1, 5, 20);
+        assert_eq!(t.occupancy(), 1);
+        assert_eq!(t.lookup(1, 5), Some(&20));
+    }
+
+    #[test]
+    fn flush_clears() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(16, 4);
+        for i in 0..16 {
+            t.insert((i % 4) as usize, i, i);
+        }
+        assert!(t.occupancy() > 0);
+        t.flush();
+        assert_eq!(t.occupancy(), 0);
+        assert_eq!(t.lookup(0, 0), None);
+    }
+
+    #[test]
+    fn invalid_slots_filled_before_eviction() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(4, 4); // 1 set
+        t.insert(0, 1, 1);
+        t.insert(0, 2, 2);
+        assert_eq!(t.occupancy(), 2);
+        assert!(t.lookup(0, 1).is_some() && t.lookup(0, 2).is_some());
+    }
+
+    #[test]
+    fn property_occupancy_bounded_and_hits_consistent() {
+        use crate::prng::Rng;
+        let mut rng = Rng::new(11);
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(128, 8);
+        let mut shadow: std::collections::HashMap<(usize, u64), u64> =
+            std::collections::HashMap::new();
+        for _ in 0..10_000 {
+            let set = rng.below(16) as usize;
+            let tag = rng.below(64);
+            if rng.chance(1, 2) {
+                let v = rng.next_u64();
+                t.insert(set, tag, v);
+                shadow.insert((set, tag), v);
+            } else if let Some(p) = t.lookup(set, tag) {
+                // any hit must return the latest inserted value
+                assert_eq!(Some(p), shadow.get(&(set, tag)).as_deref().map(|v| v).map(|v| v));
+                assert_eq!(*p, shadow[&(set, tag)]);
+            }
+            assert!(t.occupancy() <= 128);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Fully-associative range TLB (RMM [20]): 32 entries, each holding a
+//! variable-sized range `[vstart, vstart+len)` → `pstart`, true LRU.
+
+use crate::{Ppn, Vpn};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RangeEntry {
+    pub vstart: Vpn,
+    pub len: u64,
+    pub pstart: Ppn,
+}
+
+impl RangeEntry {
+    #[inline]
+    pub fn covers(&self, vpn: Vpn) -> bool {
+        vpn >= self.vstart && vpn < self.vstart + self.len
+    }
+
+    #[inline]
+    pub fn translate(&self, vpn: Vpn) -> Ppn {
+        debug_assert!(self.covers(vpn));
+        self.pstart + (vpn - self.vstart)
+    }
+}
+
+pub struct RangeTlb {
+    entries: Vec<(RangeEntry, u64)>, // (entry, lru tick)
+    capacity: usize,
+    tick: u64,
+}
+
+impl RangeTlb {
+    pub fn new(capacity: usize) -> Self {
+        RangeTlb { entries: Vec::with_capacity(capacity), capacity, tick: 0 }
+    }
+
+    /// CAM lookup: all entries compared in parallel in hardware, so
+    /// this is one TLB access regardless of occupancy.
+    pub fn lookup(&mut self, vpn: Vpn) -> Option<Ppn> {
+        self.tick += 1;
+        for (e, lru) in &mut self.entries {
+            if e.covers(vpn) {
+                *lru = self.tick;
+                return Some(e.translate(vpn));
+            }
+        }
+        None
+    }
+
+    /// Insert a range, evicting the LRU entry when full.  An insert
+    /// whose range duplicates an existing entry refreshes it instead.
+    pub fn insert(&mut self, e: RangeEntry) {
+        self.tick += 1;
+        if let Some((_, lru)) = self.entries.iter_mut().find(|(x, _)| *x == e) {
+            *lru = self.tick;
+            return;
+        }
+        if self.entries.len() < self.capacity {
+            self.entries.push((e, self.tick));
+            return;
+        }
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (_, lru))| *lru)
+            .map(|(i, _)| i)
+            .unwrap();
+        self.entries[victim] = (e, self.tick);
+    }
+
+    pub fn flush(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Pages covered by resident ranges (coverage statistic).
+    pub fn coverage_pages(&self) -> u64 {
+        self.entries.iter().map(|(e, _)| e.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_translation() {
+        let mut t = RangeTlb::new(4);
+        t.insert(RangeEntry { vstart: 100, len: 50, pstart: 1000 });
+        assert_eq!(t.lookup(100), Some(1000));
+        assert_eq!(t.lookup(149), Some(1049));
+        assert_eq!(t.lookup(150), None);
+        assert_eq!(t.lookup(99), None);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut t = RangeTlb::new(2);
+        t.insert(RangeEntry { vstart: 0, len: 10, pstart: 0 });
+        t.insert(RangeEntry { vstart: 100, len: 10, pstart: 100 });
+        t.lookup(5); // refresh first
+        t.insert(RangeEntry { vstart: 200, len: 10, pstart: 200 });
+        assert_eq!(t.lookup(105), None, "LRU range evicted");
+        assert!(t.lookup(5).is_some());
+        assert!(t.lookup(205).is_some());
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes() {
+        let mut t = RangeTlb::new(2);
+        let e = RangeEntry { vstart: 0, len: 10, pstart: 0 };
+        t.insert(e);
+        t.insert(e);
+        assert_eq!(t.occupancy(), 1);
+    }
+
+    #[test]
+    fn coverage_counts_pages() {
+        let mut t = RangeTlb::new(4);
+        t.insert(RangeEntry { vstart: 0, len: 10, pstart: 0 });
+        t.insert(RangeEntry { vstart: 50, len: 600, pstart: 700 });
+        assert_eq!(t.coverage_pages(), 610);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload proxy models for the paper's 16 benchmarks (SPEC2006 +
+//! graph500 + gups) — see DESIGN.md §Substitutions: each benchmark is
+//! a parameterized page-level access pattern (the trace kernel's
+//! descriptor) plus a contiguity profile for its demand mapping,
+//! tuned to the paper's reported per-benchmark behaviour (Figure 2/3
+//! contiguity classes, Table 5 coverage ordering).
+
+pub mod spec;
+pub mod tracegen;
+
+pub use spec::{all_benchmarks, benchmark, Workload};
+pub use tracegen::{NativeTraceGen, TraceParams};

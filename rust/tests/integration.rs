@@ -1,0 +1,262 @@
+//! Cross-module integration tests (no artifacts required): mapping →
+//! page table → schemes → engine → coordinator, plus the translation
+//! correctness invariant over every scheme.
+
+use katlb::coordinator::{run_cell, BenchContext, Config, SchemeKind};
+use katlb::mem::histogram::ContigHistogram;
+use katlb::mem::mapgen::{self, DemandProfile, SyntheticKind};
+use katlb::pagetable::PageTable;
+use katlb::prng::Rng;
+use katlb::schemes::anchor::{Anchor, Mode};
+use katlb::schemes::base::BaseL2;
+use katlb::schemes::cluster::Cluster;
+use katlb::schemes::colt::Colt;
+use katlb::schemes::kaligned::KAligned;
+use katlb::schemes::rmm::Rmm;
+use katlb::schemes::{Outcome, Scheme};
+use katlb::sim::Engine;
+use katlb::testutil::check_cases;
+use katlb::workloads::benchmark;
+use std::sync::Arc;
+
+fn all_schemes(m: &katlb::mem::mapping::MemoryMapping) -> Vec<Box<dyn Scheme>> {
+    let hist = ContigHistogram::from_mapping(m);
+    vec![
+        Box::new(BaseL2::new()),
+        Box::new(Colt::new()),
+        Box::new(Cluster::new()),
+        Box::new(Rmm::new(m)),
+        Box::new(Anchor::new(16, Mode::Static)),
+        Box::new(Anchor::new(64, Mode::Dynamic)),
+        Box::new(KAligned::from_histogram(&hist, 2)),
+        Box::new(KAligned::from_histogram(&hist, 4)),
+        Box::new(KAligned::with_k(vec![9, 6, 4], 4)),
+    ]
+}
+
+/// THE invariant: schemes may differ in cost, never in result.
+#[test]
+fn every_scheme_translates_correctly_on_random_mappings() {
+    check_cases(8, 42, |rng, case| {
+        let m = katlb::testutil::random_chunked_mapping(rng, 400, 1, 700);
+        let pt = PageTable::from_mapping(&m);
+        let n = m.len() as u64;
+        for mut s in all_schemes(&m) {
+            let mut local = Rng::new(case as u64 * 7 + 1);
+            for _ in 0..5_000 {
+                let vpn = m.pages()[local.below(n) as usize].0;
+                match s.lookup(vpn) {
+                    Outcome::Regular { ppn } | Outcome::Coalesced { ppn, .. } => {
+                        assert_eq!(
+                            Some(ppn),
+                            pt.translate(vpn),
+                            "case {case}, scheme {}, vpn {vpn}",
+                            s.name()
+                        );
+                    }
+                    Outcome::Miss { .. } => s.fill(vpn, &pt),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn every_scheme_translates_correctly_with_thp() {
+    // same invariant, but on a THP-promoted mapping (huge entries)
+    let mut m = mapgen::synthetic(SyntheticKind::Large, 50_000, 3);
+    m.promote_thp();
+    assert!(!m.huge_regions().is_empty());
+    let pt = PageTable::from_mapping(&m);
+    let mut rng = Rng::new(5);
+    for mut s in all_schemes(&m) {
+        for _ in 0..5_000 {
+            let vpn = rng.below(50_000);
+            match s.lookup(vpn) {
+                Outcome::Regular { ppn } | Outcome::Coalesced { ppn, .. } => {
+                    assert_eq!(Some(ppn), pt.translate(vpn), "{} vpn {vpn}", s.name());
+                }
+                Outcome::Miss { .. } => s.fill(vpn, &pt),
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_verify_mode_passes_for_all_schemes() {
+    let m = mapgen::synthetic(SyntheticKind::Mixed, 30_000, 7);
+    let pt = PageTable::from_mapping(&m);
+    let mut gen = katlb::workloads::NativeTraceGen::new(
+        3,
+        katlb::workloads::TraceParams {
+            ws_pages: 30_000,
+            hot_pages: 512,
+            stride: 7,
+            t_seq: 90,
+            t_stride: 140,
+            t_hot: 220,
+            base_vpn: 0,
+            hot_base_vpn: 10_000,
+            repeat_shift: 2,
+            burst_shift: 6,
+        },
+    );
+    let trace = gen.next_chunk(100_000);
+    for s in all_schemes(&m) {
+        let name = s.name();
+        let mut eng = Engine::new(s, &pt);
+        eng.verify = true; // assert every returned PPN
+        eng.run(&trace);
+        let (metrics, _) = eng.finish();
+        assert_eq!(metrics.accesses, 100_000, "{name}");
+        assert!(metrics.walks > 0, "{name} must miss sometimes");
+        assert_eq!(
+            metrics.l1_hits + metrics.l2_regular_hits + metrics.l2_coalesced_hits + metrics.walks,
+            metrics.accesses,
+            "{name}: outcome counts must partition accesses"
+        );
+    }
+}
+
+#[test]
+fn misses_monotone_in_working_set() {
+    let mk = |ws: u64| {
+        let m = mapgen::synthetic(SyntheticKind::Small, ws, 5);
+        let pt = PageTable::from_mapping(&m);
+        let mut rng = Rng::new(1);
+        let mut eng = Engine::new(Box::new(BaseL2::new()), &pt);
+        for _ in 0..200_000 {
+            eng.access(rng.below(ws));
+        }
+        eng.metrics().misses()
+    };
+    let small = mk(2_000);
+    let large = mk(64_000);
+    assert!(large > small, "base misses: ws 64k {large} <= ws 2k {small}");
+}
+
+#[test]
+fn thp_reduces_misses_on_large_contiguity() {
+    let ws = 1 << 15;
+    let mapping = mapgen::synthetic(SyntheticKind::Large, ws, 11);
+    let mut mapping_thp = mapping.clone();
+    mapping_thp.promote_thp();
+    let pt = PageTable::from_mapping(&mapping);
+    let pt_thp = PageTable::from_mapping(&mapping_thp);
+    let run = |pt: &PageTable| {
+        let mut rng = Rng::new(2);
+        let mut eng = Engine::new(Box::new(BaseL2::new()), pt);
+        for _ in 0..200_000 {
+            eng.access(rng.below(ws));
+        }
+        eng.metrics().misses()
+    };
+    let base = run(&pt);
+    let thp = run(&pt_thp);
+    assert!(
+        (thp as f64) < 0.8 * base as f64,
+        "THP {thp} vs Base {base} on large contiguity"
+    );
+}
+
+#[test]
+fn kaligned_beats_base_and_scales_with_psi() {
+    let wl = benchmark("gromacs").unwrap();
+    let cfg = Config {
+        trace_len: 1 << 17,
+        epoch: 1 << 15,
+        workers: 1,
+        use_xla: false,
+        max_ws_pages: Some(1 << 15),
+    };
+    let ctx = Arc::new(BenchContext::build(wl, &cfg, None).unwrap());
+    let base = run_cell(&ctx, SchemeKind::Base);
+    let k2 = run_cell(&ctx, SchemeKind::KAligned(2));
+    let k4 = run_cell(&ctx, SchemeKind::KAligned(4));
+    assert!(k2.misses() < base.misses());
+    assert!(k4.misses() <= k2.misses(), "psi=4 {} vs psi=2 {}", k4.misses(), k2.misses());
+}
+
+#[test]
+fn demand_profile_generic_runs_with_dynamic_k() {
+    let profile = DemandProfile::generic(1 << 14);
+    let m = mapgen::demand(&profile, 3);
+    let pt = PageTable::from_mapping(&m);
+    let hist = ContigHistogram::from_mapping(&m);
+    let mut eng = Engine::new(Box::new(KAligned::from_histogram(&hist, 3)), &pt)
+        .with_epoch(1 << 12, hist.clone());
+    let mut rng = Rng::new(4);
+    let n = m.len() as u64;
+    for _ in 0..50_000 {
+        let i = rng.below(n) as usize;
+        eng.access(m.pages()[i].0);
+    }
+    let (metrics, scheme) = eng.finish();
+    assert!(metrics.coverage_samples > 0);
+    assert!(scheme.kset().is_some());
+}
+
+#[test]
+fn coverage_ordering_base_colt_kaligned() {
+    // Table 5 ordering on a mixed mapping: Base < COLT < K-Aligned
+    let m = mapgen::synthetic(SyntheticKind::Mixed, 60_000, 13);
+    let pt = PageTable::from_mapping(&m);
+    let hist = ContigHistogram::from_mapping(&m);
+    let mut cov = Vec::new();
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(BaseL2::new()),
+        Box::new(Colt::new()),
+        Box::new(KAligned::from_histogram(&hist, 2)),
+    ];
+    for mut s in schemes {
+        let mut rng = Rng::new(17);
+        for _ in 0..100_000 {
+            let vpn = rng.below(60_000);
+            if !s.lookup(vpn).is_hit() {
+                s.fill(vpn, &pt);
+            }
+        }
+        cov.push(s.coverage_pages());
+    }
+    assert!(cov[0] <= 1024, "base coverage bounded by entries");
+    assert!(cov[1] > cov[0], "COLT {} > Base {}", cov[1], cov[0]);
+    assert!(cov[2] > cov[1], "K-Aligned {} > COLT {}", cov[2], cov[1]);
+}
+
+#[test]
+fn dynamic_anchor_adapts_between_phases() {
+    // phase 1: small chunks; phase 2: large chunks. Dynamic anchor
+    // must change distance at the epoch boundary.
+    let m = mapgen::synthetic(SyntheticKind::Small, 20_000, 21);
+    let pt = PageTable::from_mapping(&m);
+    let mut anchor = Anchor::new(1024, Mode::Dynamic);
+    let hist_small = ContigHistogram::from_sizes(&vec![8u64; 500]);
+    anchor.epoch(&pt, &hist_small);
+    let d1 = anchor.dist();
+    let hist_large = ContigHistogram::from_sizes(&vec![1024u64; 500]);
+    anchor.epoch(&pt, &hist_large);
+    let d2 = anchor.dist();
+    assert!(d1 < d2, "distance must grow with chunk size ({d1} -> {d2})");
+    assert_eq!(anchor.shootdowns, 2);
+}
+
+#[test]
+fn trace_params_clamped_to_mapped_pages() {
+    // a profile that exhausts the (tiny) physical memory: the context
+    // must clamp the descriptor so every trace VPN is mapped
+    let mut wl = benchmark("povray").unwrap();
+    wl.demand.total_pages = 1 << 12;
+    wl.params.ws_pages = 1 << 12;
+    wl.params.hot_base_vpn = (1 << 12) / 3;
+    let cfg = Config {
+        trace_len: 1 << 14,
+        epoch: 1 << 12,
+        workers: 1,
+        use_xla: false,
+        max_ws_pages: None,
+    };
+    let ctx = BenchContext::build(wl, &cfg, None).unwrap();
+    for &v in &ctx.trace {
+        assert!(ctx.pt.translate(v as u64).is_some(), "vpn {v} unmapped");
+    }
+}

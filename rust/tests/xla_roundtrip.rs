@@ -1,0 +1,106 @@
+//! End-to-end validation of the AOT bridge: the HLO-text artifacts
+//! produced by `python/compile/aot.py`, loaded and executed through
+//! the PJRT CPU client, must agree bit-for-bit with the rust-native
+//! oracles.  Requires `make artifacts` (skips with a message if the
+//! artifact directory is absent).
+
+use katlb::mem::mapgen::{self, SyntheticKind};
+use katlb::runtime::{chunk_sizes_xla, generate_trace, NativeSource, Runtime, XlaSource};
+use katlb::workloads::{all_benchmarks, TraceParams};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts unavailable): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn trace_gen_artifact_matches_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let params = TraceParams {
+        ws_pages: 123_457,
+        hot_pages: 999,
+        stride: 13,
+        t_seq: 77,
+        t_stride: 150,
+        t_hot: 222,
+        base_vpn: 42,
+        hot_base_vpn: 10_000,
+        repeat_shift: 3,
+        burst_shift: 5,
+    };
+    let n = rt.manifest.batch * 3 + 17;
+    let xla = generate_trace(&mut XlaSource::new(&rt, 777, params), n).unwrap();
+    let native = generate_trace(&mut NativeSource::new(777, params, 4096), n).unwrap();
+    assert_eq!(xla, native, "XLA and native streams must be bit-identical");
+}
+
+#[test]
+fn trace_gen_artifact_matches_for_all_benchmarks() {
+    let Some(rt) = runtime() else { return };
+    for wl in all_benchmarks() {
+        let n = rt.manifest.batch;
+        let xla = generate_trace(&mut XlaSource::new(&rt, wl.seed, wl.params), n).unwrap();
+        let native = generate_trace(&mut NativeSource::new(wl.seed, wl.params, n), n).unwrap();
+        assert_eq!(xla, native, "{}", wl.name);
+    }
+}
+
+#[test]
+fn contiguity_artifact_matches_rust_chunks() {
+    let Some(rt) = runtime() else { return };
+    for (kind, seed) in [
+        (SyntheticKind::Small, 1u64),
+        (SyntheticKind::Mixed, 2),
+        (SyntheticKind::Large, 3),
+    ] {
+        let m = mapgen::synthetic(kind, 50_000, seed);
+        let xla_sizes = chunk_sizes_xla(&rt, &m).unwrap();
+        assert_eq!(xla_sizes, m.chunk_sizes(), "{kind:?}");
+    }
+}
+
+#[test]
+fn contiguity_artifact_windows_stitch_across_npages() {
+    let Some(rt) = runtime() else { return };
+    // mapping larger than one artifact window, with a chunk crossing
+    // the window boundary
+    let n = rt.manifest.npages as u64;
+    let m = mapgen::synthetic(SyntheticKind::Large, n + 4096, 9);
+    let xla_sizes = chunk_sizes_xla(&rt, &m).unwrap();
+    assert_eq!(xla_sizes, m.chunk_sizes());
+}
+
+#[test]
+fn align_artifact_matches_scalar_math() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let vpns: Vec<i32> = (0..b as i32).map(|i| i.wrapping_mul(2654435761u32 as i32) & 0x3FFF_FFFF).collect();
+    let ks = [9i32, 6, 4, 0];
+    let (aligned, delta) = rt.align_batch(&vpns, &ks).unwrap();
+    assert_eq!(aligned.len(), 4 * b);
+    for (ki, &k) in ks.iter().enumerate() {
+        for i in (0..b).step_by(997) {
+            let v = vpns[i] as u32;
+            let mask = (1u32 << k) - 1;
+            assert_eq!(aligned[ki * b + i] as u32, v & !mask, "k={k} i={i}");
+            assert_eq!(delta[ki * b + i] as u32, v & mask, "k={k} i={i}");
+        }
+    }
+}
+
+#[test]
+fn manifest_validates_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest.batch, 1 << 16);
+    assert_eq!(rt.manifest.npages, 1 << 18);
+    assert_eq!(rt.manifest.maxk, 4);
+    assert_eq!(rt.manifest.sentinel, -2);
+    // wrong input sizes must be rejected before reaching PJRT
+    assert!(rt.chunk_bounds(&[0i32; 4], &[0i32; 4]).is_err());
+    assert!(rt.align_batch(&[0i32; 4], &[0, 0, 0, 0]).is_err());
+}
