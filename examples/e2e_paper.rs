@@ -20,7 +20,7 @@ use katlb::runtime::{generate_trace, NativeSource, Runtime, XlaSource};
 use katlb::workloads::benchmark;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> katlb::error::Result<()> {
     let t0 = Instant::now();
     let mut cfg = Config {
         trace_len: 1 << 20,
@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         workers: 0,
         use_xla: true,
         max_ws_pages: Some(1 << 18),
+        ..Config::default()
     };
 
     // --- layer 1/2: artifacts through PJRT ---

@@ -18,6 +18,7 @@ fn main() {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 16),
+        ..Config::default()
     };
     let wl = benchmark("astar").unwrap();
     let mut table = Table::new(

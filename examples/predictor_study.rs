@@ -7,6 +7,7 @@
 use katlb::coordinator::{BenchContext, Config};
 use katlb::coordinator::report::{pct, ratio, Table};
 use katlb::schemes::kaligned::KAligned;
+use katlb::schemes::Scheme;
 use katlb::sim::Engine;
 use katlb::workloads::benchmark;
 
@@ -17,17 +18,20 @@ fn main() {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 16),
+        ..Config::default()
     };
     let mut table = Table::new(
         "Predictor study (gromacs proxy): aligned-lookup cost per |K|",
         &["aligned hits", "probes/hit", "accuracy"],
     );
+    let ctx = BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap();
+    let trace = ctx.materialize_trace().unwrap();
     for psi in [2usize, 3, 4] {
-        let ctx = BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap();
         let scheme = KAligned::from_histogram(&ctx.hist_thp, psi);
         let kset = scheme.kset_desc().to_vec();
-        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
-        eng.run(&ctx.trace);
+        // monomorphized engine: Engine<KAligned>, no boxing needed
+        let mut eng = Engine::new(scheme, &ctx.pt_thp);
+        eng.run(&trace);
         let (m, scheme) = eng.finish();
         let (correct, total) = scheme.predictor_stats().unwrap();
         let probes_per_hit = if m.l2_coalesced_hits > 0 {

@@ -10,7 +10,7 @@ use katlb::pagetable::PageTable;
 use katlb::prng::Rng;
 use katlb::schemes::base::BaseL2;
 use katlb::schemes::kaligned::KAligned;
-use katlb::schemes::Scheme;
+use katlb::schemes::{AnyScheme, Scheme};
 use katlb::sim::Engine;
 
 fn main() {
@@ -31,9 +31,11 @@ fn main() {
     let kaligned = KAligned::from_histogram(&hist, 4);
     println!("Algorithm 3 chose K = {:?}", kaligned.kset_desc());
 
-    // 4. run both schemes over the same random-ish stream
+    // 4. run both schemes over the same random-ish stream — through
+    //    the monomorphized engine (enum-dispatched AnyScheme: no
+    //    virtual call per access)
     let mut report = Vec::new();
-    let schemes: Vec<Box<dyn Scheme>> = vec![Box::new(BaseL2::new()), Box::new(kaligned)];
+    let schemes = vec![AnyScheme::Base(BaseL2::new()), AnyScheme::KAligned(kaligned)];
     for scheme in schemes {
         let name = scheme.name();
         let mut eng = Engine::new(scheme, &pt);

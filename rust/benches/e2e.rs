@@ -16,9 +16,10 @@ fn main() {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 16),
+        ..Config::default()
     };
     let ctx = Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap());
-    let n = ctx.trace.len() as u64;
+    let n = ctx.trace.len;
 
     for kind in [
         SchemeKind::Base,

@@ -16,6 +16,7 @@ fn main() {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 14),
+        ..Config::default()
     };
 
     let r = bench("fig2 (contiguity histograms, 15 benchmarks)", 0, 3, || {

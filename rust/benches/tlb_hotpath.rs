@@ -13,7 +13,7 @@ use katlb::schemes::anchor::{Anchor, Mode};
 use katlb::schemes::base::BaseL2;
 use katlb::schemes::colt::Colt;
 use katlb::schemes::kaligned::KAligned;
-use katlb::schemes::Scheme;
+use katlb::schemes::{AnyScheme, Scheme};
 use katlb::sim::Engine;
 use katlb::tlb::SetAssocTlb;
 
@@ -104,5 +104,62 @@ fn main() {
             100.0 * m.l1_hits as f64 / m.accesses as f64,
             100.0 * m.walks as f64 / m.accesses as f64
         );
+    }
+
+    // dyn-dispatch vs monomorphized engine: the same access loop with
+    // the scheme behind a Box<dyn Scheme> (the seed engine's shape),
+    // behind the enum-dispatched AnyScheme (the coordinator's shape),
+    // and as a concrete type (the upper bound).  The PR's claim is
+    // that the monomorphized hot path is at parity or faster.
+    println!();
+    println!("# dyn vs monomorphized engine (same 64K trace, per variant)");
+    {
+        let mut eng: Engine<Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()), &pt);
+        eng.verify = false;
+        bench("engine [base] dyn Box<dyn Scheme>", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
+    }
+    {
+        let mut eng = Engine::new(AnyScheme::Base(BaseL2::new()), &pt);
+        eng.verify = false;
+        bench("engine [base] mono AnyScheme", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
+    }
+    {
+        let mut eng = Engine::new(BaseL2::new(), &pt);
+        eng.verify = false;
+        bench("engine [base] mono concrete", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
+    }
+    {
+        let mut eng: Engine<Box<dyn Scheme>> =
+            Engine::new(Box::new(KAligned::from_histogram(&hist, 4)), &pt);
+        eng.verify = false;
+        bench("engine [kaligned] dyn Box<dyn Scheme>", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
+    }
+    {
+        let mut eng = Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4)), &pt);
+        eng.verify = false;
+        bench("engine [kaligned] mono AnyScheme", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
+    }
+    {
+        let mut eng = Engine::new(KAligned::from_histogram(&hist, 4), &pt);
+        eng.verify = false;
+        bench("engine [kaligned] mono concrete", 3, 15, || {
+            eng.run_chunk(&vpns);
+        })
+        .print(Some((N as u64, "acc")));
     }
 }

@@ -15,7 +15,7 @@ fn main() {
     let chunk = 1 << 16;
 
     let mut native = NativeSource::new(wl.seed, wl.params, chunk);
-    let mut buf = vec![0u32; chunk];
+    let mut buf = vec![0u64; chunk];
     bench("native trace chunk (64K vpns)", 3, 30, || {
         native.next_chunk_into(&mut buf).unwrap();
         black_box(buf[0]);
@@ -25,7 +25,7 @@ fn main() {
     match Runtime::load_default() {
         Ok(rt) => {
             let mut xla = XlaSource::new(&rt, wl.seed, wl.params);
-            let mut buf = vec![0u32; rt.manifest.batch];
+            let mut buf = vec![0u64; rt.manifest.batch];
             bench("xla trace chunk (64K vpns, PJRT)", 3, 30, || {
                 xla.next_chunk_into(&mut buf).unwrap();
                 black_box(buf[0]);

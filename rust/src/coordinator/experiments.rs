@@ -3,14 +3,18 @@
 //! rendered [`Table`] whose rows/series mirror what the paper reports.
 
 use super::report::{bar, pct, ratio, Table};
-use super::{run_anchor_static, run_cell, run_cells, BenchContext, CellResult, Config, SchemeKind};
+use super::{
+    run_anchor_static, run_anchor_static_sharded, run_cell, run_cells, run_cells_sharded,
+    BenchContext, CellResult, Config, SchemeKind, TraceSpec,
+};
+use crate::error::Result;
 use crate::mem::histogram::ContigHistogram;
 use crate::mem::mapgen::{self, SyntheticKind};
 use crate::pagetable::aligned::init_cost;
 use crate::pagetable::PageTable;
-use crate::runtime::{generate_trace, NativeSource, Runtime, XlaSource};
+use crate::runtime::Runtime;
 use crate::workloads::{all_benchmarks, Workload};
-use anyhow::Result;
+use crate::bail;
 use std::sync::Arc;
 
 /// The scheme columns of Figure 8 / Table 4, in paper order.
@@ -44,19 +48,19 @@ pub fn synthetic_context(
         }
     }
     let mapping = mapgen::synthetic(kind, wl.params.ws_pages as u64, wl.seed as u64);
+    if mapping.is_empty() {
+        bail!("synthetic mapping for {} mapped zero pages", wl.name);
+    }
     let mut mapping_thp = mapping.clone();
     mapping_thp.promote_thp();
     let pt = PageTable::from_mapping(&mapping);
     let pt_thp = PageTable::from_mapping(&mapping_thp);
     let hist = ContigHistogram::from_mapping(&mapping);
     let hist_thp = ContigHistogram::from_mapping(&mapping_thp);
-    let mut trace = match rt {
-        Some(rt) => generate_trace(&mut XlaSource::new(rt, wl.seed, wl.params), cfg.trace_len)?,
-        None => {
-            generate_trace(&mut NativeSource::new(wl.seed, wl.params, 1 << 16), cfg.trace_len)?
-        }
-    };
-    super::remap_indices_to_vpns(&mut trace, &mapping);
+    let trace = TraceSpec::for_config(cfg, wl.seed, wl.params)?;
+    if let Some(rt) = rt {
+        super::verify_xla_stream(rt, &trace)?;
+    }
     Ok(Arc::new(BenchContext {
         workload: wl,
         mapping,
@@ -66,20 +70,24 @@ pub fn synthetic_context(
         hist,
         hist_thp,
         trace,
+        epoch: cfg.epoch.max(1),
     }))
 }
 
 /// Run the full scheme battery over one context: Base + priors +
-/// Anchor-Static sweep + K-variants.  Returns (base, results).
+/// Anchor-Static sweep + K-variants, all through the sharded fan-out
+/// (`cfg.shards = 1` keeps cells unsharded).  Returns (base, results).
 fn battery(ctx: &Arc<BenchContext>, cfg: &Config) -> (CellResult, Vec<CellResult>) {
     let w = cfg.effective_workers();
-    let base = run_cell(ctx, SchemeKind::Base);
+    let base = run_cells_sharded(vec![(Arc::clone(ctx), SchemeKind::Base)], cfg.shards, w)
+        .pop()
+        .expect("base cell");
     let mut cells: Vec<(Arc<BenchContext>, SchemeKind)> = Vec::new();
     for k in prior_schemes().into_iter().chain(k_schemes()) {
         cells.push((Arc::clone(ctx), k));
     }
-    let mut results = run_cells(cells, w);
-    let anchor = run_anchor_static(ctx, w);
+    let mut results = run_cells_sharded(cells, cfg.shards, w);
+    let anchor = run_anchor_static_sharded(ctx, cfg.shards, w);
     results.insert(4, anchor); // after the priors, before K variants
     (base, results)
 }
@@ -408,6 +416,7 @@ mod tests {
             workers: 2,
             use_xla: false,
             max_ws_pages: Some(1 << 12),
+            ..Config::default()
         }
     }
 
@@ -466,9 +475,12 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
     use crate::sim::{Engine, Latency};
 
     let wl = crate::workloads::benchmark(bench_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench_name}"))?;
+        .ok_or_else(|| crate::anyhow!("unknown benchmark {bench_name}"))?;
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
     let ctx = BenchContext::build(wl, cfg, rt.as_ref())?;
+    // ablations sweep many engine variants over one shared trace:
+    // materialize it once (examples-scale) instead of re-streaming
+    let trace = ctx.materialize_trace()?;
     let mut out = Vec::new();
 
     // --- θ sweep ---
@@ -482,7 +494,7 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
         let scheme = KAligned::with_k(ks.clone(), 4);
         let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
         eng.verify = false;
-        eng.run(&ctx.trace);
+        eng.run(&trace);
         let (m, _) = eng.finish();
         if (theta - 0.9).abs() < 1e-9 {
             misses_at_theta9 = Some(m.misses());
@@ -512,7 +524,7 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
         }
         let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
         eng.verify = false;
-        eng.run(&ctx.trace);
+        eng.run(&trace);
         let (m, _) = eng.finish();
         let pph = if m.l2_coalesced_hits > 0 {
             m.aligned_probes as f64 / m.l2_coalesced_hits as f64
@@ -542,7 +554,7 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
         let scheme = KAligned::from_histogram(&ctx.hist_thp, 4);
         let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp).with_latency(lat);
         eng.verify = false;
-        eng.run(&ctx.trace);
+        eng.run(&trace);
         let (m, _) = eng.finish();
         t.row(
             label,

@@ -1,28 +1,57 @@
 //! The experiment coordinator (Layer-3): builds experiment *cells*
-//! (benchmark × scheme × mapping), generates each benchmark's trace
-//! once (through the XLA runtime when artifacts are present, else the
-//! native oracle), fans cells out to a worker pool over shared
-//! read-only state, and aggregates per-cell metrics into the paper's
-//! tables and figures.
+//! (benchmark × scheme × shard), fans them out to a worker pool over
+//! shared read-only state, and aggregates per-cell metrics into the
+//! paper's tables and figures.
+//!
+//! ## Streaming pipeline
+//!
+//! A [`BenchContext`] no longer materializes its trace: it carries a
+//! [`TraceSpec`] (seed + kernel descriptor + length + chunk size) and
+//! each cell *streams* the trace through a [`TraceStream`] +
+//! [`VpnRemap`] into the engine's `run_chunk`, so peak trace memory
+//! per running cell is one chunk regardless of trace length.  When
+//! XLA artifacts are present (`use_xla`), the context build streams
+//! the artifact output chunk-by-chunk against the native oracle and
+//! fails loudly on any divergence — the artifacts are exercised with
+//! the same bounded memory, and cells then replay the verified stream
+//! from the native recipe (bit-identical by construction).
+//!
+//! ## Sharding
+//!
+//! With `Config::shards = S > 1` every cell splits into S shard tasks
+//! over disjoint trace ranges.  A shard's engine starts cold — shard
+//! boundaries model TLB shootdowns (context-switch semantics) — and
+//! shard metrics merge in shard order through [`Metrics::merge`].
+//!
+//! EPOCH-ALIGNMENT RULE: per-shard epoch counters restart at each
+//! shard's start.  For history-independent schemes (Base, THP, COLT,
+//! Cluster, RMM, Anchor-static) this is irrelevant; for *dynamic*
+//! schemes (K-Aligned's Algorithm 3 re-run, Anchor-dynamic's distance
+//! re-selection) pick `trace_len / shards` a multiple of the epoch
+//! length so per-shard epoch boundaries coincide with the unsharded
+//! run's.  The epoch inputs (page table, histogram) are static per
+//! run, so aligned epochs re-derive identical decisions.
 
 pub mod experiments;
 pub mod report;
 
+use crate::error::Result;
 use crate::mem::histogram::ContigHistogram;
 use crate::mem::mapgen;
 use crate::mem::mapping::MemoryMapping;
 use crate::pagetable::PageTable;
-use crate::runtime::{generate_trace, NativeSource, Runtime, TraceSource, XlaSource};
+use crate::runtime::{NativeSource, Runtime, TraceSource, TraceStream, VpnRemap, XlaSource};
 use crate::schemes::anchor::{Anchor, Mode};
 use crate::schemes::base::BaseL2;
 use crate::schemes::cluster::Cluster;
 use crate::schemes::colt::Colt;
 use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
-use crate::schemes::Scheme;
+use crate::schemes::{AnyScheme, Scheme};
 use crate::sim::{Engine, Metrics};
+use crate::workloads::tracegen::TraceParams;
 use crate::workloads::Workload;
-use anyhow::Result;
+use crate::{bail, Vpn};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -63,8 +92,28 @@ impl SchemeKind {
         !matches!(self, SchemeKind::Base)
     }
 
-    /// Instantiate the scheme over a mapping.
-    pub fn build(&self, mapping: &MemoryMapping, hist: &ContigHistogram) -> Box<dyn Scheme> {
+    /// Instantiate the scheme over a mapping — enum-dispatched, so
+    /// `Engine<AnyScheme>` monomorphizes the hot path.
+    pub fn build(&self, mapping: &MemoryMapping, hist: &ContigHistogram) -> AnyScheme {
+        match *self {
+            SchemeKind::Base => AnyScheme::Base(BaseL2::new()),
+            SchemeKind::Thp => AnyScheme::Base(BaseL2::named("THP")),
+            SchemeKind::Colt => AnyScheme::Colt(Colt::new()),
+            SchemeKind::Cluster => AnyScheme::Cluster(Cluster::new()),
+            SchemeKind::Rmm => AnyScheme::Rmm(Rmm::new(mapping)),
+            SchemeKind::AnchorFixed(d) => AnyScheme::Anchor(Anchor::new(d, Mode::Static)),
+            SchemeKind::AnchorDynamic => {
+                let d = crate::pagetable::anchor::select_distance(hist);
+                AnyScheme::Anchor(Anchor::new(d, Mode::Dynamic))
+            }
+            SchemeKind::KAligned(psi) => AnyScheme::KAligned(KAligned::from_histogram(hist, psi)),
+        }
+    }
+
+    /// Dynamic-dispatch escape hatch (tests, ad-hoc tools, the
+    /// dyn-vs-mono benchmark): each variant boxed as its concrete
+    /// type, i.e. the pre-monomorphization engine shape.
+    pub fn build_boxed(&self, mapping: &MemoryMapping, hist: &ContigHistogram) -> Box<dyn Scheme> {
         match *self {
             SchemeKind::Base => Box::new(BaseL2::new()),
             SchemeKind::Thp => Box::new(BaseL2::named("THP")),
@@ -81,6 +130,9 @@ impl SchemeKind {
     }
 }
 
+/// Default streaming chunk (matches the artifact BATCH).
+pub const DEFAULT_CHUNK: usize = 1 << 16;
+
 /// Global run configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -96,6 +148,11 @@ pub struct Config {
     pub use_xla: bool,
     /// cap benchmark working sets (quick mode for CI)
     pub max_ws_pages: Option<u64>,
+    /// trace shards per cell (1 = unsharded; see the module docs'
+    /// epoch-alignment rule before raising this for dynamic schemes)
+    pub shards: usize,
+    /// streaming chunk length — the per-cell trace memory bound
+    pub chunk_len: usize,
 }
 
 impl Default for Config {
@@ -106,6 +163,8 @@ impl Default for Config {
             workers: 0,
             use_xla: true,
             max_ws_pages: None,
+            shards: 1,
+            chunk_len: DEFAULT_CHUNK,
         }
     }
 }
@@ -118,6 +177,8 @@ impl Config {
             workers: 0,
             use_xla: false,
             max_ws_pages: Some(1 << 16),
+            shards: 1,
+            chunk_len: DEFAULT_CHUNK,
         }
     }
 
@@ -126,6 +187,61 @@ impl Config {
             return self.workers;
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
+/// The streaming recipe for one benchmark's trace: both backends are
+/// pure functions of (seed, params, access index), so a spec is all a
+/// cell needs to replay any shard of the stream.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    pub seed: u32,
+    pub params: TraceParams,
+    /// total accesses in the trace
+    pub len: u64,
+    /// streaming chunk length (the memory bound)
+    pub chunk: usize,
+}
+
+impl TraceSpec {
+    /// Validated spec for one benchmark's trace: rejects lengths
+    /// beyond the trace kernel's u32 access-index space (past which
+    /// the generators would silently wrap).
+    pub fn for_config(cfg: &Config, seed: u32, params: TraceParams) -> Result<TraceSpec> {
+        if cfg.trace_len as u64 > u32::MAX as u64 {
+            bail!(
+                "trace_len {} exceeds the trace kernel's u32 access-index space; \
+                 raise coverage with more shards/benchmarks instead",
+                cfg.trace_len
+            );
+        }
+        Ok(TraceSpec {
+            seed,
+            params,
+            len: cfg.trace_len as u64,
+            chunk: cfg.chunk_len.max(1),
+        })
+    }
+}
+
+/// One shard of a cell's trace: accesses `[start, end)` with
+/// `(start, end) = bounds(len)`.  Shard boundaries are TLB-shootdown
+/// points — each shard's engine starts cold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// The whole trace as a single shard.
+    pub const WHOLE: Shard = Shard { index: 0, count: 1 };
+
+    /// Balanced `[start, end)` bounds over a trace of `len` accesses.
+    pub fn bounds(&self, len: u64) -> (u64, u64) {
+        let c = self.count.max(1) as u64;
+        let i = (self.index as u64).min(c - 1);
+        (len * i / c, len * (i + 1) / c)
     }
 }
 
@@ -138,12 +254,17 @@ pub struct BenchContext {
     pub pt_thp: PageTable,
     pub hist: ContigHistogram,
     pub hist_thp: ContigHistogram,
-    pub trace: Vec<u32>,
+    /// streaming recipe — the context holds no materialized trace
+    pub trace: TraceSpec,
+    /// accesses between epoch callbacks for this benchmark's cells
+    /// (from `Config::epoch`; the epoch-alignment rule is stated in
+    /// terms of this value)
+    pub epoch: u64,
 }
 
 impl BenchContext {
     /// Build the context: demand mapping (± THP), page tables,
-    /// histograms, and the shared trace.
+    /// histograms, and the trace *spec* (no materialized trace).
     pub fn build(mut wl: Workload, cfg: &Config, rt: Option<&Runtime>) -> Result<BenchContext> {
         if let Some(cap) = cfg.max_ws_pages {
             if wl.demand.total_pages > cap {
@@ -154,6 +275,9 @@ impl BenchContext {
             }
         }
         let mapping = mapgen::demand(&wl.demand, wl.seed as u64);
+        if mapping.is_empty() {
+            bail!("benchmark {}: demand mapping mapped zero pages", wl.name);
+        }
         let mut mapping_thp = mapping.clone();
         mapping_thp.promote_thp();
         let pt = PageTable::from_mapping(&mapping);
@@ -168,18 +292,21 @@ impl BenchContext {
             wl.params.hot_base_vpn = mapped / 3;
             wl.params.hot_pages = wl.params.hot_pages.min(mapped - wl.params.hot_base_vpn).max(1);
         }
-        let mut trace = match rt {
-            Some(rt) => {
-                let mut src = XlaSource::new(rt, wl.seed, wl.params);
-                generate_trace(&mut src, cfg.trace_len)?
-            }
-            None => {
-                let mut src = NativeSource::new(wl.seed, wl.params, 1 << 16);
-                generate_trace(&mut src, cfg.trace_len)?
-            }
-        };
-        remap_indices_to_vpns(&mut trace, &mapping);
-        Ok(BenchContext { workload: wl, mapping, mapping_thp, pt, pt_thp, hist, hist_thp, trace })
+        let trace = TraceSpec::for_config(cfg, wl.seed, wl.params)?;
+        if let Some(rt) = rt {
+            verify_xla_stream(rt, &trace)?;
+        }
+        Ok(BenchContext {
+            workload: wl,
+            mapping,
+            mapping_thp,
+            pt,
+            pt_thp,
+            hist,
+            hist_thp,
+            trace,
+            epoch: cfg.epoch.max(1),
+        })
     }
 
     /// Build contexts for many workloads, loading the runtime once.
@@ -189,18 +316,72 @@ impl BenchContext {
             .map(|w| BenchContext::build(w.clone(), cfg, rt.as_ref()).map(Arc::new))
             .collect()
     }
+
+    /// Stream the remapped trace range `[start, end)` chunk by chunk
+    /// into `f`.  Peak memory: one chunk.
+    pub fn for_each_chunk(
+        &self,
+        start: u64,
+        end: u64,
+        mut f: impl FnMut(&[Vpn]),
+    ) -> Result<()> {
+        let src = NativeSource::new(self.trace.seed, self.trace.params, self.trace.chunk);
+        let mut stream = TraceStream::new(src, start, end);
+        let remap = VpnRemap::new(&self.mapping)?;
+        while let Some(chunk) = stream.next_chunk()? {
+            remap.apply(chunk);
+            f(chunk);
+        }
+        Ok(())
+    }
+
+    /// Materialize the full remapped trace (tests/examples/ablations
+    /// convenience — cell runners stream instead).
+    pub fn materialize_trace(&self) -> Result<Vec<Vpn>> {
+        let mut out = Vec::with_capacity(self.trace.len as usize);
+        self.for_each_chunk(0, self.trace.len, |c| out.extend_from_slice(c))?;
+        Ok(out)
+    }
 }
 
-/// The trace kernel emits working-set page *indices*; resolve them to
-/// the mapping's VPNs (the VA layout has alignment holes — see
-/// `mem::mapgen` module docs).  Indices are clamped to the mapped
-/// count, which only matters if the mapping ran out of memory.
-pub fn remap_indices_to_vpns(trace: &mut [u32], mapping: &MemoryMapping) {
-    let pages = mapping.pages();
-    let last = pages.len() - 1;
-    for t in trace.iter_mut() {
-        *t = pages[(*t as usize).min(last)].0 as u32;
+/// Stream the artifact's trace chunk-by-chunk against the native
+/// oracle (bounded memory) and fail on any divergence.  This is how
+/// `use_xla` exercises the AOT path: cells then replay the verified
+/// stream from the native recipe, which this check proves identical.
+pub(crate) fn verify_xla_stream(rt: &Runtime, spec: &TraceSpec) -> Result<()> {
+    let mut xla = XlaSource::new(rt, spec.seed, spec.params);
+    let chunk = xla.chunk_len();
+    if chunk == 0 {
+        bail!("artifact manifest reports BATCH = 0; cannot stream the trace");
     }
+    let mut xbuf = vec![0 as Vpn; chunk];
+    let mut native = NativeSource::new(spec.seed, spec.params, chunk);
+    let mut nbuf = vec![0 as Vpn; chunk];
+    let mut done = 0u64;
+    while done < spec.len {
+        xla.next_chunk_into(&mut xbuf)?;
+        native.next_chunk_into(&mut nbuf)?;
+        if xbuf != nbuf {
+            bail!(
+                "XLA trace stream diverges from the native oracle near access {done} \
+                 (seed {}, params {:?})",
+                spec.seed,
+                spec.params
+            );
+        }
+        done += chunk as u64;
+    }
+    Ok(())
+}
+
+/// Resolve working-set page indices to mapping VPNs in place — compat
+/// wrapper over the streaming [`VpnRemap`] adapter.  Errors (instead
+/// of panicking on `pages.len() - 1` underflow) when the mapping is
+/// empty.
+pub fn remap_indices_to_vpns(trace: &mut [Vpn], mapping: &MemoryMapping) -> Result<()> {
+    let remap = VpnRemap::new(mapping)?;
+    remap.apply(trace);
+    Ok(())
 }
 
 /// One experiment cell result.
@@ -213,6 +394,8 @@ pub struct CellResult {
     pub ipa: f64,
     pub predictor: Option<(u64, u64)>,
     pub kset: Option<Vec<u32>>,
+    /// how many shard results were merged into `metrics` (1 = unsharded)
+    pub shards: usize,
 }
 
 impl CellResult {
@@ -221,17 +404,25 @@ impl CellResult {
     }
 }
 
-/// Run one cell: an engine over the benchmark's shared trace.
+/// Run one cell over the benchmark's whole trace.
 pub fn run_cell(ctx: &BenchContext, kind: SchemeKind) -> CellResult {
+    run_cell_shard(ctx, kind, Shard::WHOLE)
+}
+
+/// Run one shard of a cell: a cold monomorphized engine streaming the
+/// shard's trace range (bounded memory).
+pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> CellResult {
     let (mapping, pt, hist) = if kind.uses_thp() {
         (&ctx.mapping_thp, &ctx.pt_thp, &ctx.hist_thp)
     } else {
         (&ctx.mapping, &ctx.pt, &ctx.hist)
     };
     let scheme = kind.build(mapping, hist);
-    let mut eng = Engine::new(scheme, pt).with_epoch(1 << 19, hist.clone());
+    let mut eng = Engine::new(scheme, pt).with_epoch(ctx.epoch, hist.clone());
     eng.verify = false; // correctness is covered by tests; keep sims fast
-    eng.run(&ctx.trace);
+    let (start, end) = shard.bounds(ctx.trace.len);
+    ctx.for_each_chunk(start, end, |chunk| eng.run_chunk(chunk))
+        .expect("trace stream (mapping validated at context build)");
     let (metrics, scheme) = eng.finish();
     CellResult {
         benchmark: ctx.workload.name.to_string(),
@@ -241,33 +432,41 @@ pub fn run_cell(ctx: &BenchContext, kind: SchemeKind) -> CellResult {
         ipa: ctx.workload.ipa,
         predictor: scheme.predictor_stats(),
         kset: scheme.kset(),
+        shards: 1,
     }
 }
 
-/// Fan cells out over a worker pool (std threads; results come back in
-/// submission order).
-pub fn run_cells(
-    cells: Vec<(Arc<BenchContext>, SchemeKind)>,
+fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64, u64)> {
+    match (a, b) {
+        (Some((c0, t0)), Some((c1, t1))) => Some((c0 + c1, t0 + t1)),
+        (x, None) | (None, x) => x,
+    }
+}
+
+/// Fan shard tasks out over a worker pool (std threads; results come
+/// back in submission order).
+fn run_shard_tasks(
+    tasks: Vec<(Arc<BenchContext>, SchemeKind, Shard)>,
     workers: usize,
 ) -> Vec<CellResult> {
-    let n = cells.len();
-    let cells = Arc::new(cells);
+    let n = tasks.len();
+    let tasks = Arc::new(tasks);
     let next = Arc::new(AtomicUsize::new(0));
     let results: Arc<Vec<std::sync::Mutex<Option<CellResult>>>> =
         Arc::new((0..n).map(|_| std::sync::Mutex::new(None)).collect());
     let nw = workers.max(1).min(n.max(1));
     std::thread::scope(|s| {
         for _ in 0..nw {
-            let cells = Arc::clone(&cells);
+            let tasks = Arc::clone(&tasks);
             let next = Arc::clone(&next);
             let results = Arc::clone(&results);
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                if i >= tasks.len() {
                     break;
                 }
-                let (ctx, kind) = &cells[i];
-                let r = run_cell(ctx, *kind);
+                let (ctx, kind, shard) = &tasks[i];
+                let r = run_cell_shard(ctx, *kind, *shard);
                 *results[i].lock().unwrap() = Some(r);
             });
         }
@@ -279,15 +478,62 @@ pub fn run_cells(
         .collect()
 }
 
+/// Fan cells out over a worker pool, unsharded (compat path — equals
+/// `run_cells_sharded(cells, 1, workers)`).
+pub fn run_cells(cells: Vec<(Arc<BenchContext>, SchemeKind)>, workers: usize) -> Vec<CellResult> {
+    run_cells_sharded(cells, 1, workers)
+}
+
+/// The sharded fan-out: every cell splits into `shards` shard tasks
+/// (benchmark × scheme × shard), all of which feed one worker pool;
+/// each cell's shard metrics are then merged in shard order through
+/// [`Metrics::merge`].  Results keep the cells' submission order.
+pub fn run_cells_sharded(
+    cells: Vec<(Arc<BenchContext>, SchemeKind)>,
+    shards: usize,
+    workers: usize,
+) -> Vec<CellResult> {
+    let shards = shards.max(1);
+    let mut tasks = Vec::with_capacity(cells.len() * shards);
+    for (ctx, kind) in &cells {
+        for index in 0..shards {
+            tasks.push((Arc::clone(ctx), *kind, Shard { index, count: shards }));
+        }
+    }
+    let results = run_shard_tasks(tasks, workers);
+    let mut out = Vec::with_capacity(cells.len());
+    let mut it = results.into_iter();
+    for _ in 0..cells.len() {
+        let mut cell = it.next().expect("shard 0 present");
+        for _ in 1..shards {
+            let r = it.next().expect("shard present");
+            cell.metrics.merge(&r.metrics);
+            cell.predictor = merge_predictor(cell.predictor, r.predictor);
+        }
+        cell.shards = shards;
+        out.push(cell);
+    }
+    out
+}
+
 /// Anchor-Static = best fixed distance per benchmark (the paper's
 /// "exhaustively tries all possible anchor distances").
 pub fn run_anchor_static(ctx: &Arc<BenchContext>, workers: usize) -> CellResult {
-    let cells: Vec<(Arc<BenchContext>, SchemeKind)> =
-        crate::pagetable::anchor::DIST_CANDIDATES
-            .iter()
-            .map(|&d| (Arc::clone(ctx), SchemeKind::AnchorFixed(d)))
-            .collect();
-    let mut results = run_cells(cells, workers);
+    run_anchor_static_sharded(ctx, 1, workers)
+}
+
+/// Sharded Anchor-Static sweep: every distance candidate runs sharded,
+/// the best (fewest merged misses) wins.
+pub fn run_anchor_static_sharded(
+    ctx: &Arc<BenchContext>,
+    shards: usize,
+    workers: usize,
+) -> CellResult {
+    let cells: Vec<(Arc<BenchContext>, SchemeKind)> = crate::pagetable::anchor::DIST_CANDIDATES
+        .iter()
+        .map(|&d| (Arc::clone(ctx), SchemeKind::AnchorFixed(d)))
+        .collect();
+    let mut results = run_cells_sharded(cells, shards, workers);
     results.sort_by_key(|r| r.misses());
     let mut best = results.into_iter().next().expect("at least one distance");
     best.scheme = "Anchor-Static".to_string();
@@ -306,6 +552,7 @@ mod tests {
             workers: 2,
             use_xla: false,
             max_ws_pages: Some(1 << 13),
+            ..Config::default()
         }
     }
 
@@ -313,10 +560,11 @@ mod tests {
     fn context_builds_and_trace_in_range() {
         let cfg = tiny_cfg();
         let ctx = BenchContext::build(benchmark("povray").unwrap(), &cfg, None).unwrap();
-        assert_eq!(ctx.trace.len(), cfg.trace_len);
+        let trace = ctx.materialize_trace().unwrap();
+        assert_eq!(trace.len(), cfg.trace_len);
         // every trace VPN is mapped (indices were remapped to VPNs)
-        for &v in ctx.trace.iter() {
-            assert!(ctx.pt.translate(v as u64).is_some(), "vpn {v} unmapped");
+        for &v in trace.iter() {
+            assert!(ctx.pt.translate(v).is_some(), "vpn {v} unmapped");
         }
     }
 
@@ -327,6 +575,7 @@ mod tests {
         let r = run_cell(&ctx, SchemeKind::Base);
         assert_eq!(r.metrics.accesses as usize, cfg.trace_len);
         assert!(r.metrics.walks > 0);
+        assert_eq!(r.shards, 1);
     }
 
     #[test]
@@ -353,4 +602,45 @@ mod tests {
             assert!(best.misses() <= r.misses(), "d={d}");
         }
     }
+
+    #[test]
+    fn shard_bounds_tile_exactly() {
+        for count in [1usize, 2, 3, 7] {
+            let len = 100_003u64;
+            let mut covered = 0u64;
+            let mut prev_end = 0u64;
+            for index in 0..count {
+                let (s, e) = Shard { index, count }.bounds(len);
+                assert_eq!(s, prev_end, "shards must be gapless");
+                assert!(e >= s);
+                covered += e - s;
+                prev_end = e;
+            }
+            assert_eq!(covered, len);
+            assert_eq!(prev_end, len);
+        }
+    }
+
+    #[test]
+    fn sharded_fanout_is_deterministic() {
+        // the parallel sharded merge must be bit-equal to running the
+        // same shards serially and merging by hand
+        let cfg = tiny_cfg();
+        let ctx = Arc::new(BenchContext::build(benchmark("wrf").unwrap(), &cfg, None).unwrap());
+        for kind in [SchemeKind::Base, SchemeKind::Colt] {
+            let shards = 4;
+            let mut serial: Option<CellResult> = None;
+            for index in 0..shards {
+                let r = run_cell_shard(&ctx, kind, Shard { index, count: shards });
+                match &mut serial {
+                    None => serial = Some(r),
+                    Some(acc) => acc.metrics.merge(&r.metrics),
+                }
+            }
+            let par = run_cells_sharded(vec![(Arc::clone(&ctx), kind)], shards, 3);
+            assert_eq!(serial.unwrap().metrics, par[0].metrics, "{}", kind.label());
+            assert_eq!(par[0].shards, shards);
+        }
+    }
+
 }

@@ -1,0 +1,118 @@
+//! Minimal error plumbing (anyhow substitute — the build is fully
+//! offline, so the crate carries its own string-backed error type
+//! instead of a registry dependency).  API mirrors the `anyhow` subset
+//! the crate uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]
+//! macros and the [`Context`] extension trait.
+
+use std::fmt;
+
+/// A string-backed error.  Like `anyhow::Error` it deliberately does
+/// *not* implement `std::error::Error`, which is what allows the
+/// blanket `From<E: std::error::Error>` conversion below (and `?` on
+/// any std error) without coherence conflicts.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style construction: `anyhow!("bad {thing}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::error::Error::msg(format!($($t)*)) };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+// `#[macro_export]` places the macros at the crate root; re-export
+// them here so call sites can `use crate::error::{anyhow, bail}`.
+pub use crate::{anyhow, bail};
+
+/// Attach context to an error (the `anyhow::Context` subset we use).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {}", c, e)))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // ParseIntError converts via blanket From
+        if n > 100 {
+            bail!("{n} out of range");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("101").unwrap_err().to_string(), "101 out of range");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.with_context(|| "reading x").unwrap_err();
+        assert_eq!(e.to_string(), "reading x: boom");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing n").unwrap_err().to_string(), "missing n");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("vpn {} unmapped", 7);
+        assert_eq!(format!("{e}"), "vpn 7 unmapped");
+        assert_eq!(format!("{e:?}"), "vpn 7 unmapped");
+    }
+}

@@ -9,26 +9,42 @@
 //! Three-layer architecture (see DESIGN.md):
 //! * [`runtime`] loads AOT-compiled JAX/Pallas artifacts (HLO text) via
 //!   the PJRT C API and executes them from rust — python never runs at
-//!   simulation time.
+//!   simulation time.  It also owns the *streaming* trace pipeline
+//!   ([`runtime::TraceStream`] + [`runtime::VpnRemap`]): traces are
+//!   never materialized, so trace length is unbounded by RAM.
 //! * [`workloads`] + the `trace_gen` artifact produce page-level access
-//!   streams for 16 benchmark proxies (SPEC2006 + graph500 + gups).
+//!   streams for 16 benchmark proxies (SPEC2006 + graph500 + gups);
+//!   both backends are random-access by access index, so trace
+//!   *shards* start mid-stream for free.
 //! * [`coordinator`] fans experiment cells (benchmark × scheme ×
-//!   mapping) out to worker threads and regenerates every table and
-//!   figure of the paper's evaluation.
+//!   shard) out to worker threads over shared read-only state, merges
+//!   shard metrics, and regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! The simulation hot path is monomorphized: [`sim::Engine`] is
+//! generic over its [`schemes::Scheme`], and the coordinator drives
+//! `Engine<AnyScheme>` (enum dispatch, scheme lookups inlined) instead
+//! of `Engine<Box<dyn Scheme>>` (still available as the escape hatch).
 //!
 //! Quickstart:
 //! ```no_run
 //! use katlb::prelude::*;
 //! let mapping = katlb::mem::mapgen::synthetic(
 //!     katlb::mem::mapgen::SyntheticKind::Mixed, 1 << 18, 42);
+//! let hist = katlb::mem::histogram::ContigHistogram::from_mapping(&mapping);
 //! let pt = katlb::pagetable::PageTable::from_mapping(&mapping);
+//! // generic engine: the scheme type is static — no virtual calls
 //! let mut eng = katlb::sim::Engine::new(
-//!     katlb::schemes::kaligned::KAligned::boxed_from_pt(&pt, 2),
+//!     katlb::schemes::kaligned::KAligned::from_histogram(&hist, 2),
 //!     &pt,
 //! );
+//! eng.run(&[0, 1, 2, 3]);
+//! let (metrics, _scheme) = eng.finish();
+//! println!("misses: {}", metrics.misses());
 //! ```
 
 pub mod coordinator;
+pub mod error;
 pub mod mem;
 pub mod pagetable;
 pub mod prng;
@@ -50,7 +66,7 @@ pub const HUGE_PAGES: u64 = 512;
 pub mod prelude {
     pub use crate::mem::mapping::MemoryMapping;
     pub use crate::pagetable::PageTable;
-    pub use crate::schemes::Scheme;
+    pub use crate::schemes::{AnyScheme, Scheme};
     pub use crate::sim::{Engine, Metrics};
     pub use crate::{Ppn, Vpn, HUGE_PAGES};
 }

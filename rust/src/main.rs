@@ -3,14 +3,15 @@
 //!
 //! Usage:
 //!   repro <command> [--quick] [--no-xla] [--trace-len N] [--workers N]
+//!                   [--shards N] [--chunk N]
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
-use anyhow::{bail, Result};
 use katlb::coordinator::{experiments, Config};
+use katlb::error::{bail, Result};
 use katlb::runtime::Runtime;
 use std::time::Instant;
 
@@ -30,21 +31,35 @@ fn parse_args() -> Result<(String, Config)> {
             "--trace-len" => {
                 cfg.trace_len = args
                     .next()
-                    .ok_or_else(|| anyhow::anyhow!("--trace-len needs a value"))?
+                    .ok_or_else(|| katlb::anyhow!("--trace-len needs a value"))?
                     .parse()?
             }
             "--workers" => {
                 cfg.workers = args
                     .next()
-                    .ok_or_else(|| anyhow::anyhow!("--workers needs a value"))?
+                    .ok_or_else(|| katlb::anyhow!("--workers needs a value"))?
                     .parse()?
             }
             "--max-ws" => {
                 cfg.max_ws_pages = Some(
                     args.next()
-                        .ok_or_else(|| anyhow::anyhow!("--max-ws needs a value"))?
+                        .ok_or_else(|| katlb::anyhow!("--max-ws needs a value"))?
                         .parse()?,
                 )
+            }
+            "--shards" => {
+                cfg.shards = args
+                    .next()
+                    .ok_or_else(|| katlb::anyhow!("--shards needs a value"))?
+                    .parse::<usize>()?
+                    .max(1)
+            }
+            "--chunk" => {
+                cfg.chunk_len = args
+                    .next()
+                    .ok_or_else(|| katlb::anyhow!("--chunk needs a value"))?
+                    .parse::<usize>()?
+                    .max(1)
             }
             other => bail!("unknown flag {other}"),
         }
@@ -60,9 +75,11 @@ fn main() -> Result<()> {
     let (cmd, cfg) = parse_args()?;
     let t0 = Instant::now();
     eprintln!(
-        "# repro {cmd} — trace_len={} workers={} xla={} {}",
+        "# repro {cmd} — trace_len={} workers={} shards={} chunk={} xla={} {}",
         cfg.trace_len,
         cfg.effective_workers(),
+        cfg.shards,
+        cfg.chunk_len,
         cfg.use_xla,
         cfg.max_ws_pages.map(|c| format!("max_ws={c}")).unwrap_or_default()
     );
@@ -71,7 +88,8 @@ fn main() -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|all|smoke> \
-                 [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES]"
+                 [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
+                 [--shards N] [--chunk N]"
             );
             return Ok(());
         }

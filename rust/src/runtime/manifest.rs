@@ -7,7 +7,7 @@
 //! is itself unit- and property-tested; it is not a general-purpose
 //! JSON library.
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]

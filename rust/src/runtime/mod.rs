@@ -6,14 +6,16 @@
 
 pub mod client;
 pub mod manifest;
+pub mod stream;
 pub mod trace;
 
 pub use client::{default_artifact_dir, Runtime};
 pub use manifest::Manifest;
+pub use stream::{TraceStream, VpnRemap};
 pub use trace::{generate_trace, NativeSource, TraceSource, XlaSource};
 
+use crate::error::Result;
 use crate::mem::mapping::MemoryMapping;
-use anyhow::Result;
 
 /// Contiguity-chunk sizes of a mapping computed through the XLA
 /// `contiguity` artifact (Figures 2/3 through the AOT path).

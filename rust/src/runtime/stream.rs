@@ -1,0 +1,171 @@
+//! The streaming trace pipeline: [`TraceStream`] turns any seekable
+//! [`TraceSource`] into a bounded-memory chunk iterator over an
+//! arbitrary `[start, end)` access range (a *shard*), and [`VpnRemap`]
+//! is the streaming successor of the old whole-trace
+//! `remap_indices_to_vpns` pass — it rewrites each chunk in place, so
+//! no stage of the pipeline ever materializes the full trace.
+
+use super::trace::TraceSource;
+use crate::error::{anyhow, Result};
+use crate::mem::mapping::MemoryMapping;
+use crate::{Ppn, Vpn};
+
+/// Chunked view over one access range of a trace source.  Peak memory
+/// is exactly one source chunk, independent of the range length.
+pub struct TraceStream<S: TraceSource> {
+    src: S,
+    buf: Vec<Vpn>,
+    pos: u64,
+    end: u64,
+}
+
+impl<S: TraceSource> TraceStream<S> {
+    /// Stream accesses `[start, end)`; the source is seeked to
+    /// `start`, so shards never generate their prefix.
+    pub fn new(mut src: S, start: u64, end: u64) -> Self {
+        debug_assert!(start <= end, "shard range inverted: [{start}, {end})");
+        let chunk = src.chunk_len().max(1);
+        src.seek(start);
+        TraceStream { src, buf: vec![0; chunk], pos: start, end: end.max(start) }
+    }
+
+    /// Accesses not yet yielded.
+    pub fn remaining(&self) -> u64 {
+        self.end - self.pos
+    }
+
+    /// The buffered-chunk capacity — the stream's memory bound.
+    pub fn chunk_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The next chunk, or `None` once the range is exhausted.  The
+    /// final chunk is truncated to the range end; chunks are handed
+    /// out mutably so adapters ([`VpnRemap`]) rewrite in place.
+    pub fn next_chunk(&mut self) -> Result<Option<&mut [Vpn]>> {
+        if self.pos >= self.end {
+            return Ok(None);
+        }
+        let n = (self.buf.len() as u64).min(self.end - self.pos) as usize;
+        self.src.next_chunk_into(&mut self.buf)?;
+        self.pos += n as u64;
+        if n < self.buf.len() {
+            // only a prefix was consumed: keep the source in lockstep
+            self.src.seek(self.pos);
+        }
+        Ok(Some(&mut self.buf[..n]))
+    }
+}
+
+/// Streaming index→VPN adapter.  The trace kernel emits working-set
+/// page *indices*; each chunk is rewritten to the mapping's VPNs (the
+/// VA layout has alignment holes — see `mem::mapgen`).  Indices are
+/// clamped to the mapped count, which only matters if the demand
+/// mapping ran out of physical memory.
+pub struct VpnRemap<'m> {
+    pages: &'m [(Vpn, Ppn)],
+    last: usize,
+}
+
+impl<'m> VpnRemap<'m> {
+    /// Errors on an empty mapping (the old whole-trace pass underflowed
+    /// `pages.len() - 1` here and panicked).
+    pub fn new(m: &'m MemoryMapping) -> Result<Self> {
+        let pages = m.pages();
+        if pages.is_empty() {
+            return Err(anyhow!(
+                "cannot remap trace indices: mapping is empty (no pages were mapped)"
+            ));
+        }
+        Ok(VpnRemap { pages, last: pages.len() - 1 })
+    }
+
+    /// Rewrite one chunk of working-set indices to VPNs, in place.
+    pub fn apply(&self, chunk: &mut [Vpn]) {
+        for t in chunk.iter_mut() {
+            *t = self.pages[(*t as usize).min(self.last)].0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{generate_trace, NativeSource};
+    use crate::workloads::TraceParams;
+
+    fn params() -> TraceParams {
+        TraceParams {
+            ws_pages: 5_000,
+            hot_pages: 64,
+            stride: 3,
+            t_seq: 120,
+            t_stride: 170,
+            t_hot: 230,
+            base_vpn: 0,
+            hot_base_vpn: 800,
+            repeat_shift: 2,
+            burst_shift: 5,
+        }
+    }
+
+    fn src(chunk: usize) -> NativeSource {
+        NativeSource::new(11, params(), chunk)
+    }
+
+    #[test]
+    fn stream_concatenates_to_generate_trace() {
+        let whole = generate_trace(&mut src(512), 5000).unwrap();
+        let mut stream = TraceStream::new(src(512), 0, 5000);
+        let mut got = Vec::new();
+        while let Some(c) = stream.next_chunk().unwrap() {
+            assert!(c.len() <= 512, "chunk exceeds the memory bound");
+            got.extend_from_slice(c);
+        }
+        assert_eq!(got, whole);
+        assert_eq!(stream.remaining(), 0);
+    }
+
+    #[test]
+    fn sharded_ranges_tile_the_stream() {
+        let whole = generate_trace(&mut src(256), 4096).unwrap();
+        let mut got = Vec::new();
+        for (start, end) in [(0u64, 1000u64), (1000, 2500), (2500, 4096)] {
+            let mut stream = TraceStream::new(src(256), start, end);
+            while let Some(c) = stream.next_chunk().unwrap() {
+                got.extend_from_slice(c);
+            }
+        }
+        assert_eq!(got, whole, "shards must tile exactly");
+    }
+
+    #[test]
+    fn final_chunk_truncated() {
+        let mut stream = TraceStream::new(src(512), 0, 700);
+        let first = stream.next_chunk().unwrap().unwrap().len();
+        let second = stream.next_chunk().unwrap().unwrap().len();
+        assert_eq!((first, second), (512, 188));
+        assert!(stream.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn empty_range_yields_nothing() {
+        let mut stream = TraceStream::new(src(64), 42, 42);
+        assert!(stream.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn remap_rejects_empty_mapping() {
+        let empty = MemoryMapping::new(Vec::new());
+        assert!(VpnRemap::new(&empty).is_err());
+    }
+
+    #[test]
+    fn remap_rewrites_and_clamps() {
+        let m = MemoryMapping::new(vec![(5, 50), (9, 51), (10, 52)]);
+        let remap = VpnRemap::new(&m).unwrap();
+        let mut chunk = vec![0, 1, 2, 7];
+        remap.apply(&mut chunk);
+        assert_eq!(chunk, vec![5, 9, 10, 10], "out-of-range indices clamp to the last page");
+    }
+}

@@ -2,17 +2,28 @@
 //! the AOT artifacts) and the rust-native oracle, behind one trait so
 //! the coordinator picks whichever is available.  An integration test
 //! asserts the two are bit-identical.
+//!
+//! Both sources yield fixed-size chunks of `Vpn = u64` and are
+//! *seekable*: the native oracle indexes `trace_at` directly and the
+//! artifact takes the offset as an operand, so a shard can start
+//! mid-stream without generating its prefix.  [`super::TraceStream`]
+//! wraps a source into a bounded-memory chunk iterator.
 
 use super::client::Runtime;
+use crate::error::Result;
 use crate::workloads::tracegen::{NativeTraceGen, TraceParams};
-use anyhow::Result;
+use crate::Vpn;
 
-/// A stream of page-level VPN chunks.
+/// A seekable stream of page-level VPN chunks.
 pub trait TraceSource {
     /// Fill `out` with the next chunk. `out.len()` must equal
     /// [`TraceSource::chunk_len`].
-    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()>;
+    fn next_chunk_into(&mut self, out: &mut [Vpn]) -> Result<()>;
+
     fn chunk_len(&self) -> usize;
+
+    /// Reposition the stream to absolute access index `offset`.
+    fn seek(&mut self, offset: u64);
 }
 
 /// Rust-native source (oracle / fallback).
@@ -28,14 +39,21 @@ impl NativeSource {
 }
 
 impl TraceSource for NativeSource {
-    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()> {
+    fn next_chunk_into(&mut self, out: &mut [Vpn]) -> Result<()> {
         debug_assert_eq!(out.len(), self.chunk);
-        self.inner.next_chunk_into(out);
+        self.inner.next_chunk_into_vpns(out);
         Ok(())
     }
 
     fn chunk_len(&self) -> usize {
         self.chunk
+    }
+
+    fn seek(&mut self, offset: u64) {
+        // the kernel's access-index space is u32; refuse to wrap
+        // silently (the coordinator validates trace_len up front)
+        assert!(offset <= u32::MAX as u64, "trace offset {offset} exceeds the u32 index space");
+        self.inner.seek(offset as u32);
     }
 }
 
@@ -56,11 +74,11 @@ impl<'rt> XlaSource<'rt> {
 }
 
 impl TraceSource for XlaSource<'_> {
-    fn next_chunk_into(&mut self, out: &mut [u32]) -> Result<()> {
+    fn next_chunk_into(&mut self, out: &mut [Vpn]) -> Result<()> {
         debug_assert_eq!(out.len(), self.rt.manifest.batch);
         let v = self.rt.trace_chunk(self.seed, self.offset as i32, &self.params)?;
         for (o, x) in out.iter_mut().zip(v) {
-            *o = x as u32;
+            *o = (x as u32) as Vpn;
         }
         self.offset = self.offset.wrapping_add(out.len() as u32);
         Ok(())
@@ -69,13 +87,20 @@ impl TraceSource for XlaSource<'_> {
     fn chunk_len(&self) -> usize {
         self.rt.manifest.batch
     }
+
+    fn seek(&mut self, offset: u64) {
+        assert!(offset <= u32::MAX as u64, "trace offset {offset} exceeds the u32 index space");
+        self.offset = offset as u32;
+    }
 }
 
-/// Generate a full trace of `n` accesses (rounded up to whole chunks,
-/// then truncated).
-pub fn generate_trace(src: &mut dyn TraceSource, n: usize) -> Result<Vec<u32>> {
+/// Materialize a full trace of `n` accesses (rounded up to whole
+/// chunks, then truncated).  Tests/benches convenience — the
+/// coordinator streams through [`super::TraceStream`] instead, so its
+/// peak memory stays one chunk.
+pub fn generate_trace(src: &mut dyn TraceSource, n: usize) -> Result<Vec<Vpn>> {
     let chunk = src.chunk_len();
-    let mut out = vec![0u32; n.div_ceil(chunk) * chunk];
+    let mut out = vec![0; n.div_ceil(chunk) * chunk];
     for c in out.chunks_mut(chunk) {
         src.next_chunk_into(c)?;
     }
@@ -117,5 +142,15 @@ mod tests {
         let mut s = NativeSource::new(2, params(), 512);
         let t = generate_trace(&mut s, 700).unwrap();
         assert_eq!(t.len(), 700);
+    }
+
+    #[test]
+    fn seek_restarts_mid_stream() {
+        let mut s = NativeSource::new(3, params(), 256);
+        let whole = generate_trace(&mut s, 1024).unwrap();
+        let mut s2 = NativeSource::new(3, params(), 256);
+        s2.seek(512);
+        let tail = generate_trace(&mut s2, 512).unwrap();
+        assert_eq!(&whole[512..], &tail[..]);
     }
 }

@@ -82,6 +82,106 @@ pub trait Scheme {
     }
 }
 
+/// Forwarding impl so `Box<S>` (including `Box<dyn Scheme>`) is itself
+/// a [`Scheme`]: the generic `Engine<S: Scheme>` then serves both the
+/// monomorphized hot path and the boxed escape hatch.
+impl<S: Scheme + ?Sized> Scheme for Box<S> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        (**self).lookup(vpn)
+    }
+
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        (**self).fill(vpn, pt)
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        (**self).coverage_pages()
+    }
+
+    fn flush(&mut self) {
+        (**self).flush()
+    }
+
+    fn epoch(&mut self, pt: &PageTable, hist: &ContigHistogram) {
+        (**self).epoch(pt, hist)
+    }
+
+    fn predictor_stats(&self) -> Option<(u64, u64)> {
+        (**self).predictor_stats()
+    }
+
+    fn kset(&self) -> Option<Vec<u32>> {
+        (**self).kset()
+    }
+}
+
+/// Statically dispatched union of every scheme under test.  The
+/// coordinator's hot path runs `Engine<AnyScheme>`: one branch on the
+/// variant and the scheme's lookup/fill inline — no per-access virtual
+/// call.  `Box<dyn Scheme>` stays available as the dynamic escape
+/// hatch (`SchemeKind::build_boxed`) for tests and ad-hoc tooling.
+pub enum AnyScheme {
+    Base(base::BaseL2),
+    Colt(colt::Colt),
+    Cluster(cluster::Cluster),
+    Rmm(rmm::Rmm),
+    Anchor(anchor::Anchor),
+    KAligned(kaligned::KAligned),
+}
+
+macro_rules! on_scheme {
+    ($sel:expr, $s:ident => $e:expr) => {
+        match $sel {
+            AnyScheme::Base($s) => $e,
+            AnyScheme::Colt($s) => $e,
+            AnyScheme::Cluster($s) => $e,
+            AnyScheme::Rmm($s) => $e,
+            AnyScheme::Anchor($s) => $e,
+            AnyScheme::KAligned($s) => $e,
+        }
+    };
+}
+
+impl Scheme for AnyScheme {
+    fn name(&self) -> String {
+        on_scheme!(self, s => s.name())
+    }
+
+    #[inline]
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        on_scheme!(self, s => s.lookup(vpn))
+    }
+
+    #[inline]
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        on_scheme!(self, s => s.fill(vpn, pt))
+    }
+
+    fn coverage_pages(&self) -> u64 {
+        on_scheme!(self, s => s.coverage_pages())
+    }
+
+    fn flush(&mut self) {
+        on_scheme!(self, s => s.flush())
+    }
+
+    fn epoch(&mut self, pt: &PageTable, hist: &ContigHistogram) {
+        on_scheme!(self, s => s.epoch(pt, hist))
+    }
+
+    fn predictor_stats(&self) -> Option<(u64, u64)> {
+        on_scheme!(self, s => s.predictor_stats())
+    }
+
+    fn kset(&self) -> Option<Vec<u32>> {
+        on_scheme!(self, s => s.kset())
+    }
+}
+
 /// Tag encoding shared by the single-array schemes: the kind lives in
 /// the low 6 bits so regular / huge / aligned(k) entries of the same
 /// set never alias.
@@ -127,6 +227,30 @@ mod tests {
                 assert!(seen.insert(tag_aligned(vpn, k)), "alias at k={k} vpn={vpn}");
             }
         }
+    }
+
+    #[test]
+    fn any_scheme_dispatch_matches_concrete() {
+        use crate::mem::mapping::MemoryMapping;
+        let m = MemoryMapping::new((0..64u64).map(|v| (v, v + 3)).collect());
+        let pt = crate::pagetable::PageTable::from_mapping(&m);
+        let mut any = AnyScheme::Base(base::BaseL2::new());
+        let mut conc = base::BaseL2::new();
+        for v in 0..64u64 {
+            assert_eq!(any.lookup(v), conc.lookup(v), "vpn {v}");
+            any.fill(v, &pt);
+            conc.fill(v, &pt);
+        }
+        assert_eq!(any.name(), conc.name());
+        assert_eq!(any.coverage_pages(), conc.coverage_pages());
+    }
+
+    #[test]
+    fn boxed_scheme_forwards_overrides() {
+        let mut b: Box<dyn Scheme> = Box::new(kaligned::KAligned::with_k(vec![4, 2], 4));
+        assert_eq!(b.kset(), Some(vec![4, 2]));
+        assert!(b.predictor_stats().is_some());
+        b.flush();
     }
 
     #[test]

@@ -1,6 +1,15 @@
 //! The trace-driven engine: per access, L1 (shared by all schemes) →
 //! L2 scheme lookup → page-table walk + fill (Figure 5/6 flow), with
 //! Table 2 cycle accounting and periodic epoch/coverage hooks.
+//!
+//! The engine is generic over its scheme: `Engine<AnyScheme>` (or a
+//! concrete `Engine<KAligned>`) monomorphizes the per-access loop —
+//! no virtual call, scheme lookups inline — while the default
+//! `Engine<Box<dyn Scheme>>` remains as the dynamic escape hatch for
+//! tests and one-off tooling.  The L1-hit fast path performs no
+//! page-table probe at all: the split L1 remembers each entry's page
+//! size, and `is_huge` is consulted only on the (rare) L1-miss path
+//! where fills need it.
 
 use super::latency::Latency;
 use super::metrics::Metrics;
@@ -14,8 +23,8 @@ use crate::{Vpn, HUGE_PAGES};
 /// boundaries, scaled to trace accesses).
 pub const DEFAULT_EPOCH: u64 = 1 << 20;
 
-pub struct Engine<'pt> {
-    scheme: Box<dyn Scheme>,
+pub struct Engine<'pt, S: Scheme = Box<dyn Scheme>> {
+    scheme: S,
     pt: &'pt PageTable,
     l1: L1Tlb,
     lat: Latency,
@@ -28,8 +37,8 @@ pub struct Engine<'pt> {
     pub verify: bool,
 }
 
-impl<'pt> Engine<'pt> {
-    pub fn new(scheme: Box<dyn Scheme>, pt: &'pt PageTable) -> Self {
+impl<'pt, S: Scheme> Engine<'pt, S> {
+    pub fn new(scheme: S, pt: &'pt PageTable) -> Self {
         Engine {
             scheme,
             pt,
@@ -62,27 +71,23 @@ impl<'pt> Engine<'pt> {
         &self.metrics
     }
 
-    pub fn scheme(&self) -> &dyn Scheme {
-        self.scheme.as_ref()
+    pub fn scheme(&self) -> &S {
+        &self.scheme
     }
 
     /// Simulate one memory access to `vpn`.
     #[inline]
     pub fn access(&mut self, vpn: Vpn) {
-        // ---- L1 (latency hidden behind cache access) ----
-        let is_huge = self.pt.is_huge(vpn);
-        let l1_hit = if is_huge {
-            self.l1.lookup_huge(vpn).is_some()
-        } else {
-            self.l1.lookup_small(vpn).is_some()
-        };
-        if l1_hit {
+        // ---- L1 (latency hidden behind cache access; no page-table
+        // probe — the split L1 knows each entry's page size) ----
+        if self.l1.lookup(vpn).is_some() {
             self.metrics.record_l1_hit();
             self.tick_epoch();
             return;
         }
 
-        // ---- L2 scheme ----
+        // ---- L2 scheme (the fill paths below need the page size) ----
+        let is_huge = self.pt.is_huge(vpn);
         match self.scheme.lookup(vpn) {
             Outcome::Regular { ppn } => {
                 self.check(vpn, ppn);
@@ -108,19 +113,27 @@ impl<'pt> Engine<'pt> {
         self.tick_epoch();
     }
 
-    /// Run a whole trace (VPNs as produced by the trace artifact).
-    pub fn run(&mut self, trace: &[u32]) {
-        for &v in trace {
-            self.access(v as Vpn);
+    /// Run a whole trace of VPNs (`Vpn = u64` end to end — the old
+    /// u32 `run` / u64 `run_u64` split is gone).
+    pub fn run(&mut self, trace: &[Vpn]) {
+        self.run_chunk(trace);
+    }
+
+    /// Batched entry point for the streaming pipeline: one call per
+    /// trace chunk.
+    #[inline]
+    pub fn run_chunk(&mut self, chunk: &[Vpn]) {
+        for &v in chunk {
+            self.access(v);
         }
     }
 
-    /// Run with a base offset (workloads map trace values into their
-    /// VPN space already; offset kept for sharded traces).
-    pub fn run_u64(&mut self, trace: &[Vpn]) {
-        for &v in trace {
-            self.access(v);
-        }
+    /// TLB shootdown: clear the L1 and the scheme's L2 state.  Shard
+    /// boundaries in the sharded coordinator have exactly these
+    /// semantics (each shard's engine starts cold).
+    pub fn flush(&mut self) {
+        self.l1.flush();
+        self.scheme.flush();
     }
 
     #[inline]
@@ -172,7 +185,7 @@ impl<'pt> Engine<'pt> {
     }
 
     /// Final coverage sample + metrics handoff.
-    pub fn finish(mut self) -> (Metrics, Box<dyn Scheme>) {
+    pub fn finish(mut self) -> (Metrics, S) {
         self.metrics.record_coverage(self.scheme.coverage_pages());
         (self.metrics, self.scheme)
     }
@@ -233,6 +246,48 @@ mod tests {
     }
 
     #[test]
+    fn monomorphized_engine_matches_dyn_dispatch() {
+        // the monomorphized hot path must be accounting-identical to
+        // the Box<dyn Scheme> escape hatch
+        let pt = identity_pt(5000);
+        let mut mono = Engine::new(BaseL2::new(), &pt);
+        let mut dynd: Engine<'_, Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()), &pt);
+        let mut v = 1u64;
+        for i in 0..50_000u64 {
+            v = (v.wrapping_mul(6364136223846793005).wrapping_add(i)) % 5000;
+            mono.access(v);
+            dynd.access(v);
+        }
+        let (a, _) = mono.finish();
+        let (b, _) = dynd.finish();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flush_restarts_cold() {
+        let pt = identity_pt(100);
+        let mut e = Engine::new(Box::new(BaseL2::new()), &pt);
+        e.access(5);
+        e.access(5);
+        e.flush();
+        e.access(5); // must walk again: both L1 and L2 were shot down
+        assert_eq!(e.metrics().walks, 2);
+    }
+
+    #[test]
+    fn run_chunk_equals_access_loop() {
+        let pt = identity_pt(2000);
+        let trace: Vec<Vpn> = (0..6000u64).map(|i| (i * 37) % 2000).collect();
+        let mut a = Engine::new(Box::new(BaseL2::new()), &pt);
+        for c in trace.chunks(512) {
+            a.run_chunk(c);
+        }
+        let mut b = Engine::new(Box::new(BaseL2::new()), &pt);
+        b.run(&trace);
+        assert_eq!(a.metrics(), b.metrics(), "chunking must not change accounting");
+    }
+
+    #[test]
     fn verification_catches_wrong_ppn() {
         // build a scheme that lies: reuse BaseL2 but corrupt the pt
         // after filling — easier: fill from a different page table
@@ -252,8 +307,7 @@ mod tests {
     fn epoch_triggers_coverage_sampling() {
         let pt = identity_pt(100);
         let hist = ContigHistogram::from_sizes(&[100]);
-        let mut e =
-            Engine::new(Box::new(BaseL2::new()), &pt).with_epoch(10, hist);
+        let mut e = Engine::new(Box::new(BaseL2::new()), &pt).with_epoch(10, hist);
         for v in 0..100u64 {
             e.access(v);
         }

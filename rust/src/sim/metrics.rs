@@ -108,7 +108,30 @@ impl Metrics {
         self.coverage_sum_pages += pages;
     }
 
-    /// Merge (for sharded runs).
+    /// The history-independent accounting counters: everything except
+    /// the coverage sampling (a per-engine time average whose sample
+    /// count depends on how the run was sharded).  The shard
+    /// determinism tests compare these — for history-independent
+    /// schemes a serial run with shootdowns at shard boundaries equals
+    /// the merged cold-engine shards exactly on this tuple.
+    pub fn accounting(&self) -> [u64; 10] {
+        [
+            self.accesses,
+            self.l1_hits,
+            self.l2_regular_hits,
+            self.l2_coalesced_hits,
+            self.walks,
+            self.aligned_probes,
+            self.cycles_l2_hit,
+            self.cycles_coalesced,
+            self.cycles_extra_probes,
+            self.cycles_walk,
+        ]
+    }
+
+    /// Merge (for sharded runs): counters add; derived ratios
+    /// (`cpi`, `mean_coverage_pages`) then aggregate correctly because
+    /// their numerators and denominators both summed.
     pub fn merge(&mut self, o: &Metrics) {
         self.accesses += o.accesses;
         self.l1_hits += o.l1_hits;

@@ -25,6 +25,20 @@ impl L1Tlb {
         }
     }
 
+    /// Unified lookup: probe the 4KB and 2MB structures (hardware
+    /// probes them in parallel).  Each entry lives in the structure of
+    /// its page size, so the engine's L1-hit fast path no longer needs
+    /// a page-table `is_huge` probe to pick a side — a miss in one
+    /// side only advances the LRU clock, never its state, so probing
+    /// both is behavior-identical to probing the right one.
+    #[inline]
+    pub fn lookup(&mut self, vpn: Vpn) -> Option<Ppn> {
+        if let Some(p) = self.lookup_small(vpn) {
+            return Some(p);
+        }
+        self.lookup_huge(vpn)
+    }
+
     /// Look up a 4KB translation.
     #[inline]
     pub fn lookup_small(&mut self, vpn: Vpn) -> Option<Ppn> {
@@ -93,6 +107,16 @@ mod tests {
         let hits = (0..256u64).filter(|&v| l1.lookup_small(v).is_some()).count();
         assert!(hits <= 64);
         assert!(hits > 0);
+    }
+
+    #[test]
+    fn unified_lookup_finds_either_size() {
+        let mut l1 = L1Tlb::new();
+        l1.fill_small(3, 30);
+        l1.fill_huge(512, 4096);
+        assert_eq!(l1.lookup(3), Some(30));
+        assert_eq!(l1.lookup(700), Some(4096 + (700 - 512)));
+        assert_eq!(l1.lookup(4), None);
     }
 
     #[test]

@@ -72,6 +72,9 @@ pub fn trace_at(gi: u32, seed: u32, p: &TraceParams) -> u32 {
 }
 
 /// Streaming generator (the native counterpart of the AOT artifact).
+/// `trace_at` is a pure function of the global access index, so the
+/// stream is random-access: [`NativeTraceGen::seek`] repositions it in
+/// O(1) — this is what makes trace *shards* free to start mid-stream.
 pub struct NativeTraceGen {
     seed: u32,
     offset: u32,
@@ -84,7 +87,13 @@ impl NativeTraceGen {
         NativeTraceGen { seed, offset: 0, params }
     }
 
-    /// Fill `out` with the next chunk of VPNs.
+    /// Reposition the stream to absolute access index `offset`.
+    pub fn seek(&mut self, offset: u32) {
+        self.offset = offset;
+    }
+
+    /// Fill `out` with the next chunk of VPNs (kernel-width u32, used
+    /// by the python-parity tests).
     pub fn next_chunk_into(&mut self, out: &mut [u32]) {
         for (i, slot) in out.iter_mut().enumerate() {
             *slot = trace_at(self.offset.wrapping_add(i as u32), self.seed, &self.params);
@@ -92,9 +101,26 @@ impl NativeTraceGen {
         self.offset = self.offset.wrapping_add(out.len() as u32);
     }
 
+    /// Fill `out` with the next chunk, widened to the simulator's
+    /// `Vpn = u64` (the pipeline's native width).
+    pub fn next_chunk_into_vpns(&mut self, out: &mut [crate::Vpn]) {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot =
+                trace_at(self.offset.wrapping_add(i as u32), self.seed, &self.params) as crate::Vpn;
+        }
+        self.offset = self.offset.wrapping_add(out.len() as u32);
+    }
+
     pub fn next_chunk(&mut self, n: usize) -> Vec<u32> {
         let mut v = vec![0u32; n];
         self.next_chunk_into(&mut v);
+        v
+    }
+
+    /// Convenience: the next `n` accesses as `Vpn`s.
+    pub fn next_chunk_vpns(&mut self, n: usize) -> Vec<crate::Vpn> {
+        let mut v = vec![0; n];
+        self.next_chunk_into_vpns(&mut v);
         v
     }
 
@@ -163,6 +189,25 @@ mod tests {
         // sequential accesses repeat pages (rep=2): count adjacent dups
         let seqish = chunk.windows(2).filter(|w| w[1].wrapping_sub(w[0]) <= 1).count();
         assert!(seqish > 20_000, "expected a sizeable sequential component, got {seqish}");
+    }
+
+    #[test]
+    fn seek_matches_sequential_stream() {
+        let p = params();
+        let mut g = NativeTraceGen::new(4, p);
+        let long = g.next_chunk_vpns(3000);
+        let mut g2 = NativeTraceGen::new(4, p);
+        g2.seek(1234);
+        let tail = g2.next_chunk_vpns(3000 - 1234);
+        assert_eq!(&long[1234..], &tail[..], "seek must land mid-stream exactly");
+    }
+
+    #[test]
+    fn u32_and_vpn_chunks_agree() {
+        let p = params();
+        let a = NativeTraceGen::new(6, p).next_chunk(500);
+        let b = NativeTraceGen::new(6, p).next_chunk_vpns(500);
+        assert!(a.iter().zip(&b).all(|(&x, &y)| x as u64 == y));
     }
 
     #[test]

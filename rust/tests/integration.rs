@@ -101,7 +101,7 @@ fn engine_verify_mode_passes_for_all_schemes() {
             burst_shift: 6,
         },
     );
-    let trace = gen.next_chunk(100_000);
+    let trace = gen.next_chunk_vpns(100_000);
     for s in all_schemes(&m) {
         let name = s.name();
         let mut eng = Engine::new(s, &pt);
@@ -168,6 +168,7 @@ fn kaligned_beats_base_and_scales_with_psi() {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 15),
+        ..Config::default()
     };
     let ctx = Arc::new(BenchContext::build(wl, &cfg, None).unwrap());
     let base = run_cell(&ctx, SchemeKind::Base);
@@ -254,9 +255,10 @@ fn trace_params_clamped_to_mapped_pages() {
         workers: 1,
         use_xla: false,
         max_ws_pages: None,
+        ..Config::default()
     };
     let ctx = BenchContext::build(wl, &cfg, None).unwrap();
-    for &v in &ctx.trace {
-        assert!(ctx.pt.translate(v as u64).is_some(), "vpn {v} unmapped");
+    for v in ctx.materialize_trace().unwrap() {
+        assert!(ctx.pt.translate(v).is_some(), "vpn {v} unmapped");
     }
 }

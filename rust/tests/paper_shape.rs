@@ -17,6 +17,7 @@ fn cfg() -> Config {
         workers: 1,
         use_xla: false,
         max_ws_pages: Some(1 << 15),
+        ..Config::default()
     }
 }
 

@@ -1,0 +1,182 @@
+//! Streaming/sharding pipeline tests: bounded-memory cell runs
+//! (streaming == materialized), the sharded == serial determinism
+//! guarantees (shard boundaries are TLB shootdowns; cold per-shard
+//! engines merged through `Metrics::merge` equal one serial run with
+//! shootdowns at the boundaries), and the empty-mapping remap
+//! regression.
+
+use katlb::coordinator::{
+    remap_indices_to_vpns, run_cell, run_cell_shard, run_cells_sharded, BenchContext, Config,
+    SchemeKind, Shard,
+};
+use katlb::mem::mapping::MemoryMapping;
+use katlb::pagetable::PageTable;
+use katlb::prng::Rng;
+use katlb::schemes::base::BaseL2;
+use katlb::schemes::cluster::Cluster;
+use katlb::schemes::colt::Colt;
+use katlb::schemes::kaligned::KAligned;
+use katlb::schemes::rmm::Rmm;
+use katlb::schemes::AnyScheme;
+use katlb::sim::{Engine, Metrics};
+use katlb::testutil::{check_cases, random_chunked_mapping};
+use katlb::workloads::benchmark;
+use katlb::Vpn;
+use std::sync::Arc;
+
+/// chunk_len = 4096, trace_len = 8 × chunk: the bounded-memory
+/// acceptance shape (trace ≥ 8× the chunk size).
+fn streaming_cfg() -> Config {
+    Config {
+        trace_len: 1 << 15,
+        epoch: 1 << 13,
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 13),
+        chunk_len: 1 << 12,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn streaming_cell_is_chunk_bounded_and_matches_materialized_run() {
+    let cfg = streaming_cfg();
+    assert!(cfg.trace_len >= 8 * cfg.chunk_len, "acceptance shape: trace >= 8x chunk");
+    let ctx = BenchContext::build(benchmark("mcf").unwrap(), &cfg, None).unwrap();
+
+    // the stream yields only chunk-bounded buffers and tiles the trace
+    let mut total = 0usize;
+    let mut max_chunk = 0usize;
+    let mut n_chunks = 0usize;
+    ctx.for_each_chunk(0, ctx.trace.len, |c| {
+        total += c.len();
+        max_chunk = max_chunk.max(c.len());
+        n_chunks += 1;
+    })
+    .unwrap();
+    assert_eq!(total, cfg.trace_len);
+    assert!(max_chunk <= cfg.chunk_len, "peak buffered accesses {max_chunk} > chunk bound");
+    assert_eq!(n_chunks, cfg.trace_len / cfg.chunk_len);
+
+    // the streamed cell equals an engine over the materialized trace
+    let r = run_cell(&ctx, SchemeKind::Base);
+    assert_eq!(r.metrics.accesses as usize, cfg.trace_len);
+    let scheme = SchemeKind::Base.build(&ctx.mapping, &ctx.hist);
+    let mut eng = Engine::new(scheme, &ctx.pt).with_epoch(ctx.epoch, ctx.hist.clone());
+    eng.verify = false;
+    eng.run(&ctx.materialize_trace().unwrap());
+    let (m, _) = eng.finish();
+    assert_eq!(m, r.metrics, "streaming and materialized runs must be bit-identical");
+}
+
+/// The sharded == serial determinism property (and the Metrics::merge
+/// satellite): for every scheme whose state is fully cleared by a
+/// shootdown — Base, COLT, Cluster, RMM, and K-Aligned (its predictor
+/// resets on flush) — merging per-shard metrics from cold engines
+/// equals one serial run of the shared trace with shootdowns at the
+/// shard boundaries, on every history-independent counter.
+#[test]
+fn shard_merge_equals_serial_run_with_boundary_shootdowns() {
+    check_cases(4, 77, |rng, case| {
+        let m = random_chunked_mapping(rng, 300, 1, 600);
+        let pt = PageTable::from_mapping(&m);
+        let n = m.len() as u64;
+        let mut gen = Rng::new(case as u64 * 13 + 5);
+        let trace: Vec<Vpn> =
+            (0..40_000).map(|_| m.pages()[gen.below(n) as usize].0).collect();
+        let shards = 4;
+        let bounds: Vec<(usize, usize)> = (0..shards)
+            .map(|i| (i * trace.len() / shards, (i + 1) * trace.len() / shards))
+            .collect();
+
+        let builders: Vec<(&str, Box<dyn Fn() -> AnyScheme + '_>)> = vec![
+            ("base", Box::new(|| AnyScheme::Base(BaseL2::new()))),
+            ("colt", Box::new(|| AnyScheme::Colt(Colt::new()))),
+            ("cluster", Box::new(|| AnyScheme::Cluster(Cluster::new()))),
+            ("rmm", Box::new(|| AnyScheme::Rmm(Rmm::new(&m)))),
+            ("kaligned", Box::new(|| AnyScheme::KAligned(KAligned::with_k(vec![6, 3], 4)))),
+        ];
+        for (name, mk) in &builders {
+            // serial: one engine, shootdown at each shard boundary
+            let mut serial = Engine::new(mk(), &pt);
+            serial.verify = false;
+            for (i, &(s, e)) in bounds.iter().enumerate() {
+                serial.run(&trace[s..e]);
+                if i + 1 < shards {
+                    serial.flush();
+                }
+            }
+            let (sm, _) = serial.finish();
+
+            // sharded: cold engine per shard, metrics merged in order
+            let mut merged = Metrics::default();
+            for &(s, e) in &bounds {
+                let mut eng = Engine::new(mk(), &pt);
+                eng.verify = false;
+                eng.run(&trace[s..e]);
+                let (m, _) = eng.finish();
+                merged.merge(&m);
+            }
+            assert_eq!(
+                sm.accounting(),
+                merged.accounting(),
+                "{name} case {case}: sharded merge must equal serial-with-shootdowns"
+            );
+            // coverage merges as sums (the time-average denominators add)
+            assert_eq!(merged.coverage_samples, shards as u64);
+        }
+    });
+}
+
+/// Coordinator-level: the parallel sharded fan-out equals serially
+/// executed shards, shard accesses partition the trace exactly, and
+/// `shards = 1` reproduces the unsharded cell bit-for-bit.
+#[test]
+fn coordinator_sharded_path_is_exact() {
+    let cfg = streaming_cfg();
+    let ctx =
+        Arc::new(BenchContext::build(benchmark("astar").unwrap(), &cfg, None).unwrap());
+    for kind in [SchemeKind::Base, SchemeKind::Rmm, SchemeKind::KAligned(2)] {
+        let unsharded = run_cell(&ctx, kind);
+
+        // shards=1 through the fan-out == plain run_cell
+        let one = run_cells_sharded(vec![(Arc::clone(&ctx), kind)], 1, 2);
+        assert_eq!(one[0].metrics, unsharded.metrics, "{}", kind.label());
+
+        // parallel fan-out == serial shard loop (determinism)
+        let shards = 4;
+        let mut serial: Option<Metrics> = None;
+        let mut total_accesses = 0u64;
+        for index in 0..shards {
+            let r = run_cell_shard(&ctx, kind, Shard { index, count: shards });
+            total_accesses += r.metrics.accesses;
+            match &mut serial {
+                None => serial = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let par = run_cells_sharded(vec![(Arc::clone(&ctx), kind)], shards, 3);
+        assert_eq!(par[0].metrics, serial.unwrap(), "{}", kind.label());
+        assert_eq!(par[0].shards, shards);
+        // shard ranges partition the trace
+        assert_eq!(total_accesses, ctx.trace.len, "{}", kind.label());
+        assert_eq!(par[0].metrics.accesses, unsharded.metrics.accesses);
+        assert!(par[0].metrics.walks > 0, "{}", kind.label());
+    }
+}
+
+/// Regression (satellite): remapping over an empty mapping used to
+/// panic on `pages.len() - 1`; it now reports an error, and the
+/// clamping behaviour for non-empty mappings is unchanged.
+#[test]
+fn remap_empty_mapping_returns_error_not_panic() {
+    let empty = MemoryMapping::new(Vec::new());
+    let mut trace: Vec<Vpn> = vec![0, 1, 2];
+    let err = remap_indices_to_vpns(&mut trace, &empty).unwrap_err();
+    assert!(err.to_string().contains("empty"), "{err}");
+
+    let m = MemoryMapping::new(vec![(5, 100), (7, 101)]);
+    let mut trace: Vec<Vpn> = vec![0, 1, 99];
+    remap_indices_to_vpns(&mut trace, &m).unwrap();
+    assert_eq!(trace, vec![5, 7, 7], "indices clamp to the last mapped page");
+}

@@ -12,7 +12,7 @@ fn runtime() -> Option<Runtime> {
     match Runtime::load_default() {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("SKIP (artifacts unavailable): {e:#}");
+            eprintln!("skipped: artifacts missing ({e})");
             None
         }
     }
