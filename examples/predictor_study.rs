@@ -30,8 +30,8 @@ fn main() {
         let scheme = KAligned::from_histogram(&ctx.hist_thp, psi);
         let kset = scheme.kset_desc().to_vec();
         // monomorphized engine: Engine<KAligned>, no boxing needed
-        let mut eng = Engine::new(scheme, &ctx.pt_thp);
-        eng.run(&trace);
+        let mut eng = Engine::new(scheme);
+        eng.run(&trace, ctx.static_view(true));
         let (m, scheme) = eng.finish();
         let (correct, total) = scheme.predictor_stats().unwrap();
         let probes_per_hit = if m.l2_coalesced_hits > 0 {

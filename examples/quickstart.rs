@@ -4,6 +4,7 @@
 //!
 //!     cargo run --release --example quickstart
 
+use katlb::mem::addrspace::SpaceView;
 use katlb::mem::histogram::ContigHistogram;
 use katlb::mem::mapgen::{self, SyntheticKind};
 use katlb::pagetable::PageTable;
@@ -36,9 +37,10 @@ fn main() {
     //    virtual call per access)
     let mut report = Vec::new();
     let schemes = vec![AnyScheme::Base(BaseL2::new()), AnyScheme::KAligned(kaligned)];
+    let view = SpaceView::new(&pt, &hist, &mapping);
     for scheme in schemes {
         let name = scheme.name();
-        let mut eng = Engine::new(scheme, &pt);
+        let mut eng = Engine::new(scheme);
         let mut rng = Rng::new(7);
         let mut page = 0u64;
         for _ in 0..2_000_000 {
@@ -48,7 +50,7 @@ fn main() {
             } else {
                 page = rng.below(mapping.len() as u64);
             }
-            eng.access(mapping.pages()[page as usize].0);
+            eng.access(mapping.pages()[page as usize].0, view);
         }
         let (m, _) = eng.finish();
         println!(

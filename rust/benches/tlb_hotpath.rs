@@ -5,6 +5,7 @@
 mod common;
 use common::{bench, black_box};
 
+use katlb::mem::addrspace::SpaceView;
 use katlb::mem::histogram::ContigHistogram;
 use katlb::mem::mapgen::{self, SyntheticKind};
 use katlb::pagetable::PageTable;
@@ -85,15 +86,16 @@ fn main() {
     }
 
     // full engine loop (the end-to-end per-access cost)
+    let view = SpaceView::new(&pt, &hist, &mapping);
     for (name, scheme) in [
         ("base", Box::new(BaseL2::new()) as Box<dyn Scheme>),
         ("kaligned", Box::new(KAligned::from_histogram(&hist, 4)) as Box<dyn Scheme>),
     ] {
-        let mut eng = Engine::new(scheme, &pt);
+        let mut eng = Engine::new(scheme);
         eng.verify = false;
         bench(&format!("engine::access loop [{name}] (64K)"), 3, 10, || {
             for &v in &vpns {
-                eng.access(v);
+                eng.access(v, view);
             }
         })
         .print(Some((N as u64, "acc")));
@@ -114,51 +116,51 @@ fn main() {
     println!();
     println!("# dyn vs monomorphized engine (same 64K trace, per variant)");
     {
-        let mut eng: Engine<Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()), &pt);
+        let mut eng: Engine<Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()));
         eng.verify = false;
         bench("engine [base] dyn Box<dyn Scheme>", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }
     {
-        let mut eng = Engine::new(AnyScheme::Base(BaseL2::new()), &pt);
+        let mut eng = Engine::new(AnyScheme::Base(BaseL2::new()));
         eng.verify = false;
         bench("engine [base] mono AnyScheme", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }
     {
-        let mut eng = Engine::new(BaseL2::new(), &pt);
+        let mut eng = Engine::new(BaseL2::new());
         eng.verify = false;
         bench("engine [base] mono concrete", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }
     {
         let mut eng: Engine<Box<dyn Scheme>> =
-            Engine::new(Box::new(KAligned::from_histogram(&hist, 4)), &pt);
+            Engine::new(Box::new(KAligned::from_histogram(&hist, 4)));
         eng.verify = false;
         bench("engine [kaligned] dyn Box<dyn Scheme>", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }
     {
-        let mut eng = Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4)), &pt);
+        let mut eng = Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4)));
         eng.verify = false;
         bench("engine [kaligned] mono AnyScheme", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }
     {
-        let mut eng = Engine::new(KAligned::from_histogram(&hist, 4), &pt);
+        let mut eng = Engine::new(KAligned::from_histogram(&hist, 4));
         eng.verify = false;
         bench("engine [kaligned] mono concrete", 3, 15, || {
-            eng.run_chunk(&vpns);
+            eng.run_chunk(&vpns, view);
         })
         .print(Some((N as u64, "acc")));
     }

@@ -8,6 +8,7 @@ use super::{
     BenchContext, CellResult, Config, SchemeKind, TraceSpec,
 };
 use crate::error::Result;
+use crate::mem::addrspace::MutationSchedule;
 use crate::mem::histogram::ContigHistogram;
 use crate::mem::mapgen::{self, SyntheticKind};
 use crate::pagetable::aligned::init_cost;
@@ -71,6 +72,7 @@ pub fn synthetic_context(
         hist_thp,
         trace,
         epoch: cfg.epoch.max(1),
+        schedule: MutationSchedule::default(),
     }))
 }
 
@@ -404,6 +406,79 @@ pub fn initcost_table() -> Table {
     t
 }
 
+// ---------------------------------------------------------------------------
+// Churn: per-phase miss rates under address-space mutation
+// ---------------------------------------------------------------------------
+
+/// The seven contenders of the churn comparison (paper order; one
+/// Anchor and one K-Aligned representative each).
+fn churn_schemes() -> Vec<SchemeKind> {
+    vec![
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Rmm,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(4),
+    ]
+}
+
+/// The churn experiment: for each churn cycle (alloc-heavy,
+/// free-heavy, fragment-then-THP-recover), run all seven schemes over
+/// the event-interleaved trace — translation verification ON, so the
+/// run doubles as the stale-PPN oracle — and report L2 misses per 1K
+/// accesses per phase, plus the invalidation traffic.
+pub fn churn(cfg: &Config) -> Result<Vec<Table>> {
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let mut out = Vec::new();
+    for (kind, wl) in crate::workloads::churn_workloads() {
+        let ctx = Arc::new(BenchContext::build_churn(wl, kind, cfg, rt.as_ref())?);
+        let phases = ctx.schedule.phases();
+        let mut cols: Vec<String> = (1..=phases).map(|p| format!("ph{p} miss/1k")).collect();
+        cols.push("invals".into());
+        cols.push("total miss/1k".into());
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!(
+                "Churn [{}]: per-phase L2 misses per 1K accesses ({} events)",
+                kind.label(),
+                ctx.schedule.len()
+            ),
+            &col_refs,
+        );
+        let cells: Vec<(Arc<BenchContext>, SchemeKind)> =
+            churn_schemes().into_iter().map(|k| (Arc::clone(&ctx), k)).collect();
+        // honor --shards like every other driver (phase marks re-thread
+        // across shard merges; mind the epoch-alignment rule for the
+        // dynamic schemes when raising it)
+        let results = run_cells_sharded(cells, cfg.shards, cfg.effective_workers());
+        for r in &results {
+            let per_1k = |walks: u64, accesses: u64| {
+                if accesses == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.2}", walks as f64 * 1000.0 / accesses as f64)
+                }
+            };
+            let mut row: Vec<String> = r
+                .metrics
+                .phase_stats()
+                .iter()
+                .map(|&(a, w)| per_1k(w, a))
+                .collect();
+            // holds for any shard count: each phase event is marked in
+            // exactly one shard and Metrics::merge re-threads the marks
+            debug_assert_eq!(row.len(), phases);
+            row.push(r.metrics.invalidations.to_string());
+            row.push(per_1k(r.metrics.walks, r.metrics.accesses));
+            t.row(&r.scheme, row);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,6 +516,23 @@ mod tests {
         assert_eq!(t.rows.len(), 6);
         // K={4} row: 294912 entries
         assert_eq!(t.rows[0].1[0], "294912");
+    }
+
+    #[test]
+    fn churn_tables_have_seven_schemes_and_three_phases() {
+        let mut cfg = tiny();
+        cfg.max_ws_pages = Some(1 << 13);
+        let tables = churn(&cfg).unwrap();
+        assert_eq!(tables.len(), 3, "one table per churn cycle");
+        for t in &tables {
+            assert_eq!(t.rows.len(), 7, "seven schemes: {}", t.title);
+            assert_eq!(t.columns.len(), 3 + 2, "three phases + invals + total: {}", t.title);
+            // every scheme saw invalidation traffic in a churn run
+            for (label, cells) in &t.rows {
+                let invals: u64 = cells[3].parse().unwrap();
+                assert!(invals > 0, "{label} in {} saw no invalidations", t.title);
+            }
+        }
     }
 
     #[test]
@@ -492,9 +584,9 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
     for theta in [0.5, 0.7, 0.9, 0.99] {
         let ks = determine_k(&ctx.hist_thp, theta, 4);
         let scheme = KAligned::with_k(ks.clone(), 4);
-        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
+        let mut eng = Engine::new(Box::new(scheme));
         eng.verify = false;
-        eng.run(&trace);
+        eng.run(&trace, ctx.static_view(true));
         let (m, _) = eng.finish();
         if (theta - 0.9).abs() < 1e-9 {
             misses_at_theta9 = Some(m.misses());
@@ -522,9 +614,9 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
         if !use_pred {
             scheme = scheme.without_predictor();
         }
-        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp);
+        let mut eng = Engine::new(Box::new(scheme));
         eng.verify = false;
-        eng.run(&trace);
+        eng.run(&trace, ctx.static_view(true));
         let (m, _) = eng.finish();
         let pph = if m.l2_coalesced_hits > 0 {
             m.aligned_probes as f64 / m.l2_coalesced_hits as f64
@@ -552,9 +644,9 @@ pub fn ablate(cfg: &Config, bench_name: &str) -> Result<Vec<Table>> {
         ("parallel walk (§3.5)", Latency::with_parallel_walk()),
     ] {
         let scheme = KAligned::from_histogram(&ctx.hist_thp, 4);
-        let mut eng = Engine::new(Box::new(scheme), &ctx.pt_thp).with_latency(lat);
+        let mut eng = Engine::new(Box::new(scheme)).with_latency(lat);
         eng.verify = false;
-        eng.run(&trace);
+        eng.run(&trace, ctx.static_view(true));
         let (m, _) = eng.finish();
         t.row(
             label,

@@ -25,17 +25,36 @@
 //!
 //! EPOCH-ALIGNMENT RULE: per-shard epoch counters restart at each
 //! shard's start.  For history-independent schemes (Base, THP, COLT,
-//! Cluster, RMM, Anchor-static) this is irrelevant; for *dynamic*
-//! schemes (K-Aligned's Algorithm 3 re-run, Anchor-dynamic's distance
-//! re-selection) pick `trace_len / shards` a multiple of the epoch
-//! length so per-shard epoch boundaries coincide with the unsharded
-//! run's.  The epoch inputs (page table, histogram) are static per
-//! run, so aligned epochs re-derive identical decisions.
+//! Cluster, Anchor-static) this is irrelevant; for *dynamic* schemes
+//! (K-Aligned's Algorithm 3 re-run, Anchor-dynamic's distance
+//! re-selection, RMM's OS-table rebuild) pick `trace_len / shards` a
+//! multiple of the epoch length so per-shard epoch boundaries coincide
+//! with the unsharded run's.  With an empty mutation schedule the
+//! epoch inputs (page table, histogram) are static per run, so aligned
+//! epochs re-derive identical decisions; with a non-empty schedule the
+//! address-space state at any access index is itself deterministic
+//! (events replay by timestamp), so the same alignment argument holds.
+//!
+//! ## Mutation schedules (churn)
+//!
+//! A [`BenchContext`] carries a [`MutationSchedule`].  When it is
+//! empty, cells run the frozen-mapping fast path — bit-identical to
+//! the pre-churn pipeline.  When it is not, each shard rebuilds a
+//! live [`AddressSpace`] (replaying events before its range with no
+//! engine attached — the shard starts cold anyway), then streams its
+//! trace range *event-interleaved*: chunks are split at event
+//! timestamps, each event mutates the space and pushes its
+//! invalidation ranges through [`Engine::invalidate_range`], and each
+//! segment is remapped against the *current* mapping.  An event with
+//! timestamp `t` lands before access `t`, which places a
+//! shard-boundary event at the exact start of the owning shard — the
+//! property the sharded==serial churn tests pin down.
 
 pub mod experiments;
 pub mod report;
 
 use crate::error::Result;
+use crate::mem::addrspace::{AddressSpace, MutationSchedule, SpaceView};
 use crate::mem::histogram::ContigHistogram;
 use crate::mem::mapgen;
 use crate::mem::mapping::MemoryMapping;
@@ -49,6 +68,7 @@ use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
 use crate::schemes::{AnyScheme, Scheme};
 use crate::sim::{Engine, Metrics};
+use crate::workloads::churn::{build_schedule, ChurnKind};
 use crate::workloads::tracegen::TraceParams;
 use crate::workloads::Workload;
 use crate::{bail, Vpn};
@@ -260,6 +280,9 @@ pub struct BenchContext {
     /// (from `Config::epoch`; the epoch-alignment rule is stated in
     /// terms of this value)
     pub epoch: u64,
+    /// address-space mutation events (empty = frozen mapping, the
+    /// strict special case reproducing the pre-churn pipeline)
+    pub schedule: MutationSchedule,
 }
 
 impl BenchContext {
@@ -306,7 +329,26 @@ impl BenchContext {
             hist_thp,
             trace,
             epoch: cfg.epoch.max(1),
+            schedule: MutationSchedule::default(),
         })
+    }
+
+    /// Build a churn context: a demand context plus the deterministic
+    /// mutation schedule of the given churn cycle.
+    pub fn build_churn(
+        wl: Workload,
+        kind: ChurnKind,
+        cfg: &Config,
+        rt: Option<&Runtime>,
+    ) -> Result<BenchContext> {
+        let mut ctx = BenchContext::build(wl, cfg, rt)?;
+        ctx.schedule = build_schedule(
+            kind,
+            ctx.trace.len,
+            ctx.workload.demand.total_pages,
+            ctx.workload.seed as u64,
+        );
+        Ok(ctx)
     }
 
     /// Build contexts for many workloads, loading the runtime once.
@@ -341,6 +383,29 @@ impl BenchContext {
         let mut out = Vec::with_capacity(self.trace.len as usize);
         self.for_each_chunk(0, self.trace.len, |c| out.extend_from_slice(c))?;
         Ok(out)
+    }
+
+    /// Snapshot view over the frozen mapping (± THP) — the static
+    /// cells' ground truth.
+    pub fn static_view(&self, thp: bool) -> SpaceView<'_> {
+        if thp {
+            SpaceView::new(&self.pt_thp, &self.hist_thp, &self.mapping_thp)
+        } else {
+            SpaceView::new(&self.pt, &self.hist, &self.mapping)
+        }
+    }
+
+    /// Build a live [`AddressSpace`] for one churn cell: a
+    /// bit-identical replay of this context's demand mapping with the
+    /// buddy allocator kept, THP-promoted when the scheme variant runs
+    /// with THP support.
+    pub fn build_aspace(&self, thp: bool) -> AddressSpace {
+        let mut a =
+            AddressSpace::from_demand(&self.workload.demand, self.workload.seed as u64);
+        if thp {
+            a.promote_thp();
+        }
+        a
     }
 }
 
@@ -410,18 +475,25 @@ pub fn run_cell(ctx: &BenchContext, kind: SchemeKind) -> CellResult {
 }
 
 /// Run one shard of a cell: a cold monomorphized engine streaming the
-/// shard's trace range (bounded memory).
+/// shard's trace range (bounded memory).  With a non-empty mutation
+/// schedule the run is event-interleaved over a live address space;
+/// with an empty one this is the frozen-mapping fast path, bit-
+/// identical to the pre-churn pipeline.
 pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> CellResult {
-    let (mapping, pt, hist) = if kind.uses_thp() {
-        (&ctx.mapping_thp, &ctx.pt_thp, &ctx.hist_thp)
+    if !ctx.schedule.is_empty() {
+        return run_churn_cell_shard(ctx, kind, shard);
+    }
+    let (mapping, hist) = if kind.uses_thp() {
+        (&ctx.mapping_thp, &ctx.hist_thp)
     } else {
-        (&ctx.mapping, &ctx.pt, &ctx.hist)
+        (&ctx.mapping, &ctx.hist)
     };
+    let view = ctx.static_view(kind.uses_thp());
     let scheme = kind.build(mapping, hist);
-    let mut eng = Engine::new(scheme, pt).with_epoch(ctx.epoch, hist.clone());
+    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
     eng.verify = false; // correctness is covered by tests; keep sims fast
     let (start, end) = shard.bounds(ctx.trace.len);
-    ctx.for_each_chunk(start, end, |chunk| eng.run_chunk(chunk))
+    ctx.for_each_chunk(start, end, |chunk| eng.run_chunk(chunk, view))
         .expect("trace stream (mapping validated at context build)");
     let (metrics, scheme) = eng.finish();
     CellResult {
@@ -434,6 +506,95 @@ pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> Cel
         kset: scheme.kset(),
         shards: 1,
     }
+}
+
+/// The churn shard runner: rebuild the address space, replay
+/// pre-shard events cold, then drive the shard's trace range with
+/// events interleaved at their timestamps.  Translation verification
+/// stays ON — this is the ground-truth oracle that no scheme ever
+/// returns a stale PPN after an invalidation.
+fn run_churn_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> CellResult {
+    let (start, end) = shard.bounds(ctx.trace.len);
+    let mut aspace = ctx.build_aspace(kind.uses_thp());
+    // events before this shard mutate the space with no engine
+    // attached (the shard's engine starts cold anyway)
+    for ev in &ctx.schedule.events()[..ctx.schedule.first_at_or_after(start)] {
+        aspace.apply(&ev.op);
+    }
+    let scheme = kind.build(aspace.mapping(), aspace.hist());
+    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
+    eng.verify = true;
+    drive_span(ctx, &mut aspace, &mut eng, start, end)
+        .expect("trace stream (mapping validated at context build)");
+    let (metrics, scheme) = eng.finish();
+    CellResult {
+        benchmark: ctx.workload.name.to_string(),
+        scheme: scheme.name(),
+        kind,
+        metrics,
+        ipa: ctx.workload.ipa,
+        predictor: scheme.predictor_stats(),
+        kset: scheme.kset(),
+        shards: 1,
+    }
+}
+
+/// Drive trace range `[start, end)` through a warm engine against a
+/// live address space, applying schedule events at their timestamps
+/// (an event with timestamp `t` lands before access `t`; events with
+/// `at < start` must already be applied by the caller).  Each segment
+/// between events is remapped against the *current* mapping, so the
+/// stream only touches mapped pages.  Exposed for the sharded==serial
+/// churn property tests, which replay spans with boundary shootdowns.
+pub fn drive_span<S: Scheme>(
+    ctx: &BenchContext,
+    aspace: &mut AddressSpace,
+    eng: &mut Engine<S>,
+    start: u64,
+    end: u64,
+) -> Result<()> {
+    let evs = ctx.schedule.events();
+    let mut ei = ctx.schedule.first_at_or_after(start);
+    let src = NativeSource::new(ctx.trace.seed, ctx.trace.params, ctx.trace.chunk);
+    let mut stream = TraceStream::new(src, start, end);
+    let mut abs = start;
+    while let Some(chunk) = stream.next_chunk()? {
+        let n = chunk.len();
+        let mut pos = 0usize;
+        while ei < evs.len() && evs[ei].at < abs + n as u64 {
+            let split = (evs[ei].at - abs) as usize;
+            run_segment(aspace, eng, &mut chunk[pos..split])?;
+            pos = split;
+            while ei < evs.len() && evs[ei].at == abs + pos as u64 {
+                if evs[ei].phase_start {
+                    eng.metrics_mut().mark_phase();
+                }
+                for (v, l) in aspace.apply(&evs[ei].op) {
+                    eng.invalidate_range(v, l);
+                }
+                ei += 1;
+            }
+        }
+        run_segment(aspace, eng, &mut chunk[pos..])?;
+        abs += n as u64;
+    }
+    Ok(())
+}
+
+/// Remap one event-delimited segment against the current mapping and
+/// run it.
+fn run_segment<S: Scheme>(
+    aspace: &AddressSpace,
+    eng: &mut Engine<S>,
+    seg: &mut [Vpn],
+) -> Result<()> {
+    if seg.is_empty() {
+        return Ok(());
+    }
+    let remap = VpnRemap::wrapping(aspace.mapping())?;
+    remap.apply(seg);
+    eng.run_chunk(seg, aspace.view());
+    Ok(())
 }
 
 fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64, u64)> {

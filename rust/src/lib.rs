@@ -26,6 +26,12 @@
 //! `Engine<AnyScheme>` (enum dispatch, scheme lookups inlined) instead
 //! of `Engine<Box<dyn Scheme>>` (still available as the escape hatch).
 //!
+//! The address space is *mutable*: [`mem::addrspace::AddressSpace`]
+//! applies deterministic schedules of mmap/munmap/remap/THP events
+//! between trace phases, every scheme implements a precise
+//! `invalidate_range` (translation coherence), and `repro churn`
+//! reports per-phase miss rates as contiguity degrades and recovers.
+//!
 //! Quickstart:
 //! ```no_run
 //! use katlb::prelude::*;
@@ -33,12 +39,13 @@
 //!     katlb::mem::mapgen::SyntheticKind::Mixed, 1 << 18, 42);
 //! let hist = katlb::mem::histogram::ContigHistogram::from_mapping(&mapping);
 //! let pt = katlb::pagetable::PageTable::from_mapping(&mapping);
-//! // generic engine: the scheme type is static — no virtual calls
+//! // generic engine: the scheme type is static — no virtual calls;
+//! // translation ground truth is passed per call as a SpaceView
 //! let mut eng = katlb::sim::Engine::new(
 //!     katlb::schemes::kaligned::KAligned::from_histogram(&hist, 2),
-//!     &pt,
 //! );
-//! eng.run(&[0, 1, 2, 3]);
+//! let view = SpaceView::new(&pt, &hist, &mapping);
+//! eng.run(&[0, 1, 2, 3], view);
 //! let (metrics, _scheme) = eng.finish();
 //! println!("misses: {}", metrics.misses());
 //! ```
@@ -64,6 +71,9 @@ pub type Ppn = u64;
 pub const HUGE_PAGES: u64 = 512;
 
 pub mod prelude {
+    pub use crate::mem::addrspace::{
+        AddressSpace, MutationEvent, MutationOp, MutationSchedule, SpaceView,
+    };
     pub use crate::mem::mapping::MemoryMapping;
     pub use crate::pagetable::PageTable;
     pub use crate::schemes::{AnyScheme, Scheme};

@@ -7,6 +7,8 @@
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
+//!   churn      — per-phase miss rates under address-space mutation
+//!                (mmap/munmap/remap/THP events; verification on)
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
@@ -87,7 +89,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!(
-                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|all|smoke> \
+                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
                  [--shards N] [--chunk N]"
             );
@@ -116,6 +118,11 @@ fn main() -> Result<()> {
                 println!("{}", t.render());
             }
             for t in experiments::ablate(&cfg, "mcf")? {
+                println!("{}", t.render());
+            }
+        }
+        "churn" => {
+            for t in experiments::churn(&cfg)? {
                 println!("{}", t.render());
             }
         }
@@ -171,6 +178,9 @@ fn main() -> Result<()> {
                     println!("{}", experiments::table5(&ctxs, &cfg).render());
                     println!("{}", experiments::table6(&d).render());
                     println!("{}", experiments::initcost_table().render());
+                    for t in experiments::churn(&cfg)? {
+                        println!("{}", t.render());
+                    }
                 }
                 _ => unreachable!(),
             }

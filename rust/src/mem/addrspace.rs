@@ -1,0 +1,647 @@
+//! The mutable address space: mapping + page table + contiguity
+//! histogram + buddy allocator behind one mutation interface.
+//!
+//! The paper's premise is that contiguity is *diverse and evolving* —
+//! it emerges from allocation, freeing and THP promotion over a
+//! process' lifetime (§2).  The original pipeline froze the mapping at
+//! context build; an [`AddressSpace`] instead applies a deterministic
+//! [`MutationSchedule`] of [`MutationOp`]s — mmap, munmap, remap
+//! (migration/compaction), THP promote/split — driven by the same
+//! buddy allocator that built the demand mapping, so fragmentation and
+//! the contiguity histogram evolve realistically *between phases of a
+//! trace*.
+//!
+//! Three invariants, enforced by [`AddressSpace::check_invariants`]
+//! (and property-tested against full rebuilds):
+//!
+//! 1. per-entry contiguity is recomputed **incrementally** — a
+//!    mutation touches only the runs crossing its boundaries
+//!    ([`crate::pagetable::PageTable::map_range`] /
+//!    [`crate::pagetable::PageTable::unmap_range`]), never the whole
+//!    table;
+//! 2. the histogram is maintained by chunk add/remove around the
+//!    mutation boundaries, not recounted;
+//! 3. every op returns the VA ranges whose translations may have
+//!    changed, which the engine turns into per-scheme
+//!    `invalidate_range` calls — the simulator's translation-coherence
+//!    protocol.
+
+use super::buddy::BuddyAllocator;
+use super::histogram::ContigHistogram;
+use super::mapgen::{self, extent_alignment, DemandProfile};
+use super::mapping::MemoryMapping;
+use crate::pagetable::PageTable;
+use crate::{Ppn, Vpn, HUGE_PAGES};
+
+/// A read-only snapshot handle over the *current* address-space state,
+/// passed down to the engine per chunk and to schemes at epoch
+/// boundaries.  Dynamic schemes (K-Aligned's Algorithm 3,
+/// Anchor-dynamic's distance selection, RMM's OS range table)
+/// re-derive from this — never from state captured at build time,
+/// which mutations would make stale.
+#[derive(Clone, Copy)]
+pub struct SpaceView<'a> {
+    pub pt: &'a PageTable,
+    pub hist: &'a ContigHistogram,
+    pub mapping: &'a MemoryMapping,
+}
+
+impl<'a> SpaceView<'a> {
+    pub fn new(pt: &'a PageTable, hist: &'a ContigHistogram, mapping: &'a MemoryMapping) -> Self {
+        SpaceView { pt, hist, mapping }
+    }
+}
+
+/// One address-space mutation.  Ops that pick a target carry a
+/// `selector` resolved against the *current* region list
+/// (`selector % live_regions`), so a schedule is deterministic without
+/// naming concrete addresses that may no longer exist.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MutationOp {
+    /// Allocate `pages` frames from the buddy allocator and map them
+    /// at fresh virtual addresses (one extent per physical run).
+    Mmap { pages: u64 },
+    /// Unmap the (`selector % regions`)-th VA region and free its
+    /// frames.  Skipped if it would empty the address space.
+    Munmap { selector: u64 },
+    /// Migrate the (`selector % regions`)-th region to newly allocated
+    /// frames (compaction / page migration): same VPNs, new PPNs —
+    /// the canonical stale-TLB hazard.
+    Remap { selector: u64 },
+    /// Re-run THP promotion over the whole space (the khugepaged
+    /// sweep).
+    ThpPromote,
+    /// Demote the (`selector % huge_regions`)-th 2MB region.
+    ThpSplit { selector: u64 },
+}
+
+/// A mutation with its access-index timestamp: the op is applied
+/// *before* access `at` of the trace.  `phase_start` marks the
+/// beginning of a new workload phase (the metrics layer snapshots its
+/// counters there, giving the per-phase miss rates `repro churn`
+/// reports).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MutationEvent {
+    pub at: u64,
+    pub op: MutationOp,
+    pub phase_start: bool,
+}
+
+impl MutationEvent {
+    pub fn new(at: u64, op: MutationOp) -> Self {
+        MutationEvent { at, op, phase_start: false }
+    }
+
+    pub fn phase(at: u64, op: MutationOp) -> Self {
+        MutationEvent { at, op, phase_start: true }
+    }
+}
+
+/// A deterministic, timestamp-sorted list of mutation events.  An
+/// empty schedule reproduces the frozen-mapping pipeline bit for bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MutationSchedule {
+    events: Vec<MutationEvent>,
+}
+
+impl MutationSchedule {
+    /// Sorts by timestamp (stable: same-timestamp events keep their
+    /// given order).
+    pub fn new(mut events: Vec<MutationEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        MutationSchedule { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[MutationEvent] {
+        &self.events
+    }
+
+    /// Number of workload phases (phase-start marks + 1).
+    pub fn phases(&self) -> usize {
+        1 + self.events.iter().filter(|e| e.phase_start).count()
+    }
+
+    /// Index of the first event with `at >= t`.
+    pub fn first_at_or_after(&self, t: u64) -> usize {
+        self.events.partition_point(|e| e.at < t)
+    }
+}
+
+/// The mutable address space.  See the module docs.
+pub struct AddressSpace {
+    mapping: MemoryMapping,
+    pt: PageTable,
+    hist: ContigHistogram,
+    buddy: BuddyAllocator,
+    /// maximal VA-contiguous extents ("islands"), sorted by start —
+    /// the unit munmap/remap selectors address
+    regions: Vec<(Vpn, u64)>,
+    /// next fresh VA for mmap (monotonic; never reuses unmapped VAs,
+    /// and always leaves a ≥1-page hole so extents stay distinct
+    /// chunks)
+    va_cursor: Vpn,
+    /// transparent huge pages enabled for this space?  The Base
+    /// baseline runs without THP support (§4.1), so THP events in a
+    /// shared schedule must not promote its space.
+    thp: bool,
+}
+
+impl AddressSpace {
+    /// Adopt an existing mapping: the buddy allocator is rebuilt with
+    /// every mapped frame reserved, so later munmaps/mmaps operate on
+    /// a pool consistent with what the mapping occupies.
+    pub fn from_mapping(mapping: MemoryMapping) -> Self {
+        let maxp = mapping.pages().iter().map(|&(_, p)| p).max().unwrap_or(0);
+        let frames = ((maxp + 1) * 2).next_power_of_two().max(1 << 12);
+        let mut buddy = BuddyAllocator::new(frames);
+        for &(_, p) in mapping.pages() {
+            let ok = buddy.reserve_frame(p);
+            debug_assert!(ok, "frame {p} double-mapped or out of pool");
+        }
+        Self::assemble(mapping, buddy)
+    }
+
+    /// Replay the demand-paging model (`mapgen::demand`) keeping the
+    /// allocator: bit-identical mapping, live physical pool.
+    pub fn from_demand(profile: &DemandProfile, seed: u64) -> Self {
+        let (mapping, buddy) = mapgen::demand_parts(profile, seed);
+        Self::assemble(mapping, buddy)
+    }
+
+    fn assemble(mapping: MemoryMapping, buddy: BuddyAllocator) -> Self {
+        let pt = PageTable::from_mapping(&mapping);
+        let hist = ContigHistogram::from_mapping(&mapping);
+        let mut regions = Vec::new();
+        for &(v, _) in mapping.pages() {
+            match regions.last_mut() {
+                Some(&mut (s, ref mut l)) if s + *l == v => *l += 1,
+                _ => regions.push((v, 1)),
+            }
+        }
+        let va_cursor = mapping.pages().last().map(|&(v, _)| v + 2).unwrap_or(0);
+        AddressSpace { mapping, pt, hist, buddy, regions, va_cursor, thp: false }
+    }
+
+    pub fn mapping(&self) -> &MemoryMapping {
+        &self.mapping
+    }
+
+    pub fn pt(&self) -> &PageTable {
+        &self.pt
+    }
+
+    pub fn hist(&self) -> &ContigHistogram {
+        &self.hist
+    }
+
+    pub fn regions(&self) -> &[(Vpn, u64)] {
+        &self.regions
+    }
+
+    /// Snapshot handle over the current state (see [`SpaceView`]).
+    pub fn view(&self) -> SpaceView<'_> {
+        SpaceView { pt: &self.pt, hist: &self.hist, mapping: &self.mapping }
+    }
+
+    /// Enable THP events without promoting anything yet.
+    pub fn enable_thp(&mut self) {
+        self.thp = true;
+    }
+
+    /// Enable THP and promote the whole space (the "THP on" build
+    /// variant).
+    pub fn promote_thp(&mut self) -> usize {
+        self.thp = true;
+        let n = self.mapping.promote_thp();
+        self.pt.set_huge(self.mapping.huge_regions());
+        n
+    }
+
+    /// Apply one mutation.  Returns the VA ranges whose translations
+    /// may have changed — the invalidation set the engine must push
+    /// through the L1 and the scheme (`invalidate_range`).  Ops that
+    /// cannot apply (OOM, last region, no huge regions) are skipped
+    /// deterministically and return no ranges.
+    pub fn apply(&mut self, op: &MutationOp) -> Vec<(Vpn, u64)> {
+        match *op {
+            MutationOp::Mmap { pages } => self.mmap(pages),
+            MutationOp::Munmap { selector } => self.munmap(selector),
+            MutationOp::Remap { selector } => self.remap(selector),
+            MutationOp::ThpPromote => self.thp_promote(),
+            MutationOp::ThpSplit { selector } => self.thp_split(selector),
+        }
+    }
+
+    fn mmap(&mut self, pages: u64) -> Vec<(Vpn, u64)> {
+        if pages == 0 {
+            return Vec::new();
+        }
+        let Some(runs) = self.buddy.alloc_run(pages) else {
+            return Vec::new(); // OOM: skip deterministically
+        };
+        for r in runs {
+            let mut v = align_up(self.va_cursor, extent_alignment(r.len));
+            if r.len >= HUGE_PAGES {
+                // match the 512-residue so the extent is THP-promotable
+                let shift = (HUGE_PAGES + r.start % HUGE_PAGES - v % HUGE_PAGES) % HUGE_PAGES;
+                v += shift;
+            }
+            self.map_extent(v, r.start, r.len);
+            self.regions.push((v, r.len));
+            self.va_cursor = v + r.len + 1; // hole: extents never merge
+        }
+        // fresh VAs were never cached: nothing to invalidate
+        Vec::new()
+    }
+
+    fn munmap(&mut self, selector: u64) -> Vec<(Vpn, u64)> {
+        if self.regions.len() <= 1 {
+            return Vec::new(); // never empty the space
+        }
+        let idx = (selector as usize) % self.regions.len();
+        let (vstart, len) = self.regions.remove(idx);
+        self.unmap_span(vstart, len);
+        vec![(vstart, len)]
+    }
+
+    fn remap(&mut self, selector: u64) -> Vec<(Vpn, u64)> {
+        if self.regions.is_empty() {
+            return Vec::new();
+        }
+        let idx = (selector as usize) % self.regions.len();
+        let (vstart, len) = self.regions[idx];
+        // allocate the destination first (migration copies before it
+        // frees), guaranteeing the new frames differ from the old
+        let Some(runs) = self.buddy.alloc_run(len) else {
+            return Vec::new();
+        };
+        self.unmap_span(vstart, len);
+        let mut off = 0u64;
+        for r in runs {
+            self.map_extent(vstart + off, r.start, r.len);
+            off += r.len;
+        }
+        debug_assert_eq!(off, len);
+        vec![(vstart, len)]
+    }
+
+    fn thp_promote(&mut self) -> Vec<(Vpn, u64)> {
+        if !self.thp {
+            return Vec::new(); // this space runs without THP support
+        }
+        let old: Vec<Vpn> = self.mapping.huge_regions().to_vec();
+        self.mapping.promote_thp();
+        self.pt.set_huge(self.mapping.huge_regions());
+        self.mapping
+            .huge_regions()
+            .iter()
+            .filter(|h| old.binary_search(h).is_err())
+            .map(|&h| (h, HUGE_PAGES))
+            .collect()
+    }
+
+    fn thp_split(&mut self, selector: u64) -> Vec<(Vpn, u64)> {
+        let n = self.mapping.huge_regions().len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let h = self.mapping.huge_regions()[(selector as usize) % n];
+        self.mapping.demote_huge(h);
+        self.pt.set_huge(self.mapping.huge_regions());
+        vec![(h, HUGE_PAGES)]
+    }
+
+    /// Map one fresh contiguous extent, maintaining the histogram
+    /// incrementally: the left/right chunks it merges with are
+    /// replaced by the merged chunk.
+    fn map_extent(&mut self, vstart: Vpn, pstart: Ppn, len: u64) {
+        // left chunk ending exactly at (vstart-1, pstart-1)?
+        let pages = self.mapping.pages();
+        let mut left = 0u64;
+        {
+            let mut idx = pages.partition_point(|&(v, _)| v < vstart);
+            let (mut ev, mut ep) = (vstart, pstart);
+            while idx > 0 && ev > 0 && ep > 0 {
+                let (v, p) = pages[idx - 1];
+                if v + 1 == ev && p + 1 == ep {
+                    left += 1;
+                    idx -= 1;
+                    ev = v;
+                    ep = p;
+                } else {
+                    break;
+                }
+            }
+        }
+        // right chunk starting exactly at (vstart+len, pstart+len)?
+        let right = match self.pt.entry(vstart + len) {
+            Some(e) if e.ppn == pstart + len => e.run as u64,
+            _ => 0,
+        };
+        if left > 0 {
+            self.hist.remove_chunk(left);
+        }
+        if right > 0 {
+            self.hist.remove_chunk(right);
+        }
+        self.hist.add_chunk(left + len + right);
+        self.mapping.map_range(vstart, pstart, len);
+        self.pt.map_range(vstart, pstart, len);
+    }
+
+    /// Unmap a VA span (histogram first — it reads the pre-mutation
+    /// chunk structure), then free the physical frames.
+    fn unmap_span(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart + len;
+        self.hist_remove_span(vstart, vend);
+        let removed = self.mapping.unmap_range(vstart, len);
+        self.pt.unmap_range(&removed, vstart, vend);
+        // free frames as maximal physical runs
+        let mut ppns: Vec<Ppn> = removed.iter().map(|&(_, p)| p).collect();
+        ppns.sort_unstable();
+        let mut i = 0;
+        while i < ppns.len() {
+            let start = ppns[i];
+            let mut j = i + 1;
+            while j < ppns.len() && ppns[j] == ppns[j - 1] + 1 {
+                j += 1;
+            }
+            self.buddy.free_frames_range(start, (j - i) as u64);
+            i = j;
+        }
+    }
+
+    /// Incremental histogram update for unmapping `[vstart, vend)`:
+    /// remove every chunk intersecting the span, re-add the surviving
+    /// left/right remainders.
+    fn hist_remove_span(&mut self, vstart: Vpn, vend: Vpn) {
+        let pages = self.mapping.pages();
+        let a = pages.partition_point(|&(v, _)| v < vstart);
+        let b = pages.partition_point(|&(v, _)| v < vend);
+        if a == b {
+            return; // nothing mapped in the span
+        }
+        let contiguous =
+            |x: &(Vpn, Ppn), y: &(Vpn, Ppn)| x.0 + 1 == y.0 && x.1 + 1 == y.1;
+        // widen [a, b) to whole-chunk bounds [s, t)
+        let mut s = a;
+        while s > 0 && contiguous(&pages[s - 1], &pages[s]) {
+            s -= 1;
+        }
+        let mut t = b;
+        while t < pages.len() && contiguous(&pages[t - 1], &pages[t]) {
+            t += 1;
+        }
+        // remove every chunk in [s, t)
+        let mut start = s;
+        for i in (s + 1)..t {
+            if !contiguous(&pages[i - 1], &pages[i]) {
+                self.hist.remove_chunk((i - start) as u64);
+                start = i;
+            }
+        }
+        self.hist.remove_chunk((t - start) as u64);
+        // the remainders outside [a, b) survive as their own chunks
+        if a > s {
+            self.hist.add_chunk((a - s) as u64);
+        }
+        if t > b {
+            self.hist.add_chunk((t - b) as u64);
+        }
+    }
+
+    /// Oracle check: incremental state equals a full rebuild from the
+    /// mapping.  Property tests call this after every event.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.mapping.validate()?;
+        let opt = PageTable::from_mapping(&self.mapping);
+        if self.pt.npages() != opt.npages() {
+            return Err(format!("npages {} != rebuilt {}", self.pt.npages(), opt.npages()));
+        }
+        if self.pt.entry_count() != opt.entry_count() {
+            return Err(format!(
+                "entry count {} != rebuilt {}",
+                self.pt.entry_count(),
+                opt.entry_count()
+            ));
+        }
+        if self.pt.huge_regions() != opt.huge_regions() {
+            return Err("huge-region lists diverged".into());
+        }
+        for &(v, _) in self.mapping.pages() {
+            if self.pt.entry(v) != opt.entry(v) {
+                return Err(format!(
+                    "entry at vpn {v}: incremental {:?} != rebuilt {:?}",
+                    self.pt.entry(v),
+                    opt.entry(v)
+                ));
+            }
+        }
+        let ohist = ContigHistogram::from_mapping(&self.mapping);
+        if self.hist != ohist {
+            return Err(format!("histogram diverged: {:?} != {:?}", self.hist, ohist));
+        }
+        self.buddy.check_invariants()?;
+        let total_regions: u64 = self.regions.iter().map(|&(_, l)| l).sum();
+        if total_regions != self.mapping.len() as u64 {
+            return Err(format!(
+                "region pages {total_regions} != mapped pages {}",
+                self.mapping.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn align_up(x: u64, a: u64) -> u64 {
+    debug_assert!(a.is_power_of_two());
+    (x + a - 1) & !(a - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check_cases;
+
+    fn demand_space(seed: u64) -> AddressSpace {
+        AddressSpace::from_demand(&DemandProfile::generic(1 << 13), seed)
+    }
+
+    #[test]
+    fn from_demand_matches_mapgen_demand() {
+        let profile = DemandProfile::generic(1 << 13);
+        let a = AddressSpace::from_demand(&profile, 9);
+        let m = mapgen::demand(&profile, 9);
+        assert_eq!(a.mapping().pages(), m.pages(), "bit-identical replay");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_mapping_reserves_frames() {
+        let m = MemoryMapping::new((0..100u64).map(|v| (v, v + 7)).collect());
+        let a = AddressSpace::from_mapping(m);
+        a.check_invariants().unwrap();
+        assert_eq!(a.regions().len(), 1);
+    }
+
+    #[test]
+    fn mmap_grows_and_never_invalidates() {
+        let mut a = demand_space(1);
+        let before = a.mapping().len();
+        let ranges = a.apply(&MutationOp::Mmap { pages: 300 });
+        assert!(ranges.is_empty(), "fresh VAs need no invalidation");
+        assert_eq!(a.mapping().len(), before + 300);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn munmap_removes_a_region_and_reports_it() {
+        let mut a = demand_space(2);
+        let nregions = a.regions().len();
+        assert!(nregions > 1, "demand mapping has several islands");
+        let (vstart, len) = a.regions()[3 % nregions];
+        let ranges = a.apply(&MutationOp::Munmap { selector: 3 });
+        assert_eq!(ranges, vec![(vstart, len)]);
+        assert_eq!(a.regions().len(), nregions - 1);
+        assert_eq!(a.mapping().translate(vstart), None);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remap_changes_translations_in_place() {
+        let mut a = demand_space(3);
+        let (vstart, len) = a.regions()[0];
+        let before: Vec<Ppn> =
+            (0..len).map(|j| a.mapping().translate(vstart + j).unwrap()).collect();
+        let ranges = a.apply(&MutationOp::Remap { selector: 0 });
+        assert_eq!(ranges, vec![(vstart, len)]);
+        let after: Vec<Ppn> =
+            (0..len).map(|j| a.mapping().translate(vstart + j).unwrap()).collect();
+        assert_ne!(before, after, "migration must move the region physically");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn thp_promote_and_split_stay_consistent() {
+        // a mapping with promotable regions: identity over 4 huge spans
+        let n = 4 * HUGE_PAGES;
+        let m = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
+        let mut a = AddressSpace::from_mapping(m);
+        assert!(a.apply(&MutationOp::ThpPromote).is_empty(), "THP disabled: event is a no-op");
+        a.enable_thp();
+        let ranges = a.apply(&MutationOp::ThpPromote);
+        assert_eq!(ranges.len(), 4, "four regions promoted");
+        a.check_invariants().unwrap();
+        let ranges = a.apply(&MutationOp::ThpSplit { selector: 1 });
+        assert_eq!(ranges, vec![(HUGE_PAGES, HUGE_PAGES)]);
+        assert!(!a.mapping().is_huge(HUGE_PAGES));
+        assert!(a.mapping().is_huge(0));
+        a.check_invariants().unwrap();
+        // promote again: only the split region is new
+        let ranges = a.apply(&MutationOp::ThpPromote);
+        assert_eq!(ranges, vec![(HUGE_PAGES, HUGE_PAGES)]);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ops_that_cannot_apply_are_skipped() {
+        let m = MemoryMapping::new((0..64u64).map(|v| (v, v)).collect());
+        let mut a = AddressSpace::from_mapping(m);
+        assert!(a.apply(&MutationOp::Munmap { selector: 0 }).is_empty(), "last region");
+        assert!(a.apply(&MutationOp::ThpSplit { selector: 0 }).is_empty(), "no huge regions");
+        let huge_ask = a.buddy.free_frames() + 1;
+        assert!(a.apply(&MutationOp::Mmap { pages: huge_ask }).is_empty(), "OOM skip");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_random_event_storm_keeps_invariants() {
+        check_cases(6, 2024, |rng, case| {
+            let mut a = demand_space(100 + case as u64);
+            if case % 2 == 0 {
+                a.enable_thp();
+            }
+            for step in 0..60 {
+                let op = match rng.below(5) {
+                    0 => MutationOp::Mmap { pages: rng.range(1, 600) },
+                    1 => MutationOp::Munmap { selector: rng.next_u64() },
+                    2 => MutationOp::Remap { selector: rng.next_u64() },
+                    3 => MutationOp::ThpPromote,
+                    _ => MutationOp::ThpSplit { selector: rng.next_u64() },
+                };
+                a.apply(&op);
+                a.check_invariants()
+                    .unwrap_or_else(|e| panic!("case {case} step {step} op {op:?}: {e}"));
+            }
+        });
+    }
+
+    #[test]
+    fn determinism_same_ops_same_state() {
+        let ops = vec![
+            MutationOp::Mmap { pages: 100 },
+            MutationOp::Munmap { selector: 7 },
+            MutationOp::Remap { selector: 2 },
+            MutationOp::ThpPromote,
+            MutationOp::Mmap { pages: 513 },
+        ];
+        let mut a = demand_space(5);
+        let mut b = demand_space(5);
+        for op in &ops {
+            let ra = a.apply(op);
+            let rb = b.apply(op);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(a.mapping().pages(), b.mapping().pages());
+        assert_eq!(a.mapping().huge_regions(), b.mapping().huge_regions());
+    }
+
+    #[test]
+    fn schedule_sorts_and_counts_phases() {
+        let s = MutationSchedule::new(vec![
+            MutationEvent::phase(500, MutationOp::ThpPromote),
+            MutationEvent::new(10, MutationOp::Mmap { pages: 4 }),
+            MutationEvent::phase(200, MutationOp::Munmap { selector: 0 }),
+        ]);
+        let ats: Vec<u64> = s.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![10, 200, 500]);
+        assert_eq!(s.phases(), 3);
+        assert_eq!(s.first_at_or_after(0), 0);
+        assert_eq!(s.first_at_or_after(10), 0);
+        assert_eq!(s.first_at_or_after(11), 1);
+        assert_eq!(s.first_at_or_after(501), 3);
+        assert!(MutationSchedule::default().is_empty());
+        assert_eq!(MutationSchedule::default().phases(), 1);
+    }
+
+    #[test]
+    fn fragmentation_shifts_the_histogram_small() {
+        // free-heavy churn must shrink mean chunk size: unmap several
+        // regions, then re-mmap the pages as small requests
+        let mut a = demand_space(11);
+        let mean = |h: &ContigHistogram| h.total_pages() as f64 / h.total_chunks() as f64;
+        let before = mean(a.hist());
+        let mut sel = 1u64;
+        for _ in 0..8 {
+            a.apply(&MutationOp::Munmap { selector: sel });
+            sel = sel.wrapping_mul(0x9E37_79B9).wrapping_add(13);
+        }
+        for _ in 0..64 {
+            a.apply(&MutationOp::Mmap { pages: 4 });
+        }
+        a.check_invariants().unwrap();
+        let after = mean(a.hist());
+        assert!(
+            after < before,
+            "churn must fragment the histogram (mean {before:.1} -> {after:.1})"
+        );
+    }
+}

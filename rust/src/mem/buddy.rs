@@ -162,6 +162,35 @@ impl BuddyAllocator {
         Some(runs)
     }
 
+    /// Claim one specific frame out of the free lists (splitting the
+    /// containing free block and re-freeing the remainder).  Returns
+    /// false if the frame is already allocated.  This is how a
+    /// [`crate::mem::addrspace::AddressSpace`] adopts a pre-built
+    /// mapping: the allocator's state is reconstructed to match what
+    /// the mapping already occupies.
+    pub fn reserve_frame(&mut self, frame: u64) -> bool {
+        if frame >= self.total_frames {
+            return false;
+        }
+        // find the free block containing the frame, smallest first
+        for o in 0..=MAX_ORDER {
+            let start = frame & !((1u64 << o) - 1);
+            if self.free[o as usize].remove(&start) {
+                self.free_frames -= 1u64 << o;
+                // re-free everything in the block except `frame`
+                if frame > start {
+                    self.free_frames_range(start, frame - start);
+                }
+                let end = start + (1u64 << o);
+                if frame + 1 < end {
+                    self.free_frames_range(frame + 1, end - frame - 1);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
     /// Free an arbitrary frame range (decomposes into aligned blocks).
     pub fn free_frames_range(&mut self, start: u64, len: u64) {
         let mut s = start;
@@ -306,6 +335,35 @@ mod tests {
         b.check_invariants().unwrap();
         let runs = b.alloc_run(4096).unwrap();
         assert!(runs.len() > 1, "fragmented memory must yield split runs");
+    }
+
+    #[test]
+    fn reserve_frame_claims_exactly_one() {
+        let mut b = BuddyAllocator::new(1 << 12);
+        let total = b.free_frames();
+        assert!(b.reserve_frame(1000));
+        assert_eq!(b.free_frames(), total - 1);
+        assert!(!b.reserve_frame(1000), "already reserved");
+        b.check_invariants().unwrap();
+        // freeing it restores full coalescing
+        b.free_block(1000, 0);
+        assert_eq!(b.free_frames(), total);
+        assert!(b.alloc_block(MAX_ORDER).is_some());
+    }
+
+    #[test]
+    fn reserve_many_then_allocate_around() {
+        let mut b = BuddyAllocator::new(1 << 12);
+        for f in (0..512u64).chain(700..764) {
+            assert!(b.reserve_frame(f), "frame {f}");
+        }
+        b.check_invariants().unwrap();
+        let runs = b.alloc_run(200).unwrap();
+        for r in &runs {
+            assert!(r.start >= 512, "must not hand out reserved frames: {r:?}");
+            assert!(r.start + r.len <= 700 || r.start >= 764, "{r:?}");
+        }
+        b.check_invariants().unwrap();
     }
 
     #[test]

@@ -70,6 +70,26 @@ impl ContigHistogram {
         self.counts.iter().map(|(&s, &f)| (s, f))
     }
 
+    /// Record one new chunk of `size` pages (incremental maintenance
+    /// by the mutable address space).
+    pub fn add_chunk(&mut self, size: u64) {
+        debug_assert!(size > 0);
+        *self.counts.entry(size).or_insert(0) += 1;
+    }
+
+    /// Drop one chunk of `size` pages.  Panics if no such chunk is
+    /// recorded — the address space's incremental bookkeeping would be
+    /// out of sync with the mapping, which the oracle tests catch.
+    pub fn remove_chunk(&mut self, size: u64) {
+        match self.counts.get_mut(&size) {
+            Some(f) if *f > 1 => *f -= 1,
+            Some(_) => {
+                self.counts.remove(&size);
+            }
+            None => panic!("histogram out of sync: no chunk of size {size} to remove"),
+        }
+    }
+
     pub fn total_chunks(&self) -> u64 {
         self.counts.values().sum()
     }
@@ -158,6 +178,23 @@ mod tests {
         assert!(ContigHistogram::from_mapping(&mapping_with_sizes(&[16, 128])).is_mixed());
         assert!(!ContigHistogram::from_mapping(&mapping_with_sizes(&[16, 16])).is_mixed());
         assert!(!ContigHistogram::from_mapping(&mapping_with_sizes(&[1, 1, 16])).is_mixed());
+    }
+
+    #[test]
+    fn add_remove_chunk_roundtrip() {
+        let mut h = ContigHistogram::from_sizes(&[4, 4, 300]);
+        h.add_chunk(16);
+        h.remove_chunk(4);
+        h.remove_chunk(300);
+        assert_eq!(h, ContigHistogram::from_sizes(&[4, 16]));
+        assert_eq!(h.total_chunks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of sync")]
+    fn remove_missing_chunk_panics() {
+        let mut h = ContigHistogram::from_sizes(&[4]);
+        h.remove_chunk(5);
     }
 
     #[test]

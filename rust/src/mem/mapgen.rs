@@ -178,6 +178,15 @@ impl DemandProfile {
 /// contiguity chunk, which is how real mappings end up with *mixed*
 /// contiguity.
 pub fn demand(profile: &DemandProfile, seed: u64) -> MemoryMapping {
+    demand_parts(profile, seed).0
+}
+
+/// [`demand`] plus the buddy allocator it allocated from — the state a
+/// [`crate::mem::addrspace::AddressSpace`] needs to keep mutating the
+/// mapping (munmap frees real frames, mmap allocates from the same
+/// fragmented pool).  `demand` is this function with the allocator
+/// discarded, so both are bit-identical by construction.
+pub fn demand_parts(profile: &DemandProfile, seed: u64) -> (MemoryMapping, BuddyAllocator) {
     let mut rng = Rng::new(seed ^ 0xDE4A_0D);
     // physical memory: 4x the working set so fragmentation has room
     let frames = (profile.total_pages * 4).next_power_of_two().max(1 << 12);
@@ -216,7 +225,7 @@ pub fn demand(profile: &DemandProfile, seed: u64) -> MemoryMapping {
             None => break, // out of memory: map what we have
         }
     }
-    MemoryMapping::new(pages)
+    (MemoryMapping::new(pages), buddy)
 }
 
 /// Convenience: demand mapping with THP promotion applied (the paper's

@@ -91,6 +91,44 @@ impl MemoryMapping {
         self.huge.len()
     }
 
+    /// Map a fresh contiguous extent `[vstart, vstart+len)` →
+    /// `[pstart, pstart+len)`.  The VA range must be currently
+    /// unmapped (checked in debug builds).  This is the mmap primitive
+    /// of the mutable address space; the page table and histogram are
+    /// updated incrementally by [`crate::mem::addrspace::AddressSpace`].
+    pub fn map_range(&mut self, vstart: Vpn, pstart: Ppn, len: u64) {
+        assert!(len > 0, "map_range of zero pages");
+        let at = self.pages.partition_point(|&(v, _)| v < vstart);
+        debug_assert!(
+            at == self.pages.len() || self.pages[at].0 >= vstart + len,
+            "map_range overlaps existing mapping at {vstart}+{len}"
+        );
+        self.pages.splice(at..at, (0..len).map(|j| (vstart + j, pstart + j)));
+    }
+
+    /// Unmap `[vstart, vstart+len)`, returning the removed pages in
+    /// VPN order.  Huge regions overlapping the range are demoted
+    /// (a partially-unmapped 2MB mapping cannot stay huge).
+    pub fn unmap_range(&mut self, vstart: Vpn, len: u64) -> Vec<(Vpn, Ppn)> {
+        let vend = vstart.saturating_add(len);
+        let a = self.pages.partition_point(|&(v, _)| v < vstart);
+        let b = self.pages.partition_point(|&(v, _)| v < vend);
+        self.huge.retain(|&h| h + HUGE_PAGES <= vstart || h >= vend);
+        self.pages.drain(a..b).collect()
+    }
+
+    /// Demote one huge region (THP split).  Returns false if `start`
+    /// is not a promoted region.
+    pub fn demote_huge(&mut self, start: Vpn) -> bool {
+        match self.huge.binary_search(&start) {
+            Ok(i) => {
+                self.huge.remove(i);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
     /// Iterate contiguity chunks (Definition 1).
     pub fn chunks(&self) -> ChunkIter<'_> {
         ChunkIter { pages: &self.pages, i: 0 }
@@ -288,5 +326,52 @@ mod tests {
     fn validate_rejects_duplicate_ppn() {
         let m = MemoryMapping::new(vec![(0, 5), (1, 5)]);
         assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn map_and_unmap_range_roundtrip() {
+        let mut m = figure4();
+        m.map_range(100, 1000, 4);
+        assert_eq!(m.len(), 20);
+        assert_eq!(m.translate(102), Some(1002));
+        m.validate().unwrap();
+        let removed = m.unmap_range(100, 4);
+        assert_eq!(removed, vec![(100, 1000), (101, 1001), (102, 1002), (103, 1003)]);
+        assert_eq!(m.translate(102), None);
+        assert_eq!(m.pages(), figure4().pages());
+    }
+
+    #[test]
+    fn unmap_middle_of_range() {
+        let mut m = MemoryMapping::new((0..32u64).map(|v| (v, v + 100)).collect());
+        let removed = m.unmap_range(8, 8);
+        assert_eq!(removed.len(), 8);
+        assert_eq!(m.len(), 24);
+        assert_eq!(m.translate(7), Some(107));
+        assert_eq!(m.translate(8), None);
+        assert_eq!(m.translate(16), Some(116));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn unmap_demotes_overlapping_huge_regions() {
+        let n = 2 * HUGE_PAGES;
+        let mut m = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
+        assert_eq!(m.promote_thp(), 2);
+        // unmap a slice inside the first region only
+        m.unmap_range(100, 10);
+        assert!(!m.is_huge(0), "partially unmapped region must demote");
+        assert!(m.is_huge(HUGE_PAGES), "untouched region stays huge");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn demote_huge_by_start() {
+        let mut m = MemoryMapping::new((0..HUGE_PAGES).map(|v| (v, v)).collect());
+        assert_eq!(m.promote_thp(), 1);
+        assert!(m.demote_huge(0));
+        assert!(!m.demote_huge(0));
+        assert!(!m.is_huge(5));
+        m.validate().unwrap();
     }
 }

@@ -1,13 +1,16 @@
 //! Memory-mapping substrate: the physical buddy allocator, the
 //! vpn→ppn mapping model (Definition 1 contiguity chunks), mapping
 //! generators (synthetic per Table 3 + demand-paging model for the
-//! "real mapping"), and the contiguity histogram (Algorithm 3 input,
-//! Figures 2/3).
+//! "real mapping"), the contiguity histogram (Algorithm 3 input,
+//! Figures 2/3), and the *mutable* address space that applies
+//! mmap/munmap/THP mutation schedules on top of all of them.
 
+pub mod addrspace;
 pub mod buddy;
 pub mod histogram;
 pub mod mapgen;
 pub mod mapping;
 
+pub use addrspace::{AddressSpace, MutationEvent, MutationOp, MutationSchedule, SpaceView};
 pub use histogram::ContigHistogram;
 pub use mapping::MemoryMapping;

@@ -81,8 +81,64 @@ impl<V: Copy + Default> FastMap<V> {
     }
 
     #[inline(always)]
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut V> {
+        let mut i = mix64(key) as usize & self.mask;
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(&mut self.vals[i]);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline(always)]
     pub fn contains(&self, key: u64) -> bool {
         self.get(key).is_some()
+    }
+
+    /// Remove a key (backward-shift deletion, so linear probing needs
+    /// no tombstones).  Returns the removed value, if present.  This is
+    /// what makes the page table *mutable*: munmap/remap events delete
+    /// entries in place instead of rebuilding the whole map.
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let mut i = mix64(key) as usize & self.mask;
+        loop {
+            let k = self.keys[i];
+            if k == EMPTY {
+                return None;
+            }
+            if k == key {
+                break;
+            }
+            i = (i + 1) & self.mask;
+        }
+        let removed = self.vals[i];
+        // Backward shift: walk the probe chain after the hole; any
+        // entry whose ideal slot is cyclically outside (i, j] can be
+        // moved into the hole, which then moves to j.
+        let mut j = i;
+        loop {
+            j = (j + 1) & self.mask;
+            let kj = self.keys[j];
+            if kj == EMPTY {
+                break;
+            }
+            let ideal = mix64(kj) as usize & self.mask;
+            // distance from ideal to j vs distance from hole to j,
+            // both measured cyclically
+            if (j.wrapping_sub(ideal) & self.mask) >= (j.wrapping_sub(i) & self.mask) {
+                self.keys[i] = kj;
+                self.vals[i] = self.vals[j];
+                i = j;
+            }
+        }
+        self.keys[i] = EMPTY;
+        self.len -= 1;
+        Some(removed)
     }
 
     fn grow(&mut self) {
@@ -158,6 +214,68 @@ mod tests {
                 let k = rng.below(1 << 15);
                 assert_eq!(fast.get(k).copied(), std_map.get(&k).copied(), "probe {probe}");
             }
+        }
+    }
+
+    #[test]
+    fn remove_roundtrip() {
+        let mut m: FastMap<u32> = FastMap::with_capacity(4);
+        for i in 0..50u64 {
+            m.insert(i, i as u32);
+        }
+        assert_eq!(m.remove(25), Some(25));
+        assert_eq!(m.remove(25), None);
+        assert_eq!(m.len(), 49);
+        assert_eq!(m.get(25), None);
+        for i in (0..50u64).filter(|&i| i != 25) {
+            assert_eq!(m.get(i), Some(&(i as u32)), "key {i} survives removal of 25");
+        }
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut m: FastMap<u32> = FastMap::with_capacity(4);
+        m.insert(7, 1);
+        *m.get_mut(7).unwrap() = 9;
+        assert_eq!(m.get(7), Some(&9));
+        assert!(m.get_mut(8).is_none());
+    }
+
+    #[test]
+    fn property_insert_remove_matches_std_hashmap() {
+        let mut rng = Rng::new(314);
+        for case in 0..20 {
+            let mut fast: FastMap<u64> = FastMap::with_capacity(8);
+            let mut std_map: HashMap<u64, u64> = HashMap::new();
+            for _ in 0..3_000 {
+                let k = rng.below(1 << 10); // small key space: many collisions
+                if rng.chance(2, 3) {
+                    let v = rng.next_u64();
+                    fast.insert(k, v);
+                    std_map.insert(k, v);
+                } else {
+                    assert_eq!(fast.remove(k), std_map.remove(&k), "case {case} key {k}");
+                }
+            }
+            assert_eq!(fast.len(), std_map.len(), "case {case}");
+            for (&k, &v) in &std_map {
+                assert_eq!(fast.get(k), Some(&v), "case {case} key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn remove_backward_shift_keeps_probe_chains() {
+        // keys that all collide into the same bucket: removing the
+        // first must not orphan the rest of the probe chain
+        let mut m: FastMap<u32> = FastMap::with_capacity(8);
+        let cap = 16u64;
+        for i in 0..6u64 {
+            m.insert(i * cap, i as u32);
+        }
+        assert_eq!(m.remove(0), Some(0));
+        for i in 1..6u64 {
+            assert_eq!(m.get(i * cap), Some(&(i as u32)), "chain member {i}");
         }
     }
 

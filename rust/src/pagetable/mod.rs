@@ -51,6 +51,76 @@ impl PageTable {
         self.npages
     }
 
+    /// Number of resident entries (consistency checks).
+    pub fn entry_count(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Incrementally map a fresh contiguous extent `[vstart,
+    /// vstart+len)` → `[pstart, pstart+len)`, recomputing only the
+    /// affected run lengths: the new entries chain into a contiguous
+    /// right neighbor, and contiguous left neighbors have their runs
+    /// *extended* — O(len + left run), never a full rebuild.
+    pub fn map_range(&mut self, vstart: Vpn, pstart: Ppn, len: u64) {
+        debug_assert!(len > 0);
+        // does the run continue into an existing right neighbor?
+        let tail = match self.map.get(vstart + len) {
+            Some(e) if e.ppn == pstart + len => e.run,
+            _ => 0,
+        };
+        let mut run = tail;
+        for i in (0..len).rev() {
+            debug_assert!(self.map.get(vstart + i).is_none(), "map_range over mapped page");
+            run = run.saturating_add(1);
+            self.map.insert(vstart + i, Pte { ppn: pstart + i, run });
+        }
+        self.npages += len;
+        // extend the runs of contiguous left neighbors
+        let (mut j, mut p) = (vstart, pstart);
+        while j > 0 && p > 0 {
+            j -= 1;
+            p -= 1;
+            match self.map.get_mut(j) {
+                Some(e) if e.ppn == p => {
+                    run = run.saturating_add(1);
+                    e.run = run;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Incrementally unmap: `removed` are the pages the mapping just
+    /// dropped from `[vstart, vend)` (VPN order).  Entries are deleted
+    /// in place and the one run that crossed the left boundary is
+    /// truncated — O(removed + truncated head), never a full rebuild.
+    /// Huge regions overlapping the range are demoted, mirroring
+    /// [`MemoryMapping::unmap_range`].
+    pub fn unmap_range(&mut self, removed: &[(Vpn, Ppn)], vstart: Vpn, vend: Vpn) {
+        self.huge.retain(|&h| h + HUGE_PAGES <= vstart || h >= vend);
+        let Some(&(boundary, _)) = removed.first() else { return };
+        for &(v, _) in removed {
+            let old = self.map.remove(v);
+            debug_assert!(old.is_some(), "unmap of unmapped page {v}");
+        }
+        self.npages -= removed.len() as u64;
+        // truncate the run that crossed into the removed range
+        let mut j = boundary;
+        while j > 0 {
+            j -= 1;
+            let dist = boundary - j;
+            match self.map.get_mut(j) {
+                Some(e) if (e.run as u64) > dist => e.run = dist as u32,
+                _ => return,
+            }
+        }
+    }
+
+    /// Replace the huge-region list (THP promote/split events).
+    pub fn set_huge(&mut self, huge: &[Vpn]) {
+        self.huge = huge.to_vec();
+    }
+
     /// Ground-truth translation (what a full walk returns).
     #[inline]
     pub fn translate(&self, vpn: Vpn) -> Option<Ppn> {
@@ -154,5 +224,81 @@ mod tests {
         let pt = figure4_pt();
         assert_eq!(pt.translate(7), Some(3));
         assert_eq!(pt.translate(16), None);
+    }
+
+    fn assert_pt_equals_rebuild(pt: &PageTable, m: &MemoryMapping) {
+        let oracle = PageTable::from_mapping(m);
+        assert_eq!(pt.npages(), oracle.npages(), "npages");
+        assert_eq!(pt.entry_count(), oracle.entry_count(), "entry count");
+        assert_eq!(pt.huge_regions(), oracle.huge_regions(), "huge regions");
+        for &(v, _) in m.pages() {
+            assert_eq!(pt.entry(v), oracle.entry(v), "entry at vpn {v}");
+        }
+    }
+
+    #[test]
+    fn incremental_map_range_matches_rebuild() {
+        // start: [0,8) and [16,24), both identity+100
+        let mut m = MemoryMapping::new(
+            (0..8u64).chain(16..24).map(|v| (v, v + 100)).collect(),
+        );
+        let mut pt = PageTable::from_mapping(&m);
+        // bridge the hole contiguously: runs must merge into one 24-run
+        m.map_range(8, 108, 8);
+        pt.map_range(8, 108, 8);
+        assert_eq!(pt.run_len(0), 24);
+        assert_eq!(pt.run_len(8), 16);
+        assert_pt_equals_rebuild(&pt, &m);
+        // a disjoint extent elsewhere
+        m.map_range(100, 5000, 4);
+        pt.map_range(100, 5000, 4);
+        assert_eq!(pt.run_len(100), 4);
+        assert_pt_equals_rebuild(&pt, &m);
+    }
+
+    #[test]
+    fn incremental_unmap_range_truncates_crossing_run() {
+        let mut m = MemoryMapping::new((0..32u64).map(|v| (v, v + 100)).collect());
+        let mut pt = PageTable::from_mapping(&m);
+        assert_eq!(pt.run_len(0), 32);
+        let removed = m.unmap_range(10, 5);
+        pt.unmap_range(&removed, 10, 15);
+        assert_eq!(pt.run_len(0), 10, "crossing run truncated at the hole");
+        assert_eq!(pt.run_len(9), 1);
+        assert_eq!(pt.translate(12), None);
+        assert_eq!(pt.run_len(15), 17, "tail run untouched");
+        assert_pt_equals_rebuild(&pt, &m);
+    }
+
+    #[test]
+    fn incremental_random_mutations_match_rebuild() {
+        use crate::prng::Rng;
+        let mut rng = Rng::new(88);
+        for case in 0..10 {
+            let mut m = MemoryMapping::new((0..256u64).map(|v| (v, v + 1000)).collect());
+            let mut pt = PageTable::from_mapping(&m);
+            let mut next_p: Ppn = 10_000;
+            for step in 0..40 {
+                if rng.chance(1, 2) {
+                    // unmap a random slice
+                    let v0 = rng.below(300);
+                    let len = rng.range(1, 24);
+                    let removed = m.unmap_range(v0, len);
+                    pt.unmap_range(&removed, v0, v0 + len);
+                } else {
+                    // map a fresh extent in any VA hole we can find
+                    let len = rng.range(1, 16);
+                    let mut v0 = rng.below(400);
+                    while m.pages().iter().any(|&(v, _)| v + 1 > v0 && v < v0 + len) {
+                        v0 += len + 1;
+                    }
+                    m.map_range(v0, next_p, len);
+                    pt.map_range(v0, next_p, len);
+                    next_p += len + rng.range(0, 2); // sometimes physically adjacent
+                }
+                assert_pt_equals_rebuild(&pt, &m);
+                m.validate().unwrap_or_else(|e| panic!("case {case} step {step}: {e}"));
+            }
+        }
     }
 }

@@ -65,6 +65,10 @@ impl<S: TraceSource> TraceStream<S> {
 pub struct VpnRemap<'m> {
     pages: &'m [(Vpn, Ppn)],
     last: usize,
+    /// out-of-range indices wrap (`% len`) instead of clamping —
+    /// the churn pipeline's mode, where the mapped page count moves
+    /// under a fixed working-set descriptor
+    wrap: bool,
 }
 
 impl<'m> VpnRemap<'m> {
@@ -77,13 +81,32 @@ impl<'m> VpnRemap<'m> {
                 "cannot remap trace indices: mapping is empty (no pages were mapped)"
             ));
         }
-        Ok(VpnRemap { pages, last: pages.len() - 1 })
+        Ok(VpnRemap { pages, last: pages.len() - 1, wrap: false })
+    }
+
+    /// Like [`VpnRemap::new`], but out-of-range indices wrap modulo
+    /// the mapped count instead of clamping to the last page.  Used
+    /// against *mutable* address spaces, where munmap shrinks the page
+    /// list below the trace descriptor's working set: wrapping spreads
+    /// those accesses over the surviving pages instead of piling them
+    /// onto one.
+    pub fn wrapping(m: &'m MemoryMapping) -> Result<Self> {
+        let mut r = Self::new(m)?;
+        r.wrap = true;
+        Ok(r)
     }
 
     /// Rewrite one chunk of working-set indices to VPNs, in place.
     pub fn apply(&self, chunk: &mut [Vpn]) {
-        for t in chunk.iter_mut() {
-            *t = self.pages[(*t as usize).min(self.last)].0;
+        if self.wrap {
+            let n = self.pages.len();
+            for t in chunk.iter_mut() {
+                *t = self.pages[(*t as usize) % n].0;
+            }
+        } else {
+            for t in chunk.iter_mut() {
+                *t = self.pages[(*t as usize).min(self.last)].0;
+            }
         }
     }
 }
@@ -167,5 +190,15 @@ mod tests {
         let mut chunk = vec![0, 1, 2, 7];
         remap.apply(&mut chunk);
         assert_eq!(chunk, vec![5, 9, 10, 10], "out-of-range indices clamp to the last page");
+    }
+
+    #[test]
+    fn wrapping_remap_spreads_out_of_range_indices() {
+        let m = MemoryMapping::new(vec![(5, 50), (9, 51), (10, 52)]);
+        let remap = VpnRemap::wrapping(&m).unwrap();
+        let mut chunk = vec![0, 1, 2, 3, 4, 7];
+        remap.apply(&mut chunk);
+        assert_eq!(chunk, vec![5, 9, 10, 5, 9, 9], "indices wrap modulo the mapped count");
+        assert!(VpnRemap::wrapping(&MemoryMapping::new(Vec::new())).is_err());
     }
 }

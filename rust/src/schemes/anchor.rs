@@ -8,8 +8,8 @@
 //!   histogram at every epoch (the paper's 1B-instruction interval),
 //!   paying a TLB shootdown on change.
 
-use super::{tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
-use crate::mem::histogram::ContigHistogram;
+use super::{huge_overlaps, regular_in_range, tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
+use crate::mem::addrspace::SpaceView;
 use crate::pagetable::anchor::{anchor_vpn, select_anchor, select_distance};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
@@ -140,9 +140,38 @@ impl Scheme for Anchor {
         self.tlb.flush();
     }
 
-    fn epoch(&mut self, _pt: &PageTable, hist: &ContigHistogram) {
+    /// Precise invalidation: regular/huge entries as in Base; an
+    /// anchor whose covered window `[anchor, anchor+contiguity)`
+    /// intersects the range has its contiguity *shrunk* to the pages
+    /// before the range (still valid — they did not move), and is
+    /// dropped when the anchor page itself is affected.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.tlb.retain(|tag, e| match e {
+            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Anchor { contiguity, .. } => {
+                let av = tag >> 6;
+                let aend = av + *contiguity as u64;
+                if aend <= vstart || av >= vend {
+                    true
+                } else if av < vstart {
+                    *contiguity = (vstart - av) as u32;
+                    true
+                } else {
+                    false
+                }
+            }
+            Entry::Invalid => true,
+        });
+    }
+
+    /// Dynamic mode re-selects its distance from the *current*
+    /// histogram (the [`SpaceView`] snapshot — after mutation events
+    /// this reflects the evolved contiguity, not the build-time one).
+    fn epoch(&mut self, view: SpaceView<'_>) {
         if self.mode == Mode::Dynamic {
-            let d = select_distance(hist);
+            let d = select_distance(view.hist);
             if d != self.dist {
                 self.dist = d;
                 self.log2d = d.trailing_zeros();
@@ -156,6 +185,7 @@ impl Scheme for Anchor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::histogram::ContigHistogram;
     use crate::mem::mapping::MemoryMapping;
 
     fn chunked_identityish(sizes: &[u64]) -> (MemoryMapping, PageTable) {
@@ -208,12 +238,12 @@ mod tests {
 
     #[test]
     fn dynamic_adapts_distance_and_flushes() {
-        let (_, pt) = chunked_identityish(&[8, 8, 8, 8]);
+        let (m, pt) = chunked_identityish(&[8, 8, 8, 8]);
         let mut s = Anchor::new(1024, Mode::Dynamic);
         s.fill(4, &pt);
         assert!(s.lookup(4).is_hit());
         let hist = ContigHistogram::from_sizes(&vec![8u64; 100]);
-        s.epoch(&pt, &hist);
+        s.epoch(SpaceView::new(&pt, &hist, &m));
         assert!(s.dist() <= 16, "distance should shrink toward 8, got {}", s.dist());
         assert_eq!(s.shootdowns, 1);
         assert_eq!(s.lookup(4), Outcome::Miss { probes: 1 }, "flushed on change");
@@ -221,12 +251,33 @@ mod tests {
 
     #[test]
     fn static_mode_never_changes() {
-        let (_, pt) = chunked_identityish(&[8]);
+        let (m, pt) = chunked_identityish(&[8]);
         let mut s = Anchor::new(64, Mode::Static);
         let hist = ContigHistogram::from_sizes(&vec![8u64; 100]);
-        s.epoch(&pt, &hist);
+        s.epoch(SpaceView::new(&pt, &hist, &m));
         assert_eq!(s.dist(), 64);
         assert_eq!(s.shootdowns, 0);
+    }
+
+    #[test]
+    fn invalidate_range_shrinks_and_drops_anchors() {
+        // one 32-page chunk; anchors every 16 pages
+        let (_, pt) = chunked_identityish(&[32]);
+        let mut s = Anchor::new(16, Mode::Static);
+        s.fill(4, &pt); // anchor 0 covers [0, 16)
+        s.fill(20, &pt); // anchor 16 covers [16, 32)
+        // invalidate [10, 20): anchor 0 shrinks to [0, 10), anchor 16
+        // (inside the range) drops entirely
+        s.invalidate_range(10, 10);
+        for v in 0..10u64 {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => assert_eq!(Some(ppn), pt.translate(v), "{v}"),
+                o => panic!("vpn {v} should still hit via the shrunk anchor: {o:?}"),
+            }
+        }
+        for v in 10..32u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 1 }, "stale at {v}");
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! exactly this hardware run over a THP-promoted mapping, so the same
 //! type serves both rows (the coordinator names it accordingly).
 
-use super::{tag_huge, tag_regular, Outcome, Scheme};
+use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
 use crate::{Ppn, Vpn, HUGE_PAGES};
@@ -91,6 +91,17 @@ impl Scheme for BaseL2 {
     fn flush(&mut self) {
         self.tlb.flush();
     }
+
+    /// Precise invalidation: evict 4KB entries whose VPN is in the
+    /// range and 2MB entries whose region overlaps it.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.tlb.retain(|tag, e| match e {
+            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Invalid => true,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +148,35 @@ mod tests {
             s.fill(v, &pt);
         }
         assert_eq!(s.coverage_pages(), 1024);
+    }
+
+    #[test]
+    fn invalidate_range_never_leaves_stale_translations() {
+        // the per-event coherence invariant: after the OS remaps
+        // [20, 30), no lookup in that range may return the old PPN
+        let pt_old = identity_pt(100, false);
+        let mut s = BaseL2::new();
+        for v in 0..100u64 {
+            s.fill(v, &pt_old);
+        }
+        s.invalidate_range(20, 10);
+        for v in 20..30u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale entry at {v}");
+        }
+        assert!(s.lookup(19).is_hit(), "outside range survives");
+        assert!(s.lookup(30).is_hit(), "outside range survives");
+    }
+
+    #[test]
+    fn invalidate_range_drops_overlapping_huge_entries() {
+        let pt = identity_pt(2048, true);
+        let mut s = BaseL2::new();
+        s.fill(700, &pt); // huge region [512, 1024)
+        s.fill(1500, &pt); // huge region [1024, 1536)... fill picks region of 1500
+        assert!(s.lookup(600).is_hit());
+        s.invalidate_range(1000, 8); // overlaps [512,1024) only
+        assert_eq!(s.lookup(600), Outcome::Miss { probes: 0 });
+        assert!(s.lookup(1500).is_hit(), "non-overlapping huge region survives");
     }
 
     #[test]

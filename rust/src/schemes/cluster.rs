@@ -4,7 +4,7 @@
 //! a single 8-frame physical cluster: per-page 3-bit offsets + valid
 //! bits beside the shared physical cluster base.
 
-use super::{tag_huge, tag_regular, Outcome, Scheme};
+use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
 use crate::{Ppn, Vpn, HUGE_PAGES};
@@ -146,6 +146,31 @@ impl Scheme for Cluster {
         self.reg.flush();
         self.clu.flush();
     }
+
+    /// Precise invalidation: regular/huge entries as in Base; a
+    /// clustered entry clears the valid bits of pages in the range
+    /// (per-page valid bits make this exact) and is dropped only when
+    /// no valid page remains.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.reg.retain(|tag, e| match e {
+            Reg::Page(_) => !regular_in_range(tag, vstart, vend),
+            Reg::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Reg::Invalid => true,
+        });
+        self.clu.retain(|group, e| {
+            let gbase = group * GROUP;
+            if gbase + GROUP > vstart && gbase < vend {
+                for j in 0..GROUP {
+                    let v = gbase + j;
+                    if v >= vstart && v < vend {
+                        e.valid &= !(1u8 << j);
+                    }
+                }
+            }
+            e.valid != 0
+        });
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +221,36 @@ mod tests {
                 assert_eq!(Some(ppn), pt.translate(v), "vpn {v}");
             }
         }
+    }
+
+    #[test]
+    fn invalidate_range_clears_exact_valid_bits() {
+        let pages = vec![(0u64, 83), (1, 80), (2, 86), (3, 81), (4, 84), (5, 85), (6, 82), (7, 87)];
+        let pt = PageTable::from_mapping(&MemoryMapping::new(pages));
+        let mut s = Cluster::new();
+        s.fill(0, &pt);
+        s.invalidate_range(2, 3); // pages 2,3,4 invalid
+        for v in [0u64, 1, 5, 6, 7] {
+            assert!(s.lookup(v).is_hit(), "page {v} outside range must survive");
+        }
+        for v in 2..5u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
+        }
+        // invalidating the rest drops the entry entirely
+        s.invalidate_range(0, 8);
+        assert_eq!(s.coverage_pages(), 0);
+    }
+
+    #[test]
+    fn invalidate_range_regular_and_huge_sides() {
+        let mut m = MemoryMapping::new((0..1024u64).map(|v| (v, v)).collect());
+        m.promote_thp();
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Cluster::new();
+        s.fill(700, &pt); // huge region [512, 1024)
+        assert!(s.lookup(600).is_hit());
+        s.invalidate_range(600, 1);
+        assert_eq!(s.lookup(700), Outcome::Miss { probes: 0 }, "huge entry dropped");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! indexed by the group number (bits above the 3 coalesced bits), so
 //! one lookup probes both interpretations.
 
-use super::{tag_group, tag_huge, tag_regular, Outcome, Scheme};
+use super::{huge_overlaps, regular_in_range, tag_group, tag_huge, tag_regular, Outcome, Scheme};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
 use crate::{Ppn, Vpn, HUGE_PAGES};
@@ -145,6 +145,41 @@ impl Scheme for Colt {
     fn flush(&mut self) {
         self.tlb.flush();
     }
+
+    /// Precise invalidation: regular/huge entries as in Base; a
+    /// coalesced group entry overlapping the range is *shrunk* to its
+    /// larger surviving side (prefix before the range or suffix after
+    /// it), or dropped when nothing survives.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.tlb.retain(|tag, e| match e {
+            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Coal { start, len: clen, pbase } => {
+                let ebase = (tag >> 6) * GROUP + *start as u64;
+                let eend = ebase + *clen as u64;
+                if eend <= vstart || ebase >= vend {
+                    return true; // disjoint
+                }
+                // pages of the entry strictly before / after the range
+                let pre = vstart.saturating_sub(ebase).min(*clen as u64);
+                let post = eend.saturating_sub(vend).min(*clen as u64);
+                if pre >= post && pre > 0 {
+                    *clen = pre as u8;
+                    true
+                } else if post > 0 {
+                    let skip = *clen as u64 - post;
+                    *start += skip as u8;
+                    *pbase += skip;
+                    *clen = post as u8;
+                    true
+                } else {
+                    false
+                }
+            }
+            Entry::Invalid => true,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +232,55 @@ mod tests {
         assert!(s.lookup(7).is_hit());
         assert_eq!(s.lookup(8), Outcome::Miss { probes: 0 }, "next group needs its own fill");
         assert_eq!(s.coverage_pages(), 8);
+    }
+
+    #[test]
+    fn invalidate_range_shrinks_coalesced_entries() {
+        // group 0 fully coalesced [0,8); cut [3,5) out of it
+        let m = MemoryMapping::new((0..16u64).map(|v| (v, v + 50)).collect());
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Colt::new();
+        s.fill(2, &pt);
+        s.invalidate_range(3, 2);
+        // prefix [0,3) survives (longer side), [3,8) must miss
+        for v in 0..3u64 {
+            assert!(matches!(s.lookup(v), Outcome::Coalesced { ppn, .. } if ppn == v + 50), "{v}");
+        }
+        for v in 3..8u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
+        }
+        // suffix-surviving case: cut the head instead
+        let mut s = Colt::new();
+        s.fill(10, &pt); // group 1: [8,16)
+        s.invalidate_range(8, 3); // [8,11) gone, [11,16) survives
+        for v in 8..11u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
+        }
+        for v in 11..16u64 {
+            assert!(matches!(s.lookup(v), Outcome::Coalesced { ppn, .. } if ppn == v + 50), "{v}");
+        }
+        // full-cover case: entry dropped entirely
+        let mut s = Colt::new();
+        s.fill(2, &pt);
+        s.invalidate_range(0, 8);
+        assert_eq!(s.coverage_pages(), 0);
+    }
+
+    #[test]
+    fn invalidate_range_after_remap_never_stale() {
+        // OS migrates [0,8) to new frames: old coalesced entry must go
+        let m_old = MemoryMapping::new((0..8u64).map(|v| (v, v + 50)).collect());
+        let pt_old = PageTable::from_mapping(&m_old);
+        let mut s = Colt::new();
+        s.fill(4, &pt_old);
+        let m_new = MemoryMapping::new((0..8u64).map(|v| (v, v + 900)).collect());
+        let pt_new = PageTable::from_mapping(&m_new);
+        s.invalidate_range(0, 8);
+        for v in 0..8u64 {
+            if let Some(ppn) = s.lookup(v).ppn() {
+                assert_eq!(Some(ppn), pt_new.translate(v), "stale PPN at {v}");
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,10 @@
 
 use super::determine_k::{determine_k, THETA};
 use super::predictor::AlignPredictor;
-use super::{tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    huge_overlaps, regular_in_range, tag_aligned, tag_huge, tag_regular, Outcome, Scheme,
+};
+use crate::mem::addrspace::SpaceView;
 use crate::mem::histogram::ContigHistogram;
 use crate::pagetable::aligned::{align_vpn, select_aligned};
 use crate::pagetable::PageTable;
@@ -195,10 +198,44 @@ impl Scheme for KAligned {
         self.predictor.reset();
     }
 
-    /// Re-run Algorithm 3; on change, update aligned entries (§3.4)
-    /// and shoot down the TLB.
-    fn epoch(&mut self, _pt: &PageTable, hist: &ContigHistogram) {
-        let new_k = determine_k(hist, self.theta, self.psi);
+    /// Precise invalidation: regular/huge entries as in Base; an
+    /// aligned entry whose K-block window `[aligned, aligned +
+    /// contiguity)` intersects the range shrinks to the pages before
+    /// the range, or drops when the aligned page itself is affected.
+    /// The predictor is informed: its MRU alignment is reset whenever
+    /// aligned entries were dropped, so the next aligned lookup does
+    /// not chase an alignment the invalidation just hollowed out.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        let mut aligned_dropped = false;
+        self.tlb.retain(|tag, e| match e {
+            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Aligned { contiguity, .. } => {
+                let av = tag >> 6;
+                let aend = av + *contiguity as u64;
+                if aend <= vstart || av >= vend {
+                    true
+                } else if av < vstart {
+                    *contiguity = (vstart - av) as u32;
+                    true
+                } else {
+                    aligned_dropped = true;
+                    false
+                }
+            }
+            Entry::Invalid => true,
+        });
+        if aligned_dropped {
+            self.predictor.reset();
+        }
+    }
+
+    /// Re-run Algorithm 3 on the *current* histogram (the snapshot
+    /// handle reflects mutations applied since the last epoch); on
+    /// change, update aligned entries (§3.4) and shoot down the TLB.
+    fn epoch(&mut self, view: SpaceView<'_>) {
+        let new_k = determine_k(view.hist, self.theta, self.psi);
         if new_k != self.ks {
             self.ks = new_k;
             self.k_changes += 1;
@@ -287,15 +324,68 @@ mod tests {
 
     #[test]
     fn epoch_rechoose_k_flushes() {
-        let pt = figure4_pt();
+        let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
+        let m = MemoryMapping::new((0..16).map(|v| (v, ppns[v as usize])).collect());
+        let pt = PageTable::from_mapping(&m);
         let mut s = KAligned::with_k(vec![3], 2);
         s.fill(13, &pt);
         assert!(s.lookup(13).is_hit());
         let hist = ContigHistogram::from_sizes(&vec![16u64; 100]);
-        s.epoch(&pt, &hist);
+        s.epoch(SpaceView::new(&pt, &hist, &m));
         assert_eq!(s.kset().unwrap(), vec![4]);
         assert_eq!(s.k_changes, 1);
         assert!(matches!(s.lookup(13), Outcome::Miss { .. }), "shootdown after K change");
+    }
+
+    #[test]
+    fn invalidate_range_shrinks_and_drops_aligned_entries() {
+        // one 16-page chunk at VPN 0, k=4 entry covers [0, 16)
+        let m = MemoryMapping::new((0..16u64).map(|v| (v, v + 100)).collect());
+        let pt = PageTable::from_mapping(&m);
+        let mut s = KAligned::with_k(vec![4], 4);
+        s.fill(3, &pt);
+        assert!(s.lookup(12).is_hit());
+        // remap-style invalidation of [8, 16): entry shrinks to [0, 8)
+        s.invalidate_range(8, 8);
+        for v in 0..8u64 {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => assert_eq!(ppn, v + 100, "{v}"),
+                o => panic!("vpn {v} should hit via the shrunk entry: {o:?}"),
+            }
+        }
+        for v in 8..16u64 {
+            assert!(!s.lookup(v).is_hit(), "stale at {v}");
+        }
+        // invalidating the aligned page itself drops the entry and
+        // resets the predictor's MRU
+        s.invalidate_range(0, 4);
+        assert!(!s.lookup(1).is_hit());
+        assert_eq!(s.predictor.probe_order(&[4, 2]), vec![4, 2], "MRU reset");
+    }
+
+    #[test]
+    fn invalidate_then_refill_tracks_new_translation() {
+        // the full remap story at scheme level: fill against pt_old,
+        // invalidate the moved range, refill against pt_new — every
+        // hit afterwards must match pt_new
+        let m_old = MemoryMapping::new((0..32u64).map(|v| (v, v + 100)).collect());
+        let m_new = MemoryMapping::new((0..32u64).map(|v| (v, v + 5000)).collect());
+        let pt_old = PageTable::from_mapping(&m_old);
+        let pt_new = PageTable::from_mapping(&m_new);
+        let mut s = KAligned::with_k(vec![4, 2], 4);
+        s.fill(5, &pt_old);
+        s.invalidate_range(0, 32);
+        for v in 0..32u64 {
+            if let Some(ppn) = s.lookup(v).ppn() {
+                panic!("stale hit at {v}: {ppn}");
+            }
+        }
+        s.fill(5, &pt_new);
+        for v in 0..16u64 {
+            if let Some(ppn) = s.lookup(v).ppn() {
+                assert_eq!(Some(ppn), pt_new.translate(v), "{v}");
+            }
+        }
     }
 
     #[test]

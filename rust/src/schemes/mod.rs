@@ -16,9 +16,9 @@ pub mod kaligned;
 pub mod predictor;
 pub mod rmm;
 
-use crate::mem::histogram::ContigHistogram;
+use crate::mem::addrspace::SpaceView;
 use crate::pagetable::PageTable;
-use crate::{Ppn, Vpn};
+use crate::{Ppn, Vpn, HUGE_PAGES};
 
 /// Result of an L2 lookup.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,9 +66,26 @@ pub trait Scheme {
     /// TLB shootdown.
     fn flush(&mut self);
 
+    /// Translation-coherence protocol: the OS changed the mapping of
+    /// `[vstart, vstart + len)` (munmap, remap/migration, THP
+    /// promote/split) and every resident entry that could translate a
+    /// page in that range must go.  The default is the conservative
+    /// whole-TLB shootdown; every contender overrides it with a
+    /// precise implementation (evict matching tags, shrink coalesced
+    /// entries to their surviving run, split ranges, drop affected
+    /// anchors/aligned entries).  The invariant — tested per scheme —
+    /// is that no lookup after an invalidation returns a stale PPN.
+    fn invalidate_range(&mut self, _vstart: Vpn, _len: u64) {
+        self.flush();
+    }
+
     /// Epoch boundary (the paper re-runs Algorithm 3 every 5B
     /// instructions; Anchor-dynamic re-selects its distance every 1B).
-    fn epoch(&mut self, _pt: &PageTable, _hist: &ContigHistogram) {}
+    /// The [`SpaceView`] is a snapshot handle owned by the address
+    /// space: after mutation events it reflects the *current* page
+    /// table / histogram / mapping, so dynamic schemes re-derive from
+    /// live state rather than a stale build-time capture.
+    fn epoch(&mut self, _view: SpaceView<'_>) {}
 
     /// (correct, total) first-probe predictions over aligned hits
     /// (Table 6), if the scheme has a predictor.
@@ -106,8 +123,12 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
         (**self).flush()
     }
 
-    fn epoch(&mut self, pt: &PageTable, hist: &ContigHistogram) {
-        (**self).epoch(pt, hist)
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        (**self).invalidate_range(vstart, len)
+    }
+
+    fn epoch(&mut self, view: SpaceView<'_>) {
+        (**self).epoch(view)
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
@@ -169,8 +190,12 @@ impl Scheme for AnyScheme {
         on_scheme!(self, s => s.flush())
     }
 
-    fn epoch(&mut self, pt: &PageTable, hist: &ContigHistogram) {
-        on_scheme!(self, s => s.epoch(pt, hist))
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        on_scheme!(self, s => s.invalidate_range(vstart, len))
+    }
+
+    fn epoch(&mut self, view: SpaceView<'_>) {
+        on_scheme!(self, s => s.epoch(view))
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
@@ -206,6 +231,22 @@ pub fn tag_aligned(aligned_vpn: Vpn, k: u32) -> u64 {
 #[inline(always)]
 pub fn tag_group(group: u64) -> u64 {
     (group << 6) | 2
+}
+
+/// Invalidation predicate for a `tag_regular` entry: is its VPN inside
+/// `[vstart, vend)`?
+#[inline(always)]
+pub(crate) fn regular_in_range(tag: u64, vstart: Vpn, vend: Vpn) -> bool {
+    let v = tag >> 6;
+    v >= vstart && v < vend
+}
+
+/// Invalidation predicate for a `tag_huge` entry: does its 2MB region
+/// overlap `[vstart, vend)`?
+#[inline(always)]
+pub(crate) fn huge_overlaps(tag: u64, vstart: Vpn, vend: Vpn) -> bool {
+    let base = (tag >> 6) << 9;
+    base < vend && base + HUGE_PAGES > vstart
 }
 
 #[cfg(test)]
@@ -251,6 +292,51 @@ mod tests {
         assert_eq!(b.kset(), Some(vec![4, 2]));
         assert!(b.predictor_stats().is_some());
         b.flush();
+    }
+
+    #[test]
+    fn default_invalidate_range_is_a_conservative_flush() {
+        // a minimal scheme that does NOT override invalidate_range:
+        // the trait default must fall back to a full shootdown
+        struct Naive {
+            have: Option<Vpn>,
+        }
+        impl Scheme for Naive {
+            fn name(&self) -> String {
+                "naive".into()
+            }
+            fn lookup(&mut self, vpn: Vpn) -> Outcome {
+                match self.have {
+                    Some(v) if v == vpn => Outcome::Regular { ppn: vpn },
+                    _ => Outcome::Miss { probes: 0 },
+                }
+            }
+            fn fill(&mut self, vpn: Vpn, _pt: &PageTable) {
+                self.have = Some(vpn);
+            }
+            fn coverage_pages(&self) -> u64 {
+                u64::from(self.have.is_some())
+            }
+            fn flush(&mut self) {
+                self.have = None;
+            }
+        }
+        let mut s = Naive { have: Some(999) };
+        s.invalidate_range(0, 10); // range does not cover 999 ...
+        assert!(!s.lookup(999).is_hit(), "... but the default must flush everything");
+    }
+
+    #[test]
+    fn tag_decode_helpers_roundtrip() {
+        assert!(regular_in_range(tag_regular(100), 100, 101));
+        assert!(!regular_in_range(tag_regular(99), 100, 101));
+        assert!(!regular_in_range(tag_regular(101), 100, 101));
+        // huge region [512, 1024)
+        let t = tag_huge(700);
+        assert!(huge_overlaps(t, 1023, 1));
+        assert!(huge_overlaps(t, 0, 513));
+        assert!(!huge_overlaps(t, 0, 512));
+        assert!(!huge_overlaps(t, 1024, 100));
     }
 
     #[test]

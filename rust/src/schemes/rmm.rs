@@ -4,7 +4,8 @@
 //! chunks; with only 32 CAM entries the design pays off only when
 //! chunks are large (the paper's Figure 1/Table 4 point).
 
-use super::{tag_huge, tag_regular, Outcome, Scheme};
+use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
+use crate::mem::addrspace::SpaceView;
 use crate::mem::mapping::{Chunk, MemoryMapping};
 use crate::pagetable::PageTable;
 use crate::tlb::{RangeTlb, SetAssocTlb};
@@ -30,12 +31,20 @@ pub struct Rmm {
     chunks: Vec<Chunk>,
 }
 
+/// The OS-maintained redundant-mapping table for a mapping: every
+/// chunk large enough for a CAM entry.  Built at construction and
+/// rebuilt at epochs — one derivation, so a cold shard (`Rmm::new`)
+/// and a serial engine's epoch rebuild can never drift apart.
+fn os_table(mapping: &MemoryMapping) -> Vec<Chunk> {
+    mapping.chunks().filter(|c| c.len >= MIN_RANGE_PAGES).collect()
+}
+
 impl Rmm {
     pub fn new(mapping: &MemoryMapping) -> Self {
         Rmm {
             reg: SetAssocTlb::new(1024, 8),
             ranges: RangeTlb::new(32),
-            chunks: mapping.chunks().filter(|c| c.len >= MIN_RANGE_PAGES).collect(),
+            chunks: os_table(mapping),
         }
     }
 
@@ -118,6 +127,47 @@ impl Scheme for Rmm {
         self.reg.flush();
         self.ranges.flush();
     }
+
+    /// Precise invalidation: regular/huge entries as in Base, resident
+    /// ranges *split* around the hole (tails keep translating), and —
+    /// crucially — the OS-maintained redundant-mapping table is
+    /// trimmed the same way so a later `fill` cannot resurrect a stale
+    /// range.  Remainders below [`MIN_RANGE_PAGES`] leave the table.
+    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.reg.retain(|tag, e| match e {
+            Reg::Page(_) => !regular_in_range(tag, vstart, vend),
+            Reg::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Reg::Invalid => true,
+        });
+        self.ranges.invalidate_range(vstart, len);
+        let mut trimmed = Vec::with_capacity(self.chunks.len());
+        for c in self.chunks.drain(..) {
+            let cend = c.vstart + c.len;
+            if cend <= vstart || c.vstart >= vend {
+                trimmed.push(c);
+                continue;
+            }
+            if c.vstart < vstart && vstart - c.vstart >= MIN_RANGE_PAGES {
+                trimmed.push(Chunk { vstart: c.vstart, pstart: c.pstart, len: vstart - c.vstart });
+            }
+            if cend > vend && cend - vend >= MIN_RANGE_PAGES {
+                trimmed.push(Chunk {
+                    vstart: vend,
+                    pstart: c.pstart + (vend - c.vstart),
+                    len: cend - vend,
+                });
+            }
+        }
+        self.chunks = trimmed; // splitting preserves vstart order
+    }
+
+    /// Epoch: the OS rebuilds its redundant-mapping table from the
+    /// *current* mapping, so ranges created by mmap/THP recovery after
+    /// churn become fillable again.
+    fn epoch(&mut self, view: SpaceView<'_>) {
+        self.chunks = os_table(view.mapping);
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +224,55 @@ mod tests {
             s.fill(i * 512, &pt);
         }
         assert_eq!(s.ranges.occupancy(), 32);
+    }
+
+    #[test]
+    fn invalidate_range_splits_resident_range_and_os_table() {
+        let m = chunked_mapping(&[2048]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        s.fill(1000, &pt);
+        s.invalidate_range(900, 100); // hole [900, 1000)
+        // both tails still translate, the hole misses
+        for v in [0u64, 899, 1000, 2047] {
+            match s.lookup(v) {
+                Outcome::Coalesced { ppn, .. } => assert_eq!(Some(ppn), pt.translate(v), "{v}"),
+                o => panic!("vpn {v}: {o:?}"),
+            }
+        }
+        for v in 900..1000u64 {
+            assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
+        }
+        // the OS table was trimmed too: a fill inside the hole must
+        // not resurrect a range covering it
+        s.fill(950, &pt);
+        assert!(s.ranges.lookup(950).is_none(), "stale OS chunk resurrected");
+    }
+
+    #[test]
+    fn invalidate_drops_subminimum_remainders() {
+        let m = chunked_mapping(&[600]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        s.fill(10, &pt);
+        // cut at 300: both remainders (300, 300) < MIN_RANGE_PAGES
+        s.invalidate_range(300, 1);
+        assert!(s.chunks.is_empty(), "sub-512 remainders leave the OS table");
+        // resident range still split correctly (range TLB keeps tails)
+        assert!(s.ranges.lookup(299).is_some());
+        assert!(s.ranges.lookup(300).is_none());
+    }
+
+    #[test]
+    fn epoch_rebuilds_os_table_from_current_mapping() {
+        let m = chunked_mapping(&[600]);
+        let mut s = Rmm::new(&m);
+        s.invalidate_range(0, 601);
+        assert!(s.chunks.is_empty());
+        let hist = crate::mem::histogram::ContigHistogram::from_mapping(&m);
+        let pt = PageTable::from_mapping(&m);
+        s.epoch(SpaceView::new(&pt, &hist, &m));
+        assert_eq!(s.chunks.len(), 1, "epoch re-derives ranges from the live mapping");
     }
 
     #[test]

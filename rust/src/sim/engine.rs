@@ -6,15 +6,27 @@
 //! concrete `Engine<KAligned>`) monomorphizes the per-access loop —
 //! no virtual call, scheme lookups inline — while the default
 //! `Engine<Box<dyn Scheme>>` remains as the dynamic escape hatch for
-//! tests and one-off tooling.  The L1-hit fast path performs no
-//! page-table probe at all: the split L1 remembers each entry's page
-//! size, and `is_huge` is consulted only on the (rare) L1-miss path
-//! where fills need it.
+//! tests and one-off tooling.
+//!
+//! ## Mutable address spaces
+//!
+//! The engine no longer *owns* a page-table borrow.  Ground truth is
+//! passed per call as a [`SpaceView`] — the snapshot handle an
+//! [`crate::mem::addrspace::AddressSpace`] exposes — so the driver can
+//! interleave `run_chunk` calls with address-space mutations (mmap,
+//! munmap, remap, THP events).  After each mutation the driver calls
+//! [`Engine::invalidate_range`], which sweeps the L1 per page and
+//! forwards to the scheme's precise `invalidate_range`: the
+//! translation-coherence protocol.  Epoch hooks read the view passed
+//! with the chunk, so dynamic schemes re-derive from *current* state.
+//!
+//! The L1-hit fast path performs no page-table probe at all: the
+//! split L1 remembers each entry's page size, and `is_huge` is
+//! consulted only on the (rare) L1-miss path where fills need it.
 
 use super::latency::Latency;
 use super::metrics::Metrics;
-use crate::mem::histogram::ContigHistogram;
-use crate::pagetable::PageTable;
+use crate::mem::addrspace::SpaceView;
 use crate::schemes::{Outcome, Scheme};
 use crate::tlb::L1Tlb;
 use crate::{Vpn, HUGE_PAGES};
@@ -23,38 +35,42 @@ use crate::{Vpn, HUGE_PAGES};
 /// boundaries, scaled to trace accesses).
 pub const DEFAULT_EPOCH: u64 = 1 << 20;
 
-pub struct Engine<'pt, S: Scheme = Box<dyn Scheme>> {
+pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     scheme: S,
-    pt: &'pt PageTable,
     l1: L1Tlb,
     lat: Latency,
     metrics: Metrics,
     epoch_len: u64,
     since_epoch: u64,
-    hist: Option<ContigHistogram>,
+    /// invoke the scheme's epoch hook at epoch boundaries (enabled by
+    /// [`Engine::with_epoch`]; coverage is sampled either way)
+    epoch_hooks: bool,
     /// verify every translation against the page table (cheap enough
     /// to keep on; disable only in throughput benches)
     pub verify: bool,
 }
 
-impl<'pt, S: Scheme> Engine<'pt, S> {
-    pub fn new(scheme: S, pt: &'pt PageTable) -> Self {
+impl<S: Scheme> Engine<S> {
+    pub fn new(scheme: S) -> Self {
         Engine {
             scheme,
-            pt,
             l1: L1Tlb::new(),
             lat: Latency::default(),
             metrics: Metrics::default(),
             epoch_len: DEFAULT_EPOCH,
             since_epoch: 0,
-            hist: None,
+            epoch_hooks: false,
             verify: cfg!(debug_assertions),
         }
     }
 
-    pub fn with_epoch(mut self, epoch_len: u64, hist: ContigHistogram) -> Self {
-        self.epoch_len = epoch_len;
-        self.hist = Some(hist);
+    /// Enable epoch callbacks every `epoch_len` accesses.  The epoch
+    /// inputs are no longer cloned into the engine: the scheme's hook
+    /// receives the [`SpaceView`] passed with the current chunk, so it
+    /// always sees the live page table and histogram.
+    pub fn with_epoch(mut self, epoch_len: u64) -> Self {
+        self.epoch_len = epoch_len.max(1);
+        self.epoch_hooks = true;
         self
     }
 
@@ -71,60 +87,78 @@ impl<'pt, S: Scheme> Engine<'pt, S> {
         &self.metrics
     }
 
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
     pub fn scheme(&self) -> &S {
         &self.scheme
     }
 
-    /// Simulate one memory access to `vpn`.
+    /// Simulate one memory access to `vpn` against the translation
+    /// ground truth in `view`.
     #[inline]
-    pub fn access(&mut self, vpn: Vpn) {
+    pub fn access(&mut self, vpn: Vpn, view: SpaceView<'_>) {
         // ---- L1 (latency hidden behind cache access; no page-table
         // probe — the split L1 knows each entry's page size) ----
         if self.l1.lookup(vpn).is_some() {
             self.metrics.record_l1_hit();
-            self.tick_epoch();
+            self.tick_epoch(view);
             return;
         }
 
         // ---- L2 scheme (the fill paths below need the page size) ----
-        let is_huge = self.pt.is_huge(vpn);
-        match self.scheme.lookup(vpn) {
-            Outcome::Regular { ppn } => {
-                self.check(vpn, ppn);
-                self.metrics.record_regular_hit(&self.lat);
-                self.fill_l1(vpn, is_huge);
-            }
-            Outcome::Coalesced { ppn, probes } => {
-                self.check(vpn, ppn);
-                self.metrics.record_coalesced_hit(&self.lat, probes);
-                self.fill_l1(vpn, is_huge);
-            }
+        let is_huge = view.pt.is_huge(vpn);
+        let outcome = self.scheme.lookup(vpn);
+        match outcome {
             Outcome::Miss { probes } => {
                 // page-table walk; PPN delivered to core + L1 directly,
                 // L2 filled by the scheme (Figure 5: off the critical
-                // path for K-Aligned)
+                // path for K-Aligned).  An unmapped VPN is a fault:
+                // the walk cost is paid, nothing is filled.
                 self.metrics.record_walk(&self.lat, probes);
-                if let Some(ppn) = self.pt.translate(vpn) {
+                if let Some(ppn) = view.pt.translate(vpn) {
                     self.fill_l1_with(vpn, ppn, is_huge);
-                    self.scheme.fill(vpn, self.pt);
+                    self.scheme.fill(vpn, view.pt);
                 }
             }
+            hit => {
+                // Hit path goes through `Outcome::ppn()` so a
+                // malformed outcome (a hit carrying no PPN) surfaces
+                // as a loud error here instead of a silent wrong
+                // translation downstream.
+                let ppn = hit.ppn().unwrap_or_else(|| {
+                    panic!(
+                        "scheme {} reported a hit without a PPN for vpn {vpn}",
+                        self.scheme.name()
+                    )
+                });
+                self.check(vpn, ppn, view);
+                match hit {
+                    Outcome::Regular { .. } => self.metrics.record_regular_hit(&self.lat),
+                    Outcome::Coalesced { probes, .. } => {
+                        self.metrics.record_coalesced_hit(&self.lat, probes)
+                    }
+                    Outcome::Miss { .. } => unreachable!(),
+                }
+                self.fill_l1(vpn, is_huge, view);
+            }
         }
-        self.tick_epoch();
+        self.tick_epoch(view);
     }
 
-    /// Run a whole trace of VPNs (`Vpn = u64` end to end — the old
-    /// u32 `run` / u64 `run_u64` split is gone).
-    pub fn run(&mut self, trace: &[Vpn]) {
-        self.run_chunk(trace);
+    /// Run a whole trace of VPNs.
+    pub fn run(&mut self, trace: &[Vpn], view: SpaceView<'_>) {
+        self.run_chunk(trace, view);
     }
 
     /// Batched entry point for the streaming pipeline: one call per
-    /// trace chunk.
+    /// trace chunk (or per event-delimited sub-chunk when a mutation
+    /// schedule is active).
     #[inline]
-    pub fn run_chunk(&mut self, chunk: &[Vpn]) {
+    pub fn run_chunk(&mut self, chunk: &[Vpn], view: SpaceView<'_>) {
         for &v in chunk {
-            self.access(v);
+            self.access(v, view);
         }
     }
 
@@ -134,16 +168,32 @@ impl<'pt, S: Scheme> Engine<'pt, S> {
     pub fn flush(&mut self) {
         self.l1.flush();
         self.scheme.flush();
+        self.metrics.record_shootdown();
+    }
+
+    /// Translation-coherence step after an address-space mutation: the
+    /// mapping of `[vstart, vstart+len)` changed, so the L1 drops its
+    /// entries in the range and the scheme runs its precise
+    /// `invalidate_range`.  No resident state may translate a page of
+    /// the range afterwards — the churn oracle tests assert this for
+    /// every scheme.
+    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        if len == 0 {
+            return;
+        }
+        self.l1.invalidate_range(vstart, len);
+        self.scheme.invalidate_range(vstart, len);
+        self.metrics.record_invalidation();
     }
 
     #[inline]
-    fn fill_l1(&mut self, vpn: Vpn, is_huge: bool) {
+    fn fill_l1(&mut self, vpn: Vpn, is_huge: bool, view: SpaceView<'_>) {
         if is_huge {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
-            if let Some(base_ppn) = self.pt.translate(base_vpn) {
+            if let Some(base_ppn) = view.pt.translate(base_vpn) {
                 self.l1.fill_huge(vpn, base_ppn);
             }
-        } else if let Some(ppn) = self.pt.translate(vpn) {
+        } else if let Some(ppn) = view.pt.translate(vpn) {
             self.l1.fill_small(vpn, ppn);
         }
     }
@@ -161,11 +211,11 @@ impl<'pt, S: Scheme> Engine<'pt, S> {
     }
 
     #[inline]
-    fn check(&self, vpn: Vpn, ppn: crate::Ppn) {
+    fn check(&self, vpn: Vpn, ppn: crate::Ppn, view: SpaceView<'_>) {
         if self.verify {
             assert_eq!(
                 Some(ppn),
-                self.pt.translate(vpn),
+                view.pt.translate(vpn),
                 "scheme {} returned wrong translation for vpn {vpn}",
                 self.scheme.name()
             );
@@ -173,13 +223,13 @@ impl<'pt, S: Scheme> Engine<'pt, S> {
     }
 
     #[inline]
-    fn tick_epoch(&mut self) {
+    fn tick_epoch(&mut self, view: SpaceView<'_>) {
         self.since_epoch += 1;
         if self.since_epoch >= self.epoch_len {
             self.since_epoch = 0;
             self.metrics.record_coverage(self.scheme.coverage_pages());
-            if let Some(h) = &self.hist {
-                self.scheme.epoch(self.pt, h);
+            if self.epoch_hooks {
+                self.scheme.epoch(view);
             }
         }
     }
@@ -194,21 +244,41 @@ impl<'pt, S: Scheme> Engine<'pt, S> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::addrspace::{AddressSpace, MutationOp};
+    use crate::mem::histogram::ContigHistogram;
     use crate::mem::mapping::MemoryMapping;
+    use crate::pagetable::PageTable;
     use crate::schemes::base::BaseL2;
     use crate::schemes::kaligned::KAligned;
 
-    fn identity_pt(n: u64) -> PageTable {
-        PageTable::from_mapping(&MemoryMapping::new((0..n).map(|v| (v, v)).collect()))
+    /// Static-space fixture: mapping + page table + histogram with a
+    /// view() accessor mirroring AddressSpace.
+    struct Fix {
+        mapping: MemoryMapping,
+        pt: PageTable,
+        hist: ContigHistogram,
+    }
+
+    impl Fix {
+        fn identity(n: u64) -> Fix {
+            let mapping = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
+            let pt = PageTable::from_mapping(&mapping);
+            let hist = ContigHistogram::from_mapping(&mapping);
+            Fix { mapping, pt, hist }
+        }
+
+        fn view(&self) -> SpaceView<'_> {
+            SpaceView::new(&self.pt, &self.hist, &self.mapping)
+        }
     }
 
     #[test]
     fn first_touch_walks_then_l1_hits() {
-        let pt = identity_pt(1000);
-        let mut e = Engine::new(Box::new(BaseL2::new()), &pt);
-        e.access(5);
-        e.access(5);
-        e.access(5);
+        let f = Fix::identity(1000);
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.access(5, f.view());
+        e.access(5, f.view());
+        e.access(5, f.view());
         let m = e.metrics();
         assert_eq!(m.accesses, 3);
         assert_eq!(m.walks, 1);
@@ -218,14 +288,14 @@ mod tests {
 
     #[test]
     fn l2_hit_after_l1_eviction() {
-        let pt = identity_pt(10_000);
-        let mut e = Engine::new(Box::new(BaseL2::new()), &pt);
-        e.access(7); // walk
+        let f = Fix::identity(10_000);
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.access(7, f.view()); // walk
         // evict vpn 7 from L1 (same set: stride of 16 sets in 64e/4w L1)
         for i in 1..=4u64 {
-            e.access(7 + i * 16);
+            e.access(7 + i * 16, f.view());
         }
-        e.access(7); // L1 miss, L2 hit
+        e.access(7, f.view()); // L1 miss, L2 hit
         let m = e.metrics();
         assert_eq!(m.l2_regular_hits, 1);
         assert_eq!(m.cycles_l2_hit, 7);
@@ -235,10 +305,10 @@ mod tests {
     fn kaligned_covers_chunk_after_one_walk() {
         // one 64-page chunk: a single walk + aligned fill serves the
         // rest from L2 (modulo L1 hits)
-        let pt = identity_pt(64);
-        let mut e = Engine::new(Box::new(KAligned::with_k(vec![6], 4)), &pt);
+        let f = Fix::identity(64);
+        let mut e = Engine::new(Box::new(KAligned::with_k(vec![6], 4)));
         for v in 0..64u64 {
-            e.access(v);
+            e.access(v, f.view());
         }
         let m = e.metrics();
         assert_eq!(m.walks, 1, "only the first access walks");
@@ -249,14 +319,14 @@ mod tests {
     fn monomorphized_engine_matches_dyn_dispatch() {
         // the monomorphized hot path must be accounting-identical to
         // the Box<dyn Scheme> escape hatch
-        let pt = identity_pt(5000);
-        let mut mono = Engine::new(BaseL2::new(), &pt);
-        let mut dynd: Engine<'_, Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()), &pt);
+        let f = Fix::identity(5000);
+        let mut mono = Engine::new(BaseL2::new());
+        let mut dynd: Engine<Box<dyn Scheme>> = Engine::new(Box::new(BaseL2::new()));
         let mut v = 1u64;
         for i in 0..50_000u64 {
             v = (v.wrapping_mul(6364136223846793005).wrapping_add(i)) % 5000;
-            mono.access(v);
-            dynd.access(v);
+            mono.access(v, f.view());
+            dynd.access(v, f.view());
         }
         let (a, _) = mono.finish();
         let (b, _) = dynd.finish();
@@ -265,53 +335,103 @@ mod tests {
 
     #[test]
     fn flush_restarts_cold() {
-        let pt = identity_pt(100);
-        let mut e = Engine::new(Box::new(BaseL2::new()), &pt);
-        e.access(5);
-        e.access(5);
+        let f = Fix::identity(100);
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.access(5, f.view());
+        e.access(5, f.view());
         e.flush();
-        e.access(5); // must walk again: both L1 and L2 were shot down
+        e.access(5, f.view()); // must walk again: both L1 and L2 were shot down
         assert_eq!(e.metrics().walks, 2);
+        assert_eq!(e.metrics().shootdowns, 1);
     }
 
     #[test]
     fn run_chunk_equals_access_loop() {
-        let pt = identity_pt(2000);
+        let f = Fix::identity(2000);
         let trace: Vec<Vpn> = (0..6000u64).map(|i| (i * 37) % 2000).collect();
-        let mut a = Engine::new(Box::new(BaseL2::new()), &pt);
+        let mut a = Engine::new(Box::new(BaseL2::new()));
         for c in trace.chunks(512) {
-            a.run_chunk(c);
+            a.run_chunk(c, f.view());
         }
-        let mut b = Engine::new(Box::new(BaseL2::new()), &pt);
-        b.run(&trace);
+        let mut b = Engine::new(Box::new(BaseL2::new()));
+        b.run(&trace, f.view());
         assert_eq!(a.metrics(), b.metrics(), "chunking must not change accounting");
     }
 
     #[test]
     fn verification_catches_wrong_ppn() {
-        // build a scheme that lies: reuse BaseL2 but corrupt the pt
-        // after filling — easier: fill from a different page table
-        let pt_a = identity_pt(100);
-        let m_b = MemoryMapping::new((0..100u64).map(|v| (v, v + 1)).collect());
-        let pt_b = PageTable::from_mapping(&m_b);
+        // build a scheme that lies: fill from a different page table
+        let f_a = Fix::identity(100);
+        let f_b = {
+            let m = MemoryMapping::new((0..100u64).map(|v| (v, v + 1)).collect());
+            let pt = PageTable::from_mapping(&m);
+            let hist = ContigHistogram::from_mapping(&m);
+            Fix { mapping: m, pt, hist }
+        };
         let mut scheme = BaseL2::new();
         use crate::schemes::Scheme as _;
-        scheme.fill(5, &pt_b); // wrong translation for pt_a
-        let mut e = Engine::new(Box::new(scheme), &pt_a);
+        scheme.fill(5, &f_b.pt); // wrong translation for f_a
+        let mut e = Engine::new(Box::new(scheme));
         e.verify = true;
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.access(5)));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.access(5, f_a.view())
+        }));
         assert!(r.is_err(), "verification must catch the bogus fill");
     }
 
     #[test]
+    fn unmapped_access_is_a_walk_without_fill() {
+        let f = Fix::identity(10);
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.access(99, f.view()); // page fault: walk, nothing resident
+        e.access(99, f.view());
+        let m = e.metrics();
+        assert_eq!(m.walks, 2, "faulting accesses never become hits");
+        assert_eq!(m.l1_hits, 0);
+    }
+
+    #[test]
     fn epoch_triggers_coverage_sampling() {
-        let pt = identity_pt(100);
-        let hist = ContigHistogram::from_sizes(&[100]);
-        let mut e = Engine::new(Box::new(BaseL2::new()), &pt).with_epoch(10, hist);
+        let f = Fix::identity(100);
+        let mut e = Engine::new(Box::new(BaseL2::new())).with_epoch(10);
         for v in 0..100u64 {
-            e.access(v);
+            e.access(v, f.view());
         }
         let (m, _) = e.finish();
         assert_eq!(m.coverage_samples, 11); // 10 epochs + final
+    }
+
+    #[test]
+    fn invalidate_range_forces_rewalk_and_counts() {
+        let f = Fix::identity(100);
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.access(5, f.view()); // walk + fills
+        e.access(5, f.view()); // L1 hit
+        e.invalidate_range(0, 10);
+        e.access(5, f.view()); // both levels invalidated: walk again
+        let m = e.metrics();
+        assert_eq!(m.walks, 2);
+        assert_eq!(m.invalidations, 1);
+        // zero-length ranges are ignored
+        e.invalidate_range(50, 0);
+        assert_eq!(e.metrics().invalidations, 1);
+    }
+
+    #[test]
+    fn remap_event_with_invalidation_keeps_engine_honest() {
+        // end-to-end on a real AddressSpace: run warm, remap a region,
+        // invalidate, keep running with verify on — any stale entry
+        // would panic in check()
+        let mut aspace =
+            AddressSpace::from_mapping(MemoryMapping::new((0..256u64).map(|v| (v, v)).collect()));
+        let mut e = Engine::new(Box::new(BaseL2::new()));
+        e.verify = true;
+        let trace: Vec<Vpn> = (0..2000u64).map(|i| (i * 31) % 256).collect();
+        e.run(&trace, aspace.view());
+        for (vstart, len) in aspace.apply(&MutationOp::Remap { selector: 0 }) {
+            e.invalidate_range(vstart, len);
+        }
+        e.run(&trace, aspace.view()); // verify=on: stale hits would panic
+        assert_eq!(e.metrics().invalidations, 1);
     }
 }

@@ -26,6 +26,19 @@ pub struct Metrics {
     // coverage sampling (Table 5)
     pub coverage_samples: u64,
     pub coverage_sum_pages: u64,
+
+    // translation coherence (mutable address spaces)
+    /// ranged invalidations delivered to the scheme — one per
+    /// invalidated VA range (a single mutation event can produce
+    /// several, e.g. a THP sweep promoting multiple regions)
+    pub invalidations: u64,
+    /// whole-TLB shootdowns (engine flushes)
+    pub shootdowns: u64,
+    /// cumulative (accesses, walks) snapshots at phase boundaries —
+    /// the basis of the per-phase miss rates `repro churn` reports.
+    /// Not part of [`Metrics::accounting`]: phase marks are a per-run
+    /// timeline, and sharded merges re-thread them by offset.
+    pub phase_marks: Vec<[u64; 2]>,
 }
 
 impl Metrics {
@@ -108,6 +121,33 @@ impl Metrics {
         self.coverage_sum_pages += pages;
     }
 
+    pub(crate) fn record_invalidation(&mut self) {
+        self.invalidations += 1;
+    }
+
+    pub(crate) fn record_shootdown(&mut self) {
+        self.shootdowns += 1;
+    }
+
+    /// Snapshot the cumulative counters at a phase boundary.
+    pub fn mark_phase(&mut self) {
+        self.phase_marks.push([self.accesses, self.walks]);
+    }
+
+    /// Per-phase (accesses, walks), derived from the marks; the final
+    /// segment (after the last mark) is always included.
+    pub fn phase_stats(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(self.phase_marks.len() + 1);
+        let (mut pa, mut pw) = (0u64, 0u64);
+        for &[a, w] in &self.phase_marks {
+            out.push((a - pa, w - pw));
+            pa = a;
+            pw = w;
+        }
+        out.push((self.accesses - pa, self.walks - pw));
+        out
+    }
+
     /// The history-independent accounting counters: everything except
     /// the coverage sampling (a per-engine time average whose sample
     /// count depends on how the run was sharded).  The shard
@@ -131,8 +171,15 @@ impl Metrics {
 
     /// Merge (for sharded runs): counters add; derived ratios
     /// (`cpi`, `mean_coverage_pages`) then aggregate correctly because
-    /// their numerators and denominators both summed.
+    /// their numerators and denominators both summed.  Phase marks are
+    /// re-threaded onto the merged timeline: the other run's stream
+    /// happened after this one's, so its marks shift by this run's
+    /// pre-merge totals (shard order is merge order).
     pub fn merge(&mut self, o: &Metrics) {
+        let (base_a, base_w) = (self.accesses, self.walks);
+        for &[a, w] in &o.phase_marks {
+            self.phase_marks.push([base_a + a, base_w + w]);
+        }
         self.accesses += o.accesses;
         self.l1_hits += o.l1_hits;
         self.l2_regular_hits += o.l2_regular_hits;
@@ -145,6 +192,8 @@ impl Metrics {
         self.cycles_walk += o.cycles_walk;
         self.coverage_samples += o.coverage_samples;
         self.coverage_sum_pages += o.coverage_sum_pages;
+        self.invalidations += o.invalidations;
+        self.shootdowns += o.shootdowns;
     }
 }
 
@@ -181,6 +230,53 @@ mod tests {
         assert_eq!(h, 0.0);
         assert_eq!(c, 0.0);
         assert!((w - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_stats_slice_the_timeline() {
+        let lat = Latency::default();
+        let mut m = Metrics::default();
+        m.record_walk(&lat, 0);
+        m.record_l1_hit();
+        m.mark_phase(); // phase 1: 2 accesses, 1 walk
+        m.record_walk(&lat, 0);
+        m.record_walk(&lat, 0);
+        m.mark_phase(); // phase 2: 2 accesses, 2 walks
+        m.record_l1_hit(); // phase 3: 1 access, 0 walks
+        assert_eq!(m.phase_stats(), vec![(2, 1), (2, 2), (1, 0)]);
+        // no marks => one phase covering everything
+        let mut n = Metrics::default();
+        n.record_walk(&lat, 0);
+        assert_eq!(n.phase_stats(), vec![(1, 1)]);
+    }
+
+    #[test]
+    fn merge_rethreads_phase_marks() {
+        let lat = Latency::default();
+        let mut a = Metrics::default();
+        a.record_walk(&lat, 0);
+        a.mark_phase(); // at (1, 1)
+        a.record_l1_hit();
+        let mut b = Metrics::default();
+        b.record_l1_hit();
+        b.record_walk(&lat, 0);
+        b.mark_phase(); // at (2, 1) locally
+        a.merge(&b);
+        // b's stream follows a's: its mark lands at (2+2, 1+1)
+        assert_eq!(a.phase_marks, vec![[1, 1], [4, 2]]);
+        assert_eq!(a.phase_stats(), vec![(1, 1), (3, 1), (0, 0)]);
+    }
+
+    #[test]
+    fn merge_adds_coherence_counters() {
+        let mut a = Metrics::default();
+        a.record_invalidation();
+        a.record_shootdown();
+        let mut b = Metrics::default();
+        b.record_invalidation();
+        a.merge(&b);
+        assert_eq!(a.invalidations, 2);
+        assert_eq!(a.shootdowns, 1);
     }
 
     #[test]

@@ -74,6 +74,19 @@ impl L1Tlb {
         self.small.flush();
         self.huge.flush();
     }
+
+    /// Per-page invalidation for `[vstart, vstart + len)`: 4KB entries
+    /// in the range are dropped; a 2MB entry is dropped if its region
+    /// overlaps the range at all (the OS shoots down the whole huge
+    /// mapping).  Mirrors an `invlpg` sweep rather than a full flush.
+    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        self.small.retain(|tag, _| tag < vstart || tag >= vend);
+        self.huge.retain(|hv, _| {
+            let base = hv * HUGE_PAGES;
+            base + HUGE_PAGES <= vstart || base >= vend
+        });
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +130,20 @@ mod tests {
         assert_eq!(l1.lookup(3), Some(30));
         assert_eq!(l1.lookup(700), Some(4096 + (700 - 512)));
         assert_eq!(l1.lookup(4), None);
+    }
+
+    #[test]
+    fn invalidate_range_is_selective() {
+        let mut l1 = L1Tlb::new();
+        l1.fill_small(3, 30);
+        l1.fill_small(10, 100);
+        l1.fill_huge(512, 4096); // region [512, 1024)
+        l1.fill_huge(2048, 8192); // region [2048, 2560)
+        l1.invalidate_range(8, 1000); // hits vpn 10 and region [512,1024)
+        assert_eq!(l1.lookup_small(3), Some(30), "outside range survives");
+        assert_eq!(l1.lookup_small(10), None, "in-range 4KB entry dropped");
+        assert_eq!(l1.lookup_huge(700), None, "overlapping huge region dropped");
+        assert_eq!(l1.lookup_huge(2100), Some(8192 + (2100 - 2048)), "far huge region survives");
     }
 
     #[test]

@@ -132,6 +132,23 @@ impl<P: Clone + Default> SetAssocTlb<P> {
         }
     }
 
+    /// Selective invalidation: keep each valid entry for which `f`
+    /// returns true, invalidate the rest.  `f` may shrink an entry in
+    /// place (e.g. a coalesced entry trimmed to the surviving run)
+    /// before deciding to keep it.  Returns the number of invalidated
+    /// entries.
+    pub fn retain(&mut self, mut f: impl FnMut(u64, &mut P) -> bool) -> usize {
+        let mut dropped = 0;
+        for s in &mut self.slots {
+            if s.valid && !f(s.tag, &mut s.data) {
+                s.valid = false;
+                s.lru = 0;
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
     /// Iterate valid entries as (set, tag, data).
     pub fn iter_valid(&self) -> impl Iterator<Item = (usize, u64, &P)> {
         self.slots.iter().enumerate().filter(|(_, s)| s.valid).map(move |(i, s)| {
@@ -192,6 +209,30 @@ mod tests {
         t.flush();
         assert_eq!(t.occupancy(), 0);
         assert_eq!(t.lookup(0, 0), None);
+    }
+
+    #[test]
+    fn retain_drops_and_mutates() {
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(16, 4);
+        for i in 0..8u64 {
+            t.insert((i % 4) as usize, i, i * 10);
+        }
+        // drop odd tags, double the kept values
+        let dropped = t.retain(|tag, v| {
+            if tag % 2 == 1 {
+                return false;
+            }
+            *v *= 2;
+            true
+        });
+        assert_eq!(dropped, 4);
+        assert_eq!(t.occupancy(), 4);
+        for i in (0..8u64).step_by(2) {
+            assert_eq!(t.lookup((i % 4) as usize, i), Some(&(i * 20)), "tag {i}");
+        }
+        for i in (1..8u64).step_by(2) {
+            assert_eq!(t.lookup((i % 4) as usize, i), None, "tag {i}");
+        }
     }
 
     #[test]

@@ -73,6 +73,45 @@ impl RangeTlb {
         self.entries.clear();
     }
 
+    /// Invalidate `[vstart, vstart + len)`: overlapping ranges are
+    /// *split* — the surviving left/right remainders stay resident
+    /// (RMM's OS support invalidates at range granularity, and a
+    /// munmap in the middle of a large range must not discard the
+    /// still-valid tails).  If splitting would exceed capacity the
+    /// least-recently-used pieces are dropped.
+    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        let mut survivors: Vec<(RangeEntry, u64)> = Vec::with_capacity(self.entries.len());
+        for (e, lru) in self.entries.drain(..) {
+            let eend = e.vstart + e.len;
+            if eend <= vstart || e.vstart >= vend {
+                survivors.push((e, lru));
+                continue;
+            }
+            if e.vstart < vstart {
+                survivors.push((
+                    RangeEntry { vstart: e.vstart, len: vstart - e.vstart, pstart: e.pstart },
+                    lru,
+                ));
+            }
+            if eend > vend {
+                survivors.push((
+                    RangeEntry {
+                        vstart: vend,
+                        len: eend - vend,
+                        pstart: e.pstart + (vend - e.vstart),
+                    },
+                    lru,
+                ));
+            }
+        }
+        if survivors.len() > self.capacity {
+            survivors.sort_by_key(|&(_, lru)| std::cmp::Reverse(lru));
+            survivors.truncate(self.capacity);
+        }
+        self.entries = survivors;
+    }
+
     pub fn occupancy(&self) -> usize {
         self.entries.len()
     }
@@ -116,6 +155,31 @@ mod tests {
         t.insert(e);
         t.insert(e);
         assert_eq!(t.occupancy(), 1);
+    }
+
+    #[test]
+    fn invalidate_range_splits_overlaps() {
+        let mut t = RangeTlb::new(4);
+        t.insert(RangeEntry { vstart: 100, len: 100, pstart: 1000 }); // [100, 200)
+        t.insert(RangeEntry { vstart: 300, len: 10, pstart: 3000 });
+        t.invalidate_range(140, 20); // cuts [140, 160) out of the first
+        assert_eq!(t.lookup(139), Some(1039), "left remainder translates");
+        assert_eq!(t.lookup(140), None);
+        assert_eq!(t.lookup(159), None);
+        assert_eq!(t.lookup(160), Some(1060), "right remainder keeps its offset");
+        assert_eq!(t.lookup(199), Some(1099));
+        assert_eq!(t.lookup(305), Some(3005), "disjoint range untouched");
+        assert_eq!(t.occupancy(), 3);
+        assert_eq!(t.coverage_pages(), 40 + 40 + 10);
+    }
+
+    #[test]
+    fn invalidate_range_drops_contained_entries() {
+        let mut t = RangeTlb::new(2);
+        t.insert(RangeEntry { vstart: 10, len: 5, pstart: 0 });
+        t.invalidate_range(0, 100);
+        assert_eq!(t.occupancy(), 0);
+        assert_eq!(t.lookup(12), None);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! The `churn` workload family: benchmarks whose *address space*
+//! evolves mid-trace through a deterministic [`MutationSchedule`].
+//!
+//! The paper observes that contiguity is produced — and destroyed — by
+//! allocation, freeing and THP activity over a process' lifetime (§2).
+//! The static benchmarks freeze that process at one instant; the churn
+//! family plays it forward.  Three canonical life cycles, each split
+//! into trace phases so `repro churn` can report per-phase miss rates:
+//!
+//! * **alloc-heavy** — warm up on the initial mapping, then a burst of
+//!   mmaps grows the working set from an already-fragmented pool, then
+//!   settle (khugepaged sweeps what it can).
+//! * **free-heavy** — warm up, then a burst of munmaps punches holes
+//!   in the mapping (coalesced entries shrink, ranges split), then a
+//!   trickle of small reallocations fills the holes with minimal
+//!   contiguity.
+//! * **fragment-then-THP-recover** — a high-contiguity mapping is
+//!   fragmented (munmap + small remaps + THP splits), then compaction
+//!   migrates regions into contiguous frames and khugepaged
+//!   re-promotes: the contiguity histogram degrades and recovers, and
+//!   dynamic schemes must follow it through their epoch hooks.
+
+use crate::mem::addrspace::{MutationEvent, MutationOp, MutationSchedule};
+use crate::mem::mapgen::DemandProfile;
+use crate::prng::Rng;
+use crate::workloads::spec::Workload;
+use crate::workloads::tracegen::TraceParams;
+
+/// The three churn life cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    AllocHeavy,
+    FreeHeavy,
+    FragThpRecover,
+}
+
+impl ChurnKind {
+    pub const ALL: [ChurnKind; 3] =
+        [ChurnKind::AllocHeavy, ChurnKind::FreeHeavy, ChurnKind::FragThpRecover];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnKind::AllocHeavy => "alloc-heavy",
+            ChurnKind::FreeHeavy => "free-heavy",
+            ChurnKind::FragThpRecover => "fragment-thp-recover",
+        }
+    }
+}
+
+fn churn_wl(name: &'static str, kind: ChurnKind, seed: u32) -> Workload {
+    let ws_pages: u32 = 60_000;
+    // the recover cycle starts from high contiguity (there must be
+    // something to destroy); the others from a mixed, worn-in pool
+    let demand = match kind {
+        ChurnKind::FragThpRecover => DemandProfile {
+            total_pages: ws_pages as u64,
+            regions: vec![(513, 2048, 8), (65, 512, 30), (9, 64, 40), (1, 8, 22)],
+            frag_keep_free: 880,
+            frag_run: 2048,
+        },
+        _ => DemandProfile {
+            total_pages: ws_pages as u64,
+            regions: vec![(513, 1024, 4), (65, 512, 25), (9, 64, 40), (1, 8, 31)],
+            frag_keep_free: 720,
+            frag_run: 256,
+        },
+    };
+    Workload {
+        name,
+        params: TraceParams {
+            ws_pages,
+            hot_pages: (ws_pages / 24).max(1),
+            stride: 12,
+            t_seq: 110,
+            t_stride: 170,
+            t_hot: 225,
+            base_vpn: 0,
+            hot_base_vpn: ws_pages / 3,
+            repeat_shift: 3,
+            burst_shift: 7,
+        },
+        demand,
+        ipa: 4.0,
+        seed,
+    }
+}
+
+/// The churn benchmarks, in reporting order.
+pub fn churn_workloads() -> Vec<(ChurnKind, Workload)> {
+    vec![
+        (ChurnKind::AllocHeavy, churn_wl("churn-alloc", ChurnKind::AllocHeavy, 201)),
+        (ChurnKind::FreeHeavy, churn_wl("churn-free", ChurnKind::FreeHeavy, 202)),
+        (
+            ChurnKind::FragThpRecover,
+            churn_wl("churn-thp", ChurnKind::FragThpRecover, 203),
+        ),
+    ]
+}
+
+/// Build the deterministic mutation schedule for one churn cycle over
+/// a trace of `trace_len` accesses on a working set of `ws_pages`
+/// pages.  Three phases at [0, L/3), [L/3, 2L/3), [2L/3, L); the first
+/// event of each later phase carries the phase mark.
+pub fn build_schedule(
+    kind: ChurnKind,
+    trace_len: u64,
+    ws_pages: u64,
+    seed: u64,
+) -> MutationSchedule {
+    let mut rng = Rng::new(seed ^ 0xC4B2_2E17);
+    let l3 = (trace_len / 3).max(1);
+    let mut evs: Vec<MutationEvent> = Vec::new();
+    // spread `n` event slots uniformly over [start, start + span)
+    let slots = |n: u64, start: u64, span: u64| -> Vec<u64> {
+        (0..n).map(|i| start + span * i / n).collect()
+    };
+    match kind {
+        ChurnKind::AllocHeavy => {
+            // phase 2: a growth burst from the fragmented pool
+            for (i, at) in slots(12, l3, l3).into_iter().enumerate() {
+                let pages = rng.range(ws_pages / 96, ws_pages / 24).max(1);
+                let ev = MutationEvent::new(at, MutationOp::Mmap { pages });
+                evs.push(if i == 0 { MutationEvent { phase_start: true, ..ev } } else { ev });
+            }
+            // phase 3: settle — compaction migrates a few regions into
+            // the frames the burst freed up, then khugepaged sweeps
+            evs.push(MutationEvent::phase(2 * l3, MutationOp::ThpPromote));
+            for at in slots(3, 2 * l3 + l3 / 8, l3 / 2) {
+                evs.push(MutationEvent::new(at, MutationOp::Remap { selector: rng.next_u64() }));
+            }
+            evs.push(MutationEvent::new(2 * l3 + 3 * l3 / 4, MutationOp::ThpPromote));
+        }
+        ChurnKind::FreeHeavy => {
+            // phase 2: munmap storm
+            for (i, at) in slots(10, l3, l3).into_iter().enumerate() {
+                let ev = MutationEvent::new(at, MutationOp::Munmap { selector: rng.next_u64() });
+                evs.push(if i == 0 { MutationEvent { phase_start: true, ..ev } } else { ev });
+            }
+            // phase 3: small reallocations fill the holes
+            for (i, at) in slots(8, 2 * l3, trace_len - 2 * l3).into_iter().enumerate() {
+                let pages = rng.range(1, 16);
+                let ev = MutationEvent::new(at, MutationOp::Mmap { pages });
+                evs.push(if i == 0 { MutationEvent { phase_start: true, ..ev } } else { ev });
+            }
+        }
+        ChurnKind::FragThpRecover => {
+            // (THP variants start promoted at build; phase 1 enjoys it)
+            // phase 2: fragmentation storm — splits, frees, small allocs
+            let at2 = slots(15, l3, l3);
+            for (i, at) in at2.into_iter().enumerate() {
+                let op = match i % 3 {
+                    0 => MutationOp::ThpSplit { selector: rng.next_u64() },
+                    1 => MutationOp::Munmap { selector: rng.next_u64() },
+                    _ => MutationOp::Mmap { pages: rng.range(1, 32) },
+                };
+                let ev = MutationEvent::new(at, op);
+                evs.push(if i == 0 { MutationEvent { phase_start: true, ..ev } } else { ev });
+            }
+            // phase 3: compaction migrates regions, then re-promote
+            for (i, at) in slots(6, 2 * l3, l3 / 2).into_iter().enumerate() {
+                let ev =
+                    MutationEvent::new(at, MutationOp::Remap { selector: rng.next_u64() });
+                evs.push(if i == 0 { MutationEvent { phase_start: true, ..ev } } else { ev });
+            }
+            evs.push(MutationEvent::new(2 * l3 + l3 / 2, MutationOp::ThpPromote));
+        }
+    }
+    MutationSchedule::new(evs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_workloads_with_valid_params() {
+        let wls = churn_workloads();
+        assert_eq!(wls.len(), 3);
+        for (kind, wl) in &wls {
+            wl.params.validate().unwrap_or_else(|e| panic!("{}: {e}", wl.name));
+            assert_eq!(wl.demand.total_pages, wl.params.ws_pages as u64);
+            assert!(!kind.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn schedules_are_sorted_in_range_and_phased() {
+        for kind in ChurnKind::ALL {
+            let len = 1 << 18;
+            let s = build_schedule(kind, len, 60_000, 7);
+            assert!(!s.is_empty(), "{kind:?}");
+            assert_eq!(s.phases(), 3, "{kind:?} has three phases");
+            let evs = s.events();
+            for w in evs.windows(2) {
+                assert!(w[0].at <= w[1].at, "{kind:?} sorted");
+            }
+            assert!(evs.iter().all(|e| e.at < len), "{kind:?} events inside the trace");
+        }
+    }
+
+    #[test]
+    fn schedules_are_deterministic() {
+        for kind in ChurnKind::ALL {
+            let a = build_schedule(kind, 1 << 16, 60_000, 42);
+            let b = build_schedule(kind, 1 << 16, 60_000, 42);
+            assert_eq!(a, b);
+        }
+    }
+}

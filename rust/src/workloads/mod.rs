@@ -5,8 +5,10 @@
 //! tuned to the paper's reported per-benchmark behaviour (Figure 2/3
 //! contiguity classes, Table 5 coverage ordering).
 
+pub mod churn;
 pub mod spec;
 pub mod tracegen;
 
+pub use churn::{build_schedule, churn_workloads, ChurnKind};
 pub use spec::{all_benchmarks, benchmark, Workload};
 pub use tracegen::{NativeTraceGen, TraceParams};

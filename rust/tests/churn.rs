@@ -1,0 +1,228 @@
+//! Mutable-address-space pipeline tests: the ground-truth stale-PPN
+//! oracle over every scheme, the sharded == serial determinism
+//! property with a *non-empty* mutation schedule (including events
+//! landing exactly on shard boundaries), and the dynamic-scheme
+//! snapshot-handle regression (K selection must follow a fragmenting
+//! phase).
+
+use katlb::coordinator::{
+    drive_span, run_cell, run_cell_shard, run_cells_sharded, BenchContext, Config, SchemeKind,
+    Shard,
+};
+use katlb::mem::addrspace::{AddressSpace, MutationEvent, MutationOp, MutationSchedule};
+use katlb::mem::mapgen::DemandProfile;
+use katlb::mem::mapping::MemoryMapping;
+use katlb::prng::Rng;
+use katlb::schemes::kaligned::KAligned;
+use katlb::schemes::Scheme;
+use katlb::sim::{Engine, Metrics};
+use katlb::workloads::benchmark;
+use katlb::Vpn;
+use std::sync::Arc;
+
+/// All seven contenders, as the churn experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+/// THE churn invariant: after every mutation + invalidation, no scheme
+/// ever returns a stale PPN.  The engine runs with `verify = true`, so
+/// any stale resident entry panics inside `check()` the moment it
+/// hits; the access stream deliberately sweeps the mutated ranges.
+#[test]
+fn no_stale_ppn_after_events_for_every_scheme() {
+    let profile = DemandProfile::generic(1 << 12);
+    let ops = [
+        MutationOp::Remap { selector: 1 },
+        MutationOp::Munmap { selector: 4 },
+        MutationOp::Mmap { pages: 200 },
+        MutationOp::ThpPromote,
+        MutationOp::Remap { selector: 0 },
+        MutationOp::ThpSplit { selector: 0 },
+        MutationOp::Munmap { selector: 9 },
+        MutationOp::Remap { selector: 6 },
+    ];
+    for kind in seven() {
+        let mut aspace = AddressSpace::from_demand(&profile, 77);
+        if kind.uses_thp() {
+            aspace.promote_thp();
+        }
+        let scheme = kind.build(aspace.mapping(), aspace.hist());
+        let mut eng = Engine::new(scheme);
+        eng.verify = true;
+        let mut rng = Rng::new(kind.label().len() as u64);
+        let mut warm = |eng: &mut Engine<_>, aspace: &AddressSpace| {
+            let pages = aspace.mapping().pages();
+            for _ in 0..4_000 {
+                let v = pages[rng.below(pages.len() as u64) as usize].0;
+                eng.access(v, aspace.view());
+            }
+        };
+        warm(&mut eng, &aspace);
+        for op in &ops {
+            let ranges = aspace.apply(op);
+            for &(v, l) in &ranges {
+                eng.invalidate_range(v, l);
+            }
+            aspace.check_invariants().unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+            // sweep the mutated ranges first (a stale entry would be
+            // caught by verify), then keep running the mixed stream
+            for &(v, l) in &ranges {
+                for d in 0..l.min(64) {
+                    eng.access(v + d, aspace.view());
+                }
+            }
+            warm(&mut eng, &aspace);
+        }
+        assert!(
+            eng.metrics().invalidations > 0,
+            "{}: the op list must have produced invalidations",
+            kind.label()
+        );
+        assert!(eng.metrics().walks > 0, "{}", kind.label());
+    }
+}
+
+fn churn_cfg() -> Config {
+    Config {
+        trace_len: 1 << 15,
+        epoch: 1 << 13, // = shard length below: the epoch-alignment rule
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 13),
+        chunk_len: 1 << 12,
+        ..Config::default()
+    }
+}
+
+/// A hand-crafted schedule with events exactly on the shard
+/// boundaries of a 4-way split (plus same-timestamp pairs and
+/// mid-shard events).
+fn boundary_schedule(l: u64) -> MutationSchedule {
+    MutationSchedule::new(vec![
+        MutationEvent::new(0, MutationOp::Remap { selector: 3 }),
+        MutationEvent::phase(l / 4, MutationOp::Munmap { selector: 5 }),
+        MutationEvent::new(l / 4, MutationOp::Mmap { pages: 64 }),
+        MutationEvent::new(l / 3 + 7, MutationOp::Remap { selector: 11 }),
+        MutationEvent::phase(l / 2, MutationOp::ThpPromote),
+        MutationEvent::new(5 * l / 8 + 1, MutationOp::Munmap { selector: 2 }),
+        MutationEvent::new(3 * l / 4, MutationOp::Remap { selector: 0 }),
+    ])
+}
+
+/// Satellite property: sharded == serial holds with a non-empty
+/// MutationSchedule.  The serial run drives the same spans through one
+/// warm engine with shootdowns at the boundaries; the sharded run is
+/// cold engines per shard (the coordinator path), merged in order.
+/// Events at `t = boundary` must land identically: at the start of the
+/// owning shard, before its first access.
+#[test]
+fn sharded_equals_serial_with_mutation_schedule() {
+    let cfg = churn_cfg();
+    let mut ctx = BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap();
+    let l = ctx.trace.len;
+    ctx.schedule = boundary_schedule(l);
+    let ctx = Arc::new(ctx);
+    let shards = 4usize;
+    for kind in seven() {
+        // serial: one address space + one engine across all spans,
+        // flushed at the shard boundaries
+        let mut aspace = ctx.build_aspace(kind.uses_thp());
+        let scheme = kind.build(aspace.mapping(), aspace.hist());
+        let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
+        eng.verify = true;
+        for index in 0..shards {
+            let (s, e) = Shard { index, count: shards }.bounds(l);
+            drive_span(&ctx, &mut aspace, &mut eng, s, e).unwrap();
+            if index + 1 < shards {
+                eng.flush();
+            }
+        }
+        let (sm, _) = eng.finish();
+
+        // sharded: the coordinator's cold-engine path, merged in order
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_cell_shard(&ctx, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        assert_eq!(
+            sm.accounting(),
+            merged.accounting(),
+            "{}: sharded merge must equal serial-with-shootdowns under churn",
+            kind.label()
+        );
+        assert_eq!(sm.invalidations, merged.invalidations, "{}", kind.label());
+        assert_eq!(merged.accesses, l, "{}: shards partition the trace", kind.label());
+
+        // and the parallel fan-out is deterministic too
+        let par = run_cells_sharded(vec![(Arc::clone(&ctx), kind)], shards, 3);
+        assert_eq!(par[0].metrics, merged, "{}: pool vs serial shard loop", kind.label());
+    }
+}
+
+/// `shards = 1` through the churn path reproduces the unsharded cell
+/// bit-for-bit, and phase marks slice the whole trace.
+#[test]
+fn unsharded_churn_cell_is_deterministic_and_phased() {
+    let cfg = churn_cfg();
+    let mut ctx = BenchContext::build(benchmark("astar").unwrap(), &cfg, None).unwrap();
+    ctx.schedule = boundary_schedule(ctx.trace.len);
+    let ctx = Arc::new(ctx);
+    let a = run_cell(&ctx, SchemeKind::KAligned(2));
+    let b = run_cells_sharded(vec![(Arc::clone(&ctx), SchemeKind::KAligned(2))], 1, 2);
+    assert_eq!(a.metrics, b[0].metrics);
+    let stats = a.metrics.phase_stats();
+    assert_eq!(stats.len(), ctx.schedule.phases());
+    assert_eq!(stats.iter().map(|&(acc, _)| acc).sum::<u64>(), ctx.trace.len);
+    assert!(a.metrics.invalidations > 0);
+}
+
+/// Satellite regression: dynamic schemes re-derive from the address
+/// space's *current* snapshot at epoch boundaries.  After a
+/// fragmenting phase the contiguity histogram shifts toward small
+/// chunks, and Algorithm 3 must change its K selection.
+#[test]
+fn k_selection_changes_after_fragmenting_phase() {
+    // 64 disjoint 1024-page chunks: Algorithm 3 picks K = {10}
+    let mut pages: Vec<(Vpn, u64)> = Vec::new();
+    for c in 0..64u64 {
+        let (vb, pb) = (c * 1040, c * 1100);
+        for j in 0..1024 {
+            pages.push((vb + j, pb + j));
+        }
+    }
+    let mut aspace = AddressSpace::from_mapping(MemoryMapping::new(pages));
+    let mut scheme = KAligned::from_histogram(aspace.hist(), 4);
+    let k_before = scheme.kset().unwrap();
+    assert_eq!(k_before, vec![10], "64 uniform 1024-chunks select K = {{10}}");
+
+    // fragmenting phase: free half the large regions, reallocate the
+    // memory as 16-page mmaps
+    for _ in 0..32 {
+        aspace.apply(&MutationOp::Munmap { selector: 0 });
+    }
+    for _ in 0..512 {
+        aspace.apply(&MutationOp::Mmap { pages: 16 });
+    }
+    aspace.check_invariants().unwrap();
+
+    // the epoch hook sees the *current* histogram through the
+    // snapshot handle — stale build-time state would keep K = {10}
+    scheme.epoch(aspace.view());
+    let k_after = scheme.kset().unwrap();
+    assert_ne!(k_before, k_after, "K must follow the fragmented histogram");
+    assert!(k_after.contains(&4), "16-page chunks demand k = 4, got {k_after:?}");
+}

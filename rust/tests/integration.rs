@@ -3,6 +3,7 @@
 //! correctness invariant over every scheme.
 
 use katlb::coordinator::{run_cell, BenchContext, Config, SchemeKind};
+use katlb::mem::addrspace::SpaceView;
 use katlb::mem::histogram::ContigHistogram;
 use katlb::mem::mapgen::{self, DemandProfile, SyntheticKind};
 use katlb::pagetable::PageTable;
@@ -102,11 +103,12 @@ fn engine_verify_mode_passes_for_all_schemes() {
         },
     );
     let trace = gen.next_chunk_vpns(100_000);
+    let hist = ContigHistogram::from_mapping(&m);
     for s in all_schemes(&m) {
         let name = s.name();
-        let mut eng = Engine::new(s, &pt);
+        let mut eng = Engine::new(s);
         eng.verify = true; // assert every returned PPN
-        eng.run(&trace);
+        eng.run(&trace, SpaceView::new(&pt, &hist, &m));
         let (metrics, _) = eng.finish();
         assert_eq!(metrics.accesses, 100_000, "{name}");
         assert!(metrics.walks > 0, "{name} must miss sometimes");
@@ -123,10 +125,11 @@ fn misses_monotone_in_working_set() {
     let mk = |ws: u64| {
         let m = mapgen::synthetic(SyntheticKind::Small, ws, 5);
         let pt = PageTable::from_mapping(&m);
+        let hist = ContigHistogram::from_mapping(&m);
         let mut rng = Rng::new(1);
-        let mut eng = Engine::new(Box::new(BaseL2::new()), &pt);
+        let mut eng = Engine::new(Box::new(BaseL2::new()));
         for _ in 0..200_000 {
-            eng.access(rng.below(ws));
+            eng.access(rng.below(ws), SpaceView::new(&pt, &hist, &m));
         }
         eng.metrics().misses()
     };
@@ -143,16 +146,18 @@ fn thp_reduces_misses_on_large_contiguity() {
     mapping_thp.promote_thp();
     let pt = PageTable::from_mapping(&mapping);
     let pt_thp = PageTable::from_mapping(&mapping_thp);
-    let run = |pt: &PageTable| {
+    let run = |view: SpaceView<'_>| {
         let mut rng = Rng::new(2);
-        let mut eng = Engine::new(Box::new(BaseL2::new()), pt);
+        let mut eng = Engine::new(Box::new(BaseL2::new()));
         for _ in 0..200_000 {
-            eng.access(rng.below(ws));
+            eng.access(rng.below(ws), view);
         }
         eng.metrics().misses()
     };
-    let base = run(&pt);
-    let thp = run(&pt_thp);
+    let hist = ContigHistogram::from_mapping(&mapping);
+    let hist_thp = ContigHistogram::from_mapping(&mapping_thp);
+    let base = run(SpaceView::new(&pt, &hist, &mapping));
+    let thp = run(SpaceView::new(&pt_thp, &hist_thp, &mapping_thp));
     assert!(
         (thp as f64) < 0.8 * base as f64,
         "THP {thp} vs Base {base} on large contiguity"
@@ -184,13 +189,13 @@ fn demand_profile_generic_runs_with_dynamic_k() {
     let m = mapgen::demand(&profile, 3);
     let pt = PageTable::from_mapping(&m);
     let hist = ContigHistogram::from_mapping(&m);
-    let mut eng = Engine::new(Box::new(KAligned::from_histogram(&hist, 3)), &pt)
-        .with_epoch(1 << 12, hist.clone());
+    let mut eng =
+        Engine::new(Box::new(KAligned::from_histogram(&hist, 3))).with_epoch(1 << 12);
     let mut rng = Rng::new(4);
     let n = m.len() as u64;
     for _ in 0..50_000 {
         let i = rng.below(n) as usize;
-        eng.access(m.pages()[i].0);
+        eng.access(m.pages()[i].0, SpaceView::new(&pt, &hist, &m));
     }
     let (metrics, scheme) = eng.finish();
     assert!(metrics.coverage_samples > 0);
@@ -232,10 +237,10 @@ fn dynamic_anchor_adapts_between_phases() {
     let pt = PageTable::from_mapping(&m);
     let mut anchor = Anchor::new(1024, Mode::Dynamic);
     let hist_small = ContigHistogram::from_sizes(&vec![8u64; 500]);
-    anchor.epoch(&pt, &hist_small);
+    anchor.epoch(SpaceView::new(&pt, &hist_small, &m));
     let d1 = anchor.dist();
     let hist_large = ContigHistogram::from_sizes(&vec![1024u64; 500]);
-    anchor.epoch(&pt, &hist_large);
+    anchor.epoch(SpaceView::new(&pt, &hist_large, &m));
     let d2 = anchor.dist();
     assert!(d1 < d2, "distance must grow with chunk size ({d1} -> {d2})");
     assert_eq!(anchor.shootdowns, 2);

@@ -9,6 +9,8 @@ use katlb::coordinator::{
     remap_indices_to_vpns, run_cell, run_cell_shard, run_cells_sharded, BenchContext, Config,
     SchemeKind, Shard,
 };
+use katlb::mem::addrspace::SpaceView;
+use katlb::mem::histogram::ContigHistogram;
 use katlb::mem::mapping::MemoryMapping;
 use katlb::pagetable::PageTable;
 use katlb::prng::Rng;
@@ -62,9 +64,9 @@ fn streaming_cell_is_chunk_bounded_and_matches_materialized_run() {
     let r = run_cell(&ctx, SchemeKind::Base);
     assert_eq!(r.metrics.accesses as usize, cfg.trace_len);
     let scheme = SchemeKind::Base.build(&ctx.mapping, &ctx.hist);
-    let mut eng = Engine::new(scheme, &ctx.pt).with_epoch(ctx.epoch, ctx.hist.clone());
+    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
     eng.verify = false;
-    eng.run(&ctx.materialize_trace().unwrap());
+    eng.run(&ctx.materialize_trace().unwrap(), ctx.static_view(false));
     let (m, _) = eng.finish();
     assert_eq!(m, r.metrics, "streaming and materialized runs must be bit-identical");
 }
@@ -80,6 +82,8 @@ fn shard_merge_equals_serial_run_with_boundary_shootdowns() {
     check_cases(4, 77, |rng, case| {
         let m = random_chunked_mapping(rng, 300, 1, 600);
         let pt = PageTable::from_mapping(&m);
+        let hist = ContigHistogram::from_mapping(&m);
+        let view = SpaceView::new(&pt, &hist, &m);
         let n = m.len() as u64;
         let mut gen = Rng::new(case as u64 * 13 + 5);
         let trace: Vec<Vpn> =
@@ -98,10 +102,10 @@ fn shard_merge_equals_serial_run_with_boundary_shootdowns() {
         ];
         for (name, mk) in &builders {
             // serial: one engine, shootdown at each shard boundary
-            let mut serial = Engine::new(mk(), &pt);
+            let mut serial = Engine::new(mk());
             serial.verify = false;
             for (i, &(s, e)) in bounds.iter().enumerate() {
-                serial.run(&trace[s..e]);
+                serial.run(&trace[s..e], view);
                 if i + 1 < shards {
                     serial.flush();
                 }
@@ -111,9 +115,9 @@ fn shard_merge_equals_serial_run_with_boundary_shootdowns() {
             // sharded: cold engine per shard, metrics merged in order
             let mut merged = Metrics::default();
             for &(s, e) in &bounds {
-                let mut eng = Engine::new(mk(), &pt);
+                let mut eng = Engine::new(mk());
                 eng.verify = false;
-                eng.run(&trace[s..e]);
+                eng.run(&trace[s..e], view);
                 let (m, _) = eng.finish();
                 merged.merge(&m);
             }
