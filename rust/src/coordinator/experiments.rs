@@ -5,7 +5,8 @@
 use super::report::{bar, pct, ratio, Table};
 use super::{
     run_anchor_static, run_anchor_static_sharded, run_cell, run_cells, run_cells_sharded,
-    BenchContext, CellResult, Config, SchemeKind, TraceSpec,
+    run_tenant_cells_sharded, BenchContext, CellResult, Config, SchemeKind, TenantMixCtx,
+    TraceSpec,
 };
 use crate::error::Result;
 use crate::mem::addrspace::MutationSchedule;
@@ -479,6 +480,67 @@ pub fn churn(cfg: &Config) -> Result<Vec<Table>> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Tenants: ASID-tagged TLBs under multi-tenant scheduling
+// ---------------------------------------------------------------------------
+
+/// The multi-tenant experiment: for each tenant mix (dense vs
+/// fragmented contiguity pairings — see
+/// [`crate::workloads::tenants::tenant_mixes`]), all seven contenders
+/// time-share one TLB across the mix's address spaces under a seeded
+/// switch schedule.  Translation verification is ON, so every run
+/// doubles as the cross-tenant stale-PPN oracle (an ASID tagging bug
+/// would translate with the wrong tenant's frames and panic).
+/// Reported per scheme: each tenant's miss rate, the aggregate miss
+/// rate, and the context-switch counts — tagged schemes show zero
+/// switch-flushes, which is exactly the overcounting the pre-ASID
+/// flush-per-switch model baked in.
+pub fn tenants(cfg: &Config) -> Result<Vec<Table>> {
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let mut out = Vec::new();
+    for mix in crate::workloads::tenant_mixes() {
+        let ctx = Arc::new(TenantMixCtx::build(&mix, cfg, rt.as_ref())?);
+        let mut cols: Vec<String> =
+            ctx.tenants.iter().map(|t| format!("{} miss/1k", t.workload.name)).collect();
+        cols.push("total miss/1k".into());
+        cols.push("switches".into());
+        cols.push("flushes".into());
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!(
+                "Tenants [{}]: per-tenant L2 misses per 1K accesses ({} switches)",
+                ctx.name,
+                ctx.schedule.switches()
+            ),
+            &col_refs,
+        );
+        let cells: Vec<(Arc<TenantMixCtx>, SchemeKind)> =
+            churn_schemes().into_iter().map(|k| (Arc::clone(&ctx), k)).collect();
+        let results = run_tenant_cells_sharded(cells, cfg.shards, cfg.effective_workers());
+        for r in &results {
+            let per_1k = |walks: u64, accesses: u64| {
+                if accesses == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.2}", walks as f64 * 1000.0 / accesses as f64)
+                }
+            };
+            let mut row: Vec<String> = (0..ctx.tenants.len())
+                .map(|i| {
+                    let (a, w) = r.metrics.tenant(i);
+                    per_1k(w, a)
+                })
+                .collect();
+            row.push(per_1k(r.metrics.walks, r.metrics.accesses));
+            row.push(r.metrics.context_switches.to_string());
+            row.push(r.metrics.switch_flushes.to_string());
+            t.row(&r.scheme, row);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -531,6 +593,31 @@ mod tests {
             for (label, cells) in &t.rows {
                 let invals: u64 = cells[3].parse().unwrap();
                 assert!(invals > 0, "{label} in {} saw no invalidations", t.title);
+            }
+        }
+    }
+
+    #[test]
+    fn tenant_tables_report_all_tenants_and_schemes() {
+        let cfg = tiny();
+        let tables = tenants(&cfg).unwrap();
+        assert_eq!(tables.len(), 4, "one table per tenant mix");
+        for t in &tables {
+            assert_eq!(t.rows.len(), 7, "seven schemes: {}", t.title);
+            for (label, cells) in &t.rows {
+                let n = cells.len();
+                let switches: u64 = cells[n - 2].parse().unwrap();
+                let flushes: u64 = cells[n - 1].parse().unwrap();
+                assert!(switches > 0, "{label} in {}: no context switches", t.title);
+                assert_eq!(
+                    flushes, 0,
+                    "{label} in {}: every contender is ASID-tagged",
+                    t.title
+                );
+                // every tenant actually ran
+                for c in &cells[..n - 3] {
+                    assert_ne!(c.as_str(), "-", "{label} in {}: tenant never scheduled", t.title);
+                }
             }
         }
     }

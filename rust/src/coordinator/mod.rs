@@ -49,6 +49,22 @@
 //! timestamp `t` lands before access `t`, which places a
 //! shard-boundary event at the exact start of the owning shard — the
 //! property the sharded==serial churn tests pin down.
+//!
+//! ## Multi-tenant cells (ASID scheduling)
+//!
+//! A [`TenantMixCtx`] bundles several benchmark contexts (one
+//! [`AddressSpace`] per tenant) with a deterministic
+//! [`TenantSchedule`].  A tenant cell drives one engine across all
+//! tenants: the global timeline is cut at switch events exactly like
+//! mutation events cut chunks, each tenant's trace advances only while
+//! it is scheduled (local stream positions are reconstructable at any
+//! global index, so shards start mid-schedule for free), and
+//! [`Engine::switch_to`] delivers the switch — a tag-switch for the
+//! ASID-tagged contenders, a whole-TLB flush for default schemes,
+//! which is exactly what shard boundaries have always modeled.  A
+//! switch landing on a shard boundary is delivered (and counted) by
+//! the shard that starts there; earlier state is installed silently
+//! via `Engine::set_tenant`, keeping sharded == serial exact.
 
 pub mod experiments;
 pub mod report;
@@ -67,11 +83,13 @@ use crate::schemes::colt::Colt;
 use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
 use crate::schemes::{AnyScheme, Scheme};
+use crate::sim::tenants::TenantSchedule;
 use crate::sim::{Engine, Metrics};
 use crate::workloads::churn::{build_schedule, ChurnKind};
+use crate::workloads::tenants::TenantMix;
 use crate::workloads::tracegen::TraceParams;
 use crate::workloads::Workload;
-use crate::{bail, Vpn};
+use crate::{bail, Asid, Vpn};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -597,6 +615,171 @@ fn run_segment<S: Scheme>(
     Ok(())
 }
 
+/// Everything shared by the cells of one multi-tenant scenario: the
+/// member benchmark contexts (tenant index = position, ASID =
+/// [`Asid::from_index`]) and the switch schedule over the global
+/// access timeline.  Every tenant's [`TraceSpec`] covers the whole
+/// timeline, so any scheduling split is streamable.
+pub struct TenantMixCtx {
+    pub name: String,
+    pub tenants: Vec<Arc<BenchContext>>,
+    pub schedule: TenantSchedule,
+    /// accesses between epoch callbacks (from [`Config::epoch`])
+    pub epoch: u64,
+}
+
+impl TenantMixCtx {
+    /// Build the member contexts and the seeded switch schedule.  The
+    /// global timeline has `cfg.trace_len` accesses *total* (shared by
+    /// the tenants), so tenant cells cost the same as single-tenant
+    /// cells at equal config.
+    pub fn build(mix: &TenantMix, cfg: &Config, rt: Option<&Runtime>) -> Result<TenantMixCtx> {
+        if mix.workloads.is_empty() {
+            bail!("tenant mix {} has no workloads", mix.name);
+        }
+        let tenants = mix
+            .workloads
+            .iter()
+            .map(|w| BenchContext::build(w.clone(), cfg, rt).map(Arc::new))
+            .collect::<Result<Vec<_>>>()?;
+        let len = cfg.trace_len as u64;
+        let quantum = (len / mix.quantum_denom.max(2)).max(2);
+        let schedule = TenantSchedule::seeded(tenants.len(), len, quantum, mix.seed);
+        Ok(TenantMixCtx { name: mix.name.to_string(), tenants, schedule, epoch: cfg.epoch.max(1) })
+    }
+
+    /// Wrap one context as a single-tenant "mix" — the regression
+    /// fixture whose runs must be bit-identical to the plain pipeline.
+    pub fn single(ctx: Arc<BenchContext>) -> TenantMixCtx {
+        let len = ctx.trace.len;
+        let epoch = ctx.epoch;
+        TenantMixCtx {
+            name: ctx.workload.name.to_string(),
+            tenants: vec![ctx],
+            schedule: TenantSchedule::single(len),
+            epoch,
+        }
+    }
+
+    /// Mean instructions-per-access over the tenants (for CPI views).
+    pub fn ipa(&self) -> f64 {
+        let n = self.tenants.len().max(1) as f64;
+        self.tenants.iter().map(|c| c.workload.ipa).sum::<f64>() / n
+    }
+}
+
+/// Drive the global range `[start, end)` of a tenant mix through a
+/// warm engine: spans between switch events run the active tenant's
+/// trace (from its reconstructed local position) against that tenant's
+/// address space via [`drive_span`] — so per-tenant mutation schedules
+/// compose with tenant scheduling — and each switch event is delivered
+/// through [`Engine::switch_to`].  The caller must have installed the
+/// tenant active *before* `start` ([`Engine::set_tenant`]) and
+/// pre-applied each tenant's mutations before its local start; a
+/// switch exactly at `start` is delivered here, one exactly at `end`
+/// belongs to the next span.  Exposed for the sharded==serial tenant
+/// property tests.
+pub fn drive_tenant_span<S: Scheme>(
+    mix: &TenantMixCtx,
+    spaces: &mut [AddressSpace],
+    eng: &mut Engine<S>,
+    start: u64,
+    end: u64,
+) -> Result<()> {
+    debug_assert_eq!(spaces.len(), mix.tenants.len());
+    let evs = mix.schedule.events();
+    let mut ei = mix.schedule.first_at_or_after(start);
+    // per-tenant local stream positions, reconstructed once at `start`
+    // and then advanced incrementally span by span (recomputing
+    // local_pos per span would make the loop quadratic in switches)
+    let mut local: Vec<u64> =
+        (0..mix.tenants.len()).map(|t| mix.schedule.local_pos(t, start)).collect();
+    let mut pos = start;
+    while pos < end {
+        while ei < evs.len() && evs[ei].at == pos {
+            eng.switch_to(Asid::from_index(evs[ei].tenant));
+            ei += 1;
+        }
+        let span_end = if ei < evs.len() { evs[ei].at.min(end) } else { end };
+        let t = mix.schedule.active_at(pos);
+        let la = local[t];
+        let lb = la + (span_end - pos);
+        drive_span(&mix.tenants[t], &mut spaces[t], eng, la, lb)?;
+        local[t] = lb;
+        pos = span_end;
+    }
+    Ok(())
+}
+
+/// Run one tenant cell over the whole global timeline.
+pub fn run_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind) -> CellResult {
+    run_tenant_cell_shard(mix, kind, Shard::WHOLE)
+}
+
+/// Run one shard of a tenant cell: a cold engine reconstructs the
+/// mid-schedule state (per-tenant address spaces with pre-shard
+/// mutations applied, per-ASID scheme configuration registered from
+/// each tenant's space, the pre-boundary tenant installed silently)
+/// and then drives its global range with switches and mutations
+/// interleaved.  Verification stays ON — a cross-tenant stale entry
+/// (an ASID tagging bug) would translate with the wrong tenant's
+/// frames and panic in the engine's check.
+pub fn run_tenant_cell_shard(mix: &TenantMixCtx, kind: SchemeKind, shard: Shard) -> CellResult {
+    let (start, end) = shard.bounds(mix.schedule.len());
+    let mut spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    for (t, ctx) in mix.tenants.iter().enumerate() {
+        let l0 = mix.schedule.local_pos(t, start);
+        for ev in &ctx.schedule.events()[..ctx.schedule.first_at_or_after(l0)] {
+            spaces[t].apply(&ev.op);
+        }
+    }
+    // scheme built from tenant 0's space (the single-tenant path),
+    // remaining tenants registered so per-ASID configuration is
+    // derived from each tenant's own histogram/mapping
+    let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+    let mut eng = Engine::new(scheme).with_epoch(mix.epoch);
+    eng.verify = true;
+    for (t, space) in spaces.iter().enumerate().skip(1) {
+        eng.register_tenant(Asid::from_index(t), space.view());
+    }
+    eng.set_tenant(Asid::from_index(mix.schedule.active_before(start)));
+    drive_tenant_span(mix, &mut spaces, &mut eng, start, end)
+        .expect("tenant trace stream (mappings validated at context build)");
+    let (metrics, scheme) = eng.finish();
+    CellResult {
+        benchmark: mix.name.clone(),
+        scheme: scheme.name(),
+        kind,
+        metrics,
+        ipa: mix.ipa(),
+        predictor: scheme.predictor_stats(),
+        kset: scheme.kset(),
+        shards: 1,
+    }
+}
+
+/// The sharded tenant fan-out: (mix × scheme × shard) tasks over one
+/// worker pool, shard metrics merged in shard order — the tenant
+/// counterpart of [`run_cells_sharded`].
+pub fn run_tenant_cells_sharded(
+    cells: Vec<(Arc<TenantMixCtx>, SchemeKind)>,
+    shards: usize,
+    workers: usize,
+) -> Vec<CellResult> {
+    let shards = shards.max(1);
+    let mut tasks = Vec::with_capacity(cells.len() * shards);
+    for (mix, kind) in &cells {
+        for index in 0..shards {
+            tasks.push((Arc::clone(mix), *kind, Shard { index, count: shards }));
+        }
+    }
+    let results = run_shard_tasks(tasks, workers, |(mix, kind, shard)| {
+        run_tenant_cell_shard(mix, *kind, *shard)
+    });
+    merge_shard_results(results, cells.len(), shards)
+}
+
 fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64, u64)> {
     match (a, b) {
         (Some((c0, t0)), Some((c1, t1))) => Some((c0 + c1, t0 + t1)),
@@ -604,39 +787,50 @@ fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64,
     }
 }
 
-/// Fan shard tasks out over a worker pool (std threads; results come
-/// back in submission order).
-fn run_shard_tasks(
-    tasks: Vec<(Arc<BenchContext>, SchemeKind, Shard)>,
+/// Fan tasks out over a worker pool (scoped std threads; results come
+/// back in submission order).  Generic over the task type so the
+/// single-space and tenant shard runners share one pool.
+fn run_shard_tasks<T: Sync>(
+    tasks: Vec<T>,
     workers: usize,
+    run: impl Fn(&T) -> CellResult + Sync,
 ) -> Vec<CellResult> {
     let n = tasks.len();
-    let tasks = Arc::new(tasks);
-    let next = Arc::new(AtomicUsize::new(0));
-    let results: Arc<Vec<std::sync::Mutex<Option<CellResult>>>> =
-        Arc::new((0..n).map(|_| std::sync::Mutex::new(None)).collect());
+    let next = AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<CellResult>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
     let nw = workers.max(1).min(n.max(1));
     std::thread::scope(|s| {
         for _ in 0..nw {
-            let tasks = Arc::clone(&tasks);
-            let next = Arc::clone(&next);
-            let results = Arc::clone(&results);
+            let (tasks, next, results, run) = (&tasks, &next, &results, &run);
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= tasks.len() {
                     break;
                 }
-                let (ctx, kind, shard) = &tasks[i];
-                let r = run_cell_shard(ctx, *kind, *shard);
-                *results[i].lock().unwrap() = Some(r);
+                *results[i].lock().unwrap() = Some(run(&tasks[i]));
             });
         }
     });
-    Arc::try_unwrap(results)
-        .expect("workers joined")
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("cell completed"))
-        .collect()
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("cell completed")).collect()
+}
+
+/// Collapse shard-major results back to one [`CellResult`] per cell:
+/// shard metrics merge in shard order, predictor stats sum.
+fn merge_shard_results(results: Vec<CellResult>, cells: usize, shards: usize) -> Vec<CellResult> {
+    let mut out = Vec::with_capacity(cells);
+    let mut it = results.into_iter();
+    for _ in 0..cells {
+        let mut cell = it.next().expect("shard 0 present");
+        for _ in 1..shards {
+            let r = it.next().expect("shard present");
+            cell.metrics.merge(&r.metrics);
+            cell.predictor = merge_predictor(cell.predictor, r.predictor);
+        }
+        cell.shards = shards;
+        out.push(cell);
+    }
+    out
 }
 
 /// Fan cells out over a worker pool, unsharded (compat path — equals
@@ -661,20 +855,9 @@ pub fn run_cells_sharded(
             tasks.push((Arc::clone(ctx), *kind, Shard { index, count: shards }));
         }
     }
-    let results = run_shard_tasks(tasks, workers);
-    let mut out = Vec::with_capacity(cells.len());
-    let mut it = results.into_iter();
-    for _ in 0..cells.len() {
-        let mut cell = it.next().expect("shard 0 present");
-        for _ in 1..shards {
-            let r = it.next().expect("shard present");
-            cell.metrics.merge(&r.metrics);
-            cell.predictor = merge_predictor(cell.predictor, r.predictor);
-        }
-        cell.shards = shards;
-        out.push(cell);
-    }
-    out
+    let results =
+        run_shard_tasks(tasks, workers, |(ctx, kind, shard)| run_cell_shard(ctx, *kind, *shard));
+    merge_shard_results(results, cells.len(), shards)
 }
 
 /// Anchor-Static = best fixed distance per benchmark (the paper's

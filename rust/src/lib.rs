@@ -1,36 +1,49 @@
 //! # katlb — K-bit Aligned TLB reproduction
 //!
 //! Full reproduction of *"Coalesced TLB to Exploit Diverse Contiguity of
-//! Memory Mapping"* (CS.DC 2019): a trace-driven TLB simulator with every
+//! Memory Mapping"* (cs.DC 2019): a trace-driven TLB simulator with every
 //! baseline the paper compares against (Base, THP, COLT, Cluster, RMM,
 //! Anchor static/dynamic) and the paper's contribution, the **K-bit
 //! Aligned TLB** (Algorithms 1–3 + the alignment predictor).
 //!
-//! Three-layer architecture (see DESIGN.md):
-//! * [`runtime`] loads AOT-compiled JAX/Pallas artifacts (HLO text) via
-//!   the PJRT C API and executes them from rust — python never runs at
-//!   simulation time.  It also owns the *streaming* trace pipeline
-//!   ([`runtime::TraceStream`] + [`runtime::VpnRemap`]): traces are
-//!   never materialized, so trace length is unbounded by RAM.
-//! * [`workloads`] + the `trace_gen` artifact produce page-level access
-//!   streams for 16 benchmark proxies (SPEC2006 + graph500 + gups);
-//!   both backends are random-access by access index, so trace
-//!   *shards* start mid-stream for free.
-//! * [`coordinator`] fans experiment cells (benchmark × scheme ×
-//!   shard) out to worker threads over shared read-only state, merges
-//!   shard metrics, and regenerates every table and figure of the
-//!   paper's evaluation.
+//! ## Module map
+//!
+//! Three layers (see `DESIGN.md` for the full architecture):
+//!
+//! * **Hardware models** — [`tlb`] (generic set-associative arrays with
+//!   true LRU, the split L1, RMM's range CAM; all entry tags carry an
+//!   [`Asid`]), [`schemes`] (the seven L2 contenders behind the
+//!   [`schemes::Scheme`] trait), [`pagetable`] (translation ground
+//!   truth + the paper's Algorithms 1–3 helpers), and [`sim`] (the
+//!   monomorphized [`sim::Engine`], Table 2 latency model, and
+//!   [`sim::Metrics`] counters).
+//! * **Workload models** — [`mem`] (demand mappings, contiguity
+//!   histograms, the *mutable* [`mem::addrspace::AddressSpace`] with
+//!   its mmap/munmap/THP mutation schedules), [`workloads`] (the 16
+//!   benchmark proxies, churn cycles, and multi-tenant mixes), and
+//!   [`runtime`] (AOT JAX/Pallas artifacts via PJRT plus the streaming
+//!   trace pipeline — traces are never materialized).
+//! * **Coordination** — [`coordinator`] fans experiment cells
+//!   (benchmark × scheme × shard) out to worker threads, merges shard
+//!   metrics, and regenerates every table and figure of the paper's
+//!   evaluation; [`sim::tenants::TenantSchedule`] adds deterministic
+//!   context-switch interleaving of several address spaces over one
+//!   TLB hierarchy.
 //!
 //! The simulation hot path is monomorphized: [`sim::Engine`] is
 //! generic over its [`schemes::Scheme`], and the coordinator drives
 //! `Engine<AnyScheme>` (enum dispatch, scheme lookups inlined) instead
 //! of `Engine<Box<dyn Scheme>>` (still available as the escape hatch).
 //!
-//! The address space is *mutable*: [`mem::addrspace::AddressSpace`]
-//! applies deterministic schedules of mmap/munmap/remap/THP events
-//! between trace phases, every scheme implements a precise
-//! `invalidate_range` (translation coherence), and `repro churn`
-//! reports per-phase miss rates as contiguity degrades and recovers.
+//! The address space is *mutable and multi-tenant*:
+//! [`mem::addrspace::AddressSpace`] applies deterministic schedules of
+//! mmap/munmap/remap/THP events between trace phases, every scheme
+//! implements a precise ASID-aware `invalidate_range` (translation
+//! coherence) and an ASID-tagged `switch_to` (context switches retain
+//! other tenants' entries instead of flushing), `repro churn` reports
+//! per-phase miss rates as contiguity degrades and recovers, and
+//! `repro tenants` interleaves tenants with diverse contiguity
+//! profiles over one shared TLB.
 //!
 //! Quickstart:
 //! ```no_run
@@ -67,6 +80,39 @@ pub type Vpn = u64;
 /// Physical page number (4KB granularity).
 pub type Ppn = u64;
 
+/// Address-space identifier: the hardware tag that lets TLB entries of
+/// several tenants coexist (x86 PCID / ARM ASID).  `Asid(0)` is the
+/// single-tenant default — folding it into an entry tag is the
+/// identity, so single-tenant runs are bit-identical to the untagged
+/// pipeline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Asid(pub u16);
+
+impl Asid {
+    /// The single-tenant / boot address space.
+    pub const ZERO: Asid = Asid(0);
+
+    /// Tenant index → ASID (the tenant scheduler numbers tenants
+    /// densely from 0).
+    #[inline]
+    pub fn from_index(i: usize) -> Asid {
+        debug_assert!(i <= u16::MAX as usize);
+        Asid(i as u16)
+    }
+
+    /// ASID → dense tenant index (for per-tenant metric rows).
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for Asid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asid{}", self.0)
+    }
+}
+
 /// Pages per 2MB huge page (x86-64).
 pub const HUGE_PAGES: u64 = 512;
 
@@ -77,6 +123,7 @@ pub mod prelude {
     pub use crate::mem::mapping::MemoryMapping;
     pub use crate::pagetable::PageTable;
     pub use crate::schemes::{AnyScheme, Scheme};
+    pub use crate::sim::tenants::TenantSchedule;
     pub use crate::sim::{Engine, Metrics};
-    pub use crate::{Ppn, Vpn, HUGE_PAGES};
+    pub use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 }

@@ -9,6 +9,9 @@
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
 //!   churn      — per-phase miss rates under address-space mutation
 //!                (mmap/munmap/remap/THP events; verification on)
+//!   tenants    — multi-tenant ASID-tagged TLBs: per-tenant and
+//!                aggregate miss rates + context-switch counts under
+//!                seeded tenant scheduling (verification on)
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
@@ -89,7 +92,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!(
-                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|all|smoke> \
+                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
                  [--shards N] [--chunk N]"
             );
@@ -123,6 +126,11 @@ fn main() -> Result<()> {
         }
         "churn" => {
             for t in experiments::churn(&cfg)? {
+                println!("{}", t.render());
+            }
+        }
+        "tenants" => {
+            for t in experiments::tenants(&cfg)? {
                 println!("{}", t.render());
             }
         }
@@ -179,6 +187,9 @@ fn main() -> Result<()> {
                     println!("{}", experiments::table6(&d).render());
                     println!("{}", experiments::initcost_table().render());
                     for t in experiments::churn(&cfg)? {
+                        println!("{}", t.render());
+                    }
+                    for t in experiments::tenants(&cfg)? {
                         println!("{}", t.render());
                     }
                 }

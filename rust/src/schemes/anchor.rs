@@ -8,12 +8,15 @@
 //!   histogram at every epoch (the paper's 1B-instruction interval),
 //!   paying a TLB shootdown on change.
 
-use super::{huge_overlaps, regular_in_range, tag_aligned, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    asid_bits, huge_overlaps, regular_in_range, tag_aligned, tag_asid, tag_huge, tag_regular,
+    Outcome, Scheme, TAG_MASK,
+};
 use crate::mem::addrspace::SpaceView;
 use crate::pagetable::anchor::{anchor_vpn, select_anchor, select_distance};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -31,12 +34,27 @@ pub enum Mode {
     Dynamic,
 }
 
-pub struct Anchor {
-    tlb: SetAssocTlb<Entry>,
+/// Per-ASID anchor configuration: each tenant's contiguity profile
+/// selects its own distance (Dynamic mode re-derives it per tenant at
+/// that tenant's epochs).
+#[derive(Clone, Copy, Debug)]
+struct Lane {
+    asid: Asid,
     dist: u64,
     log2d: u32,
+}
+
+pub struct Anchor {
+    tlb: SetAssocTlb<Entry>,
+    /// per-tenant distances; `cur` indexes the running tenant's
+    lanes: Vec<Lane>,
+    cur: usize,
+    /// construction-time distance — the starting point for tenants
+    /// registered later
+    init_dist: u64,
     mode: Mode,
-    /// number of distance changes (shootdowns) — §3.4-style cost
+    /// number of distance changes (shootdowns), summed over tenants —
+    /// §3.4-style cost
     pub shootdowns: u64,
 }
 
@@ -45,15 +63,22 @@ impl Anchor {
         assert!(dist.is_power_of_two() && dist >= 2);
         Anchor {
             tlb: SetAssocTlb::new(1024, 8),
-            dist,
-            log2d: dist.trailing_zeros(),
+            lanes: vec![Lane { asid: Asid::ZERO, dist, log2d: dist.trailing_zeros() }],
+            cur: 0,
+            init_dist: dist,
             mode,
             shootdowns: 0,
         }
     }
 
+    /// The current tenant's anchor distance.
     pub fn dist(&self) -> u64 {
-        self.dist
+        self.lanes[self.cur].dist
+    }
+
+    #[inline]
+    fn lane(&self) -> Lane {
+        self.lanes[self.cur]
     }
 
     #[inline]
@@ -70,32 +95,34 @@ impl Anchor {
     /// (the same trick as Figure 7's aligned indexing).
     #[inline]
     fn set_anchor(&self, vpn: Vpn) -> usize {
-        ((vpn >> self.log2d) & self.tlb.set_mask()) as usize
+        ((vpn >> self.lane().log2d) & self.tlb.set_mask()) as usize
     }
 }
 
 impl Scheme for Anchor {
     fn name(&self) -> String {
         match self.mode {
-            Mode::Static => format!("Anchor-Static(d={})", self.dist),
+            Mode::Static => format!("Anchor-Static(d={})", self.dist()),
             Mode::Dynamic => "Anchor-Dynamic".to_string(),
         }
     }
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let lane = self.lane();
+        let a = asid_bits(lane.asid);
         let set = self.set4k(vpn);
-        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         // anchor lookup: one additional TLB access
-        let av = anchor_vpn(vpn, self.dist);
+        let av = anchor_vpn(vpn, lane.dist);
         let set = self.set_anchor(vpn);
         if let Some(&Entry::Anchor { ppn, contiguity }) =
-            self.tlb.lookup(set, tag_aligned(av, self.log2d))
+            self.tlb.lookup(set, tag_aligned(av, lane.log2d) | a)
         {
             let delta = vpn - av;
             if (contiguity as u64) > delta {
@@ -106,21 +133,23 @@ impl Scheme for Anchor {
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let lane = self.lane();
+        let a = asid_bits(lane.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn) | a, Entry::Huge(base_ppn));
             return;
         }
-        if let Some((av, c)) = select_anchor(pt, vpn, self.dist) {
+        if let Some((av, c)) = select_anchor(pt, vpn, lane.dist) {
             let ppn = pt.translate(av).expect("anchor mapped");
             self.tlb.insert(
                 self.set_anchor(vpn),
-                tag_aligned(av, self.log2d),
+                tag_aligned(av, lane.log2d) | a,
                 Entry::Anchor { ppn, contiguity: c as u32 },
             );
         } else if let Some(ppn) = pt.translate(vpn) {
-            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn) | a, Entry::Page(ppn));
         }
     }
 
@@ -140,18 +169,21 @@ impl Scheme for Anchor {
         self.tlb.flush();
     }
 
-    /// Precise invalidation: regular/huge entries as in Base; an
-    /// anchor whose covered window `[anchor, anchor+contiguity)`
-    /// intersects the range has its contiguity *shrunk* to the pages
-    /// before the range (still valid — they did not move), and is
-    /// dropped when the anchor page itself is affected.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: regular/huge entries as in Base;
+    /// an anchor of that tenant whose covered window `[anchor, anchor+
+    /// contiguity)` intersects the range has its contiguity *shrunk*
+    /// to the pages before the range (still valid — they did not
+    /// move), and is dropped when the anchor page itself is affected.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
-            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
-            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Entry::Anchor { contiguity, .. } => {
-                let av = tag >> 6;
+                if tag_asid(tag) != asid {
+                    return true; // another tenant's anchor
+                }
+                let av = (tag & TAG_MASK) >> 6;
                 let aend = av + *contiguity as u64;
                 if aend <= vstart || av >= vend {
                     true
@@ -166,17 +198,44 @@ impl Scheme for Anchor {
         });
     }
 
-    /// Dynamic mode re-selects its distance from the *current*
-    /// histogram (the [`SpaceView`] snapshot — after mutation events
-    /// this reflects the evolved contiguity, not the build-time one).
+    /// Tagged context switch: load the ASID register and select
+    /// (creating if needed, at the construction-time distance) the
+    /// tenant's distance lane; all entries stay resident.
+    fn switch_to(&mut self, asid: Asid) {
+        self.cur = match self.lanes.iter().position(|l| l.asid == asid) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane {
+                    asid,
+                    dist: self.init_dist,
+                    log2d: self.init_dist.trailing_zeros(),
+                });
+                self.lanes.len() - 1
+            }
+        };
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
+    }
+
+    /// Dynamic mode re-selects the *current tenant's* distance from
+    /// the current histogram (the [`SpaceView`] snapshot — after
+    /// mutation events this reflects the evolved contiguity, not the
+    /// build-time one).  A change rewrites that tenant's anchors, so
+    /// only its entries are shot down.
     fn epoch(&mut self, view: SpaceView<'_>) {
         if self.mode == Mode::Dynamic {
             let d = select_distance(view.hist);
-            if d != self.dist {
-                self.dist = d;
-                self.log2d = d.trailing_zeros();
+            let lane = &mut self.lanes[self.cur];
+            if d != lane.dist {
+                lane.dist = d;
+                lane.log2d = d.trailing_zeros();
+                let asid = lane.asid;
                 self.shootdowns += 1;
-                self.flush(); // distance change rewrites anchors: shootdown
+                // distance change rewrites this tenant's anchors: a
+                // per-ASID shootdown (other tenants keep their entries)
+                self.tlb.retain(|tag, _| tag_asid(tag) != asid);
             }
         }
     }
@@ -187,6 +246,37 @@ mod tests {
     use super::*;
     use crate::mem::histogram::ContigHistogram;
     use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
+
+    #[test]
+    fn per_asid_distances_and_isolation() {
+        // tenant 0 sees 8-page chunks, tenant 1 sees 1024-page chunks:
+        // dynamic mode keeps one distance per tenant
+        let (m, pt) = chunked_identityish(&[32]);
+        let mut s = Anchor::new(16, Mode::Dynamic);
+        let h_small = ContigHistogram::from_sizes(&vec![8u64; 500]);
+        let h_large = ContigHistogram::from_sizes(&vec![1024u64; 500]);
+        s.epoch(SpaceView::new(&pt, &h_small, &m));
+        let d0 = s.dist();
+        s.switch_to(Asid(1));
+        assert_eq!(s.dist(), 16, "new lanes start at the construction distance");
+        s.epoch(SpaceView::new(&pt, &h_large, &m));
+        let d1 = s.dist();
+        assert!(d0 < d1, "per-tenant distances ({d0} vs {d1})");
+        s.switch_to(Asid(0));
+        assert_eq!(s.dist(), d0, "tenant 0's distance survives the switch");
+
+        // entries are isolated by tag: a fill under tenant 0 is
+        // invisible to tenant 1 and survives tenant 1's shootdowns
+        s.fill(20, &pt);
+        assert!(s.lookup(20).is_hit());
+        s.switch_to(Asid(1));
+        assert!(!s.lookup(20).is_hit(), "cross-ASID anchor hit");
+        s.invalidate_range(Asid(1), 0, 64);
+        s.switch_to(Asid(0));
+        assert!(s.lookup(20).is_hit(), "other tenant's shootdown spared us");
+    }
 
     fn chunked_identityish(sizes: &[u64]) -> (MemoryMapping, PageTable) {
         let mut pages = Vec::new();
@@ -268,7 +358,7 @@ mod tests {
         s.fill(20, &pt); // anchor 16 covers [16, 32)
         // invalidate [10, 20): anchor 0 shrinks to [0, 10), anchor 16
         // (inside the range) drops entirely
-        s.invalidate_range(10, 10);
+        s.invalidate_range(A0, 10, 10);
         for v in 0..10u64 {
             match s.lookup(v) {
                 Outcome::Coalesced { ppn, .. } => assert_eq!(Some(ppn), pt.translate(v), "{v}"),

@@ -3,10 +3,12 @@
 //! exactly this hardware run over a THP-promoted mapping, so the same
 //! type serves both rows (the coordinator names it accordingly).
 
-use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    asid_bits, huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme,
+};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -20,6 +22,8 @@ enum Entry {
 pub struct BaseL2 {
     tlb: SetAssocTlb<Entry>,
     label: &'static str,
+    /// the ASID register: lookups/fills tag-match against it
+    asid: Asid,
 }
 
 impl BaseL2 {
@@ -29,7 +33,7 @@ impl BaseL2 {
 
     /// Same hardware, different experiment label (THP row).
     pub fn named(label: &'static str) -> Self {
-        BaseL2 { tlb: SetAssocTlb::new(1024, 8), label }
+        BaseL2 { tlb: SetAssocTlb::new(1024, 8), label, asid: Asid::ZERO }
     }
 
     #[inline]
@@ -56,24 +60,26 @@ impl Scheme for BaseL2 {
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
         // 4KB and 2MB arrays probed in parallel in hardware: one access
+        let a = asid_bits(self.asid);
         let set = self.set4k(vpn);
-        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         Outcome::Miss { probes: 0 }
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let a = asid_bits(self.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn) | a, Entry::Huge(base_ppn));
         } else if let Some(ppn) = pt.translate(vpn) {
-            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn) | a, Entry::Page(ppn));
         }
     }
 
@@ -92,15 +98,26 @@ impl Scheme for BaseL2 {
         self.tlb.flush();
     }
 
-    /// Precise invalidation: evict 4KB entries whose VPN is in the
-    /// range and 2MB entries whose region overlaps it.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: evict that tenant's 4KB entries
+    /// whose VPN is in the range and its 2MB entries whose region
+    /// overlaps it; other tenants' entries stay resident.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
-            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
-            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Entry::Invalid => true,
         });
+    }
+
+    /// Tagged context switch: load the ASID register, retain all
+    /// entries — tag-match isolates the tenants.
+    fn switch_to(&mut self, asid: Asid) {
+        self.asid = asid;
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
     }
 }
 
@@ -108,6 +125,8 @@ impl Scheme for BaseL2 {
 mod tests {
     use super::*;
     use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
 
     fn identity_pt(n: u64, thp: bool) -> PageTable {
         let mut m = MemoryMapping::new((0..n).map(|v| (v, v)).collect());
@@ -159,7 +178,7 @@ mod tests {
         for v in 0..100u64 {
             s.fill(v, &pt_old);
         }
-        s.invalidate_range(20, 10);
+        s.invalidate_range(A0, 20, 10);
         for v in 20..30u64 {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale entry at {v}");
         }
@@ -174,9 +193,31 @@ mod tests {
         s.fill(700, &pt); // huge region [512, 1024)
         s.fill(1500, &pt); // huge region [1024, 1536)... fill picks region of 1500
         assert!(s.lookup(600).is_hit());
-        s.invalidate_range(1000, 8); // overlaps [512,1024) only
+        s.invalidate_range(A0, 1000, 8); // overlaps [512,1024) only
         assert_eq!(s.lookup(600), Outcome::Miss { probes: 0 });
         assert!(s.lookup(1500).is_hit(), "non-overlapping huge region survives");
+    }
+
+    #[test]
+    fn switch_to_retains_and_isolates_tenants() {
+        // tenant 0 and tenant 1 map the same VPN to different frames
+        let pt0 = identity_pt(64, false);
+        let m1 = MemoryMapping::new((0..64u64).map(|v| (v, v + 9000)).collect());
+        let pt1 = PageTable::from_mapping(&m1);
+        let mut s = BaseL2::new();
+        s.fill(5, &pt0);
+        s.switch_to(Asid(1));
+        assert_eq!(s.lookup(5), Outcome::Miss { probes: 0 }, "cross-ASID hit");
+        s.fill(5, &pt1);
+        assert_eq!(s.lookup(5), Outcome::Regular { ppn: 9005 });
+        // switching back finds tenant 0's entry still resident
+        s.switch_to(Asid(0));
+        assert_eq!(s.lookup(5), Outcome::Regular { ppn: 5 }, "tagged switch retains");
+        // a ranged shootdown for tenant 1 spares tenant 0
+        s.invalidate_range(Asid(1), 0, 64);
+        assert_eq!(s.lookup(5), Outcome::Regular { ppn: 5 });
+        s.switch_to(Asid(1));
+        assert_eq!(s.lookup(5), Outcome::Miss { probes: 0 });
     }
 
     #[test]
@@ -184,7 +225,11 @@ mod tests {
         let pt = identity_pt(64, false);
         let mut s = BaseL2::new();
         s.fill(1, &pt);
+        s.switch_to(Asid(1));
+        s.fill(2, &pt);
         s.flush();
+        assert_eq!(s.lookup(2), Outcome::Miss { probes: 0 });
+        s.switch_to(Asid(0));
         assert_eq!(s.lookup(1), Outcome::Miss { probes: 0 });
         assert_eq!(s.coverage_pages(), 0);
     }

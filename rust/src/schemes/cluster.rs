@@ -4,10 +4,13 @@
 //! a single 8-frame physical cluster: per-page 3-bit offsets + valid
 //! bits beside the shared physical cluster base.
 
-use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    asid_bits, huge_overlaps, regular_in_range, tag_asid, tag_huge, tag_regular, Outcome,
+    Scheme, TAG_MASK,
+};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 const GROUP: u64 = 8;
 
@@ -31,6 +34,8 @@ struct Clu {
 pub struct Cluster {
     reg: SetAssocTlb<Reg>,
     clu: SetAssocTlb<Clu>,
+    /// the ASID register: lookups/fills tag-match against it
+    asid: Asid,
 }
 
 impl Cluster {
@@ -39,6 +44,7 @@ impl Cluster {
             // 768 entries, 6-way => 128 sets; 320 entries, 5-way => 64 sets
             reg: SetAssocTlb::new(768, 6),
             clu: SetAssocTlb::new(320, 5),
+            asid: Asid::ZERO,
         }
     }
 
@@ -89,17 +95,18 @@ impl Scheme for Cluster {
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
         // regular + clustered arrays probed in parallel
+        let a = asid_bits(self.asid);
         let set = self.set4k(vpn);
-        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn)) {
+        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn)) {
+        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         let group = vpn / GROUP;
         let set = self.setclu(group);
-        if let Some(e) = self.clu.lookup(set, group) {
+        if let Some(e) = self.clu.lookup(set, group | a) {
             let j = (vpn % GROUP) as usize;
             if e.valid & (1 << j) != 0 {
                 return Outcome::Coalesced {
@@ -112,18 +119,19 @@ impl Scheme for Cluster {
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let a = asid_bits(self.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.reg.insert(self.set2m(vpn), tag_huge(vpn), Reg::Huge(base_ppn));
+            self.reg.insert(self.set2m(vpn), tag_huge(vpn) | a, Reg::Huge(base_ppn));
             return;
         }
         if let Some(e) = Self::make_cluster(pt, vpn) {
             if e.valid.count_ones() >= 2 {
                 let group = vpn / GROUP;
-                self.clu.insert(self.setclu(group), group, e);
+                self.clu.insert(self.setclu(group), group | a, e);
             } else if let Some(ppn) = pt.translate(vpn) {
-                self.reg.insert(self.set4k(vpn), tag_regular(vpn), Reg::Page(ppn));
+                self.reg.insert(self.set4k(vpn), tag_regular(vpn) | a, Reg::Page(ppn));
             }
         }
     }
@@ -147,19 +155,22 @@ impl Scheme for Cluster {
         self.clu.flush();
     }
 
-    /// Precise invalidation: regular/huge entries as in Base; a
-    /// clustered entry clears the valid bits of pages in the range
-    /// (per-page valid bits make this exact) and is dropped only when
-    /// no valid page remains.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: regular/huge entries as in Base;
+    /// a clustered entry of that tenant clears the valid bits of pages
+    /// in the range (per-page valid bits make this exact) and is
+    /// dropped only when no valid page remains.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         self.reg.retain(|tag, e| match e {
-            Reg::Page(_) => !regular_in_range(tag, vstart, vend),
-            Reg::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Reg::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Reg::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Reg::Invalid => true,
         });
-        self.clu.retain(|group, e| {
-            let gbase = group * GROUP;
+        self.clu.retain(|tag, e| {
+            if tag_asid(tag) != asid {
+                return true; // another tenant's cluster entry
+            }
+            let gbase = (tag & TAG_MASK) * GROUP;
             if gbase + GROUP > vstart && gbase < vend {
                 for j in 0..GROUP {
                     let v = gbase + j;
@@ -171,12 +182,48 @@ impl Scheme for Cluster {
             e.valid != 0
         });
     }
+
+    /// Tagged context switch: load the ASID register, retain all
+    /// entries — tag-match isolates the tenants.
+    fn switch_to(&mut self, asid: Asid) {
+        self.asid = asid;
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
+
+    #[test]
+    fn switch_to_retains_and_isolates_clusters() {
+        let pages = vec![(0u64, 83), (1, 80), (2, 86), (3, 81)];
+        let pt0 = PageTable::from_mapping(&MemoryMapping::new(pages));
+        let pt1 = PageTable::from_mapping(&MemoryMapping::new(vec![
+            (0u64, 163),
+            (1, 160),
+            (2, 166),
+            (3, 161),
+        ]));
+        let mut s = Cluster::new();
+        s.fill(0, &pt0);
+        assert!(s.lookup(1).is_hit());
+        s.switch_to(Asid(1));
+        assert!(!s.lookup(1).is_hit(), "cross-ASID cluster hit");
+        s.fill(0, &pt1);
+        assert_eq!(s.lookup(1).ppn(), Some(160), "tenant 1's own frames");
+        // invalidating tenant 1 spares tenant 0's entry
+        s.invalidate_range(Asid(1), 0, 8);
+        assert!(!s.lookup(1).is_hit());
+        s.switch_to(Asid(0));
+        assert_eq!(s.lookup(1).ppn(), Some(80), "tenant 0 retained across switches");
+    }
 
     #[test]
     fn clustered_hit_with_permuted_offsets() {
@@ -229,7 +276,7 @@ mod tests {
         let pt = PageTable::from_mapping(&MemoryMapping::new(pages));
         let mut s = Cluster::new();
         s.fill(0, &pt);
-        s.invalidate_range(2, 3); // pages 2,3,4 invalid
+        s.invalidate_range(A0, 2, 3); // pages 2,3,4 invalid
         for v in [0u64, 1, 5, 6, 7] {
             assert!(s.lookup(v).is_hit(), "page {v} outside range must survive");
         }
@@ -237,7 +284,7 @@ mod tests {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
         }
         // invalidating the rest drops the entry entirely
-        s.invalidate_range(0, 8);
+        s.invalidate_range(A0, 0, 8);
         assert_eq!(s.coverage_pages(), 0);
     }
 
@@ -249,7 +296,7 @@ mod tests {
         let mut s = Cluster::new();
         s.fill(700, &pt); // huge region [512, 1024)
         assert!(s.lookup(600).is_hit());
-        s.invalidate_range(600, 1);
+        s.invalidate_range(A0, 600, 1);
         assert_eq!(s.lookup(700), Outcome::Miss { probes: 0 }, "huge entry dropped");
     }
 

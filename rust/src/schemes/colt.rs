@@ -5,10 +5,13 @@
 //! indexed by the group number (bits above the 3 coalesced bits), so
 //! one lookup probes both interpretations.
 
-use super::{huge_overlaps, regular_in_range, tag_group, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    asid_bits, huge_overlaps, regular_in_range, tag_asid, tag_group, tag_huge, tag_regular,
+    Outcome, Scheme, TAG_MASK,
+};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 const GROUP: u64 = 8;
 
@@ -25,11 +28,13 @@ enum Entry {
 
 pub struct Colt {
     tlb: SetAssocTlb<Entry>,
+    /// the ASID register: lookups/fills tag-match against it
+    asid: Asid,
 }
 
 impl Colt {
     pub fn new() -> Self {
-        Colt { tlb: SetAssocTlb::new(1024, 8) }
+        Colt { tlb: SetAssocTlb::new(1024, 8), asid: Asid::ZERO }
     }
 
     #[inline]
@@ -83,19 +88,21 @@ impl Scheme for Colt {
     }
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let a = asid_bits(self.asid);
         let set = self.set4k(vpn);
-        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         // coalesced probe: part of the same physical access in COLT's
         // design (modified index + tag match), so no extra probe cost
         let group = vpn / GROUP;
         let set = self.setgrp(group);
-        if let Some(&Entry::Coal { start, len, pbase }) = self.tlb.lookup(set, tag_group(group))
+        if let Some(&Entry::Coal { start, len, pbase }) =
+            self.tlb.lookup(set, tag_group(group) | a)
         {
             let off = (vpn & (GROUP - 1)) as u8;
             if off >= start && off < start + len {
@@ -106,10 +113,11 @@ impl Scheme for Colt {
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let a = asid_bits(self.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn) | a, Entry::Huge(base_ppn));
             return;
         }
         match Self::group_run(pt, vpn) {
@@ -117,13 +125,13 @@ impl Scheme for Colt {
                 let group = vpn / GROUP;
                 self.tlb.insert(
                     self.setgrp(group),
-                    tag_group(group),
+                    tag_group(group) | a,
                     Entry::Coal { start, len, pbase },
                 );
             }
             Some(_) => {
                 if let Some(ppn) = pt.translate(vpn) {
-                    self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+                    self.tlb.insert(self.set4k(vpn), tag_regular(vpn) | a, Entry::Page(ppn));
                 }
             }
             None => {}
@@ -146,17 +154,20 @@ impl Scheme for Colt {
         self.tlb.flush();
     }
 
-    /// Precise invalidation: regular/huge entries as in Base; a
-    /// coalesced group entry overlapping the range is *shrunk* to its
-    /// larger surviving side (prefix before the range or suffix after
-    /// it), or dropped when nothing survives.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: regular/huge entries as in Base;
+    /// a coalesced group entry of that tenant overlapping the range is
+    /// *shrunk* to its larger surviving side (prefix before the range
+    /// or suffix after it), or dropped when nothing survives.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
-            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
-            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Entry::Coal { start, len: clen, pbase } => {
-                let ebase = (tag >> 6) * GROUP + *start as u64;
+                if tag_asid(tag) != asid {
+                    return true; // another tenant's group entry
+                }
+                let ebase = ((tag & TAG_MASK) >> 6) * GROUP + *start as u64;
                 let eend = ebase + *clen as u64;
                 if eend <= vstart || ebase >= vend {
                     return true; // disjoint
@@ -180,12 +191,24 @@ impl Scheme for Colt {
             Entry::Invalid => true,
         });
     }
+
+    /// Tagged context switch: load the ASID register, retain all
+    /// entries — tag-match isolates the tenants.
+    fn switch_to(&mut self, asid: Asid) {
+        self.asid = asid;
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
 
     #[test]
     fn coalesces_full_group() {
@@ -241,7 +264,7 @@ mod tests {
         let pt = PageTable::from_mapping(&m);
         let mut s = Colt::new();
         s.fill(2, &pt);
-        s.invalidate_range(3, 2);
+        s.invalidate_range(A0, 3, 2);
         // prefix [0,3) survives (longer side), [3,8) must miss
         for v in 0..3u64 {
             assert!(matches!(s.lookup(v), Outcome::Coalesced { ppn, .. } if ppn == v + 50), "{v}");
@@ -252,7 +275,7 @@ mod tests {
         // suffix-surviving case: cut the head instead
         let mut s = Colt::new();
         s.fill(10, &pt); // group 1: [8,16)
-        s.invalidate_range(8, 3); // [8,11) gone, [11,16) survives
+        s.invalidate_range(A0, 8, 3); // [8,11) gone, [11,16) survives
         for v in 8..11u64 {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
         }
@@ -262,7 +285,7 @@ mod tests {
         // full-cover case: entry dropped entirely
         let mut s = Colt::new();
         s.fill(2, &pt);
-        s.invalidate_range(0, 8);
+        s.invalidate_range(A0, 0, 8);
         assert_eq!(s.coverage_pages(), 0);
     }
 
@@ -275,7 +298,7 @@ mod tests {
         s.fill(4, &pt_old);
         let m_new = MemoryMapping::new((0..8u64).map(|v| (v, v + 900)).collect());
         let pt_new = PageTable::from_mapping(&m_new);
-        s.invalidate_range(0, 8);
+        s.invalidate_range(A0, 0, 8);
         for v in 0..8u64 {
             if let Some(ppn) = s.lookup(v).ppn() {
                 assert_eq!(Some(ppn), pt_new.translate(v), "stale PPN at {v}");

@@ -18,14 +18,15 @@
 use super::determine_k::{determine_k, THETA};
 use super::predictor::AlignPredictor;
 use super::{
-    huge_overlaps, regular_in_range, tag_aligned, tag_huge, tag_regular, Outcome, Scheme,
+    asid_bits, huge_overlaps, regular_in_range, tag_aligned, tag_asid, tag_huge, tag_regular,
+    Outcome, Scheme, TAG_MASK,
 };
 use crate::mem::addrspace::SpaceView;
 use crate::mem::histogram::ContigHistogram;
 use crate::pagetable::aligned::{align_vpn, select_aligned};
 use crate::pagetable::PageTable;
 use crate::tlb::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -38,16 +39,28 @@ enum Entry {
     Aligned { ppn: Ppn, contiguity: u32, k: u8 },
 }
 
-pub struct KAligned {
-    tlb: SetAssocTlb<Entry>,
+/// Per-ASID K-Aligned configuration: Algorithm 3 runs on each
+/// tenant's own contiguity histogram, so every tenant gets the K set
+/// (and MRU predictor) its mapping deserves — the paper's per-process
+/// OS support, virtualized.
+struct Lane {
+    asid: Asid,
     /// K sorted descending (Algorithm 1/2 probe order)
     ks: Vec<u32>,
+    predictor: AlignPredictor,
+}
+
+pub struct KAligned {
+    tlb: SetAssocTlb<Entry>,
+    /// per-tenant K sets + predictors; `cur` indexes the running one
+    lanes: Vec<Lane>,
+    cur: usize,
     psi: usize,
     theta: f64,
-    predictor: AlignPredictor,
     /// §3.2 ablation: false = plain descending-K aligned lookup
     use_predictor: bool,
-    /// K recomputations that changed K (each costs a shootdown)
+    /// K recomputations that changed some tenant's K (each costs a
+    /// per-ASID shootdown), summed over tenants
     pub k_changes: u64,
 }
 
@@ -58,10 +71,10 @@ impl KAligned {
         ks.dedup();
         KAligned {
             tlb: SetAssocTlb::new(1024, 8),
-            ks,
+            lanes: vec![Lane { asid: Asid::ZERO, ks, predictor: AlignPredictor::new() }],
+            cur: 0,
             psi,
             theta: THETA,
-            predictor: AlignPredictor::new(),
             use_predictor: true,
             k_changes: 0,
         }
@@ -90,8 +103,9 @@ impl KAligned {
         Box::new(Self::with_k(vec![4, 9], psi))
     }
 
+    /// The current tenant's K, descending.
     pub fn kset_desc(&self) -> &[u32] {
-        &self.ks
+        &self.lanes[self.cur].ks
     }
 
     #[inline]
@@ -117,17 +131,22 @@ impl KAligned {
 
 impl Scheme for KAligned {
     fn name(&self) -> String {
-        format!("|K|={} Aligned", self.ks.len().max(1))
+        // the primary (build-time) lane names the contender: a stable
+        // row label even when later-registered tenants derive K sets
+        // of a different size
+        format!("|K|={} Aligned", self.lanes[0].ks.len().max(1))
     }
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let lane = &self.lanes[self.cur];
+        let a = asid_bits(lane.asid);
         // --- regular look-up (Figure 6 left) ---
         let set = self.set4k(vpn);
-        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn)) {
+        if let Some(&Entry::Page(ppn)) = self.tlb.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn)) {
+        if let Some(&Entry::Huge(base)) = self.tlb.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         // --- aligned look-up (Algorithm 2), predictor first (§3.2),
@@ -135,16 +154,16 @@ impl Scheme for KAligned {
         let mut probes = 0u32;
         let mut hit: Option<(u32, crate::Ppn)> = None;
         let order: Box<dyn Iterator<Item = u32> + '_> = if self.use_predictor {
-            Box::new(self.predictor.probe_iter(&self.ks))
+            Box::new(lane.predictor.probe_iter(&lane.ks))
         } else {
-            Box::new(self.ks.iter().copied())
+            Box::new(lane.ks.iter().copied())
         };
         for k in order {
             let av = align_vpn(vpn, k);
-            let set = self.set_aligned(vpn, k);
+            let set = ((vpn >> k) & self.tlb.set_mask()) as usize;
             probes += 1;
             if let Some(&Entry::Aligned { ppn, contiguity, k: ek }) =
-                self.tlb.lookup(set, tag_aligned(av, k))
+                self.tlb.lookup(set, tag_aligned(av, k) | a)
             {
                 debug_assert_eq!(ek as u32, k);
                 let delta = vpn - av;
@@ -155,29 +174,31 @@ impl Scheme for KAligned {
             }
         }
         if let Some((k, ppn)) = hit {
-            self.predictor.record_hit(k, probes as usize - 1);
+            self.lanes[self.cur].predictor.record_hit(k, probes as usize - 1);
             return Outcome::Coalesced { ppn, probes };
         }
         Outcome::Miss { probes }
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let lane = &self.lanes[self.cur];
+        let a = asid_bits(lane.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.tlb.insert(self.set2m(vpn), tag_huge(vpn), Entry::Huge(base_ppn));
+            self.tlb.insert(self.set2m(vpn), tag_huge(vpn) | a, Entry::Huge(base_ppn));
             return;
         }
         // Algorithm 1: widest-covering aligned entry, else regular
-        if let Some((k, av, c)) = select_aligned(pt, vpn, &self.ks) {
+        if let Some((k, av, c)) = select_aligned(pt, vpn, &lane.ks) {
             let ppn = pt.translate(av).expect("aligned entry mapped");
             self.tlb.insert(
                 self.set_aligned(vpn, k),
-                tag_aligned(av, k),
+                tag_aligned(av, k) | a,
                 Entry::Aligned { ppn, contiguity: c as u32, k: k as u8 },
             );
         } else if let Some(ppn) = pt.translate(vpn) {
-            self.tlb.insert(self.set4k(vpn), tag_regular(vpn), Entry::Page(ppn));
+            self.tlb.insert(self.set4k(vpn), tag_regular(vpn) | a, Entry::Page(ppn));
         }
     }
 
@@ -195,24 +216,31 @@ impl Scheme for KAligned {
 
     fn flush(&mut self) {
         self.tlb.flush();
-        self.predictor.reset();
+        // a whole-TLB shootdown hollows out every tenant's alignments
+        for lane in &mut self.lanes {
+            lane.predictor.reset();
+        }
     }
 
-    /// Precise invalidation: regular/huge entries as in Base; an
-    /// aligned entry whose K-block window `[aligned, aligned +
-    /// contiguity)` intersects the range shrinks to the pages before
-    /// the range, or drops when the aligned page itself is affected.
-    /// The predictor is informed: its MRU alignment is reset whenever
-    /// aligned entries were dropped, so the next aligned lookup does
-    /// not chase an alignment the invalidation just hollowed out.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: regular/huge entries as in Base;
+    /// an aligned entry of that tenant whose K-block window `[aligned,
+    /// aligned + contiguity)` intersects the range shrinks to the
+    /// pages before the range, or drops when the aligned page itself
+    /// is affected.  The tenant's predictor is informed: its MRU
+    /// alignment is reset whenever aligned entries were dropped, so
+    /// the next aligned lookup does not chase an alignment the
+    /// invalidation just hollowed out.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         let mut aligned_dropped = false;
         self.tlb.retain(|tag, e| match e {
-            Entry::Page(_) => !regular_in_range(tag, vstart, vend),
-            Entry::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Entry::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Entry::Aligned { contiguity, .. } => {
-                let av = tag >> 6;
+                if tag_asid(tag) != asid {
+                    return true; // another tenant's aligned entry
+                }
+                let av = (tag & TAG_MASK) >> 6;
                 let aend = av + *contiguity as u64;
                 if aend <= vstart || av >= vend {
                     true
@@ -227,28 +255,62 @@ impl Scheme for KAligned {
             Entry::Invalid => true,
         });
         if aligned_dropped {
-            self.predictor.reset();
+            if let Some(lane) = self.lanes.iter_mut().find(|l| l.asid == asid) {
+                lane.predictor.reset();
+            }
         }
     }
 
-    /// Re-run Algorithm 3 on the *current* histogram (the snapshot
-    /// handle reflects mutations applied since the last epoch); on
-    /// change, update aligned entries (§3.4) and shoot down the TLB.
+    /// Tagged context switch: load the ASID register and select
+    /// (creating if needed, with an empty K until the tenant's first
+    /// epoch derives one) the tenant's K lane; all entries stay
+    /// resident.
+    fn switch_to(&mut self, asid: Asid) {
+        self.cur = match self.lanes.iter().position(|l| l.asid == asid) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane {
+                    asid,
+                    ks: Vec::new(),
+                    predictor: AlignPredictor::new(),
+                });
+                self.lanes.len() - 1
+            }
+        };
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
+    }
+
+    /// Re-run Algorithm 3 on the *current tenant's* histogram (the
+    /// snapshot handle reflects mutations applied since the last
+    /// epoch); on change, update aligned entries (§3.4) and shoot down
+    /// that tenant's entries — other tenants keep theirs.
     fn epoch(&mut self, view: SpaceView<'_>) {
         let new_k = determine_k(view.hist, self.theta, self.psi);
-        if new_k != self.ks {
-            self.ks = new_k;
+        let lane = &mut self.lanes[self.cur];
+        if new_k != lane.ks {
+            lane.ks = new_k;
+            lane.predictor.reset();
+            let asid = lane.asid;
             self.k_changes += 1;
-            self.flush();
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
         }
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
-        Some(self.predictor.stats())
+        let (mut c, mut t) = (0, 0);
+        for lane in &self.lanes {
+            let (lc, lt) = lane.predictor.stats();
+            c += lc;
+            t += lt;
+        }
+        Some((c, t))
     }
 
     fn kset(&self) -> Option<Vec<u32>> {
-        Some(self.ks.clone())
+        Some(self.lanes[self.cur].ks.clone())
     }
 }
 
@@ -346,7 +408,7 @@ mod tests {
         s.fill(3, &pt);
         assert!(s.lookup(12).is_hit());
         // remap-style invalidation of [8, 16): entry shrinks to [0, 8)
-        s.invalidate_range(8, 8);
+        s.invalidate_range(A0, 8, 8);
         for v in 0..8u64 {
             match s.lookup(v) {
                 Outcome::Coalesced { ppn, .. } => assert_eq!(ppn, v + 100, "{v}"),
@@ -358,9 +420,41 @@ mod tests {
         }
         // invalidating the aligned page itself drops the entry and
         // resets the predictor's MRU
-        s.invalidate_range(0, 4);
+        s.invalidate_range(A0, 0, 4);
         assert!(!s.lookup(1).is_hit());
-        assert_eq!(s.predictor.probe_order(&[4, 2]), vec![4, 2], "MRU reset");
+        assert_eq!(s.lanes[0].predictor.probe_order(&[4, 2]), vec![4, 2], "MRU reset");
+    }
+
+    #[test]
+    fn per_asid_ksets_predictors_and_isolation() {
+        // tenant 0: 16-page chunks (K={4}); tenant 1: same VAs on
+        // different frames
+        let m0 = MemoryMapping::new((0..16u64).map(|v| (v, v + 100)).collect());
+        let m1 = MemoryMapping::new((0..16u64).map(|v| (v, v + 7000)).collect());
+        let pt0 = PageTable::from_mapping(&m0);
+        let pt1 = PageTable::from_mapping(&m1);
+        let mut s = KAligned::with_k(vec![4], 4);
+        s.fill(3, &pt0);
+        assert_eq!(s.lookup(5).ppn(), Some(105));
+        // switch: fresh lane, empty K until an epoch derives one
+        s.switch_to(Asid(1));
+        assert_eq!(s.kset(), Some(vec![]), "new tenants start with no K");
+        assert!(!s.lookup(5).is_hit(), "cross-ASID aligned hit");
+        let hist1 = ContigHistogram::from_sizes(&vec![16u64; 100]);
+        s.epoch(SpaceView::new(&pt1, &hist1, &m1));
+        assert_eq!(s.kset(), Some(vec![4]), "tenant 1's K derived from its histogram");
+        s.fill(3, &pt1);
+        assert_eq!(s.lookup(5).ppn(), Some(7005), "tenant 1's own frames");
+        // per-tenant predictors accumulate independently but report
+        // jointly (Table 6 is a property of the hardware predictor)
+        let (_, total) = s.predictor_stats().unwrap();
+        assert_eq!(total, 2, "one aligned hit per tenant");
+        // a K change for tenant 1 only evicts tenant 1's entries
+        let frag = ContigHistogram::from_sizes(&vec![4u64; 100]);
+        s.epoch(SpaceView::new(&pt1, &frag, &m1));
+        assert!(!s.lookup(5).is_hit(), "tenant 1 shot down on K change");
+        s.switch_to(Asid(0));
+        assert_eq!(s.lookup(5).ppn(), Some(105), "tenant 0 survived tenant 1's K change");
     }
 
     #[test]
@@ -374,7 +468,7 @@ mod tests {
         let pt_new = PageTable::from_mapping(&m_new);
         let mut s = KAligned::with_k(vec![4, 2], 4);
         s.fill(5, &pt_old);
-        s.invalidate_range(0, 32);
+        s.invalidate_range(A0, 0, 32);
         for v in 0..32u64 {
             if let Some(ppn) = s.lookup(v).ppn() {
                 panic!("stale hit at {v}: {ppn}");

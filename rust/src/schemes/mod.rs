@@ -6,6 +6,15 @@
 //! coalesced hit, number of extra aligned probes) and a fill invoked
 //! after a page-table walk.  Schemes may differ only in cost — every
 //! returned PPN is asserted against the page table by the engine.
+//!
+//! Every entry tag carries an [`Asid`] in its high bits
+//! ([`asid_bits`]), and every contender implements both halves of the
+//! translation-coherence protocol precisely: ranged shootdowns
+//! ([`Scheme::invalidate_range`], scoped to one ASID) *and* context
+//! switches ([`Scheme::switch_to`], tag-switch instead of flush).  The
+//! trait defaults model untagged hardware — `invalidate_range` falls
+//! back to a whole-TLB flush, and so does `switch_to` — so a naive
+//! scheme is conservative-but-correct on both paths.
 
 pub mod anchor;
 pub mod base;
@@ -18,7 +27,7 @@ pub mod rmm;
 
 use crate::mem::addrspace::SpaceView;
 use crate::pagetable::PageTable;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 /// Result of an L2 lookup.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +43,7 @@ pub enum Outcome {
 }
 
 impl Outcome {
+    /// The translated PPN, `None` on a miss.
     pub fn ppn(&self) -> Option<Ppn> {
         match *self {
             Outcome::Regular { ppn } | Outcome::Coalesced { ppn, .. } => Some(ppn),
@@ -41,59 +51,101 @@ impl Outcome {
         }
     }
 
+    /// Did the lookup translate (regular or coalesced)?
     pub fn is_hit(&self) -> bool {
         !matches!(self, Outcome::Miss { .. })
     }
 }
 
 /// An L2 TLB scheme under test.
+///
+/// Lookups and fills act on the *current* address space: the ASID
+/// register is loaded by [`Scheme::switch_to`] at context switches
+/// (hardware translates with the VA and the ASID register — per-access
+/// calls never carry an ASID).  Ranged shootdowns
+/// ([`Scheme::invalidate_range`]) name their ASID explicitly, because
+/// the OS may invalidate a tenant that is not currently running (a
+/// remote core's munmap IPI).
 pub trait Scheme {
+    /// Human-readable scheme label (experiment row name).
     fn name(&self) -> String;
 
-    /// L2 lookup. Must not consult the page table (that is what the
-    /// walk is for) — only TLB state.
+    /// L2 lookup for the current address space.  Must not consult the
+    /// page table (that is what the walk is for) — only TLB state.
     fn lookup(&mut self, vpn: Vpn) -> Outcome;
 
-    /// Fill after a page-table walk for `vpn` (the paper's Figure 5
-    /// flow; for K-Aligned this is Algorithm 1, run by the OS off the
-    /// critical path).
+    /// Fill after a page-table walk for `vpn` in the current address
+    /// space (the paper's Figure 5 flow; for K-Aligned this is
+    /// Algorithm 1, run by the OS off the critical path).
     fn fill(&mut self, vpn: Vpn, pt: &PageTable);
 
     /// Pages translatable by resident L2 state (Table 5 coverage):
     /// regular 4KB entry = 1, huge = 512, coalesced = its contiguity.
+    /// Counts every tenant's entries — coverage is a property of the
+    /// hardware array, not of one address space.
     fn coverage_pages(&self) -> u64;
 
-    /// TLB shootdown.
+    /// Whole-TLB shootdown: every tenant's entries go.
     fn flush(&mut self);
 
     /// Translation-coherence protocol: the OS changed the mapping of
-    /// `[vstart, vstart + len)` (munmap, remap/migration, THP
-    /// promote/split) and every resident entry that could translate a
-    /// page in that range must go.  The default is the conservative
-    /// whole-TLB shootdown; every contender overrides it with a
-    /// precise implementation (evict matching tags, shrink coalesced
-    /// entries to their surviving run, split ranges, drop affected
-    /// anchors/aligned entries).  The invariant — tested per scheme —
-    /// is that no lookup after an invalidation returns a stale PPN.
-    fn invalidate_range(&mut self, _vstart: Vpn, _len: u64) {
+    /// `[vstart, vstart + len)` in address space `asid` (munmap,
+    /// remap/migration, THP promote/split) and every resident entry of
+    /// that ASID that could translate a page in the range must go.
+    /// The default is the conservative whole-TLB shootdown (untagged
+    /// hardware cannot scope the kill); every contender overrides it
+    /// with a precise per-ASID implementation — evict matching tags,
+    /// shrink coalesced entries to their surviving run, split ranges,
+    /// drop affected anchors/aligned entries — leaving other tenants'
+    /// entries resident.  The invariant, tested per scheme, is that no
+    /// lookup after an invalidation returns a stale PPN.  Note this is
+    /// *not* the only shootdown path anymore: [`Scheme::switch_to`]'s
+    /// default and the dynamic schemes' epoch reconfiguration also
+    /// shoot entries down.
+    fn invalidate_range(&mut self, _asid: Asid, _vstart: Vpn, _len: u64) {
         self.flush();
+    }
+
+    /// Context switch: the core now runs address space `asid`.  The
+    /// default models untagged hardware — a whole-TLB flush, exactly
+    /// the pre-ASID pipeline's shard-boundary semantics.  Every
+    /// contender overrides it to just load the ASID register and
+    /// retain all entries (tag-match does the isolation); such
+    /// implementations must also return `true` from
+    /// [`Scheme::asid_tagged`] so the engine keeps its L1 tagged too.
+    fn switch_to(&mut self, _asid: Asid) {
+        self.flush();
+    }
+
+    /// Does this scheme retain entries across [`Scheme::switch_to`]
+    /// (ASID-tagged hardware)?  The engine mirrors the answer onto the
+    /// shared L1: tagged L2 ⇒ tagged L1, untagged L2 ⇒ the L1 flushes
+    /// on every switch.  Default `false` (matches the default
+    /// `switch_to`).
+    fn asid_tagged(&self) -> bool {
+        false
     }
 
     /// Epoch boundary (the paper re-runs Algorithm 3 every 5B
     /// instructions; Anchor-dynamic re-selects its distance every 1B).
-    /// The [`SpaceView`] is a snapshot handle owned by the address
-    /// space: after mutation events it reflects the *current* page
+    /// The [`SpaceView`] is a snapshot handle owned by the *current*
+    /// address space: after mutation events it reflects the live page
     /// table / histogram / mapping, so dynamic schemes re-derive from
-    /// live state rather than a stale build-time capture.
+    /// current state rather than a stale build-time capture.
+    /// Multi-tenant schemes keep their derived configuration (K set,
+    /// anchor distance, RMM OS table) per ASID and re-derive only the
+    /// current tenant's here.
     fn epoch(&mut self, _view: SpaceView<'_>) {}
 
     /// (correct, total) first-probe predictions over aligned hits
-    /// (Table 6), if the scheme has a predictor.
+    /// (Table 6), if the scheme has a predictor.  Multi-tenant
+    /// K-Aligned sums over its per-ASID predictors.
     fn predictor_stats(&self) -> Option<(u64, u64)> {
         None
     }
 
-    /// The current K set, if the scheme is K-Aligned (Figure 9 info).
+    /// The current tenant's K set, if the scheme is K-Aligned
+    /// (Figure 9 info).
     fn kset(&self) -> Option<Vec<u32>> {
         None
     }
@@ -123,8 +175,16 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
         (**self).flush()
     }
 
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
-        (**self).invalidate_range(vstart, len)
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        (**self).invalidate_range(asid, vstart, len)
+    }
+
+    fn switch_to(&mut self, asid: Asid) {
+        (**self).switch_to(asid)
+    }
+
+    fn asid_tagged(&self) -> bool {
+        (**self).asid_tagged()
     }
 
     fn epoch(&mut self, view: SpaceView<'_>) {
@@ -190,8 +250,16 @@ impl Scheme for AnyScheme {
         on_scheme!(self, s => s.flush())
     }
 
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
-        on_scheme!(self, s => s.invalidate_range(vstart, len))
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        on_scheme!(self, s => s.invalidate_range(asid, vstart, len))
+    }
+
+    fn switch_to(&mut self, asid: Asid) {
+        on_scheme!(self, s => s.switch_to(asid))
+    }
+
+    fn asid_tagged(&self) -> bool {
+        on_scheme!(self, s => s.asid_tagged())
     }
 
     fn epoch(&mut self, view: SpaceView<'_>) {
@@ -207,14 +275,37 @@ impl Scheme for AnyScheme {
     }
 }
 
+/// Bit position of the ASID field inside an entry tag.  VPN-derived
+/// tag bits (at most `vpn << 6`, VPNs < 2^42 for 48-bit VAs) never
+/// reach it, so ASID and VPN bits cannot collide.
+pub const ASID_SHIFT: u32 = 48;
+
+/// Mask selecting the VPN-derived (ASID-free) part of a tag.
+pub const TAG_MASK: u64 = (1u64 << ASID_SHIFT) - 1;
+
+/// Fold an [`Asid`] into a tag's high bits.  `Asid(0)` is the
+/// identity, which is what keeps single-tenant runs bit-identical to
+/// the pre-ASID pipeline.
+#[inline(always)]
+pub fn asid_bits(asid: Asid) -> u64 {
+    (asid.0 as u64) << ASID_SHIFT
+}
+
+/// Recover the [`Asid`] an entry tag was filled under.
+#[inline(always)]
+pub fn tag_asid(tag: u64) -> Asid {
+    Asid((tag >> ASID_SHIFT) as u16)
+}
+
 /// Tag encoding shared by the single-array schemes: the kind lives in
 /// the low 6 bits so regular / huge / aligned(k) entries of the same
-/// set never alias.
+/// set never alias; callers OR in [`asid_bits`] for the owning tenant.
 #[inline(always)]
 pub fn tag_regular(vpn: Vpn) -> u64 {
     vpn << 6
 }
 
+/// Huge-entry (2MB) tag for the region containing `vpn`.
 #[inline(always)]
 pub fn tag_huge(vpn: Vpn) -> u64 {
     (vpn >> 9) << 6 | 1
@@ -233,20 +324,20 @@ pub fn tag_group(group: u64) -> u64 {
     (group << 6) | 2
 }
 
-/// Invalidation predicate for a `tag_regular` entry: is its VPN inside
-/// `[vstart, vend)`?
+/// Invalidation predicate for a `tag_regular` entry of `asid`: is it
+/// that tenant's and inside `[vstart, vend)`?
 #[inline(always)]
-pub(crate) fn regular_in_range(tag: u64, vstart: Vpn, vend: Vpn) -> bool {
-    let v = tag >> 6;
-    v >= vstart && v < vend
+pub(crate) fn regular_in_range(tag: u64, asid: Asid, vstart: Vpn, vend: Vpn) -> bool {
+    let v = (tag & TAG_MASK) >> 6;
+    tag_asid(tag) == asid && v >= vstart && v < vend
 }
 
-/// Invalidation predicate for a `tag_huge` entry: does its 2MB region
-/// overlap `[vstart, vend)`?
+/// Invalidation predicate for a `tag_huge` entry of `asid`: is it that
+/// tenant's with its 2MB region overlapping `[vstart, vend)`?
 #[inline(always)]
-pub(crate) fn huge_overlaps(tag: u64, vstart: Vpn, vend: Vpn) -> bool {
-    let base = (tag >> 6) << 9;
-    base < vend && base + HUGE_PAGES > vstart
+pub(crate) fn huge_overlaps(tag: u64, asid: Asid, vstart: Vpn, vend: Vpn) -> bool {
+    let base = ((tag & TAG_MASK) >> 6) << 9;
+    tag_asid(tag) == asid && base < vend && base + HUGE_PAGES > vstart
 }
 
 #[cfg(test)]
@@ -268,6 +359,21 @@ mod tests {
                 assert!(seen.insert(tag_aligned(vpn, k)), "alias at k={k} vpn={vpn}");
             }
         }
+        // the same tags under another ASID are all distinct again
+        let tagged: Vec<u64> = seen.iter().map(|t| t | asid_bits(Asid(3))).collect();
+        for t in tagged {
+            assert!(seen.insert(t), "ASID fold must not collide with VPN bits");
+        }
+    }
+
+    #[test]
+    fn asid_bits_roundtrip_and_identity() {
+        assert_eq!(asid_bits(Asid(0)), 0, "Asid(0) fold is the identity");
+        for a in [0u16, 1, 7, u16::MAX] {
+            let tag = tag_regular(12345) | asid_bits(Asid(a));
+            assert_eq!(tag_asid(tag), Asid(a));
+            assert_eq!(tag & TAG_MASK, tag_regular(12345));
+        }
     }
 
     #[test]
@@ -284,6 +390,7 @@ mod tests {
         }
         assert_eq!(any.name(), conc.name());
         assert_eq!(any.coverage_pages(), conc.coverage_pages());
+        assert_eq!(any.asid_tagged(), conc.asid_tagged());
     }
 
     #[test]
@@ -291,6 +398,8 @@ mod tests {
         let mut b: Box<dyn Scheme> = Box::new(kaligned::KAligned::with_k(vec![4, 2], 4));
         assert_eq!(b.kset(), Some(vec![4, 2]));
         assert!(b.predictor_stats().is_some());
+        assert!(b.asid_tagged());
+        b.switch_to(Asid(1));
         b.flush();
     }
 
@@ -322,21 +431,34 @@ mod tests {
             }
         }
         let mut s = Naive { have: Some(999) };
-        s.invalidate_range(0, 10); // range does not cover 999 ...
+        s.invalidate_range(Asid(0), 0, 10); // range does not cover 999 ...
         assert!(!s.lookup(999).is_hit(), "... but the default must flush everything");
+        // the default switch_to is the same conservative flush
+        let mut s = Naive { have: Some(42) };
+        assert!(!s.asid_tagged(), "default scheme models untagged hardware");
+        s.switch_to(Asid(1));
+        assert!(!s.lookup(42).is_hit(), "default switch_to flushes everything");
     }
 
     #[test]
     fn tag_decode_helpers_roundtrip() {
-        assert!(regular_in_range(tag_regular(100), 100, 101));
-        assert!(!regular_in_range(tag_regular(99), 100, 101));
-        assert!(!regular_in_range(tag_regular(101), 100, 101));
+        let a = Asid(0);
+        assert!(regular_in_range(tag_regular(100), a, 100, 101));
+        assert!(!regular_in_range(tag_regular(99), a, 100, 101));
+        assert!(!regular_in_range(tag_regular(101), a, 100, 101));
         // huge region [512, 1024)
         let t = tag_huge(700);
-        assert!(huge_overlaps(t, 1023, 1));
-        assert!(huge_overlaps(t, 0, 513));
-        assert!(!huge_overlaps(t, 0, 512));
-        assert!(!huge_overlaps(t, 1024, 100));
+        assert!(huge_overlaps(t, a, 1023, 1));
+        assert!(huge_overlaps(t, a, 0, 513));
+        assert!(!huge_overlaps(t, a, 0, 512));
+        assert!(!huge_overlaps(t, a, 1024, 100));
+        // an ASID mismatch never matches, whatever the range
+        let other = tag_regular(100) | asid_bits(Asid(2));
+        assert!(!regular_in_range(other, a, 0, u64::MAX >> 8));
+        assert!(regular_in_range(other, Asid(2), 100, 101));
+        let other = tag_huge(700) | asid_bits(Asid(2));
+        assert!(!huge_overlaps(other, a, 0, 1 << 40));
+        assert!(huge_overlaps(other, Asid(2), 0, 513));
     }
 
     #[test]

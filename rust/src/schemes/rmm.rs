@@ -4,12 +4,14 @@
 //! chunks; with only 32 CAM entries the design pays off only when
 //! chunks are large (the paper's Figure 1/Table 4 point).
 
-use super::{huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme};
+use super::{
+    asid_bits, huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme,
+};
 use crate::mem::addrspace::SpaceView;
 use crate::mem::mapping::{Chunk, MemoryMapping};
 use crate::pagetable::PageTable;
 use crate::tlb::{RangeTlb, SetAssocTlb};
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 /// Chunks below this size are not worth a CAM entry; RMM's OS support
 /// targets large eagerly-paged ranges.
@@ -26,9 +28,13 @@ enum Reg {
 pub struct Rmm {
     reg: SetAssocTlb<Reg>,
     ranges: RangeTlb,
-    /// contiguity chunks sorted by vstart (the "redundant mapping"
-    /// table the OS maintains; consulted at fill time only)
-    chunks: Vec<Chunk>,
+    /// per-ASID redundant-mapping tables: contiguity chunks sorted by
+    /// vstart (the table the OS maintains per address space; consulted
+    /// at fill time only).  Index `cur` is the running tenant's.
+    tables: Vec<(Asid, Vec<Chunk>)>,
+    cur: usize,
+    /// the ASID register
+    asid: Asid,
 }
 
 /// The OS-maintained redundant-mapping table for a mapping: every
@@ -44,7 +50,9 @@ impl Rmm {
         Rmm {
             reg: SetAssocTlb::new(1024, 8),
             ranges: RangeTlb::new(32),
-            chunks: os_table(mapping),
+            tables: vec![(Asid::ZERO, os_table(mapping))],
+            cur: 0,
+            asid: Asid::ZERO,
         }
     }
 
@@ -58,13 +66,19 @@ impl Rmm {
         ((vpn >> 9) & self.reg.set_mask()) as usize
     }
 
+    /// The running tenant's OS table.
+    fn chunks(&self) -> &[Chunk] {
+        &self.tables[self.cur].1
+    }
+
     fn chunk_containing(&self, vpn: Vpn) -> Option<Chunk> {
-        let i = match self.chunks.binary_search_by_key(&vpn, |c| c.vstart) {
+        let chunks = self.chunks();
+        let i = match chunks.binary_search_by_key(&vpn, |c| c.vstart) {
             Ok(i) => i,
             Err(0) => return None,
             Err(i) => i - 1,
         };
-        let c = self.chunks[i];
+        let c = chunks[i];
         (vpn < c.vstart + c.len).then_some(c)
     }
 }
@@ -75,30 +89,34 @@ impl Scheme for Rmm {
     }
 
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        let a = asid_bits(self.asid);
         let set = self.set4k(vpn);
-        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn)) {
+        if let Some(&Reg::Page(ppn)) = self.reg.lookup(set, tag_regular(vpn) | a) {
             return Outcome::Regular { ppn };
         }
         let set = self.set2m(vpn);
-        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn)) {
+        if let Some(&Reg::Huge(base)) = self.reg.lookup(set, tag_huge(vpn) | a) {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
-        // range TLB probed alongside (separate CAM hardware)
-        if let Some(ppn) = self.ranges.lookup(vpn) {
+        // range TLB probed alongside (separate CAM hardware; the CAM
+        // compares the ASID register with each entry's tag)
+        if let Some(ppn) = self.ranges.lookup(self.asid, vpn) {
             return Outcome::Coalesced { ppn, probes: 1 };
         }
         Outcome::Miss { probes: 0 }
     }
 
     fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        let a = asid_bits(self.asid);
         if pt.is_huge(vpn) {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             let base_ppn = pt.translate(base_vpn).expect("huge region mapped");
-            self.reg.insert(self.set2m(vpn), tag_huge(vpn), Reg::Huge(base_ppn));
+            self.reg.insert(self.set2m(vpn), tag_huge(vpn) | a, Reg::Huge(base_ppn));
             return;
         }
         if let Some(c) = self.chunk_containing(vpn) {
             self.ranges.insert(crate::tlb::range::RangeEntry {
+                asid: self.asid,
                 vstart: c.vstart,
                 len: c.len,
                 pstart: c.pstart,
@@ -106,7 +124,7 @@ impl Scheme for Rmm {
             return;
         }
         if let Some(ppn) = pt.translate(vpn) {
-            self.reg.insert(self.set4k(vpn), tag_regular(vpn), Reg::Page(ppn));
+            self.reg.insert(self.set4k(vpn), tag_regular(vpn) | a, Reg::Page(ppn));
         }
     }
 
@@ -128,21 +146,26 @@ impl Scheme for Rmm {
         self.ranges.flush();
     }
 
-    /// Precise invalidation: regular/huge entries as in Base, resident
-    /// ranges *split* around the hole (tails keep translating), and —
-    /// crucially — the OS-maintained redundant-mapping table is
-    /// trimmed the same way so a later `fill` cannot resurrect a stale
-    /// range.  Remainders below [`MIN_RANGE_PAGES`] leave the table.
-    fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Precise per-ASID invalidation: regular/huge entries as in Base,
+    /// that tenant's resident ranges *split* around the hole (tails
+    /// keep translating), and — crucially — the tenant's OS-maintained
+    /// redundant-mapping table is trimmed the same way so a later
+    /// `fill` cannot resurrect a stale range.  Remainders below
+    /// [`MIN_RANGE_PAGES`] leave the table.  Other tenants' ranges and
+    /// tables are untouched.
+    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         self.reg.retain(|tag, e| match e {
-            Reg::Page(_) => !regular_in_range(tag, vstart, vend),
-            Reg::Huge(_) => !huge_overlaps(tag, vstart, vend),
+            Reg::Page(_) => !regular_in_range(tag, asid, vstart, vend),
+            Reg::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Reg::Invalid => true,
         });
-        self.ranges.invalidate_range(vstart, len);
-        let mut trimmed = Vec::with_capacity(self.chunks.len());
-        for c in self.chunks.drain(..) {
+        self.ranges.invalidate_range(asid, vstart, len);
+        let Some((_, chunks)) = self.tables.iter_mut().find(|(a, _)| *a == asid) else {
+            return; // no table was ever derived for that tenant
+        };
+        let mut trimmed = Vec::with_capacity(chunks.len());
+        for c in chunks.drain(..) {
             let cend = c.vstart + c.len;
             if cend <= vstart || c.vstart >= vend {
                 trimmed.push(c);
@@ -159,20 +182,40 @@ impl Scheme for Rmm {
                 });
             }
         }
-        self.chunks = trimmed; // splitting preserves vstart order
+        *chunks = trimmed; // splitting preserves vstart order
     }
 
-    /// Epoch: the OS rebuilds its redundant-mapping table from the
-    /// *current* mapping, so ranges created by mmap/THP recovery after
-    /// churn become fillable again.
+    /// Tagged context switch: load the ASID register, retain every
+    /// tenant's CAM ranges and regular entries, and select (creating
+    /// if needed) the tenant's OS table for future fills.
+    fn switch_to(&mut self, asid: Asid) {
+        self.asid = asid;
+        self.cur = match self.tables.iter().position(|(a, _)| *a == asid) {
+            Some(i) => i,
+            None => {
+                self.tables.push((asid, Vec::new()));
+                self.tables.len() - 1
+            }
+        };
+    }
+
+    fn asid_tagged(&self) -> bool {
+        true
+    }
+
+    /// Epoch: the OS rebuilds the *current tenant's* redundant-mapping
+    /// table from the current mapping, so ranges created by mmap/THP
+    /// recovery after churn become fillable again.
     fn epoch(&mut self, view: SpaceView<'_>) {
-        self.chunks = os_table(view.mapping);
+        self.tables[self.cur].1 = os_table(view.mapping);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const A0: Asid = Asid(0);
 
     fn chunked_mapping(sizes: &[u64]) -> MemoryMapping {
         let mut pages = Vec::new();
@@ -232,7 +275,7 @@ mod tests {
         let pt = PageTable::from_mapping(&m);
         let mut s = Rmm::new(&m);
         s.fill(1000, &pt);
-        s.invalidate_range(900, 100); // hole [900, 1000)
+        s.invalidate_range(A0, 900, 100); // hole [900, 1000)
         // both tails still translate, the hole misses
         for v in [0u64, 899, 1000, 2047] {
             match s.lookup(v) {
@@ -246,7 +289,7 @@ mod tests {
         // the OS table was trimmed too: a fill inside the hole must
         // not resurrect a range covering it
         s.fill(950, &pt);
-        assert!(s.ranges.lookup(950).is_none(), "stale OS chunk resurrected");
+        assert!(s.ranges.lookup(A0, 950).is_none(), "stale OS chunk resurrected");
     }
 
     #[test]
@@ -256,23 +299,49 @@ mod tests {
         let mut s = Rmm::new(&m);
         s.fill(10, &pt);
         // cut at 300: both remainders (300, 300) < MIN_RANGE_PAGES
-        s.invalidate_range(300, 1);
-        assert!(s.chunks.is_empty(), "sub-512 remainders leave the OS table");
+        s.invalidate_range(A0, 300, 1);
+        assert!(s.chunks().is_empty(), "sub-512 remainders leave the OS table");
         // resident range still split correctly (range TLB keeps tails)
-        assert!(s.ranges.lookup(299).is_some());
-        assert!(s.ranges.lookup(300).is_none());
+        assert!(s.ranges.lookup(A0, 299).is_some());
+        assert!(s.ranges.lookup(A0, 300).is_none());
     }
 
     #[test]
     fn epoch_rebuilds_os_table_from_current_mapping() {
         let m = chunked_mapping(&[600]);
         let mut s = Rmm::new(&m);
-        s.invalidate_range(0, 601);
-        assert!(s.chunks.is_empty());
+        s.invalidate_range(A0, 0, 601);
+        assert!(s.chunks().is_empty());
         let hist = crate::mem::histogram::ContigHistogram::from_mapping(&m);
         let pt = PageTable::from_mapping(&m);
         s.epoch(SpaceView::new(&pt, &hist, &m));
-        assert_eq!(s.chunks.len(), 1, "epoch re-derives ranges from the live mapping");
+        assert_eq!(s.chunks().len(), 1, "epoch re-derives ranges from the live mapping");
+    }
+
+    #[test]
+    fn per_asid_os_tables_and_ranges() {
+        // tenant 0: one 600-page chunk at VPN 0; tenant 1: one
+        // 700-page chunk at the same VAs but different frames
+        let m0 = chunked_mapping(&[600]);
+        let pt0 = PageTable::from_mapping(&m0);
+        let m1 = MemoryMapping::new((0..700u64).map(|v| (v, v + 50_000)).collect());
+        let pt1 = PageTable::from_mapping(&m1);
+        let mut s = Rmm::new(&m0);
+        s.fill(10, &pt0);
+        assert!(s.lookup(10).is_hit());
+        // switch: tenant 1 registers its own OS table via the epoch
+        s.switch_to(Asid(1));
+        assert!(!s.lookup(10).is_hit(), "cross-ASID range hit");
+        let hist1 = crate::mem::histogram::ContigHistogram::from_mapping(&m1);
+        s.epoch(SpaceView::new(&pt1, &hist1, &m1));
+        s.fill(10, &pt1);
+        assert_eq!(s.lookup(10).ppn(), Some(50_010), "tenant 1's own frames");
+        // invalidating tenant 1 leaves tenant 0's range + table intact
+        s.invalidate_range(Asid(1), 0, 1000);
+        assert!(!s.lookup(10).is_hit());
+        s.switch_to(Asid(0));
+        assert!(s.lookup(10).is_hit(), "tenant 0 retained across switches");
+        assert_eq!(s.chunks().len(), 1, "tenant 0's OS table untouched");
     }
 
     #[test]

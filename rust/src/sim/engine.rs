@@ -23,13 +23,27 @@
 //! The L1-hit fast path performs no page-table probe at all: the
 //! split L1 remembers each entry's page size, and `is_huge` is
 //! consulted only on the (rare) L1-miss path where fills need it.
+//!
+//! ## Multi-tenant scheduling
+//!
+//! The engine carries the hardware ASID register: [`Engine::switch_to`]
+//! delivers a context switch, and every access translates under the
+//! current [`Asid`].  For schemes reporting [`Scheme::asid_tagged`]
+//! the shared L1 is ASID-tagged too and a switch retains all state;
+//! for default (untagged) schemes a switch flushes L1 + L2 — exactly
+//! the pre-ASID shard-boundary semantics.  The engine attributes the
+//! (accesses, walks) delta of each scheduling quantum to the tenant
+//! that ran it ([`Metrics::tenant_stats`]); shard runners reconstruct
+//! mid-schedule state on a cold engine with [`Engine::set_tenant`]
+//! (no context-switch accounting — the switch event itself is counted
+//! by the shard that owns its timestamp).
 
 use super::latency::Latency;
 use super::metrics::Metrics;
 use crate::mem::addrspace::SpaceView;
 use crate::schemes::{Outcome, Scheme};
 use crate::tlb::L1Tlb;
-use crate::{Vpn, HUGE_PAGES};
+use crate::{Asid, Vpn, HUGE_PAGES};
 
 /// Accesses between epoch callbacks (the paper's billion-instruction
 /// boundaries, scaled to trace accesses).
@@ -45,6 +59,11 @@ pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     /// invoke the scheme's epoch hook at epoch boundaries (enabled by
     /// [`Engine::with_epoch`]; coverage is sampled either way)
     epoch_hooks: bool,
+    /// the ASID register: every access translates under it
+    asid: Asid,
+    /// cumulative (accesses, walks) at the last tenant-attribution
+    /// point (context switch or engine start)
+    tenant_snap: [u64; 2],
     /// verify every translation against the page table (cheap enough
     /// to keep on; disable only in throughput benches)
     pub verify: bool,
@@ -60,6 +79,8 @@ impl<S: Scheme> Engine<S> {
             epoch_len: DEFAULT_EPOCH,
             since_epoch: 0,
             epoch_hooks: false,
+            asid: Asid::ZERO,
+            tenant_snap: [0, 0],
             verify: cfg!(debug_assertions),
         }
     }
@@ -95,13 +116,74 @@ impl<S: Scheme> Engine<S> {
         &self.scheme
     }
 
+    /// The ASID register (the tenant every access translates under).
+    pub fn current_asid(&self) -> Asid {
+        self.asid
+    }
+
+    /// Deliver a context switch: attribute the outgoing quantum's
+    /// counters to the outgoing tenant, count the switch (plus a
+    /// switch-flush for untagged schemes), and hand the TLBs over —
+    /// tagged schemes just load the ASID register, untagged ones flush
+    /// L1 + L2 (the pre-ASID whole-TLB semantics).  A switch to the
+    /// current tenant is a no-op.
+    pub fn switch_to(&mut self, asid: Asid) {
+        if asid == self.asid {
+            return;
+        }
+        let tagged = self.scheme.asid_tagged();
+        self.metrics.record_context_switch(!tagged);
+        self.install_tenant(asid, tagged);
+    }
+
+    /// Install `asid` as current *without* context-switch accounting.
+    /// Shard runners use this to reconstruct mid-schedule state on a
+    /// cold engine: the switch event that made this tenant current is
+    /// counted by the shard that owns its timestamp, not here.
+    pub fn set_tenant(&mut self, asid: Asid) {
+        if asid == self.asid {
+            return;
+        }
+        let tagged = self.scheme.asid_tagged();
+        self.install_tenant(asid, tagged);
+    }
+
+    /// Register a tenant before (or while) driving: switch to it and
+    /// run the scheme's epoch hook on the tenant's space so per-ASID
+    /// configuration (K set, anchor distance, RMM OS table) is derived
+    /// from that tenant's histogram/mapping.  Uses the silent
+    /// [`Engine::set_tenant`] path — registration is not a scheduled
+    /// context switch.
+    pub fn register_tenant(&mut self, asid: Asid, view: SpaceView<'_>) {
+        self.set_tenant(asid);
+        self.scheme.epoch(view);
+    }
+
+    fn install_tenant(&mut self, asid: Asid, tagged: bool) {
+        self.attribute_tenant();
+        self.asid = asid;
+        self.scheme.switch_to(asid);
+        if !tagged {
+            self.l1.flush();
+        }
+    }
+
+    /// Attribute the (accesses, walks) delta since the last
+    /// attribution point to the current tenant.
+    fn attribute_tenant(&mut self) {
+        let da = self.metrics.accesses - self.tenant_snap[0];
+        let dw = self.metrics.walks - self.tenant_snap[1];
+        self.metrics.tenant_add(self.asid, da, dw);
+        self.tenant_snap = [self.metrics.accesses, self.metrics.walks];
+    }
+
     /// Simulate one memory access to `vpn` against the translation
     /// ground truth in `view`.
     #[inline]
     pub fn access(&mut self, vpn: Vpn, view: SpaceView<'_>) {
         // ---- L1 (latency hidden behind cache access; no page-table
         // probe — the split L1 knows each entry's page size) ----
-        if self.l1.lookup(vpn).is_some() {
+        if self.l1.lookup(self.asid, vpn).is_some() {
             self.metrics.record_l1_hit();
             self.tick_epoch(view);
             return;
@@ -171,18 +253,26 @@ impl<S: Scheme> Engine<S> {
         self.metrics.record_shootdown();
     }
 
-    /// Translation-coherence step after an address-space mutation: the
-    /// mapping of `[vstart, vstart+len)` changed, so the L1 drops its
-    /// entries in the range and the scheme runs its precise
+    /// Translation-coherence step after an address-space mutation in
+    /// the *current* tenant's space: the mapping of `[vstart,
+    /// vstart+len)` changed, so the L1 drops that tenant's entries in
+    /// the range and the scheme runs its precise per-ASID
     /// `invalidate_range`.  No resident state may translate a page of
     /// the range afterwards — the churn oracle tests assert this for
     /// every scheme.
     pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+        self.invalidate_range_as(self.asid, vstart, len);
+    }
+
+    /// Cross-ASID shootdown (a remote core's munmap IPI): like
+    /// [`Engine::invalidate_range`] but targeting a tenant that is not
+    /// necessarily running.
+    pub fn invalidate_range_as(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         if len == 0 {
             return;
         }
-        self.l1.invalidate_range(vstart, len);
-        self.scheme.invalidate_range(vstart, len);
+        self.l1.invalidate_range(asid, vstart, len);
+        self.scheme.invalidate_range(asid, vstart, len);
         self.metrics.record_invalidation();
     }
 
@@ -191,10 +281,10 @@ impl<S: Scheme> Engine<S> {
         if is_huge {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
             if let Some(base_ppn) = view.pt.translate(base_vpn) {
-                self.l1.fill_huge(vpn, base_ppn);
+                self.l1.fill_huge(self.asid, vpn, base_ppn);
             }
         } else if let Some(ppn) = view.pt.translate(vpn) {
-            self.l1.fill_small(vpn, ppn);
+            self.l1.fill_small(self.asid, vpn, ppn);
         }
     }
 
@@ -204,9 +294,9 @@ impl<S: Scheme> Engine<S> {
     fn fill_l1_with(&mut self, vpn: Vpn, ppn: crate::Ppn, is_huge: bool) {
         if is_huge {
             let base_vpn = vpn & !(HUGE_PAGES - 1);
-            self.l1.fill_huge(vpn, ppn - (vpn - base_vpn));
+            self.l1.fill_huge(self.asid, vpn, ppn - (vpn - base_vpn));
         } else {
-            self.l1.fill_small(vpn, ppn);
+            self.l1.fill_small(self.asid, vpn, ppn);
         }
     }
 
@@ -234,8 +324,10 @@ impl<S: Scheme> Engine<S> {
         }
     }
 
-    /// Final coverage sample + metrics handoff.
+    /// Final coverage sample, tail tenant attribution + metrics
+    /// handoff.
     pub fn finish(mut self) -> (Metrics, S) {
+        self.attribute_tenant();
         self.metrics.record_coverage(self.scheme.coverage_pages());
         (self.metrics, self.scheme)
     }
@@ -414,6 +506,114 @@ mod tests {
         assert_eq!(m.invalidations, 1);
         // zero-length ranges are ignored
         e.invalidate_range(50, 0);
+        assert_eq!(e.metrics().invalidations, 1);
+    }
+
+    /// Minimal scheme relying on every trait default — models untagged
+    /// hardware (switch_to = flush).
+    struct Untagged {
+        have: std::collections::HashMap<Vpn, crate::Ppn>,
+    }
+
+    impl Scheme for Untagged {
+        fn name(&self) -> String {
+            "untagged".into()
+        }
+        fn lookup(&mut self, vpn: Vpn) -> crate::schemes::Outcome {
+            match self.have.get(&vpn) {
+                Some(&ppn) => crate::schemes::Outcome::Regular { ppn },
+                None => crate::schemes::Outcome::Miss { probes: 0 },
+            }
+        }
+        fn fill(&mut self, vpn: Vpn, pt: &crate::pagetable::PageTable) {
+            if let Some(ppn) = pt.translate(vpn) {
+                self.have.insert(vpn, ppn);
+            }
+        }
+        fn coverage_pages(&self) -> u64 {
+            self.have.len() as u64
+        }
+        fn flush(&mut self) {
+            self.have.clear();
+        }
+    }
+
+    #[test]
+    fn tagged_switch_retains_untagged_switch_flushes() {
+        use crate::Asid;
+        let f = Fix::identity(100);
+        // tagged (BaseL2): entries survive a round trip through
+        // another tenant
+        let mut e = Engine::new(BaseL2::new());
+        e.access(5, f.view()); // walk
+        e.switch_to(Asid(1));
+        e.switch_to(Asid(0));
+        e.access(5, f.view()); // L1 still warm: no second walk
+        assert_eq!(e.metrics().walks, 1, "tagged switch must retain L1+L2");
+        assert_eq!(e.metrics().context_switches, 2);
+        assert_eq!(e.metrics().switch_flushes, 0);
+
+        // untagged (trait defaults): the same round trip flushes
+        let mut e = Engine::new(Untagged { have: Default::default() });
+        e.access(5, f.view());
+        e.switch_to(Asid(1));
+        e.switch_to(Asid(0));
+        e.access(5, f.view());
+        assert_eq!(e.metrics().walks, 2, "untagged switch must flush L1+L2");
+        assert_eq!(e.metrics().switch_flushes, 2);
+        // switch to the current tenant is a no-op
+        e.switch_to(Asid(0));
+        assert_eq!(e.metrics().context_switches, 2);
+    }
+
+    #[test]
+    fn set_tenant_installs_without_accounting() {
+        use crate::Asid;
+        let f = Fix::identity(100);
+        let mut e = Engine::new(BaseL2::new());
+        e.set_tenant(Asid(3));
+        assert_eq!(e.current_asid(), Asid(3));
+        assert_eq!(e.metrics().context_switches, 0, "set_tenant is silent");
+        e.access(7, f.view());
+        let (m, _) = e.finish();
+        assert_eq!(m.tenant(3), (1, 1), "tail quantum attributed to tenant 3");
+        assert_eq!(m.tenant(0), (0, 0));
+    }
+
+    #[test]
+    fn tenant_attribution_splits_quanta() {
+        use crate::Asid;
+        let f = Fix::identity(1000);
+        let mut e = Engine::new(BaseL2::new());
+        for v in 0..10u64 {
+            e.access(v, f.view()); // tenant 0: 10 accesses, 10 walks
+        }
+        e.switch_to(Asid(1));
+        for v in 0..4u64 {
+            e.access(v, f.view()); // tenant 1: 4 accesses, 4 walks
+        }
+        let (m, _) = e.finish();
+        assert_eq!(m.tenant(0), (10, 10));
+        assert_eq!(m.tenant(1), (4, 4));
+        assert_eq!(m.accesses, 14);
+        assert_eq!(m.context_switches, 1);
+    }
+
+    #[test]
+    fn cross_asid_invalidation_spares_current_tenant() {
+        use crate::Asid;
+        let f = Fix::identity(100);
+        let mut e = Engine::new(BaseL2::new());
+        e.access(5, f.view()); // tenant 0 warm
+        e.switch_to(Asid(1));
+        e.access(5, f.view()); // tenant 1 warm (walks again)
+        // remote shootdown of tenant 0's page must not disturb us
+        e.invalidate_range_as(Asid(0), 0, 100);
+        e.access(5, f.view());
+        assert_eq!(e.metrics().walks, 2, "tenant 1 unaffected by tenant 0's IPI");
+        e.switch_to(Asid(0));
+        e.access(5, f.view());
+        assert_eq!(e.metrics().walks, 3, "tenant 0 must re-walk after its shootdown");
         assert_eq!(e.metrics().invalidations, 1);
     }
 

@@ -2,6 +2,7 @@
 //! of the paper's evaluation.
 
 use super::latency::Latency;
+use crate::Asid;
 
 /// Per-run counters.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -34,6 +35,19 @@ pub struct Metrics {
     pub invalidations: u64,
     /// whole-TLB shootdowns (engine flushes)
     pub shootdowns: u64,
+
+    // multi-tenant scheduling (ASID-tagged TLBs)
+    /// context switches delivered to the engine (tenant changes)
+    pub context_switches: u64,
+    /// context switches that cost a whole-TLB flush (untagged scheme
+    /// running the default `switch_to`; tagged schemes retain state
+    /// and this stays 0)
+    pub switch_flushes: u64,
+    /// per-tenant `[accesses, walks]`, indexed by [`Asid::index`] —
+    /// the engine attributes the counter deltas of each scheduling
+    /// quantum to the tenant that ran it
+    pub tenant_stats: Vec<[u64; 2]>,
+
     /// cumulative (accesses, walks) snapshots at phase boundaries —
     /// the basis of the per-phase miss rates `repro churn` reports.
     /// Not part of [`Metrics::accounting`]: phase marks are a per-run
@@ -129,6 +143,33 @@ impl Metrics {
         self.shootdowns += 1;
     }
 
+    pub(crate) fn record_context_switch(&mut self, flushed: bool) {
+        self.context_switches += 1;
+        if flushed {
+            self.switch_flushes += 1;
+        }
+    }
+
+    /// Attribute a quantum's counter deltas to `asid`.  Zero deltas
+    /// are skipped so runs that never touch a tenant do not allocate
+    /// a row for it.
+    pub(crate) fn tenant_add(&mut self, asid: Asid, accesses: u64, walks: u64) {
+        if accesses == 0 && walks == 0 {
+            return;
+        }
+        let i = asid.index();
+        if self.tenant_stats.len() <= i {
+            self.tenant_stats.resize(i + 1, [0, 0]);
+        }
+        self.tenant_stats[i][0] += accesses;
+        self.tenant_stats[i][1] += walks;
+    }
+
+    /// Per-tenant (accesses, walks) for tenant `i`, 0 if never run.
+    pub fn tenant(&self, i: usize) -> (u64, u64) {
+        self.tenant_stats.get(i).map(|&[a, w]| (a, w)).unwrap_or((0, 0))
+    }
+
     /// Snapshot the cumulative counters at a phase boundary.
     pub fn mark_phase(&mut self) {
         self.phase_marks.push([self.accesses, self.walks]);
@@ -194,6 +235,15 @@ impl Metrics {
         self.coverage_sum_pages += o.coverage_sum_pages;
         self.invalidations += o.invalidations;
         self.shootdowns += o.shootdowns;
+        self.context_switches += o.context_switches;
+        self.switch_flushes += o.switch_flushes;
+        if self.tenant_stats.len() < o.tenant_stats.len() {
+            self.tenant_stats.resize(o.tenant_stats.len(), [0, 0]);
+        }
+        for (mine, theirs) in self.tenant_stats.iter_mut().zip(&o.tenant_stats) {
+            mine[0] += theirs[0];
+            mine[1] += theirs[1];
+        }
     }
 }
 
@@ -277,6 +327,32 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.invalidations, 2);
         assert_eq!(a.shootdowns, 1);
+    }
+
+    #[test]
+    fn merge_adds_context_switch_counters_and_tenant_stats() {
+        use crate::Asid;
+        let mut a = Metrics::default();
+        a.record_context_switch(false);
+        a.tenant_add(Asid(0), 10, 3);
+        a.tenant_add(Asid(2), 5, 1);
+        let mut b = Metrics::default();
+        b.record_context_switch(true);
+        b.record_context_switch(true);
+        b.tenant_add(Asid(0), 7, 2);
+        b.tenant_add(Asid(1), 4, 4);
+        a.merge(&b);
+        assert_eq!(a.context_switches, 3);
+        assert_eq!(a.switch_flushes, 2);
+        // tenant rows add element-wise, absent rows count as zero
+        assert_eq!(a.tenant_stats, vec![[17, 5], [4, 4], [5, 1]]);
+        assert_eq!(a.tenant(0), (17, 5));
+        assert_eq!(a.tenant(1), (4, 4));
+        assert_eq!(a.tenant(3), (0, 0), "never-run tenants read as zero");
+        // zero deltas never allocate a row
+        let mut c = Metrics::default();
+        c.tenant_add(Asid(5), 0, 0);
+        assert!(c.tenant_stats.is_empty());
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! The trace-driven simulation core: latency model (Table 2), metrics
-//! (misses, coverage, CPI breakdown, predictor accuracy) and the
-//! engine that drives L1 → L2 scheme → page-table walk per access.
+//! (misses, coverage, CPI breakdown, predictor accuracy), the engine
+//! that drives L1 → L2 scheme → page-table walk per access, and the
+//! deterministic tenant scheduler that interleaves address spaces over
+//! one engine.
 
 pub mod engine;
 pub mod latency;
 pub mod metrics;
+pub mod tenants;
 
 pub use engine::Engine;
 pub use latency::Latency;
 pub use metrics::Metrics;
+pub use tenants::{SwitchEvent, TenantSchedule};

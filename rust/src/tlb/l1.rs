@@ -2,9 +2,17 @@
 //! for 4KB pages plus 32-entry 4-way for 2MB pages.  L1 access latency
 //! is hidden behind the cache access (§4.1), so the L1 contributes no
 //! cycles — only its miss stream drives the L2.
+//!
+//! Entries are ASID-tagged: the [`Asid`] is folded into the tag high
+//! bits (see [`crate::schemes::asid_bits`]), so tenants' translations
+//! coexist and a lookup only matches entries of the requesting address
+//! space.  Set indexing stays VA-only (hardware indexes before the tag
+//! compare).  With `Asid(0)` the tag fold is the identity — the
+//! single-tenant pipeline is bit-identical to the untagged one.
 
 use super::SetAssocTlb;
-use crate::{Ppn, Vpn, HUGE_PAGES};
+use crate::schemes::{asid_bits, tag_asid, TAG_MASK};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 pub struct L1Tlb {
     small: SetAssocTlb<Ppn>,
@@ -32,42 +40,44 @@ impl L1Tlb {
     /// side only advances the LRU clock, never its state, so probing
     /// both is behavior-identical to probing the right one.
     #[inline]
-    pub fn lookup(&mut self, vpn: Vpn) -> Option<Ppn> {
-        if let Some(p) = self.lookup_small(vpn) {
+    pub fn lookup(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
+        if let Some(p) = self.lookup_small(asid, vpn) {
             return Some(p);
         }
-        self.lookup_huge(vpn)
+        self.lookup_huge(asid, vpn)
     }
 
-    /// Look up a 4KB translation.
+    /// Look up a 4KB translation for `asid`.
     #[inline]
-    pub fn lookup_small(&mut self, vpn: Vpn) -> Option<Ppn> {
+    pub fn lookup_small(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
         let set = (vpn & self.small.set_mask()) as usize;
-        self.small.lookup(set, vpn).copied()
+        self.small.lookup(set, vpn | asid_bits(asid)).copied()
     }
 
     /// Look up a 2MB translation for the region containing `vpn`.
     #[inline]
-    pub fn lookup_huge(&mut self, vpn: Vpn) -> Option<Ppn> {
+    pub fn lookup_huge(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
         let hv = vpn / HUGE_PAGES;
         let set = (hv & self.huge.set_mask()) as usize;
         // returns the base-page PPN of the huge region
-        self.huge.lookup(set, hv).map(|&base| base + (vpn & (HUGE_PAGES - 1)))
+        self.huge
+            .lookup(set, hv | asid_bits(asid))
+            .map(|&base| base + (vpn & (HUGE_PAGES - 1)))
     }
 
     #[inline]
-    pub fn fill_small(&mut self, vpn: Vpn, ppn: Ppn) {
+    pub fn fill_small(&mut self, asid: Asid, vpn: Vpn, ppn: Ppn) {
         let set = (vpn & self.small.set_mask()) as usize;
-        self.small.insert(set, vpn, ppn);
+        self.small.insert(set, vpn | asid_bits(asid), ppn);
     }
 
     /// Fill a 2MB entry; `ppn_base` is the PPN of the region's first
     /// base page.
     #[inline]
-    pub fn fill_huge(&mut self, vpn: Vpn, ppn_base: Ppn) {
+    pub fn fill_huge(&mut self, asid: Asid, vpn: Vpn, ppn_base: Ppn) {
         let hv = vpn / HUGE_PAGES;
         let set = (hv & self.huge.set_mask()) as usize;
-        self.huge.insert(set, hv, ppn_base);
+        self.huge.insert(set, hv | asid_bits(asid), ppn_base);
     }
 
     pub fn flush(&mut self) {
@@ -75,16 +85,20 @@ impl L1Tlb {
         self.huge.flush();
     }
 
-    /// Per-page invalidation for `[vstart, vstart + len)`: 4KB entries
-    /// in the range are dropped; a 2MB entry is dropped if its region
-    /// overlaps the range at all (the OS shoots down the whole huge
-    /// mapping).  Mirrors an `invlpg` sweep rather than a full flush.
-    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    /// Per-page invalidation of `asid`'s entries in `[vstart, vstart +
+    /// len)`: 4KB entries in the range are dropped; a 2MB entry is
+    /// dropped if its region overlaps the range at all (the OS shoots
+    /// down the whole huge mapping).  Mirrors an `invlpg` sweep rather
+    /// than a full flush; other tenants' entries are untouched.
+    pub fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
-        self.small.retain(|tag, _| tag < vstart || tag >= vend);
-        self.huge.retain(|hv, _| {
-            let base = hv * HUGE_PAGES;
-            base + HUGE_PAGES <= vstart || base >= vend
+        self.small.retain(|tag, _| {
+            let v = tag & TAG_MASK;
+            tag_asid(tag) != asid || v < vstart || v >= vend
+        });
+        self.huge.retain(|tag, _| {
+            let base = (tag & TAG_MASK) * HUGE_PAGES;
+            tag_asid(tag) != asid || base + HUGE_PAGES <= vstart || base >= vend
         });
     }
 }
@@ -93,21 +107,24 @@ impl L1Tlb {
 mod tests {
     use super::*;
 
+    const A0: Asid = Asid(0);
+    const A1: Asid = Asid(1);
+
     #[test]
     fn small_hit_roundtrip() {
         let mut l1 = L1Tlb::new();
-        assert_eq!(l1.lookup_small(123), None);
-        l1.fill_small(123, 456);
-        assert_eq!(l1.lookup_small(123), Some(456));
+        assert_eq!(l1.lookup_small(A0, 123), None);
+        l1.fill_small(A0, 123, 456);
+        assert_eq!(l1.lookup_small(A0, 123), Some(456));
     }
 
     #[test]
     fn huge_entry_covers_region() {
         let mut l1 = L1Tlb::new();
-        l1.fill_huge(512, 4096); // region [512, 1024) -> [4096, ...)
-        assert_eq!(l1.lookup_huge(512), Some(4096));
-        assert_eq!(l1.lookup_huge(1000), Some(4096 + (1000 - 512)));
-        assert_eq!(l1.lookup_huge(1024), None, "next region not covered");
+        l1.fill_huge(A0, 512, 4096); // region [512, 1024) -> [4096, ...)
+        assert_eq!(l1.lookup_huge(A0, 512), Some(4096));
+        assert_eq!(l1.lookup_huge(A0, 1000), Some(4096 + (1000 - 512)));
+        assert_eq!(l1.lookup_huge(A0, 1024), None, "next region not covered");
     }
 
     #[test]
@@ -115,9 +132,9 @@ mod tests {
         let mut l1 = L1Tlb::new();
         // 64 entries, 16 sets: 256 distinct pages overflow every set
         for v in 0..256u64 {
-            l1.fill_small(v, v + 1);
+            l1.fill_small(A0, v, v + 1);
         }
-        let hits = (0..256u64).filter(|&v| l1.lookup_small(v).is_some()).count();
+        let hits = (0..256u64).filter(|&v| l1.lookup_small(A0, v).is_some()).count();
         assert!(hits <= 64);
         assert!(hits > 0);
     }
@@ -125,34 +142,64 @@ mod tests {
     #[test]
     fn unified_lookup_finds_either_size() {
         let mut l1 = L1Tlb::new();
-        l1.fill_small(3, 30);
-        l1.fill_huge(512, 4096);
-        assert_eq!(l1.lookup(3), Some(30));
-        assert_eq!(l1.lookup(700), Some(4096 + (700 - 512)));
-        assert_eq!(l1.lookup(4), None);
+        l1.fill_small(A0, 3, 30);
+        l1.fill_huge(A0, 512, 4096);
+        assert_eq!(l1.lookup(A0, 3), Some(30));
+        assert_eq!(l1.lookup(A0, 700), Some(4096 + (700 - 512)));
+        assert_eq!(l1.lookup(A0, 4), None);
+    }
+
+    #[test]
+    fn asid_tag_match_isolates_tenants() {
+        let mut l1 = L1Tlb::new();
+        l1.fill_small(A0, 7, 70);
+        l1.fill_huge(A0, 512, 4096);
+        // the other tenant sees nothing...
+        assert_eq!(l1.lookup(A1, 7), None, "cross-ASID 4KB hit");
+        assert_eq!(l1.lookup(A1, 700), None, "cross-ASID 2MB hit");
+        // ...and can hold its own (different) translation for the same VA
+        l1.fill_small(A1, 7, 9000);
+        assert_eq!(l1.lookup(A0, 7), Some(70));
+        assert_eq!(l1.lookup(A1, 7), Some(9000));
     }
 
     #[test]
     fn invalidate_range_is_selective() {
         let mut l1 = L1Tlb::new();
-        l1.fill_small(3, 30);
-        l1.fill_small(10, 100);
-        l1.fill_huge(512, 4096); // region [512, 1024)
-        l1.fill_huge(2048, 8192); // region [2048, 2560)
-        l1.invalidate_range(8, 1000); // hits vpn 10 and region [512,1024)
-        assert_eq!(l1.lookup_small(3), Some(30), "outside range survives");
-        assert_eq!(l1.lookup_small(10), None, "in-range 4KB entry dropped");
-        assert_eq!(l1.lookup_huge(700), None, "overlapping huge region dropped");
-        assert_eq!(l1.lookup_huge(2100), Some(8192 + (2100 - 2048)), "far huge region survives");
+        l1.fill_small(A0, 3, 30);
+        l1.fill_small(A0, 10, 100);
+        l1.fill_huge(A0, 512, 4096); // region [512, 1024)
+        l1.fill_huge(A0, 2048, 8192); // region [2048, 2560)
+        l1.invalidate_range(A0, 8, 1000); // hits vpn 10 and region [512,1024)
+        assert_eq!(l1.lookup_small(A0, 3), Some(30), "outside range survives");
+        assert_eq!(l1.lookup_small(A0, 10), None, "in-range 4KB entry dropped");
+        assert_eq!(l1.lookup_huge(A0, 700), None, "overlapping huge region dropped");
+        assert_eq!(
+            l1.lookup_huge(A0, 2100),
+            Some(8192 + (2100 - 2048)),
+            "far huge region survives"
+        );
+    }
+
+    #[test]
+    fn invalidate_range_spares_other_asids() {
+        let mut l1 = L1Tlb::new();
+        l1.fill_small(A0, 10, 100);
+        l1.fill_small(A1, 10, 200);
+        l1.fill_huge(A1, 512, 4096);
+        l1.invalidate_range(A0, 0, 2048);
+        assert_eq!(l1.lookup_small(A0, 10), None, "targeted tenant invalidated");
+        assert_eq!(l1.lookup_small(A1, 10), Some(200), "other tenant survives");
+        assert_eq!(l1.lookup_huge(A1, 700), Some(4096 + (700 - 512)));
     }
 
     #[test]
     fn flush_clears_both() {
         let mut l1 = L1Tlb::new();
-        l1.fill_small(1, 2);
-        l1.fill_huge(512, 0);
+        l1.fill_small(A0, 1, 2);
+        l1.fill_huge(A1, 512, 0);
         l1.flush();
-        assert_eq!(l1.lookup_small(1), None);
-        assert_eq!(l1.lookup_huge(512), None);
+        assert_eq!(l1.lookup_small(A0, 1), None);
+        assert_eq!(l1.lookup_huge(A1, 512), None);
     }
 }

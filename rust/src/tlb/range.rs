@@ -1,10 +1,14 @@
 //! Fully-associative range TLB (RMM [20]): 32 entries, each holding a
 //! variable-sized range `[vstart, vstart+len)` → `pstart`, true LRU.
+//! Entries carry the owning [`Asid`]: the CAM compares the ASID
+//! register alongside the range bounds, so tenants' ranges coexist and
+//! ranged invalidations only split the targeted tenant's entries.
 
-use crate::{Ppn, Vpn};
+use crate::{Asid, Ppn, Vpn};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RangeEntry {
+    pub asid: Asid,
     pub vstart: Vpn,
     pub len: u64,
     pub pstart: Ppn,
@@ -12,13 +16,13 @@ pub struct RangeEntry {
 
 impl RangeEntry {
     #[inline]
-    pub fn covers(&self, vpn: Vpn) -> bool {
-        vpn >= self.vstart && vpn < self.vstart + self.len
+    pub fn covers(&self, asid: Asid, vpn: Vpn) -> bool {
+        self.asid == asid && vpn >= self.vstart && vpn < self.vstart + self.len
     }
 
     #[inline]
     pub fn translate(&self, vpn: Vpn) -> Ppn {
-        debug_assert!(self.covers(vpn));
+        debug_assert!(vpn >= self.vstart && vpn < self.vstart + self.len);
         self.pstart + (vpn - self.vstart)
     }
 }
@@ -34,12 +38,12 @@ impl RangeTlb {
         RangeTlb { entries: Vec::with_capacity(capacity), capacity, tick: 0 }
     }
 
-    /// CAM lookup: all entries compared in parallel in hardware, so
-    /// this is one TLB access regardless of occupancy.
-    pub fn lookup(&mut self, vpn: Vpn) -> Option<Ppn> {
+    /// CAM lookup for `asid`: all entries compared in parallel in
+    /// hardware, so this is one TLB access regardless of occupancy.
+    pub fn lookup(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
         self.tick += 1;
         for (e, lru) in &mut self.entries {
-            if e.covers(vpn) {
+            if e.covers(asid, vpn) {
                 *lru = self.tick;
                 return Some(e.translate(vpn));
             }
@@ -73,30 +77,37 @@ impl RangeTlb {
         self.entries.clear();
     }
 
-    /// Invalidate `[vstart, vstart + len)`: overlapping ranges are
-    /// *split* — the surviving left/right remainders stay resident
-    /// (RMM's OS support invalidates at range granularity, and a
-    /// munmap in the middle of a large range must not discard the
-    /// still-valid tails).  If splitting would exceed capacity the
+    /// Invalidate `asid`'s `[vstart, vstart + len)`: overlapping
+    /// ranges of that tenant are *split* — the surviving left/right
+    /// remainders stay resident (RMM's OS support invalidates at range
+    /// granularity, and a munmap in the middle of a large range must
+    /// not discard the still-valid tails).  Other tenants' ranges are
+    /// untouched.  If splitting would exceed capacity the
     /// least-recently-used pieces are dropped.
-    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
+    pub fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         let vend = vstart.saturating_add(len);
         let mut survivors: Vec<(RangeEntry, u64)> = Vec::with_capacity(self.entries.len());
         for (e, lru) in self.entries.drain(..) {
             let eend = e.vstart + e.len;
-            if eend <= vstart || e.vstart >= vend {
+            if e.asid != asid || eend <= vstart || e.vstart >= vend {
                 survivors.push((e, lru));
                 continue;
             }
             if e.vstart < vstart {
                 survivors.push((
-                    RangeEntry { vstart: e.vstart, len: vstart - e.vstart, pstart: e.pstart },
+                    RangeEntry {
+                        asid: e.asid,
+                        vstart: e.vstart,
+                        len: vstart - e.vstart,
+                        pstart: e.pstart,
+                    },
                     lru,
                 ));
             }
             if eend > vend {
                 survivors.push((
                     RangeEntry {
+                        asid: e.asid,
                         vstart: vend,
                         len: eend - vend,
                         pstart: e.pstart + (vend - e.vstart),
@@ -116,7 +127,9 @@ impl RangeTlb {
         self.entries.len()
     }
 
-    /// Pages covered by resident ranges (coverage statistic).
+    /// Pages covered by resident ranges (coverage statistic; summed
+    /// over every tenant — coverage is a property of the hardware
+    /// array, not of one address space).
     pub fn coverage_pages(&self) -> u64 {
         self.entries.iter().map(|(e, _)| e.len).sum()
     }
@@ -126,49 +139,69 @@ impl RangeTlb {
 mod tests {
     use super::*;
 
+    const A0: Asid = Asid(0);
+    const A1: Asid = Asid(1);
+
+    fn re(vstart: Vpn, len: u64, pstart: Ppn) -> RangeEntry {
+        RangeEntry { asid: A0, vstart, len, pstart }
+    }
+
     #[test]
     fn range_translation() {
         let mut t = RangeTlb::new(4);
-        t.insert(RangeEntry { vstart: 100, len: 50, pstart: 1000 });
-        assert_eq!(t.lookup(100), Some(1000));
-        assert_eq!(t.lookup(149), Some(1049));
-        assert_eq!(t.lookup(150), None);
-        assert_eq!(t.lookup(99), None);
+        t.insert(re(100, 50, 1000));
+        assert_eq!(t.lookup(A0, 100), Some(1000));
+        assert_eq!(t.lookup(A0, 149), Some(1049));
+        assert_eq!(t.lookup(A0, 150), None);
+        assert_eq!(t.lookup(A0, 99), None);
     }
 
     #[test]
     fn lru_eviction() {
         let mut t = RangeTlb::new(2);
-        t.insert(RangeEntry { vstart: 0, len: 10, pstart: 0 });
-        t.insert(RangeEntry { vstart: 100, len: 10, pstart: 100 });
-        t.lookup(5); // refresh first
-        t.insert(RangeEntry { vstart: 200, len: 10, pstart: 200 });
-        assert_eq!(t.lookup(105), None, "LRU range evicted");
-        assert!(t.lookup(5).is_some());
-        assert!(t.lookup(205).is_some());
+        t.insert(re(0, 10, 0));
+        t.insert(re(100, 10, 100));
+        t.lookup(A0, 5); // refresh first
+        t.insert(re(200, 10, 200));
+        assert_eq!(t.lookup(A0, 105), None, "LRU range evicted");
+        assert!(t.lookup(A0, 5).is_some());
+        assert!(t.lookup(A0, 205).is_some());
     }
 
     #[test]
     fn duplicate_insert_refreshes() {
         let mut t = RangeTlb::new(2);
-        let e = RangeEntry { vstart: 0, len: 10, pstart: 0 };
+        let e = re(0, 10, 0);
         t.insert(e);
         t.insert(e);
         assert_eq!(t.occupancy(), 1);
     }
 
     #[test]
+    fn asid_isolation_in_cam() {
+        let mut t = RangeTlb::new(4);
+        t.insert(re(100, 50, 1000));
+        t.insert(RangeEntry { asid: A1, vstart: 100, len: 50, pstart: 7000 });
+        assert_eq!(t.lookup(A0, 120), Some(1020), "own range");
+        assert_eq!(t.lookup(A1, 120), Some(7020), "same VA, other tenant's frames");
+        // invalidation only splits the targeted tenant
+        t.invalidate_range(A0, 0, 1000);
+        assert_eq!(t.lookup(A0, 120), None);
+        assert_eq!(t.lookup(A1, 120), Some(7020), "other tenant untouched");
+    }
+
+    #[test]
     fn invalidate_range_splits_overlaps() {
         let mut t = RangeTlb::new(4);
-        t.insert(RangeEntry { vstart: 100, len: 100, pstart: 1000 }); // [100, 200)
-        t.insert(RangeEntry { vstart: 300, len: 10, pstart: 3000 });
-        t.invalidate_range(140, 20); // cuts [140, 160) out of the first
-        assert_eq!(t.lookup(139), Some(1039), "left remainder translates");
-        assert_eq!(t.lookup(140), None);
-        assert_eq!(t.lookup(159), None);
-        assert_eq!(t.lookup(160), Some(1060), "right remainder keeps its offset");
-        assert_eq!(t.lookup(199), Some(1099));
-        assert_eq!(t.lookup(305), Some(3005), "disjoint range untouched");
+        t.insert(re(100, 100, 1000)); // [100, 200)
+        t.insert(re(300, 10, 3000));
+        t.invalidate_range(A0, 140, 20); // cuts [140, 160) out of the first
+        assert_eq!(t.lookup(A0, 139), Some(1039), "left remainder translates");
+        assert_eq!(t.lookup(A0, 140), None);
+        assert_eq!(t.lookup(A0, 159), None);
+        assert_eq!(t.lookup(A0, 160), Some(1060), "right remainder keeps its offset");
+        assert_eq!(t.lookup(A0, 199), Some(1099));
+        assert_eq!(t.lookup(A0, 305), Some(3005), "disjoint range untouched");
         assert_eq!(t.occupancy(), 3);
         assert_eq!(t.coverage_pages(), 40 + 40 + 10);
     }
@@ -176,17 +209,17 @@ mod tests {
     #[test]
     fn invalidate_range_drops_contained_entries() {
         let mut t = RangeTlb::new(2);
-        t.insert(RangeEntry { vstart: 10, len: 5, pstart: 0 });
-        t.invalidate_range(0, 100);
+        t.insert(re(10, 5, 0));
+        t.invalidate_range(A0, 0, 100);
         assert_eq!(t.occupancy(), 0);
-        assert_eq!(t.lookup(12), None);
+        assert_eq!(t.lookup(A0, 12), None);
     }
 
     #[test]
     fn coverage_counts_pages() {
         let mut t = RangeTlb::new(4);
-        t.insert(RangeEntry { vstart: 0, len: 10, pstart: 0 });
-        t.insert(RangeEntry { vstart: 50, len: 600, pstart: 700 });
+        t.insert(re(0, 10, 0));
+        t.insert(re(50, 600, 700));
         assert_eq!(t.coverage_pages(), 610);
     }
 }

@@ -7,8 +7,10 @@
 
 pub mod churn;
 pub mod spec;
+pub mod tenants;
 pub mod tracegen;
 
 pub use churn::{build_schedule, churn_workloads, ChurnKind};
 pub use spec::{all_benchmarks, benchmark, Workload};
+pub use tenants::{tenant_mixes, TenantMix};
 pub use tracegen::{NativeTraceGen, TraceParams};

@@ -1,0 +1,78 @@
+//! The `tenants` workload family: several benchmark address spaces
+//! time-sharing one TLB hierarchy.
+//!
+//! The paper evaluates per-process, but the K-bit Aligned TLB's
+//! claimed advantage — robustness across *diverse* contiguity — bites
+//! hardest when tenants with different contiguity profiles share the
+//! hardware: a dense tenant's huge/aligned entries compete with a
+//! fragmented tenant's 4KB spray, and per-ASID K selection has to keep
+//! both happy at once.  Each mix pairs profiles accordingly (the
+//! workloads are the standard benchmark proxies; Figure 2/3 tiers name
+//! their contiguity classes).
+
+use super::spec::{benchmark, Workload};
+
+/// One multi-tenant scenario: the member workloads (tenant index =
+/// position) plus the scheduling shape.
+#[derive(Clone, Debug)]
+pub struct TenantMix {
+    pub name: &'static str,
+    pub workloads: Vec<Workload>,
+    /// mean scheduling quantum as a fraction of the trace: a quantum
+    /// of `trace_len / quantum_denom` accesses
+    pub quantum_denom: u64,
+    /// seed for the seeded switch schedule
+    pub seed: u64,
+}
+
+fn mix(name: &'static str, members: &[&str], quantum_denom: u64, seed: u64) -> TenantMix {
+    TenantMix {
+        name,
+        workloads: members
+            .iter()
+            .map(|n| benchmark(n).unwrap_or_else(|| panic!("unknown benchmark {n}")))
+            .collect(),
+        quantum_denom,
+        seed,
+    }
+}
+
+/// The tenant mixes of the `repro tenants` experiment, in reporting
+/// order: dense-vs-fragmented is the headline (diverse contiguity on
+/// one TLB), the homogeneous pairs are the controls, and the 3-way mix
+/// stresses per-ASID K selection hardest.
+pub fn tenant_mixes() -> Vec<TenantMix> {
+    vec![
+        // dense (tier-5 contiguity) against fragmented (tier-1)
+        mix("dense+frag", &["libquantum", "sjeng"], 16, 3001),
+        // both dense: tagged schemes should coexist almost for free
+        mix("dense+dense", &["libquantum", "mcf"], 16, 3002),
+        // both fragmented: capacity fight between 4KB sprays
+        mix("frag+frag", &["sjeng", "xalancbmk"], 16, 3003),
+        // three-way diversity: dense + fragmented + medium (tier-2)
+        mix("dense+frag+med", &["libquantum", "sjeng", "povray"], 24, 3004),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_resolve_and_validate() {
+        let mixes = tenant_mixes();
+        assert_eq!(mixes.len(), 4);
+        for m in &mixes {
+            assert!(m.workloads.len() >= 2, "{}: a mix needs tenants", m.name);
+            assert!(m.quantum_denom >= 2, "{}", m.name);
+            for w in &m.workloads {
+                w.params.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", m.name, w.name));
+            }
+        }
+        // seeds are distinct so schedules differ across mixes
+        let mut seeds: Vec<u64> = mixes.iter().map(|m| m.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), mixes.len());
+    }
+}

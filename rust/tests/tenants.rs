@@ -1,0 +1,341 @@
+//! Multi-tenant (ASID) pipeline tests: the single-tenant bit-identity
+//! regression for every scheme, the sharded == serial determinism
+//! property with a context switch landing exactly on a shard boundary,
+//! the default-`switch_to` flush fallback equivalence (today's
+//! flush-per-switch semantics), and tenant-scheduling composed with
+//! per-tenant mutation schedules (cross-tenant stale-PPN oracle).
+
+use katlb::coordinator::{
+    drive_span, drive_tenant_span, run_cell, run_tenant_cell, run_tenant_cell_shard,
+    run_tenant_cells_sharded, BenchContext, Config, SchemeKind, Shard, TenantMixCtx,
+};
+use katlb::mem::addrspace::{AddressSpace, MutationEvent, MutationOp, MutationSchedule};
+use katlb::pagetable::PageTable;
+use katlb::schemes::base::BaseL2;
+use katlb::schemes::{Outcome, Scheme};
+use katlb::sim::tenants::{SwitchEvent, TenantSchedule};
+use katlb::sim::{Engine, Metrics};
+use katlb::workloads::benchmark;
+use katlb::{Asid, Vpn};
+use std::sync::Arc;
+
+/// All seven contenders, as the tenants experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+fn tenant_cfg() -> Config {
+    Config {
+        trace_len: 1 << 15,
+        epoch: 1 << 13, // = shard length below: the epoch-alignment rule
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 13),
+        chunk_len: 1 << 12,
+        ..Config::default()
+    }
+}
+
+/// THE regression the ASID refactor must not break: a single-tenant
+/// schedule through the tenant path is bit-identical to the plain
+/// frozen-mapping pipeline for every scheme — `Asid(0)` tag folds are
+/// the identity, attribution and switch counters included.
+#[test]
+fn single_tenant_runs_are_bit_identical_for_every_scheme() {
+    let cfg = tenant_cfg();
+    let ctx = Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap());
+    for kind in seven() {
+        let plain = run_cell(&ctx, kind);
+        let mix = TenantMixCtx::single(Arc::clone(&ctx));
+        let tenant = run_tenant_cell(&mix, kind);
+        assert_eq!(
+            plain.metrics, tenant.metrics,
+            "{}: single-tenant path must reproduce the plain pipeline bit for bit",
+            kind.label()
+        );
+        assert_eq!(tenant.metrics.context_switches, 0, "{}", kind.label());
+        assert_eq!(tenant.metrics.switch_flushes, 0, "{}", kind.label());
+        // the whole run is attributed to tenant 0
+        assert_eq!(
+            tenant.metrics.tenant(0),
+            (tenant.metrics.accesses, tenant.metrics.walks),
+            "{}",
+            kind.label()
+        );
+    }
+}
+
+/// A 2-tenant mix with switches landing exactly on the boundaries of a
+/// 4-way shard split (plus mid-shard switches).
+fn boundary_mix(cfg: &Config) -> TenantMixCtx {
+    let a = Arc::new(BenchContext::build(benchmark("libquantum").unwrap(), cfg, None).unwrap());
+    let b = Arc::new(BenchContext::build(benchmark("sjeng").unwrap(), cfg, None).unwrap());
+    let l = cfg.trace_len as u64;
+    let schedule = TenantSchedule::with_events(
+        vec![
+            SwitchEvent { at: l / 4, tenant: 1 }, // exactly shard 1's start
+            SwitchEvent { at: l / 3 + 7, tenant: 0 },
+            SwitchEvent { at: l / 2, tenant: 1 }, // exactly shard 2's start
+            SwitchEvent { at: 5 * l / 8 + 1, tenant: 0 },
+            SwitchEvent { at: 3 * l / 4, tenant: 1 }, // exactly shard 3's start
+        ],
+        2,
+        l,
+    );
+    TenantMixCtx { name: "boundary-mix".into(), tenants: vec![a, b], schedule, epoch: cfg.epoch }
+}
+
+/// Serial reference for a tenant mix: one warm engine across all
+/// shards with a whole-TLB shootdown at each boundary — the exact
+/// state reconstruction `run_tenant_cell_shard` performs cold.
+fn serial_with_boundary_flushes(mix: &TenantMixCtx, kind: SchemeKind, shards: usize) -> Metrics {
+    let l = mix.schedule.len();
+    let mut spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+    let mut eng = Engine::new(scheme).with_epoch(mix.epoch);
+    eng.verify = true;
+    for (t, space) in spaces.iter().enumerate().skip(1) {
+        eng.register_tenant(Asid::from_index(t), space.view());
+    }
+    eng.set_tenant(Asid::from_index(0));
+    for index in 0..shards {
+        let (s, e) = Shard { index, count: shards }.bounds(l);
+        drive_tenant_span(mix, &mut spaces, &mut eng, s, e).unwrap();
+        if index + 1 < shards {
+            eng.flush();
+        }
+    }
+    let (m, _) = eng.finish();
+    m
+}
+
+/// Sharded == serial with a multi-tenant schedule, for every scheme:
+/// cold per-shard engines (mid-schedule state reconstructed) merged in
+/// order equal one serial engine with shootdowns at the boundaries —
+/// switch counters, per-tenant attribution and invalidations included.
+/// The switch exactly on a shard boundary must be delivered (and
+/// counted) by the shard that starts there.
+#[test]
+fn sharded_equals_serial_with_tenant_schedule() {
+    let cfg = tenant_cfg();
+    let mix = Arc::new(boundary_mix(&cfg));
+    let shards = 4usize;
+    for kind in seven() {
+        let sm = serial_with_boundary_flushes(&mix, kind, shards);
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_tenant_cell_shard(&mix, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        assert_eq!(
+            sm.accounting(),
+            merged.accounting(),
+            "{}: sharded tenant merge must equal serial-with-shootdowns",
+            kind.label()
+        );
+        assert_eq!(
+            sm.context_switches,
+            merged.context_switches,
+            "{}: every switch counted exactly once across shards",
+            kind.label()
+        );
+        assert_eq!(sm.switch_flushes, merged.switch_flushes, "{}", kind.label());
+        assert_eq!(
+            sm.tenant_stats, merged.tenant_stats,
+            "{}: per-tenant attribution must survive sharding",
+            kind.label()
+        );
+        assert_eq!(merged.context_switches, mix.schedule.switches() as u64, "{}", kind.label());
+        assert_eq!(merged.switch_flushes, 0, "{}: all contenders are tagged", kind.label());
+        assert_eq!(merged.accesses, mix.schedule.len(), "{}", kind.label());
+        // both tenants actually ran and their attribution partitions
+        // the totals
+        let (a0, w0) = merged.tenant(0);
+        let (a1, w1) = merged.tenant(1);
+        assert!(a0 > 0 && a1 > 0, "{}", kind.label());
+        assert_eq!(a0 + a1, merged.accesses, "{}", kind.label());
+        assert_eq!(w0 + w1, merged.walks, "{}", kind.label());
+
+        // and the parallel fan-out is deterministic too
+        let par = run_tenant_cells_sharded(vec![(Arc::clone(&mix), kind)], shards, 3);
+        assert_eq!(par[0].metrics, merged, "{}: pool vs serial shard loop", kind.label());
+        assert_eq!(par[0].shards, shards);
+    }
+}
+
+/// A scheme built entirely on the trait defaults: untagged hardware,
+/// so `switch_to` falls back to a whole-TLB flush.
+struct UntaggedBase(BaseL2);
+
+impl Scheme for UntaggedBase {
+    fn name(&self) -> String {
+        "untagged-base".into()
+    }
+    fn lookup(&mut self, vpn: Vpn) -> Outcome {
+        self.0.lookup(vpn)
+    }
+    fn fill(&mut self, vpn: Vpn, pt: &PageTable) {
+        self.0.fill(vpn, pt)
+    }
+    fn coverage_pages(&self) -> u64 {
+        self.0.coverage_pages()
+    }
+    fn flush(&mut self) {
+        self.0.flush()
+    }
+    // invalidate_range / switch_to / asid_tagged: trait defaults
+}
+
+/// Satellite: the default `switch_to` fallback preserves today's
+/// semantics exactly.
+///
+/// 1. On a single-tenant schedule (no switches) an untagged scheme is
+///    bit-identical to the same hardware run tagged — the frozen path
+///    is preserved.
+/// 2. On a multi-tenant schedule, delivering switches to the untagged
+///    scheme equals running the same spans with an explicit whole-TLB
+///    flush at every switch point — the pre-ASID context-switch model.
+#[test]
+fn default_switch_to_matches_explicit_flush_semantics() {
+    let cfg = tenant_cfg();
+
+    // --- 1: single tenant, untagged == tagged, bit for bit ---
+    let ctx = Arc::new(BenchContext::build(benchmark("astar").unwrap(), &cfg, None).unwrap());
+    let single = TenantMixCtx::single(Arc::clone(&ctx));
+    let run_single = |scheme_untagged: bool| -> Metrics {
+        let mut spaces: Vec<AddressSpace> =
+            single.tenants.iter().map(|c| c.build_aspace(false)).collect();
+        let boxed: Box<dyn Scheme> = if scheme_untagged {
+            Box::new(UntaggedBase(BaseL2::new()))
+        } else {
+            Box::new(BaseL2::new())
+        };
+        let mut eng = Engine::new(boxed).with_epoch(single.epoch);
+        eng.verify = true;
+        drive_tenant_span(&single, &mut spaces, &mut eng, 0, single.schedule.len()).unwrap();
+        eng.finish().0
+    };
+    assert_eq!(
+        run_single(true).accounting(),
+        run_single(false).accounting(),
+        "no switches: untagged and tagged hardware are indistinguishable"
+    );
+
+    // --- 2: multi-tenant, default switch_to == flush at switches ---
+    let mix = boundary_mix(&cfg);
+
+    // via the scheduler: switch_to delivered, default flushes
+    let mut spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(false)).collect();
+    let boxed: Box<dyn Scheme> = Box::new(UntaggedBase(BaseL2::new()));
+    let mut eng = Engine::new(boxed).with_epoch(mix.epoch);
+    eng.verify = true;
+    drive_tenant_span(&mix, &mut spaces, &mut eng, 0, mix.schedule.len()).unwrap();
+    let (switched, _) = eng.finish();
+    assert_eq!(switched.switch_flushes, mix.schedule.switches() as u64);
+
+    // today's semantics: the same spans through a single-ASID engine
+    // with an explicit whole-TLB shootdown at every switch point
+    let mut spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(false)).collect();
+    let boxed: Box<dyn Scheme> = Box::new(UntaggedBase(BaseL2::new()));
+    let mut eng = Engine::new(boxed).with_epoch(mix.epoch);
+    eng.verify = true;
+    let evs = mix.schedule.events();
+    let mut pos = 0u64;
+    for i in 0..=evs.len() {
+        let end = if i < evs.len() { evs[i].at } else { mix.schedule.len() };
+        let t = mix.schedule.active_at(pos);
+        let la = mix.schedule.local_pos(t, pos);
+        drive_span(&mix.tenants[t], &mut spaces[t], &mut eng, la, la + (end - pos)).unwrap();
+        if i < evs.len() {
+            eng.flush();
+        }
+        pos = end;
+    }
+    let (flushed, _) = eng.finish();
+    assert_eq!(
+        switched.accounting(),
+        flushed.accounting(),
+        "default switch_to must equal the explicit flush-per-switch model"
+    );
+    assert_eq!(flushed.shootdowns, mix.schedule.switches() as u64);
+}
+
+/// Tenant scheduling composed with per-tenant mutation schedules: the
+/// fragmented tenant churns (remap/munmap/THP) in its own local
+/// timeline while the dense tenant runs undisturbed.  Verification is
+/// ON throughout, so this doubles as the cross-tenant stale-PPN
+/// oracle; sharded == serial must still hold for the tagged schemes.
+#[test]
+fn tenant_churn_composes_with_scheduling() {
+    let cfg = tenant_cfg();
+    let mut mix = boundary_mix(&cfg);
+    let l = cfg.trace_len as u64;
+    // tenant 1 mutates its space at *local* access indices (it only
+    // executes ~half the global timeline)
+    let churn = MutationSchedule::new(vec![
+        MutationEvent::new(l / 64, MutationOp::Remap { selector: 2 }),
+        MutationEvent::new(l / 16, MutationOp::Munmap { selector: 5 }),
+        MutationEvent::new(l / 8, MutationOp::Mmap { pages: 128 }),
+        MutationEvent::new(l / 4, MutationOp::ThpPromote),
+    ]);
+    {
+        let t1 = Arc::get_mut(&mut mix.tenants[1]).expect("unshared ctx");
+        t1.schedule = churn;
+    }
+    let mix = Arc::new(mix);
+    let shards = 4usize;
+    // the stale-PPN oracle (verify=ON end to end) over derived and
+    // non-derived schemes alike
+    let oracle_kinds =
+        [SchemeKind::Base, SchemeKind::Rmm, SchemeKind::AnchorDynamic, SchemeKind::KAligned(2)];
+    for kind in oracle_kinds {
+        let whole = run_tenant_cell(&mix, kind);
+        assert!(
+            whole.metrics.invalidations > 0,
+            "{}: tenant 1's churn must reach the engine",
+            kind.label()
+        );
+        assert_eq!(whole.metrics.accesses, l, "{}", kind.label());
+    }
+    // sharded == serial under tenant churn: exact for schemes without
+    // per-ASID *derived* state (K sets / anchor distances / RMM OS
+    // tables re-derive at shard registration from the live space,
+    // while a serial engine refreshes only the current tenant's lane
+    // at epoch ticks — the multi-tenant extension of the module's
+    // epoch-alignment rule)
+    for kind in [SchemeKind::Base, SchemeKind::Colt, SchemeKind::Cluster] {
+        let sm = serial_with_boundary_flushes(&mix, kind, shards);
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_tenant_cell_shard(&mix, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        assert_eq!(
+            sm.accounting(),
+            merged.accounting(),
+            "{}: sharded == serial with tenant churn",
+            kind.label()
+        );
+        assert_eq!(sm.invalidations, merged.invalidations, "{}", kind.label());
+        assert_eq!(sm.tenant_stats, merged.tenant_stats, "{}", kind.label());
+    }
+}
