@@ -15,6 +15,7 @@ use crate::mem::mapgen::{self, SyntheticKind};
 use crate::pagetable::aligned::init_cost;
 use crate::pagetable::PageTable;
 use crate::runtime::Runtime;
+use crate::sim::{CostModel, Metrics};
 use crate::workloads::{all_benchmarks, Workload};
 use crate::bail;
 use std::sync::Arc;
@@ -74,6 +75,7 @@ pub fn synthetic_context(
         trace,
         epoch: cfg.epoch.max(1),
         schedule: MutationSchedule::default(),
+        cost: cfg.cost,
     }))
 }
 
@@ -541,6 +543,71 @@ pub fn tenants(cfg: &Config) -> Result<Vec<Table>> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// CPI: cost-model cycle breakdown over the churn + tenant batteries
+// ---------------------------------------------------------------------------
+
+/// One scheme's cost-model row: translation cycles per access split
+/// into hit / walk / shootdown / switch (plus the total).
+fn cpi_row(m: &Metrics) -> Vec<String> {
+    let (h, w, s, x) = m.cpi_breakdown4(1.0);
+    vec![
+        format!("{h:.3}"),
+        format!("{w:.3}"),
+        format!("{s:.3}"),
+        format!("{x:.3}"),
+        format!("{:.3}", h + w + s + x),
+    ]
+}
+
+/// The `repro cpi` experiment: the seven contenders over the churn
+/// battery (three mutation cycles) and the tenant battery (four
+/// mixes), priced by [`CostModel::realistic`] — walks by page-table
+/// depth, shootdowns by IPI + per-page invalidation (or the
+/// flush-refill estimate when a scheme's cost-aware
+/// `invalidate_range` prefers the whole flush), context switches by
+/// ASID-register load vs flush refill.  Reported per scheme as
+/// translation cycles per access split into hit / walk / shootdown /
+/// switch: the view under which churn- and tenant-heavy miss-rate
+/// wins can be eaten by coherence traffic that miss tables price at
+/// zero.
+pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
+    let mut cfg = cfg.clone();
+    cfg.cost = CostModel::realistic();
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let cols = ["hit c/a", "walk c/a", "shootdown c/a", "switch c/a", "total c/a"];
+    let mut out = Vec::new();
+    for (kind, wl) in crate::workloads::churn_workloads() {
+        let ctx = Arc::new(BenchContext::build_churn(wl, kind, &cfg, rt.as_ref())?);
+        let mut t = Table::new(
+            &format!("CPI [churn {}]: translation cycles per access", kind.label()),
+            &cols,
+        );
+        let cells: Vec<(Arc<BenchContext>, SchemeKind)> =
+            churn_schemes().into_iter().map(|k| (Arc::clone(&ctx), k)).collect();
+        let results = run_cells_sharded(cells, cfg.shards, cfg.effective_workers());
+        for r in &results {
+            t.row(&r.scheme, cpi_row(&r.metrics));
+        }
+        out.push(t);
+    }
+    for mix in crate::workloads::tenant_mixes() {
+        let ctx = Arc::new(TenantMixCtx::build(&mix, &cfg, rt.as_ref())?);
+        let mut t = Table::new(
+            &format!("CPI [tenants {}]: translation cycles per access", ctx.name),
+            &cols,
+        );
+        let cells: Vec<(Arc<TenantMixCtx>, SchemeKind)> =
+            churn_schemes().into_iter().map(|k| (Arc::clone(&ctx), k)).collect();
+        let results = run_tenant_cells_sharded(cells, cfg.shards, cfg.effective_workers());
+        for r in &results {
+            t.row(&r.scheme, cpi_row(&r.metrics));
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -617,6 +684,32 @@ mod tests {
                 // every tenant actually ran
                 for c in &cells[..n - 3] {
                     assert_ne!(c.as_str(), "-", "{label} in {}: tenant never scheduled", t.title);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cpi_tables_price_shootdowns_and_switches() {
+        let mut cfg = tiny();
+        cfg.max_ws_pages = Some(1 << 13);
+        let tables = cpi(&cfg).unwrap();
+        assert_eq!(tables.len(), 3 + 4, "three churn cycles + four tenant mixes");
+        let col = |cells: &[String], i: usize| cells[i].parse::<f64>().unwrap();
+        for t in &tables {
+            assert_eq!(t.rows.len(), 7, "seven schemes: {}", t.title);
+            for (label, cells) in &t.rows {
+                assert!(col(cells, 1) > 0.0, "{label} in {}: walks must cost cycles", t.title);
+                let total = col(cells, 0) + col(cells, 1) + col(cells, 2) + col(cells, 3);
+                assert!(
+                    (total - col(cells, 4)).abs() < 5e-3,
+                    "{label} in {}: breakdown must sum to the total",
+                    t.title
+                );
+                if t.title.contains("churn") {
+                    assert!(col(cells, 2) > 0.0, "{label} in {}: shootdowns priced", t.title);
+                } else {
+                    assert!(col(cells, 3) > 0.0, "{label} in {}: switches priced", t.title);
                 }
             }
         }

@@ -84,7 +84,7 @@ use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
 use crate::schemes::{AnyScheme, Scheme};
 use crate::sim::tenants::TenantSchedule;
-use crate::sim::{Engine, Metrics};
+use crate::sim::{CostModel, Engine, Metrics};
 use crate::workloads::churn::{build_schedule, ChurnKind};
 use crate::workloads::tenants::TenantMix;
 use crate::workloads::tracegen::TraceParams;
@@ -191,6 +191,11 @@ pub struct Config {
     pub shards: usize,
     /// streaming chunk length — the per-cell trace memory bound
     pub chunk_len: usize,
+    /// translation cost model for every cell's engine (default:
+    /// [`CostModel::zero`] — Table 2 access latencies only, shootdowns
+    /// and context switches free, bit-identical to the pre-cost
+    /// pipeline; `repro cpi` swaps in [`CostModel::realistic`])
+    pub cost: CostModel,
 }
 
 impl Default for Config {
@@ -203,6 +208,7 @@ impl Default for Config {
             max_ws_pages: None,
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
+            cost: CostModel::zero(),
         }
     }
 }
@@ -217,6 +223,7 @@ impl Config {
             max_ws_pages: Some(1 << 16),
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
+            cost: CostModel::zero(),
         }
     }
 
@@ -301,6 +308,9 @@ pub struct BenchContext {
     /// address-space mutation events (empty = frozen mapping, the
     /// strict special case reproducing the pre-churn pipeline)
     pub schedule: MutationSchedule,
+    /// translation cost model for this benchmark's engines (from
+    /// [`Config::cost`])
+    pub cost: CostModel,
 }
 
 impl BenchContext {
@@ -348,6 +358,7 @@ impl BenchContext {
             trace,
             epoch: cfg.epoch.max(1),
             schedule: MutationSchedule::default(),
+            cost: cfg.cost,
         })
     }
 
@@ -508,7 +519,7 @@ pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> Cel
     };
     let view = ctx.static_view(kind.uses_thp());
     let scheme = kind.build(mapping, hist);
-    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
+    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = false; // correctness is covered by tests; keep sims fast
     let (start, end) = shard.bounds(ctx.trace.len);
     ctx.for_each_chunk(start, end, |chunk| eng.run_chunk(chunk, view))
@@ -540,7 +551,7 @@ fn run_churn_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> C
         aspace.apply(&ev.op);
     }
     let scheme = kind.build(aspace.mapping(), aspace.hist());
-    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch);
+    let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = true;
     drive_span(ctx, &mut aspace, &mut eng, start, end)
         .expect("trace stream (mapping validated at context build)");
@@ -626,6 +637,9 @@ pub struct TenantMixCtx {
     pub schedule: TenantSchedule,
     /// accesses between epoch callbacks (from [`Config::epoch`])
     pub epoch: u64,
+    /// translation cost model for the mix's engines (from
+    /// [`Config::cost`])
+    pub cost: CostModel,
 }
 
 impl TenantMixCtx {
@@ -645,7 +659,13 @@ impl TenantMixCtx {
         let len = cfg.trace_len as u64;
         let quantum = (len / mix.quantum_denom.max(2)).max(2);
         let schedule = TenantSchedule::seeded(tenants.len(), len, quantum, mix.seed);
-        Ok(TenantMixCtx { name: mix.name.to_string(), tenants, schedule, epoch: cfg.epoch.max(1) })
+        Ok(TenantMixCtx {
+            name: mix.name.to_string(),
+            tenants,
+            schedule,
+            epoch: cfg.epoch.max(1),
+            cost: cfg.cost,
+        })
     }
 
     /// Wrap one context as a single-tenant "mix" — the regression
@@ -653,11 +673,13 @@ impl TenantMixCtx {
     pub fn single(ctx: Arc<BenchContext>) -> TenantMixCtx {
         let len = ctx.trace.len;
         let epoch = ctx.epoch;
+        let cost = ctx.cost;
         TenantMixCtx {
             name: ctx.workload.name.to_string(),
             tenants: vec![ctx],
             schedule: TenantSchedule::single(len),
             epoch,
+            cost,
         }
     }
 
@@ -705,6 +727,22 @@ pub fn drive_tenant_span<S: Scheme>(
         let la = local[t];
         let lb = la + (span_end - pos);
         drive_span(&mix.tenants[t], &mut spaces[t], eng, la, lb)?;
+        if eng.take_epoch_pending() {
+            // an epoch boundary fired inside the span: the engine's
+            // inline hook refreshed only the running tenant's derived
+            // lane (the only space it can see mid-chunk).  Refresh the
+            // descheduled tenants' lanes here, where their spaces are
+            // in scope — a descheduled tenant's space cannot change
+            // while it is off-core, so the deferral is exact, and it
+            // mirrors the re-derivation sharded runners perform at
+            // shard registration (exact shard-invariance of per-ASID
+            // derived state under tenant churn).
+            for (o, space) in spaces.iter().enumerate() {
+                if o != t {
+                    eng.refresh_lane(Asid::from_index(o), space.view());
+                }
+            }
+        }
         local[t] = lb;
         pos = span_end;
     }
@@ -738,7 +776,7 @@ pub fn run_tenant_cell_shard(mix: &TenantMixCtx, kind: SchemeKind, shard: Shard)
     // remaining tenants registered so per-ASID configuration is
     // derived from each tenant's own histogram/mapping
     let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
-    let mut eng = Engine::new(scheme).with_epoch(mix.epoch);
+    let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
     eng.verify = true;
     for (t, space) in spaces.iter().enumerate().skip(1) {
         eng.register_tenant(Asid::from_index(t), space.view());

@@ -15,8 +15,9 @@
 //!   [`Asid`]), [`schemes`] (the seven L2 contenders behind the
 //!   [`schemes::Scheme`] trait), [`pagetable`] (translation ground
 //!   truth + the paper's Algorithms 1–3 helpers), and [`sim`] (the
-//!   monomorphized [`sim::Engine`], Table 2 latency model, and
-//!   [`sim::Metrics`] counters).
+//!   monomorphized [`sim::Engine`], Table 2 latency model, the
+//!   cycle-accurate [`sim::CostModel`] pricing walks, shootdowns and
+//!   context switches, and [`sim::Metrics`] counters).
 //! * **Workload models** — [`mem`] (demand mappings, contiguity
 //!   histograms, the *mutable* [`mem::addrspace::AddressSpace`] with
 //!   its mmap/munmap/THP mutation schedules), [`workloads`] (the 16
@@ -41,9 +42,11 @@
 //! implements a precise ASID-aware `invalidate_range` (translation
 //! coherence) and an ASID-tagged `switch_to` (context switches retain
 //! other tenants' entries instead of flushing), `repro churn` reports
-//! per-phase miss rates as contiguity degrades and recovers, and
+//! per-phase miss rates as contiguity degrades and recovers,
 //! `repro tenants` interleaves tenants with diverse contiguity
-//! profiles over one shared TLB.
+//! profiles over one shared TLB, and `repro cpi` prices both
+//! batteries through the cost model (hit/walk/shootdown/switch
+//! cycles per access).
 //!
 //! Quickstart:
 //! ```no_run

@@ -12,6 +12,9 @@
 //!   tenants    — multi-tenant ASID-tagged TLBs: per-tenant and
 //!                aggregate miss rates + context-switch counts under
 //!                seeded tenant scheduling (verification on)
+//!   cpi        — cycle-accurate cost model over the churn + tenant
+//!                batteries: per-scheme translation cycles per access
+//!                split into hit/walk/shootdown/switch
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
@@ -92,7 +95,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!(
-                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|all|smoke> \
+                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|cpi|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
                  [--shards N] [--chunk N]"
             );
@@ -131,6 +134,11 @@ fn main() -> Result<()> {
         }
         "tenants" => {
             for t in experiments::tenants(&cfg)? {
+                println!("{}", t.render());
+            }
+        }
+        "cpi" => {
+            for t in experiments::cpi(&cfg)? {
                 println!("{}", t.render());
             }
         }
@@ -190,6 +198,9 @@ fn main() -> Result<()> {
                         println!("{}", t.render());
                     }
                     for t in experiments::tenants(&cfg)? {
+                        println!("{}", t.render());
+                    }
+                    for t in experiments::cpi(&cfg)? {
                         println!("{}", t.render());
                     }
                 }

@@ -15,6 +15,7 @@ use super::{
 use crate::mem::addrspace::SpaceView;
 use crate::pagetable::anchor::{anchor_vpn, select_anchor, select_distance};
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -97,6 +98,43 @@ impl Anchor {
     fn set_anchor(&self, vpn: Vpn) -> usize {
         ((vpn >> self.lane().log2d) & self.tlb.set_mask()) as usize
     }
+
+    /// Index of `asid`'s distance lane, created at the construction-
+    /// time distance on first sight.  Does not touch the ASID register
+    /// (`cur`).
+    fn lane_index(&mut self, asid: Asid) -> usize {
+        match self.lanes.iter().position(|l| l.asid == asid) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane {
+                    asid,
+                    dist: self.init_dist,
+                    log2d: self.init_dist.trailing_zeros(),
+                });
+                self.lanes.len() - 1
+            }
+        }
+    }
+
+    /// Dynamic mode's epoch derivation for one lane: re-select the
+    /// distance from that tenant's histogram; a change rewrites the
+    /// tenant's anchors, so only its entries are shot down.
+    fn derive_lane(&mut self, i: usize, view: SpaceView<'_>) {
+        if self.mode != Mode::Dynamic {
+            return;
+        }
+        let d = select_distance(view.hist);
+        let lane = &mut self.lanes[i];
+        if d != lane.dist {
+            lane.dist = d;
+            lane.log2d = d.trailing_zeros();
+            let asid = lane.asid;
+            self.shootdowns += 1;
+            // distance change rewrites this tenant's anchors: a
+            // per-ASID shootdown (other tenants keep their entries)
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
+        }
+    }
 }
 
 impl Scheme for Anchor {
@@ -174,7 +212,19 @@ impl Scheme for Anchor {
     /// contiguity)` intersects the range has its contiguity *shrunk*
     /// to the pages before the range (still valid — they did not
     /// move), and is dropped when the anchor page itself is affected.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// Falls back to the whole-TLB flush when the cost model prices
+    /// the per-page sweep above the flush refill.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
             Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
@@ -196,23 +246,14 @@ impl Scheme for Anchor {
             }
             Entry::Invalid => true,
         });
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register and select
     /// (creating if needed, at the construction-time distance) the
     /// tenant's distance lane; all entries stay resident.
     fn switch_to(&mut self, asid: Asid) {
-        self.cur = match self.lanes.iter().position(|l| l.asid == asid) {
-            Some(i) => i,
-            None => {
-                self.lanes.push(Lane {
-                    asid,
-                    dist: self.init_dist,
-                    log2d: self.init_dist.trailing_zeros(),
-                });
-                self.lanes.len() - 1
-            }
-        };
+        self.cur = self.lane_index(asid);
     }
 
     fn asid_tagged(&self) -> bool {
@@ -225,19 +266,15 @@ impl Scheme for Anchor {
     /// build-time one).  A change rewrites that tenant's anchors, so
     /// only its entries are shot down.
     fn epoch(&mut self, view: SpaceView<'_>) {
-        if self.mode == Mode::Dynamic {
-            let d = select_distance(view.hist);
-            let lane = &mut self.lanes[self.cur];
-            if d != lane.dist {
-                lane.dist = d;
-                lane.log2d = d.trailing_zeros();
-                let asid = lane.asid;
-                self.shootdowns += 1;
-                // distance change rewrites this tenant's anchors: a
-                // per-ASID shootdown (other tenants keep their entries)
-                self.tlb.retain(|tag, _| tag_asid(tag) != asid);
-            }
-        }
+        self.derive_lane(self.cur, view);
+    }
+
+    /// The epoch derivation addressed per lane: re-select `asid`'s
+    /// distance from that tenant's histogram (Dynamic mode only),
+    /// without touching the ASID register or other tenants' lanes.
+    fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        let i = self.lane_index(asid);
+        self.derive_lane(i, view);
     }
 }
 
@@ -273,7 +310,7 @@ mod tests {
         assert!(s.lookup(20).is_hit());
         s.switch_to(Asid(1));
         assert!(!s.lookup(20).is_hit(), "cross-ASID anchor hit");
-        s.invalidate_range(Asid(1), 0, 64);
+        s.invalidate_range(Asid(1), 0, 64, &CostModel::zero());
         s.switch_to(Asid(0));
         assert!(s.lookup(20).is_hit(), "other tenant's shootdown spared us");
     }
@@ -358,7 +395,7 @@ mod tests {
         s.fill(20, &pt); // anchor 16 covers [16, 32)
         // invalidate [10, 20): anchor 0 shrinks to [0, 10), anchor 16
         // (inside the range) drops entirely
-        s.invalidate_range(A0, 10, 10);
+        s.invalidate_range(A0, 10, 10, &CostModel::zero());
         for v in 0..10u64 {
             match s.lookup(v) {
                 Outcome::Coalesced { ppn, .. } => assert_eq!(Some(ppn), pt.translate(v), "{v}"),

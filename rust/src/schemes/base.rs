@@ -7,6 +7,7 @@ use super::{
     asid_bits, huge_overlaps, regular_in_range, tag_huge, tag_regular, Outcome, Scheme,
 };
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -100,14 +101,27 @@ impl Scheme for BaseL2 {
 
     /// Precise per-ASID invalidation: evict that tenant's 4KB entries
     /// whose VPN is in the range and its 2MB entries whose region
-    /// overlaps it; other tenants' entries stay resident.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// overlaps it; other tenants' entries stay resident.  Falls back
+    /// to the whole-TLB flush when the cost model prices the per-page
+    /// sweep above the flush refill.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
             Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
             Entry::Huge(_) => !huge_overlaps(tag, asid, vstart, vend),
             Entry::Invalid => true,
         });
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register, retain all
@@ -178,7 +192,7 @@ mod tests {
         for v in 0..100u64 {
             s.fill(v, &pt_old);
         }
-        s.invalidate_range(A0, 20, 10);
+        s.invalidate_range(A0, 20, 10, &CostModel::zero());
         for v in 20..30u64 {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale entry at {v}");
         }
@@ -193,7 +207,7 @@ mod tests {
         s.fill(700, &pt); // huge region [512, 1024)
         s.fill(1500, &pt); // huge region [1024, 1536)... fill picks region of 1500
         assert!(s.lookup(600).is_hit());
-        s.invalidate_range(A0, 1000, 8); // overlaps [512,1024) only
+        s.invalidate_range(A0, 1000, 8, &CostModel::zero()); // overlaps [512,1024) only
         assert_eq!(s.lookup(600), Outcome::Miss { probes: 0 });
         assert!(s.lookup(1500).is_hit(), "non-overlapping huge region survives");
     }
@@ -214,7 +228,7 @@ mod tests {
         s.switch_to(Asid(0));
         assert_eq!(s.lookup(5), Outcome::Regular { ppn: 5 }, "tagged switch retains");
         // a ranged shootdown for tenant 1 spares tenant 0
-        s.invalidate_range(Asid(1), 0, 64);
+        s.invalidate_range(Asid(1), 0, 64, &CostModel::zero());
         assert_eq!(s.lookup(5), Outcome::Regular { ppn: 5 });
         s.switch_to(Asid(1));
         assert_eq!(s.lookup(5), Outcome::Miss { probes: 0 });

@@ -9,6 +9,7 @@ use super::{
     Scheme, TAG_MASK,
 };
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -158,8 +159,20 @@ impl Scheme for Cluster {
     /// Precise per-ASID invalidation: regular/huge entries as in Base;
     /// a clustered entry of that tenant clears the valid bits of pages
     /// in the range (per-page valid bits make this exact) and is
-    /// dropped only when no valid page remains.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// dropped only when no valid page remains.  Falls back to the
+    /// whole-TLB flush when the cost model prices the per-page sweep
+    /// above the flush refill.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         self.reg.retain(|tag, e| match e {
             Reg::Page(_) => !regular_in_range(tag, asid, vstart, vend),
@@ -181,6 +194,7 @@ impl Scheme for Cluster {
             }
             e.valid != 0
         });
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register, retain all
@@ -219,7 +233,7 @@ mod tests {
         s.fill(0, &pt1);
         assert_eq!(s.lookup(1).ppn(), Some(160), "tenant 1's own frames");
         // invalidating tenant 1 spares tenant 0's entry
-        s.invalidate_range(Asid(1), 0, 8);
+        s.invalidate_range(Asid(1), 0, 8, &CostModel::zero());
         assert!(!s.lookup(1).is_hit());
         s.switch_to(Asid(0));
         assert_eq!(s.lookup(1).ppn(), Some(80), "tenant 0 retained across switches");
@@ -276,7 +290,7 @@ mod tests {
         let pt = PageTable::from_mapping(&MemoryMapping::new(pages));
         let mut s = Cluster::new();
         s.fill(0, &pt);
-        s.invalidate_range(A0, 2, 3); // pages 2,3,4 invalid
+        s.invalidate_range(A0, 2, 3, &CostModel::zero()); // pages 2,3,4 invalid
         for v in [0u64, 1, 5, 6, 7] {
             assert!(s.lookup(v).is_hit(), "page {v} outside range must survive");
         }
@@ -284,7 +298,7 @@ mod tests {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
         }
         // invalidating the rest drops the entry entirely
-        s.invalidate_range(A0, 0, 8);
+        s.invalidate_range(A0, 0, 8, &CostModel::zero());
         assert_eq!(s.coverage_pages(), 0);
     }
 
@@ -296,7 +310,7 @@ mod tests {
         let mut s = Cluster::new();
         s.fill(700, &pt); // huge region [512, 1024)
         assert!(s.lookup(600).is_hit());
-        s.invalidate_range(A0, 600, 1);
+        s.invalidate_range(A0, 600, 1, &CostModel::zero());
         assert_eq!(s.lookup(700), Outcome::Miss { probes: 0 }, "huge entry dropped");
     }
 

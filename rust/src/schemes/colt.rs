@@ -10,6 +10,7 @@ use super::{
     Outcome, Scheme, TAG_MASK,
 };
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -157,8 +158,20 @@ impl Scheme for Colt {
     /// Precise per-ASID invalidation: regular/huge entries as in Base;
     /// a coalesced group entry of that tenant overlapping the range is
     /// *shrunk* to its larger surviving side (prefix before the range
-    /// or suffix after it), or dropped when nothing survives.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// or suffix after it), or dropped when nothing survives.  Falls
+    /// back to the whole-TLB flush when the cost model prices the
+    /// per-page sweep above the flush refill.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         self.tlb.retain(|tag, e| match e {
             Entry::Page(_) => !regular_in_range(tag, asid, vstart, vend),
@@ -190,6 +203,7 @@ impl Scheme for Colt {
             }
             Entry::Invalid => true,
         });
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register, retain all
@@ -264,7 +278,7 @@ mod tests {
         let pt = PageTable::from_mapping(&m);
         let mut s = Colt::new();
         s.fill(2, &pt);
-        s.invalidate_range(A0, 3, 2);
+        s.invalidate_range(A0, 3, 2, &CostModel::zero());
         // prefix [0,3) survives (longer side), [3,8) must miss
         for v in 0..3u64 {
             assert!(matches!(s.lookup(v), Outcome::Coalesced { ppn, .. } if ppn == v + 50), "{v}");
@@ -275,7 +289,7 @@ mod tests {
         // suffix-surviving case: cut the head instead
         let mut s = Colt::new();
         s.fill(10, &pt); // group 1: [8,16)
-        s.invalidate_range(A0, 8, 3); // [8,11) gone, [11,16) survives
+        s.invalidate_range(A0, 8, 3, &CostModel::zero()); // [8,11) gone, [11,16) survives
         for v in 8..11u64 {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 0 }, "stale at {v}");
         }
@@ -285,7 +299,7 @@ mod tests {
         // full-cover case: entry dropped entirely
         let mut s = Colt::new();
         s.fill(2, &pt);
-        s.invalidate_range(A0, 0, 8);
+        s.invalidate_range(A0, 0, 8, &CostModel::zero());
         assert_eq!(s.coverage_pages(), 0);
     }
 
@@ -298,7 +312,7 @@ mod tests {
         s.fill(4, &pt_old);
         let m_new = MemoryMapping::new((0..8u64).map(|v| (v, v + 900)).collect());
         let pt_new = PageTable::from_mapping(&m_new);
-        s.invalidate_range(A0, 0, 8);
+        s.invalidate_range(A0, 0, 8, &CostModel::zero());
         for v in 0..8u64 {
             if let Some(ppn) = s.lookup(v).ppn() {
                 assert_eq!(Some(ppn), pt_new.translate(v), "stale PPN at {v}");

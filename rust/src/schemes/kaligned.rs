@@ -25,6 +25,7 @@ use crate::mem::addrspace::SpaceView;
 use crate::mem::histogram::ContigHistogram;
 use crate::pagetable::aligned::{align_vpn, select_aligned};
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -126,6 +127,34 @@ impl KAligned {
     #[inline]
     fn set_aligned(&self, vpn: Vpn, k: u32) -> usize {
         ((vpn >> k) & self.tlb.set_mask()) as usize
+    }
+
+    /// Index of `asid`'s K lane, created with an empty K (until its
+    /// first derivation) on first sight.  Does not touch the ASID
+    /// register (`cur`).
+    fn lane_index(&mut self, asid: Asid) -> usize {
+        match self.lanes.iter().position(|l| l.asid == asid) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane { asid, ks: Vec::new(), predictor: AlignPredictor::new() });
+                self.lanes.len() - 1
+            }
+        }
+    }
+
+    /// Algorithm 3 for one lane: on a K change, reset the lane's
+    /// predictor and shoot down that tenant's entries — other tenants
+    /// keep theirs.
+    fn derive_lane(&mut self, i: usize, view: SpaceView<'_>) {
+        let new_k = determine_k(view.hist, self.theta, self.psi);
+        let lane = &mut self.lanes[i];
+        if new_k != lane.ks {
+            lane.ks = new_k;
+            lane.predictor.reset();
+            let asid = lane.asid;
+            self.k_changes += 1;
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
+        }
     }
 }
 
@@ -229,8 +258,20 @@ impl Scheme for KAligned {
     /// is affected.  The tenant's predictor is informed: its MRU
     /// alignment is reset whenever aligned entries were dropped, so
     /// the next aligned lookup does not chase an alignment the
-    /// invalidation just hollowed out.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// invalidation just hollowed out.  Falls back to the whole-TLB
+    /// flush (which resets every lane's predictor) when the cost model
+    /// prices the per-page sweep above the flush refill.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         let mut aligned_dropped = false;
         self.tlb.retain(|tag, e| match e {
@@ -259,6 +300,7 @@ impl Scheme for KAligned {
                 lane.predictor.reset();
             }
         }
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register and select
@@ -266,17 +308,7 @@ impl Scheme for KAligned {
     /// epoch derives one) the tenant's K lane; all entries stay
     /// resident.
     fn switch_to(&mut self, asid: Asid) {
-        self.cur = match self.lanes.iter().position(|l| l.asid == asid) {
-            Some(i) => i,
-            None => {
-                self.lanes.push(Lane {
-                    asid,
-                    ks: Vec::new(),
-                    predictor: AlignPredictor::new(),
-                });
-                self.lanes.len() - 1
-            }
-        };
+        self.cur = self.lane_index(asid);
     }
 
     fn asid_tagged(&self) -> bool {
@@ -288,15 +320,15 @@ impl Scheme for KAligned {
     /// epoch); on change, update aligned entries (§3.4) and shoot down
     /// that tenant's entries — other tenants keep theirs.
     fn epoch(&mut self, view: SpaceView<'_>) {
-        let new_k = determine_k(view.hist, self.theta, self.psi);
-        let lane = &mut self.lanes[self.cur];
-        if new_k != lane.ks {
-            lane.ks = new_k;
-            lane.predictor.reset();
-            let asid = lane.asid;
-            self.k_changes += 1;
-            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
-        }
+        self.derive_lane(self.cur, view);
+    }
+
+    /// Algorithm 3 addressed per lane: re-derive `asid`'s K set from
+    /// that tenant's histogram, without touching the ASID register or
+    /// other tenants' lanes.
+    fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        let i = self.lane_index(asid);
+        self.derive_lane(i, view);
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
@@ -408,7 +440,7 @@ mod tests {
         s.fill(3, &pt);
         assert!(s.lookup(12).is_hit());
         // remap-style invalidation of [8, 16): entry shrinks to [0, 8)
-        s.invalidate_range(A0, 8, 8);
+        s.invalidate_range(A0, 8, 8, &CostModel::zero());
         for v in 0..8u64 {
             match s.lookup(v) {
                 Outcome::Coalesced { ppn, .. } => assert_eq!(ppn, v + 100, "{v}"),
@@ -420,7 +452,7 @@ mod tests {
         }
         // invalidating the aligned page itself drops the entry and
         // resets the predictor's MRU
-        s.invalidate_range(A0, 0, 4);
+        s.invalidate_range(A0, 0, 4, &CostModel::zero());
         assert!(!s.lookup(1).is_hit());
         assert_eq!(s.lanes[0].predictor.probe_order(&[4, 2]), vec![4, 2], "MRU reset");
     }
@@ -468,7 +500,7 @@ mod tests {
         let pt_new = PageTable::from_mapping(&m_new);
         let mut s = KAligned::with_k(vec![4, 2], 4);
         s.fill(5, &pt_old);
-        s.invalidate_range(A0, 0, 32);
+        s.invalidate_range(A0, 0, 32, &CostModel::zero());
         for v in 0..32u64 {
             if let Some(ppn) = s.lookup(v).ppn() {
                 panic!("stale hit at {v}: {ppn}");

@@ -15,6 +15,12 @@
 //! trait defaults model untagged hardware — `invalidate_range` falls
 //! back to a whole-TLB flush, and so does `switch_to` — so a naive
 //! scheme is conservative-but-correct on both paths.
+//!
+//! Ranged shootdowns are *cost-aware*: every contender consults the
+//! engine's [`CostModel`] and serves the shootdown with a whole-TLB
+//! flush instead when the per-page sweep prices above the
+//! flush-refill estimate ([`CostModel::prefers_flush`]), reporting
+//! the chosen path as an [`InvalOutcome`] so the engine charges it.
 
 pub mod anchor;
 pub mod base;
@@ -27,6 +33,7 @@ pub mod rmm;
 
 use crate::mem::addrspace::SpaceView;
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
 /// Result of an L2 lookup.
@@ -102,8 +109,23 @@ pub trait Scheme {
     /// *not* the only shootdown path anymore: [`Scheme::switch_to`]'s
     /// default and the dynamic schemes' epoch reconfiguration also
     /// shoot entries down.
-    fn invalidate_range(&mut self, _asid: Asid, _vstart: Vpn, _len: u64) {
+    ///
+    /// The scheme consults `cost` for the flush-vs-ranged choice
+    /// point: when the per-page sweep prices above the flush-refill
+    /// estimate ([`CostModel::prefers_flush`]) the precise contenders
+    /// fall back to a whole-TLB flush too — over-invalidation is
+    /// always coherent — and the returned [`InvalOutcome`] tells the
+    /// engine which path to mirror onto the L1 and charge.  Under the
+    /// zero-cost default the choice is always [`InvalOutcome::Ranged`].
+    fn invalidate_range(
+        &mut self,
+        _asid: Asid,
+        _vstart: Vpn,
+        _len: u64,
+        _cost: &CostModel,
+    ) -> InvalOutcome {
         self.flush();
+        InvalOutcome::Flushed
     }
 
     /// Context switch: the core now runs address space `asid`.  The
@@ -134,8 +156,19 @@ pub trait Scheme {
     /// current state rather than a stale build-time capture.
     /// Multi-tenant schemes keep their derived configuration (K set,
     /// anchor distance, RMM OS table) per ASID and re-derive only the
-    /// current tenant's here.
+    /// current tenant's here — the tenant driver refreshes the other
+    /// lanes through [`Scheme::refresh_lane`], whose views it owns.
     fn epoch(&mut self, _view: SpaceView<'_>) {}
+
+    /// Re-derive the per-ASID lane of `asid` (not necessarily the
+    /// running tenant) from that tenant's space — the OS re-running
+    /// its per-process derivation (Algorithm 3, anchor-distance
+    /// selection, RMM table rebuild) at an epoch boundary.  Must not
+    /// touch the ASID register or other tenants' state; for the
+    /// current tenant it is equivalent to [`Scheme::epoch`].  Default:
+    /// nothing — schemes without per-ASID derived state have nothing
+    /// to refresh.
+    fn refresh_lane(&mut self, _asid: Asid, _view: SpaceView<'_>) {}
 
     /// (correct, total) first-probe predictions over aligned hits
     /// (Table 6), if the scheme has a predictor.  Multi-tenant
@@ -175,8 +208,14 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
         (**self).flush()
     }
 
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
-        (**self).invalidate_range(asid, vstart, len)
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        (**self).invalidate_range(asid, vstart, len, cost)
     }
 
     fn switch_to(&mut self, asid: Asid) {
@@ -189,6 +228,10 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
 
     fn epoch(&mut self, view: SpaceView<'_>) {
         (**self).epoch(view)
+    }
+
+    fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        (**self).refresh_lane(asid, view)
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
@@ -250,8 +293,14 @@ impl Scheme for AnyScheme {
         on_scheme!(self, s => s.flush())
     }
 
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
-        on_scheme!(self, s => s.invalidate_range(asid, vstart, len))
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        on_scheme!(self, s => s.invalidate_range(asid, vstart, len, cost))
     }
 
     fn switch_to(&mut self, asid: Asid) {
@@ -264,6 +313,10 @@ impl Scheme for AnyScheme {
 
     fn epoch(&mut self, view: SpaceView<'_>) {
         on_scheme!(self, s => s.epoch(view))
+    }
+
+    fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        on_scheme!(self, s => s.refresh_lane(asid, view))
     }
 
     fn predictor_stats(&self) -> Option<(u64, u64)> {
@@ -431,7 +484,9 @@ mod tests {
             }
         }
         let mut s = Naive { have: Some(999) };
-        s.invalidate_range(Asid(0), 0, 10); // range does not cover 999 ...
+        // range does not cover 999 ...
+        let out = s.invalidate_range(Asid(0), 0, 10, &CostModel::zero());
+        assert_eq!(out, InvalOutcome::Flushed, "untagged hw reports the flush");
         assert!(!s.lookup(999).is_hit(), "... but the default must flush everything");
         // the default switch_to is the same conservative flush
         let mut s = Naive { have: Some(42) };

@@ -10,6 +10,7 @@ use super::{
 use crate::mem::addrspace::SpaceView;
 use crate::mem::mapping::{Chunk, MemoryMapping};
 use crate::pagetable::PageTable;
+use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::{RangeTlb, SetAssocTlb};
 use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
 
@@ -71,6 +72,18 @@ impl Rmm {
         &self.tables[self.cur].1
     }
 
+    /// Index of `asid`'s OS table, created empty on first sight.
+    /// Does not touch the ASID register (`cur`).
+    fn table_index(&mut self, asid: Asid) -> usize {
+        match self.tables.iter().position(|(a, _)| *a == asid) {
+            Some(i) => i,
+            None => {
+                self.tables.push((asid, Vec::new()));
+                self.tables.len() - 1
+            }
+        }
+    }
+
     fn chunk_containing(&self, vpn: Vpn) -> Option<Chunk> {
         let chunks = self.chunks();
         let i = match chunks.binary_search_by_key(&vpn, |c| c.vstart) {
@@ -80,6 +93,38 @@ impl Rmm {
         };
         let c = chunks[i];
         (vpn < c.vstart + c.len).then_some(c)
+    }
+
+    /// Trim `[vstart, vstart+len)` out of `asid`'s OS-maintained
+    /// redundant-mapping table.  This is OS bookkeeping, not TLB
+    /// hardware: it happens whichever path serves the shootdown —
+    /// a flush only empties the CAM, and a later `fill` consulting an
+    /// untrimmed table would resurrect a stale range.  Remainders
+    /// below [`MIN_RANGE_PAGES`] leave the table.
+    fn trim_table(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        let vend = vstart.saturating_add(len);
+        let Some((_, chunks)) = self.tables.iter_mut().find(|(a, _)| *a == asid) else {
+            return; // no table was ever derived for that tenant
+        };
+        let mut trimmed = Vec::with_capacity(chunks.len());
+        for c in chunks.drain(..) {
+            let cend = c.vstart + c.len;
+            if cend <= vstart || c.vstart >= vend {
+                trimmed.push(c);
+                continue;
+            }
+            if c.vstart < vstart && vstart - c.vstart >= MIN_RANGE_PAGES {
+                trimmed.push(Chunk { vstart: c.vstart, pstart: c.pstart, len: vstart - c.vstart });
+            }
+            if cend > vend && cend - vend >= MIN_RANGE_PAGES {
+                trimmed.push(Chunk {
+                    vstart: vend,
+                    pstart: c.pstart + (vend - c.vstart),
+                    len: cend - vend,
+                });
+            }
+        }
+        *chunks = trimmed; // splitting preserves vstart order
     }
 }
 
@@ -150,10 +195,21 @@ impl Scheme for Rmm {
     /// that tenant's resident ranges *split* around the hole (tails
     /// keep translating), and — crucially — the tenant's OS-maintained
     /// redundant-mapping table is trimmed the same way so a later
-    /// `fill` cannot resurrect a stale range.  Remainders below
-    /// [`MIN_RANGE_PAGES`] leave the table.  Other tenants' ranges and
-    /// tables are untouched.
-    fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// `fill` cannot resurrect a stale range (the trim happens even
+    /// when the cost model turns the shootdown into a whole-TLB
+    /// flush).  Other tenants' ranges and tables are untouched.
+    fn invalidate_range(
+        &mut self,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        cost: &CostModel,
+    ) -> InvalOutcome {
+        self.trim_table(asid, vstart, len);
+        if cost.prefers_flush(len) {
+            self.flush();
+            return InvalOutcome::Flushed;
+        }
         let vend = vstart.saturating_add(len);
         self.reg.retain(|tag, e| match e {
             Reg::Page(_) => !regular_in_range(tag, asid, vstart, vend),
@@ -161,28 +217,7 @@ impl Scheme for Rmm {
             Reg::Invalid => true,
         });
         self.ranges.invalidate_range(asid, vstart, len);
-        let Some((_, chunks)) = self.tables.iter_mut().find(|(a, _)| *a == asid) else {
-            return; // no table was ever derived for that tenant
-        };
-        let mut trimmed = Vec::with_capacity(chunks.len());
-        for c in chunks.drain(..) {
-            let cend = c.vstart + c.len;
-            if cend <= vstart || c.vstart >= vend {
-                trimmed.push(c);
-                continue;
-            }
-            if c.vstart < vstart && vstart - c.vstart >= MIN_RANGE_PAGES {
-                trimmed.push(Chunk { vstart: c.vstart, pstart: c.pstart, len: vstart - c.vstart });
-            }
-            if cend > vend && cend - vend >= MIN_RANGE_PAGES {
-                trimmed.push(Chunk {
-                    vstart: vend,
-                    pstart: c.pstart + (vend - c.vstart),
-                    len: cend - vend,
-                });
-            }
-        }
-        *chunks = trimmed; // splitting preserves vstart order
+        InvalOutcome::Ranged
     }
 
     /// Tagged context switch: load the ASID register, retain every
@@ -190,13 +225,7 @@ impl Scheme for Rmm {
     /// if needed) the tenant's OS table for future fills.
     fn switch_to(&mut self, asid: Asid) {
         self.asid = asid;
-        self.cur = match self.tables.iter().position(|(a, _)| *a == asid) {
-            Some(i) => i,
-            None => {
-                self.tables.push((asid, Vec::new()));
-                self.tables.len() - 1
-            }
-        };
+        self.cur = self.table_index(asid);
     }
 
     fn asid_tagged(&self) -> bool {
@@ -208,6 +237,14 @@ impl Scheme for Rmm {
     /// recovery after churn become fillable again.
     fn epoch(&mut self, view: SpaceView<'_>) {
         self.tables[self.cur].1 = os_table(view.mapping);
+    }
+
+    /// Rebuild `asid`'s redundant-mapping table from that tenant's
+    /// live mapping — the epoch derivation, addressable per lane so
+    /// the tenant driver can refresh descheduled tenants too.
+    fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        let i = self.table_index(asid);
+        self.tables[i].1 = os_table(view.mapping);
     }
 }
 
@@ -275,7 +312,7 @@ mod tests {
         let pt = PageTable::from_mapping(&m);
         let mut s = Rmm::new(&m);
         s.fill(1000, &pt);
-        s.invalidate_range(A0, 900, 100); // hole [900, 1000)
+        s.invalidate_range(A0, 900, 100, &CostModel::zero()); // hole [900, 1000)
         // both tails still translate, the hole misses
         for v in [0u64, 899, 1000, 2047] {
             match s.lookup(v) {
@@ -299,7 +336,7 @@ mod tests {
         let mut s = Rmm::new(&m);
         s.fill(10, &pt);
         // cut at 300: both remainders (300, 300) < MIN_RANGE_PAGES
-        s.invalidate_range(A0, 300, 1);
+        s.invalidate_range(A0, 300, 1, &CostModel::zero());
         assert!(s.chunks().is_empty(), "sub-512 remainders leave the OS table");
         // resident range still split correctly (range TLB keeps tails)
         assert!(s.ranges.lookup(A0, 299).is_some());
@@ -310,7 +347,7 @@ mod tests {
     fn epoch_rebuilds_os_table_from_current_mapping() {
         let m = chunked_mapping(&[600]);
         let mut s = Rmm::new(&m);
-        s.invalidate_range(A0, 0, 601);
+        s.invalidate_range(A0, 0, 601, &CostModel::zero());
         assert!(s.chunks().is_empty());
         let hist = crate::mem::histogram::ContigHistogram::from_mapping(&m);
         let pt = PageTable::from_mapping(&m);
@@ -337,7 +374,7 @@ mod tests {
         s.fill(10, &pt1);
         assert_eq!(s.lookup(10).ppn(), Some(50_010), "tenant 1's own frames");
         // invalidating tenant 1 leaves tenant 0's range + table intact
-        s.invalidate_range(Asid(1), 0, 1000);
+        s.invalidate_range(Asid(1), 0, 1000, &CostModel::zero());
         assert!(!s.lookup(10).is_hit());
         s.switch_to(Asid(0));
         assert!(s.lookup(10).is_hit(), "tenant 0 retained across switches");

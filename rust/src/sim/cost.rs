@@ -1,0 +1,198 @@
+//! The cycle-accurate translation cost model.
+//!
+//! [`super::latency::Latency`] covers what the paper's Table 2 prices —
+//! the per-access L2 hit / coalesced-probe / walk cycles.  Everything
+//! the paper holds free is priced here: page-table walks by depth
+//! (huge-page walks skip a level), TLB shootdowns (IPI initiation +
+//! per-page invalidation, the HATRIC cost structure), and context
+//! switches (ASID-register load vs the refill debt of a whole-TLB
+//! flush).  The model also *decides*: a ranged shootdown may be served
+//! by a whole-TLB flush when the flush-refill estimate undercuts the
+//! per-page sweep ([`CostModel::prefers_flush`]), which every scheme's
+//! `invalidate_range` consults.
+//!
+//! The default model is **zero-cost** for everything beyond Table 2:
+//! all new charges are 0 and [`CostModel::prefers_flush`] never fires,
+//! so the pipeline is bit-identical to the pre-cost one (the
+//! differential regression in `tests/cost.rs` pins this down).
+
+use super::latency::Latency;
+
+/// What a cost-aware ranged shootdown actually did — the scheme's
+/// answer, which the engine uses to charge the chosen path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InvalOutcome {
+    /// Precise per-page invalidation of the requested range.
+    Ranged,
+    /// Whole-TLB flush: cheaper by the model, or untagged hardware
+    /// that cannot scope the kill.
+    Flushed,
+}
+
+/// Configurable translation latencies (cycles).  Everything beyond the
+/// embedded Table 2 [`Latency`] defaults to 0 — the zero-cost model —
+/// so existing pipelines are unaffected until a caller opts in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostModel {
+    /// Table 2 access latencies: L2 hit, coalesced probe, walk.
+    pub lat: Latency,
+    /// L1 hit (the paper hides it behind the cache access: 0).
+    pub l1_hit: u64,
+    /// cycles per page-table level; 0 = charge the flat `lat.walk`
+    /// instead of a by-depth walk
+    pub walk_level: u64,
+    /// page-table depth of a 4KB walk (huge-page walks stop one level
+    /// short); only consulted when `walk_level > 0`
+    pub walk_levels: u32,
+    /// per-page invalidation cost of a ranged shootdown
+    pub inval_page: u64,
+    /// IPI / shootdown initiation (paid once per shootdown, ranged or
+    /// flushed)
+    pub ipi: u64,
+    /// ASID-register load at a context switch
+    pub asid_load: u64,
+    /// estimated refill debt of a whole-TLB flush — both the flush
+    /// branch's shootdown cost and the extra price of an untagged
+    /// context switch
+    pub flush_refill: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::zero()
+    }
+}
+
+impl CostModel {
+    /// The zero-cost model: Table 2 access latencies only; shootdowns
+    /// and context switches are free and every shootdown stays ranged
+    /// — the pre-cost pipeline, bit for bit.
+    pub fn zero() -> Self {
+        CostModel {
+            lat: Latency::default(),
+            l1_hit: 0,
+            walk_level: 0,
+            walk_levels: 4,
+            inval_page: 0,
+            ipi: 0,
+            asid_load: 0,
+            flush_refill: 0,
+        }
+    }
+
+    /// A non-zero preset in the HATRIC cost regime: by-depth walks
+    /// (~13 cycles per level, so a 4-level walk stays near Table 2's
+    /// 50 and a huge-page walk saves one level), IPI-initiated
+    /// shootdowns costing thousands of cycles, a cheap ASID-register
+    /// load, and a flush-refill estimate that makes very large ranged
+    /// sweeps lose to a whole flush (`repro cpi` runs this).
+    pub fn realistic() -> Self {
+        CostModel {
+            lat: Latency::default(),
+            l1_hit: 0,
+            walk_level: 13,
+            walk_levels: 4,
+            inval_page: 40,
+            ipi: 1500,
+            asid_load: 20,
+            flush_refill: 20_000,
+        }
+    }
+
+    /// Base walk cost: flat Table 2 when `walk_level == 0`, else
+    /// per-level times the depth (huge-page walks stop a level short).
+    #[inline]
+    pub fn walk_base(&self, is_huge: bool) -> u64 {
+        if self.walk_level == 0 {
+            return self.lat.walk;
+        }
+        let levels = self.walk_levels.saturating_sub(is_huge as u32).max(1);
+        self.walk_level * levels as u64
+    }
+
+    /// The decision rule: serve a ranged shootdown of `pages` pages
+    /// with a whole-TLB flush when the per-page sweep costs more than
+    /// the flush-refill estimate.  Strict: at equality the ranged path
+    /// wins (no reason to over-invalidate at equal cost).
+    #[inline]
+    pub fn prefers_flush(&self, pages: u64) -> bool {
+        self.inval_page.saturating_mul(pages) > self.flush_refill
+    }
+
+    /// Cycles of a ranged shootdown over `pages` pages.
+    #[inline]
+    pub fn ranged_shootdown(&self, pages: u64) -> u64 {
+        self.ipi + self.inval_page.saturating_mul(pages)
+    }
+
+    /// Cycles of a shootdown served by a whole-TLB flush.
+    #[inline]
+    pub fn flush_shootdown(&self) -> u64 {
+        self.ipi + self.flush_refill
+    }
+
+    /// Cycles charged for the shootdown the scheme reported.
+    #[inline]
+    pub fn shootdown(&self, outcome: InvalOutcome, pages: u64) -> u64 {
+        match outcome {
+            InvalOutcome::Ranged => self.ranged_shootdown(pages),
+            InvalOutcome::Flushed => self.flush_shootdown(),
+        }
+    }
+
+    /// Cycles of a context switch: the ASID-register load, plus the
+    /// flush-refill estimate when the switch flushed (untagged
+    /// hardware).
+    #[inline]
+    pub fn switch(&self, flushed: bool) -> u64 {
+        self.asid_load + if flushed { self.flush_refill } else { 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_charges_table2_only() {
+        let c = CostModel::zero();
+        assert_eq!(c.walk_base(false), 50, "flat Table 2 walk");
+        assert_eq!(c.walk_base(true), 50);
+        assert_eq!(c.ranged_shootdown(1 << 20), 0);
+        assert_eq!(c.flush_shootdown(), 0);
+        assert_eq!(c.switch(true), 0);
+        assert_eq!(c.switch(false), 0);
+        assert!(!c.prefers_flush(u64::MAX), "zero model never flushes");
+        assert_eq!(CostModel::default(), c);
+    }
+
+    #[test]
+    fn walk_by_depth_skips_a_level_for_huge_pages() {
+        let c = CostModel { walk_level: 13, ..CostModel::zero() };
+        assert_eq!(c.walk_base(false), 52, "4 levels");
+        assert_eq!(c.walk_base(true), 39, "huge pages walk 3 levels");
+        let shallow = CostModel { walk_level: 10, walk_levels: 1, ..CostModel::zero() };
+        assert_eq!(shallow.walk_base(true), 10, "depth never drops below one level");
+    }
+
+    #[test]
+    fn decision_rule_boundary_is_strict() {
+        let c = CostModel { inval_page: 10, flush_refill: 640, ..CostModel::zero() };
+        assert!(!c.prefers_flush(64), "equality keeps the ranged path");
+        assert!(!c.prefers_flush(63));
+        assert!(c.prefers_flush(65));
+        // overflow-safe: a huge range must prefer the flush, not wrap
+        assert!(c.prefers_flush(u64::MAX));
+        assert_eq!(c.ranged_shootdown(u64::MAX), u64::MAX, "saturates");
+    }
+
+    #[test]
+    fn charges_follow_the_chosen_path() {
+        let c = CostModel { inval_page: 10, ipi: 100, flush_refill: 640, ..CostModel::zero() };
+        assert_eq!(c.shootdown(InvalOutcome::Ranged, 5), 150);
+        assert_eq!(c.shootdown(InvalOutcome::Flushed, 5), 740);
+        let c = CostModel { asid_load: 20, flush_refill: 640, ..CostModel::zero() };
+        assert_eq!(c.switch(false), 20, "tagged switch: register load only");
+        assert_eq!(c.switch(true), 660, "untagged switch pays the refill debt");
+    }
+}

@@ -2,6 +2,19 @@
 //! L2 scheme lookup → page-table walk + fill (Figure 5/6 flow), with
 //! Table 2 cycle accounting and periodic epoch/coverage hooks.
 //!
+//! ## Cycle-accurate cost model
+//!
+//! The engine carries a [`CostModel`] (default: [`CostModel::zero`],
+//! bit-identical to the pre-cost pipeline).  Every access charges its
+//! hit/walk cycles (walks by page-table depth when configured), every
+//! ranged shootdown charges IPI + per-page invalidation — or the
+//! flush-refill estimate when the scheme decides a whole flush is
+//! cheaper ([`CostModel::prefers_flush`]) — and every context switch
+//! charges the ASID-register load (plus the flush-refill debt for
+//! untagged schemes).  The charges land in
+//! [`Metrics::cycles_shootdown`] / [`Metrics::cycles_switch`] next to
+//! the access-path cycle counters, feeding the `repro cpi` breakdown.
+//!
 //! The engine is generic over its scheme: `Engine<AnyScheme>` (or a
 //! concrete `Engine<KAligned>`) monomorphizes the per-access loop —
 //! no virtual call, scheme lookups inline — while the default
@@ -38,6 +51,7 @@
 //! (no context-switch accounting — the switch event itself is counted
 //! by the shard that owns its timestamp).
 
+use super::cost::{CostModel, InvalOutcome};
 use super::latency::Latency;
 use super::metrics::Metrics;
 use crate::mem::addrspace::SpaceView;
@@ -52,13 +66,17 @@ pub const DEFAULT_EPOCH: u64 = 1 << 20;
 pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     scheme: S,
     l1: L1Tlb,
-    lat: Latency,
+    cost: CostModel,
     metrics: Metrics,
     epoch_len: u64,
     since_epoch: u64,
     /// invoke the scheme's epoch hook at epoch boundaries (enabled by
     /// [`Engine::with_epoch`]; coverage is sampled either way)
     epoch_hooks: bool,
+    /// set when an epoch hook fired; the multi-tenant driver consumes
+    /// it ([`Engine::take_epoch_pending`]) to refresh every *other*
+    /// tenant's derived lane at the next span boundary
+    epoch_pending: bool,
     /// the ASID register: every access translates under it
     asid: Asid,
     /// cumulative (accesses, walks) at the last tenant-attribution
@@ -74,11 +92,12 @@ impl<S: Scheme> Engine<S> {
         Engine {
             scheme,
             l1: L1Tlb::new(),
-            lat: Latency::default(),
+            cost: CostModel::zero(),
             metrics: Metrics::default(),
             epoch_len: DEFAULT_EPOCH,
             since_epoch: 0,
             epoch_hooks: false,
+            epoch_pending: false,
             asid: Asid::ZERO,
             tenant_snap: [0, 0],
             verify: cfg!(debug_assertions),
@@ -96,8 +115,22 @@ impl<S: Scheme> Engine<S> {
     }
 
     pub fn with_latency(mut self, lat: Latency) -> Self {
-        self.lat = lat;
+        self.cost.lat = lat;
         self
+    }
+
+    /// Install a full translation cost model (Table 2 latencies plus
+    /// walk-depth, shootdown and context-switch charges).  The default
+    /// is [`CostModel::zero`] — Table 2 only, everything else free —
+    /// which reproduces the pre-cost pipeline bit for bit.
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// The engine's cost model.
+    pub fn cost(&self) -> &CostModel {
+        &self.cost
     }
 
     pub fn scheme_name(&self) -> String {
@@ -132,7 +165,7 @@ impl<S: Scheme> Engine<S> {
             return;
         }
         let tagged = self.scheme.asid_tagged();
-        self.metrics.record_context_switch(!tagged);
+        self.metrics.record_context_switch(!tagged, self.cost.switch(!tagged));
         self.install_tenant(asid, tagged);
     }
 
@@ -184,7 +217,7 @@ impl<S: Scheme> Engine<S> {
         // ---- L1 (latency hidden behind cache access; no page-table
         // probe — the split L1 knows each entry's page size) ----
         if self.l1.lookup(self.asid, vpn).is_some() {
-            self.metrics.record_l1_hit();
+            self.metrics.record_l1_hit(&self.cost);
             self.tick_epoch(view);
             return;
         }
@@ -198,7 +231,7 @@ impl<S: Scheme> Engine<S> {
                 // L2 filled by the scheme (Figure 5: off the critical
                 // path for K-Aligned).  An unmapped VPN is a fault:
                 // the walk cost is paid, nothing is filled.
-                self.metrics.record_walk(&self.lat, probes);
+                self.metrics.record_walk(&self.cost, probes, is_huge);
                 if let Some(ppn) = view.pt.translate(vpn) {
                     self.fill_l1_with(vpn, ppn, is_huge);
                     self.scheme.fill(vpn, view.pt);
@@ -217,9 +250,9 @@ impl<S: Scheme> Engine<S> {
                 });
                 self.check(vpn, ppn, view);
                 match hit {
-                    Outcome::Regular { .. } => self.metrics.record_regular_hit(&self.lat),
+                    Outcome::Regular { .. } => self.metrics.record_regular_hit(&self.cost),
                     Outcome::Coalesced { probes, .. } => {
-                        self.metrics.record_coalesced_hit(&self.lat, probes)
+                        self.metrics.record_coalesced_hit(&self.cost, probes)
                     }
                     Outcome::Miss { .. } => unreachable!(),
                 }
@@ -246,7 +279,11 @@ impl<S: Scheme> Engine<S> {
 
     /// TLB shootdown: clear the L1 and the scheme's L2 state.  Shard
     /// boundaries in the sharded coordinator have exactly these
-    /// semantics (each shard's engine starts cold).
+    /// semantics (each shard's engine starts cold).  Charges no
+    /// cycles: this is the simulation's boundary device, not a
+    /// workload event — cost-bearing shootdowns go through
+    /// [`Engine::invalidate_range`], switches through
+    /// [`Engine::switch_to`].
     pub fn flush(&mut self) {
         self.l1.flush();
         self.scheme.flush();
@@ -267,13 +304,23 @@ impl<S: Scheme> Engine<S> {
     /// Cross-ASID shootdown (a remote core's munmap IPI): like
     /// [`Engine::invalidate_range`] but targeting a tenant that is not
     /// necessarily running.
+    ///
+    /// The scheme consults the cost model and reports whether it ran
+    /// the precise per-page path or fell back to a whole-TLB flush
+    /// ([`CostModel::prefers_flush`]); the engine mirrors the choice
+    /// onto the L1 and charges the chosen path's cycles.  Under the
+    /// zero-cost default the choice is always ranged, reproducing the
+    /// pre-cost pipeline exactly.
     pub fn invalidate_range_as(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         if len == 0 {
             return;
         }
-        self.l1.invalidate_range(asid, vstart, len);
-        self.scheme.invalidate_range(asid, vstart, len);
-        self.metrics.record_invalidation();
+        let outcome = self.scheme.invalidate_range(asid, vstart, len, &self.cost);
+        match outcome {
+            InvalOutcome::Ranged => self.l1.invalidate_range(asid, vstart, len),
+            InvalOutcome::Flushed => self.l1.flush(),
+        }
+        self.metrics.record_invalidation(self.cost.shootdown(outcome, len));
     }
 
     #[inline]
@@ -320,8 +367,30 @@ impl<S: Scheme> Engine<S> {
             self.metrics.record_coverage(self.scheme.coverage_pages());
             if self.epoch_hooks {
                 self.scheme.epoch(view);
+                self.epoch_pending = true;
             }
         }
+    }
+
+    /// Did an epoch hook fire since the last call?  The multi-tenant
+    /// driver polls this after each scheduling span: the inline hook
+    /// refreshed only the *current* tenant's derived lane (the only
+    /// space the engine can see mid-chunk), so the driver follows up
+    /// with [`Engine::refresh_lane`] for every other tenant.  A
+    /// descheduled tenant's space cannot change while it is off-core,
+    /// so deferring those refreshes to the span boundary is exact —
+    /// this is what keeps serial lane state bit-equal to the sharded
+    /// runners' re-derivation at shard registration (the tenant-churn
+    /// shard-invariance fix).
+    pub fn take_epoch_pending(&mut self) -> bool {
+        std::mem::take(&mut self.epoch_pending)
+    }
+
+    /// Re-derive one tenant's per-ASID lane (K set, anchor distance,
+    /// RMM OS table) from that tenant's current space, without
+    /// touching the ASID register or any other tenant's state.
+    pub fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
+        self.scheme.refresh_lane(asid, view);
     }
 
     /// Final coverage sample, tail tenant attribution + metrics
@@ -507,6 +576,54 @@ mod tests {
         // zero-length ranges are ignored
         e.invalidate_range(50, 0);
         assert_eq!(e.metrics().invalidations, 1);
+    }
+
+    #[test]
+    fn shootdown_and_switch_cycles_follow_the_cost_model() {
+        use crate::sim::cost::CostModel;
+        let cost = CostModel {
+            inval_page: 10,
+            ipi: 100,
+            asid_load: 20,
+            flush_refill: 640,
+            ..CostModel::zero()
+        };
+        let mut e = Engine::new(BaseL2::new()).with_cost(cost);
+        // ranged: 8 pages * 10 <= 640 => precise path, 100 + 80 cycles
+        e.invalidate_range(0, 8);
+        assert_eq!(e.metrics().cycles_shootdown, 180);
+        // flush: 65 pages * 10 > 640 => whole flush, 100 + 640 cycles
+        e.invalidate_range(0, 65);
+        assert_eq!(e.metrics().cycles_shootdown, 180 + 740);
+        assert_eq!(e.metrics().invalidations, 2);
+        // tagged switch: ASID-register load only
+        e.switch_to(crate::Asid(1));
+        assert_eq!(e.metrics().cycles_switch, 20);
+        assert_eq!(e.metrics().switch_flushes, 0);
+
+        // untagged switch pays the flush-refill debt on top
+        let mut e = Engine::new(Untagged { have: Default::default() }).with_cost(cost);
+        e.switch_to(crate::Asid(1));
+        assert_eq!(e.metrics().cycles_switch, 660);
+        assert_eq!(e.metrics().switch_flushes, 1);
+    }
+
+    #[test]
+    fn flush_decision_clears_the_l1_too() {
+        use crate::sim::cost::CostModel;
+        let f = Fix::identity(1000);
+        let cost = CostModel { inval_page: 10, flush_refill: 100, ..CostModel::zero() };
+        let mut e = Engine::new(BaseL2::new()).with_cost(cost);
+        e.access(900, f.view()); // walk + L1 fill, far outside the ranges below
+        // ranged shootdown of [0, 10): vpn 900 stays L1-resident
+        e.invalidate_range(0, 10);
+        e.access(900, f.view());
+        assert_eq!(e.metrics().walks, 1, "ranged sweep spares out-of-range L1 entries");
+        // flushing shootdown of [0, 20): 20 * 10 > 100 => whole TLB,
+        // L1 included — vpn 900 must re-walk
+        e.invalidate_range(0, 20);
+        e.access(900, f.view());
+        assert_eq!(e.metrics().walks, 2, "flush decision must clear the L1");
     }
 
     /// Minimal scheme relying on every trait default — models untagged

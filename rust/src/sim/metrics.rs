@@ -1,7 +1,8 @@
 //! Simulation metrics: the raw counters behind every table and figure
-//! of the paper's evaluation.
+//! of the paper's evaluation, plus the cost-model cycle counters
+//! behind the `repro cpi` breakdown.
 
-use super::latency::Latency;
+use super::cost::CostModel;
 use crate::Asid;
 
 /// Per-run counters.
@@ -18,11 +19,25 @@ pub struct Metrics {
     /// total aligned-lookup probes issued (hits and misses)
     pub aligned_probes: u64,
 
-    // cycle breakdown (Figures 10/11)
+    // cycle breakdown (Figures 10/11 + the cost-model extension)
+    /// L1 hit cycles (0 under the paper's Table 2: hidden behind the
+    /// cache access; configurable via [`CostModel::l1_hit`])
+    pub cycles_l1_hit: u64,
     pub cycles_l2_hit: u64,
     pub cycles_coalesced: u64,
+    /// extra aligned probes on the *hit* path (probes beyond the one
+    /// that hit); probes burned before a walk are miss-path delay and
+    /// accrue into [`Metrics::cycles_walk`]
     pub cycles_extra_probes: u64,
+    /// walk cycles plus the §3.5 aligned probes burned before the
+    /// walk (the full miss-path delay)
     pub cycles_walk: u64,
+    /// shootdown cycles: IPI initiation + per-page invalidation (or
+    /// the flush-refill estimate when the scheme chose a whole flush)
+    pub cycles_shootdown: u64,
+    /// context-switch cycles: ASID-register load, plus the
+    /// flush-refill estimate for untagged (flushing) switches
+    pub cycles_switch: u64,
 
     // coverage sampling (Table 5)
     pub coverage_samples: u64,
@@ -66,8 +81,14 @@ impl Metrics {
         self.accesses - self.l1_hits
     }
 
+    /// Hit-side translation cycles (L1 + L2 regular + coalesced +
+    /// extra probes) — the "hit" column of the CPI breakdown.
+    pub fn hit_cycles(&self) -> u64 {
+        self.cycles_l1_hit + self.cycles_l2_hit + self.cycles_coalesced + self.cycles_extra_probes
+    }
+
     pub fn total_cycles(&self) -> u64 {
-        self.cycles_l2_hit + self.cycles_coalesced + self.cycles_extra_probes + self.cycles_walk
+        self.hit_cycles() + self.cycles_walk + self.cycles_shootdown + self.cycles_switch
     }
 
     /// Translation CPI (Figures 10/11): translation cycles per
@@ -79,7 +100,10 @@ impl Metrics {
         self.total_cycles() as f64 / (self.accesses as f64 * ipa)
     }
 
-    /// CPI breakdown (l2_hit, coalesced+extra, walk), same denominator.
+    /// CPI breakdown (l2_hit, coalesced+extra, walk), same denominator
+    /// (the Figures 10/11 shape — access-path cycles only; the walk
+    /// column carries the miss-path probe delay, see
+    /// [`Metrics::cycles_walk`]).
     pub fn cpi_breakdown(&self, ipa: f64) -> (f64, f64, f64) {
         if self.accesses == 0 {
             return (0.0, 0.0, 0.0);
@@ -92,6 +116,22 @@ impl Metrics {
         )
     }
 
+    /// The full cost-model breakdown (hit, walk, shootdown, switch),
+    /// same denominator — the `repro cpi` columns.  `ipa = 1.0` yields
+    /// translation cycles per access.
+    pub fn cpi_breakdown4(&self, ipa: f64) -> (f64, f64, f64, f64) {
+        if self.accesses == 0 {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        let d = self.accesses as f64 * ipa;
+        (
+            self.hit_cycles() as f64 / d,
+            self.cycles_walk as f64 / d,
+            self.cycles_shootdown as f64 / d,
+            self.cycles_switch as f64 / d,
+        )
+    }
+
     /// Mean resident L2 coverage in pages (Table 5 numerator).
     pub fn mean_coverage_pages(&self) -> f64 {
         if self.coverage_samples == 0 {
@@ -101,33 +141,36 @@ impl Metrics {
     }
 
     /// Record one access outcome.
-    pub(crate) fn record_l1_hit(&mut self) {
+    pub(crate) fn record_l1_hit(&mut self, cost: &CostModel) {
         self.accesses += 1;
         self.l1_hits += 1;
+        self.cycles_l1_hit += cost.l1_hit;
     }
 
-    pub(crate) fn record_regular_hit(&mut self, lat: &Latency) {
+    pub(crate) fn record_regular_hit(&mut self, cost: &CostModel) {
         self.accesses += 1;
         self.l2_regular_hits += 1;
-        self.cycles_l2_hit += lat.regular();
+        self.cycles_l2_hit += cost.lat.regular();
     }
 
-    pub(crate) fn record_coalesced_hit(&mut self, lat: &Latency, probes: u32) {
+    pub(crate) fn record_coalesced_hit(&mut self, cost: &CostModel, probes: u32) {
         self.accesses += 1;
         self.l2_coalesced_hits += 1;
         self.aligned_probes += probes as u64;
-        self.cycles_coalesced += lat.coalesced_hit;
-        self.cycles_extra_probes += lat.extra_probe * (probes as u64).saturating_sub(1);
+        self.cycles_coalesced += cost.lat.coalesced_hit;
+        self.cycles_extra_probes += cost.lat.extra_probe * (probes as u64).saturating_sub(1);
     }
 
-    pub(crate) fn record_walk(&mut self, lat: &Latency, probes: u32) {
+    pub(crate) fn record_walk(&mut self, cost: &CostModel, probes: u32, is_huge: bool) {
         self.accesses += 1;
         self.walks += 1;
         self.aligned_probes += probes as u64;
-        self.cycles_walk += lat.walk;
-        // §3.5 parallel-walk: probes beyond the first overlap the walk
-        let charged = if lat.parallel_walk { probes.min(1) } else { probes };
-        self.cycles_extra_probes += lat.extra_probe * charged as u64;
+        // §3.5 parallel-walk: probes beyond the first overlap the
+        // walk.  Probe cycles burned before walking are miss-path
+        // delay, so they charge into the walk counter — the hit/walk
+        // CPI split stays honest.
+        let charged = if cost.lat.parallel_walk { probes.min(1) } else { probes };
+        self.cycles_walk += cost.walk_base(is_huge) + cost.lat.extra_probe * charged as u64;
     }
 
     pub(crate) fn record_coverage(&mut self, pages: u64) {
@@ -135,19 +178,21 @@ impl Metrics {
         self.coverage_sum_pages += pages;
     }
 
-    pub(crate) fn record_invalidation(&mut self) {
+    pub(crate) fn record_invalidation(&mut self, cycles: u64) {
         self.invalidations += 1;
+        self.cycles_shootdown += cycles;
     }
 
     pub(crate) fn record_shootdown(&mut self) {
         self.shootdowns += 1;
     }
 
-    pub(crate) fn record_context_switch(&mut self, flushed: bool) {
+    pub(crate) fn record_context_switch(&mut self, flushed: bool, cycles: u64) {
         self.context_switches += 1;
         if flushed {
             self.switch_flushes += 1;
         }
+        self.cycles_switch += cycles;
     }
 
     /// Attribute a quantum's counter deltas to `asid`.  Zero deltas
@@ -191,11 +236,16 @@ impl Metrics {
 
     /// The history-independent accounting counters: everything except
     /// the coverage sampling (a per-engine time average whose sample
-    /// count depends on how the run was sharded).  The shard
-    /// determinism tests compare these — for history-independent
-    /// schemes a serial run with shootdowns at shard boundaries equals
-    /// the merged cold-engine shards exactly on this tuple.
-    pub fn accounting(&self) -> [u64; 10] {
+    /// count depends on how the run was sharded) and the engine-flush
+    /// count (shard boundaries flush in the serial reference only).
+    /// The shard determinism tests compare these — for
+    /// history-independent schemes a serial run with shootdowns at
+    /// shard boundaries equals the merged cold-engine shards exactly
+    /// on this tuple.  The cost-model cycle counters belong here:
+    /// shootdown and switch cycles accrue at schedule events, each
+    /// delivered by exactly one shard (engine flushes at shard
+    /// boundaries are a simulation device and charge nothing).
+    pub fn accounting(&self) -> [u64; 13] {
         [
             self.accesses,
             self.l1_hits,
@@ -203,10 +253,13 @@ impl Metrics {
             self.l2_coalesced_hits,
             self.walks,
             self.aligned_probes,
+            self.cycles_l1_hit,
             self.cycles_l2_hit,
             self.cycles_coalesced,
             self.cycles_extra_probes,
             self.cycles_walk,
+            self.cycles_shootdown,
+            self.cycles_switch,
         ]
     }
 
@@ -227,10 +280,13 @@ impl Metrics {
         self.l2_coalesced_hits += o.l2_coalesced_hits;
         self.walks += o.walks;
         self.aligned_probes += o.aligned_probes;
+        self.cycles_l1_hit += o.cycles_l1_hit;
         self.cycles_l2_hit += o.cycles_l2_hit;
         self.cycles_coalesced += o.cycles_coalesced;
         self.cycles_extra_probes += o.cycles_extra_probes;
         self.cycles_walk += o.cycles_walk;
+        self.cycles_shootdown += o.cycles_shootdown;
+        self.cycles_switch += o.cycles_switch;
         self.coverage_samples += o.coverage_samples;
         self.coverage_sum_pages += o.coverage_sum_pages;
         self.invalidations += o.invalidations;
@@ -253,26 +309,31 @@ mod tests {
 
     #[test]
     fn accounting_identities() {
-        let lat = Latency::default();
+        let cost = CostModel::zero();
         let mut m = Metrics::default();
-        m.record_l1_hit();
-        m.record_regular_hit(&lat);
-        m.record_coalesced_hit(&lat, 1);
-        m.record_coalesced_hit(&lat, 3);
-        m.record_walk(&lat, 2);
+        m.record_l1_hit(&cost);
+        m.record_regular_hit(&cost);
+        m.record_coalesced_hit(&cost, 1);
+        m.record_coalesced_hit(&cost, 3);
+        m.record_walk(&cost, 2, false);
         assert_eq!(m.accesses, 5);
         assert_eq!(m.l1_misses(), 4);
         assert_eq!(m.misses(), 1);
         // cycles: 7 + 8 + (8+14) + (50+14) = 101
         assert_eq!(m.total_cycles(), 7 + 8 + 8 + 14 + 50 + 14);
+        // probe attribution: the 3-probe hit's extra probes are hit-
+        // path, the 2 probes burned before the walk are miss-path
+        assert_eq!(m.cycles_extra_probes, 14);
+        assert_eq!(m.cycles_walk, 50 + 14);
+        assert_eq!(m.hit_cycles(), 7 + 8 + 8 + 14);
     }
 
     #[test]
     fn cpi_denominator() {
-        let lat = Latency::default();
+        let cost = CostModel::zero();
         let mut m = Metrics::default();
         for _ in 0..10 {
-            m.record_walk(&lat, 0);
+            m.record_walk(&cost, 0, false);
         }
         // 10 walks * 50 cycles / (10 accesses * 5 ipa) = 10
         assert!((m.cpi(5.0) - 10.0).abs() < 1e-12);
@@ -283,33 +344,56 @@ mod tests {
     }
 
     #[test]
-    fn phase_stats_slice_the_timeline() {
-        let lat = Latency::default();
+    fn cost_model_cycles_land_in_their_own_counters() {
+        let cost = CostModel { l1_hit: 2, walk_level: 13, ..CostModel::zero() };
         let mut m = Metrics::default();
-        m.record_walk(&lat, 0);
-        m.record_l1_hit();
+        m.record_l1_hit(&cost);
+        m.record_walk(&cost, 0, true); // huge walk: 3 levels * 13
+        m.record_invalidation(170);
+        m.record_context_switch(false, 20);
+        m.record_context_switch(true, 660);
+        assert_eq!(m.cycles_l1_hit, 2);
+        assert_eq!(m.cycles_walk, 39);
+        assert_eq!(m.cycles_shootdown, 170);
+        assert_eq!(m.cycles_switch, 680);
+        assert_eq!(m.switch_flushes, 1);
+        assert_eq!(m.total_cycles(), 2 + 39 + 170 + 680);
+        // per-access breakdown over the 2 accesses
+        let (h, w, s, x) = m.cpi_breakdown4(1.0);
+        assert!((h - 1.0).abs() < 1e-12);
+        assert!((w - 19.5).abs() < 1e-12);
+        assert!((s - 85.0).abs() < 1e-12);
+        assert!((x - 340.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_stats_slice_the_timeline() {
+        let cost = CostModel::zero();
+        let mut m = Metrics::default();
+        m.record_walk(&cost, 0, false);
+        m.record_l1_hit(&cost);
         m.mark_phase(); // phase 1: 2 accesses, 1 walk
-        m.record_walk(&lat, 0);
-        m.record_walk(&lat, 0);
+        m.record_walk(&cost, 0, false);
+        m.record_walk(&cost, 0, false);
         m.mark_phase(); // phase 2: 2 accesses, 2 walks
-        m.record_l1_hit(); // phase 3: 1 access, 0 walks
+        m.record_l1_hit(&cost); // phase 3: 1 access, 0 walks
         assert_eq!(m.phase_stats(), vec![(2, 1), (2, 2), (1, 0)]);
         // no marks => one phase covering everything
         let mut n = Metrics::default();
-        n.record_walk(&lat, 0);
+        n.record_walk(&cost, 0, false);
         assert_eq!(n.phase_stats(), vec![(1, 1)]);
     }
 
     #[test]
     fn merge_rethreads_phase_marks() {
-        let lat = Latency::default();
+        let cost = CostModel::zero();
         let mut a = Metrics::default();
-        a.record_walk(&lat, 0);
+        a.record_walk(&cost, 0, false);
         a.mark_phase(); // at (1, 1)
-        a.record_l1_hit();
+        a.record_l1_hit(&cost);
         let mut b = Metrics::default();
-        b.record_l1_hit();
-        b.record_walk(&lat, 0);
+        b.record_l1_hit(&cost);
+        b.record_walk(&cost, 0, false);
         b.mark_phase(); // at (2, 1) locally
         a.merge(&b);
         // b's stream follows a's: its mark lands at (2+2, 1+1)
@@ -320,30 +404,32 @@ mod tests {
     #[test]
     fn merge_adds_coherence_counters() {
         let mut a = Metrics::default();
-        a.record_invalidation();
+        a.record_invalidation(40);
         a.record_shootdown();
         let mut b = Metrics::default();
-        b.record_invalidation();
+        b.record_invalidation(110);
         a.merge(&b);
         assert_eq!(a.invalidations, 2);
         assert_eq!(a.shootdowns, 1);
+        assert_eq!(a.cycles_shootdown, 150);
     }
 
     #[test]
     fn merge_adds_context_switch_counters_and_tenant_stats() {
         use crate::Asid;
         let mut a = Metrics::default();
-        a.record_context_switch(false);
+        a.record_context_switch(false, 20);
         a.tenant_add(Asid(0), 10, 3);
         a.tenant_add(Asid(2), 5, 1);
         let mut b = Metrics::default();
-        b.record_context_switch(true);
-        b.record_context_switch(true);
+        b.record_context_switch(true, 660);
+        b.record_context_switch(true, 660);
         b.tenant_add(Asid(0), 7, 2);
         b.tenant_add(Asid(1), 4, 4);
         a.merge(&b);
         assert_eq!(a.context_switches, 3);
         assert_eq!(a.switch_flushes, 2);
+        assert_eq!(a.cycles_switch, 1340);
         // tenant rows add element-wise, absent rows count as zero
         assert_eq!(a.tenant_stats, vec![[17, 5], [4, 4], [5, 1]]);
         assert_eq!(a.tenant(0), (17, 5));
@@ -357,11 +443,11 @@ mod tests {
 
     #[test]
     fn merge_adds_counters() {
-        let lat = Latency::default();
+        let cost = CostModel::zero();
         let mut a = Metrics::default();
-        a.record_regular_hit(&lat);
+        a.record_regular_hit(&cost);
         let mut b = Metrics::default();
-        b.record_walk(&lat, 1);
+        b.record_walk(&cost, 1, false);
         b.record_coverage(100);
         a.merge(&b);
         assert_eq!(a.accesses, 2);

@@ -1,14 +1,17 @@
-//! The trace-driven simulation core: latency model (Table 2), metrics
-//! (misses, coverage, CPI breakdown, predictor accuracy), the engine
-//! that drives L1 → L2 scheme → page-table walk per access, and the
-//! deterministic tenant scheduler that interleaves address spaces over
-//! one engine.
+//! The trace-driven simulation core: latency model (Table 2), the
+//! cycle-accurate cost model (walk depth, shootdowns, context
+//! switches), metrics (misses, coverage, CPI breakdown, predictor
+//! accuracy), the engine that drives L1 → L2 scheme → page-table walk
+//! per access, and the deterministic tenant scheduler that interleaves
+//! address spaces over one engine.
 
+pub mod cost;
 pub mod engine;
 pub mod latency;
 pub mod metrics;
 pub mod tenants;
 
+pub use cost::{CostModel, InvalOutcome};
 pub use engine::Engine;
 pub use latency::Latency;
 pub use metrics::Metrics;

@@ -1,0 +1,393 @@
+//! Cost-model tests: the zero-cost differential regression (charging
+//! must never change a simulation decision), the flush-vs-ranged
+//! decision boundary for every scheme, sharded == serial *total
+//! cycles* with a shootdown and a context switch landing exactly on a
+//! shard boundary, and `Metrics::merge` cycle-counter additivity via
+//! the check_cases harness.
+
+use katlb::coordinator::{
+    drive_tenant_span, run_cell, run_cell_shard, run_tenant_cell, run_tenant_cell_shard,
+    BenchContext, Config, SchemeKind, Shard, TenantMixCtx,
+};
+use katlb::mem::addrspace::{AddressSpace, MutationEvent, MutationOp, MutationSchedule, SpaceView};
+use katlb::mem::histogram::ContigHistogram;
+use katlb::mem::mapping::MemoryMapping;
+use katlb::pagetable::PageTable;
+use katlb::schemes::Scheme;
+use katlb::sim::tenants::{SwitchEvent, TenantSchedule};
+use katlb::sim::{CostModel, Engine, InvalOutcome, Metrics};
+use katlb::testutil::check_cases;
+use katlb::workloads::benchmark;
+use katlb::Asid;
+use std::sync::Arc;
+
+/// All seven contenders, as the cpi experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+fn base_cfg() -> Config {
+    Config {
+        trace_len: 1 << 15,
+        epoch: 1 << 13, // = shard length below: the epoch-alignment rule
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 13),
+        chunk_len: 1 << 12,
+        ..Config::default()
+    }
+}
+
+/// A charge-only model: prices everything the cost model knows about
+/// but can never flip a decision — `flush_refill` is astronomically
+/// high, so `prefers_flush` stays false for every realizable range.
+fn charge_only() -> CostModel {
+    CostModel {
+        l1_hit: 1,
+        walk_level: 13,
+        inval_page: 40,
+        ipi: 1500,
+        asid_load: 20,
+        flush_refill: u64::MAX / 2,
+        ..CostModel::zero()
+    }
+}
+
+/// Boundary-heavy mutation schedule (events exactly on the 4-way
+/// shard boundaries, plus mid-shard ones).
+fn boundary_schedule(l: u64) -> MutationSchedule {
+    MutationSchedule::new(vec![
+        MutationEvent::new(0, MutationOp::Remap { selector: 3 }),
+        MutationEvent::phase(l / 4, MutationOp::Munmap { selector: 5 }),
+        MutationEvent::new(l / 4, MutationOp::Mmap { pages: 64 }),
+        MutationEvent::new(l / 3 + 7, MutationOp::Remap { selector: 11 }),
+        MutationEvent::phase(l / 2, MutationOp::ThpPromote),
+        MutationEvent::new(5 * l / 8 + 1, MutationOp::Munmap { selector: 2 }),
+        MutationEvent::new(3 * l / 4, MutationOp::Remap { selector: 0 }),
+    ])
+}
+
+/// A 2-tenant mix whose switches land exactly on the boundaries of a
+/// 4-way shard split, with tenant 1 churning in its local timeline.
+fn churny_mix(cfg: &Config) -> TenantMixCtx {
+    let a = Arc::new(BenchContext::build(benchmark("libquantum").unwrap(), cfg, None).unwrap());
+    let mut b = BenchContext::build(benchmark("sjeng").unwrap(), cfg, None).unwrap();
+    let l = cfg.trace_len as u64;
+    b.schedule = MutationSchedule::new(vec![
+        MutationEvent::new(l / 64, MutationOp::Remap { selector: 2 }),
+        MutationEvent::new(l / 16, MutationOp::Munmap { selector: 5 }),
+        MutationEvent::new(l / 8, MutationOp::Mmap { pages: 128 }),
+        MutationEvent::new(l / 4, MutationOp::ThpPromote),
+    ]);
+    let schedule = TenantSchedule::with_events(
+        vec![
+            SwitchEvent { at: l / 4, tenant: 1 }, // exactly shard 1's start
+            SwitchEvent { at: l / 3 + 7, tenant: 0 },
+            SwitchEvent { at: l / 2, tenant: 1 }, // exactly shard 2's start
+            SwitchEvent { at: 5 * l / 8 + 1, tenant: 0 },
+            SwitchEvent { at: 3 * l / 4, tenant: 1 }, // exactly shard 3's start
+        ],
+        2,
+        l,
+    );
+    TenantMixCtx {
+        name: "cost-mix".into(),
+        tenants: vec![a, Arc::new(b)],
+        schedule,
+        epoch: cfg.epoch,
+        cost: cfg.cost,
+    }
+}
+
+/// The decisions a run took, independent of what it was charged: every
+/// event/outcome counter and the per-tenant / per-phase attributions.
+/// Cycle counters are deliberately absent.
+#[allow(clippy::type_complexity)]
+fn decisions(
+    m: &Metrics,
+) -> (u64, u64, u64, u64, u64, u64, u64, u64, Vec<[u64; 2]>, Vec<[u64; 2]>) {
+    (
+        m.accesses,
+        m.l1_hits,
+        m.l2_regular_hits,
+        m.l2_coalesced_hits,
+        m.walks,
+        m.aligned_probes,
+        m.invalidations,
+        m.context_switches,
+        m.tenant_stats.clone(),
+        m.phase_marks.clone(),
+    )
+}
+
+/// THE differential regression: with the default zero-cost model the
+/// new counters stay zero (nothing is charged — the pre-cost pipeline
+/// bit for bit), and a charge-only model prices walks, shootdowns and
+/// switches WITHOUT changing a single simulation decision — miss
+/// counts, per-tenant stats and phase marks are bit-identical across
+/// the frozen, churn and tenant paths for every scheme.
+#[test]
+fn zero_cost_is_free_and_charging_changes_no_decision() {
+    let zero_cfg = base_cfg();
+    let mut charged_cfg = base_cfg();
+    charged_cfg.cost = charge_only();
+
+    // --- frozen path ---
+    let z_ctx =
+        Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), &zero_cfg, None).unwrap());
+    let c_ctx =
+        Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), &charged_cfg, None).unwrap());
+    for kind in seven() {
+        let z = run_cell(&z_ctx, kind);
+        let c = run_cell(&c_ctx, kind);
+        assert_eq!(z.metrics.cycles_shootdown, 0, "{}: zero model charges nothing", kind.label());
+        assert_eq!(z.metrics.cycles_switch, 0, "{}", kind.label());
+        assert_eq!(z.metrics.cycles_l1_hit, 0, "{}", kind.label());
+        assert_eq!(
+            decisions(&z.metrics),
+            decisions(&c.metrics),
+            "{}: charging must not change frozen-path decisions",
+            kind.label()
+        );
+    }
+
+    // --- churn path (events on shard boundaries, verify ON) ---
+    let mk_churn = |cfg: &Config| {
+        let mut ctx = BenchContext::build(benchmark("astar").unwrap(), cfg, None).unwrap();
+        ctx.schedule = boundary_schedule(ctx.trace.len);
+        Arc::new(ctx)
+    };
+    let (z_ctx, c_ctx) = (mk_churn(&zero_cfg), mk_churn(&charged_cfg));
+    for kind in seven() {
+        let z = run_cell(&z_ctx, kind);
+        let c = run_cell(&c_ctx, kind);
+        assert_eq!(z.metrics.cycles_shootdown, 0, "{}", kind.label());
+        assert!(z.metrics.invalidations > 0, "{}: churn must invalidate", kind.label());
+        assert!(c.metrics.cycles_shootdown > 0, "{}: charge-only prices churn", kind.label());
+        assert_eq!(
+            decisions(&z.metrics),
+            decisions(&c.metrics),
+            "{}: charging must not change churn-path decisions",
+            kind.label()
+        );
+    }
+
+    // --- tenant path (switches on shard boundaries + tenant churn) ---
+    let (z_mix, c_mix) = (churny_mix(&zero_cfg), churny_mix(&charged_cfg));
+    for kind in seven() {
+        let z = run_tenant_cell(&z_mix, kind);
+        let c = run_tenant_cell(&c_mix, kind);
+        assert_eq!(z.metrics.cycles_switch, 0, "{}", kind.label());
+        assert!(z.metrics.context_switches > 0, "{}", kind.label());
+        assert!(c.metrics.cycles_switch > 0, "{}: charge-only prices switches", kind.label());
+        assert!(c.metrics.cycles_shootdown > 0, "{}: tenant churn priced too", kind.label());
+        assert_eq!(
+            decisions(&z.metrics),
+            decisions(&c.metrics),
+            "{}: charging must not change tenant-path decisions",
+            kind.label()
+        );
+    }
+}
+
+/// The flush-vs-ranged decision boundary, per scheme: at
+/// `pages * inval_page == flush_refill + 1` the flush is cheaper and
+/// every scheme takes it (out-of-range state dies, the flush price is
+/// charged); at `== flush_refill - 1` (and at equality) the ranged
+/// path is cheaper and survives out-of-range state, charging the
+/// per-page price.
+#[test]
+fn flush_vs_ranged_boundary_per_scheme() {
+    const PAGES: u64 = 64;
+    const INVAL_PAGE: u64 = 10;
+    const IPI: u64 = 100;
+    let m = MemoryMapping::new((0..4096u64).map(|v| (v, v)).collect());
+    let pt = PageTable::from_mapping(&m);
+    let hist = ContigHistogram::from_mapping(&m);
+    let sweep = PAGES * INVAL_PAGE;
+    for kind in seven() {
+        for (refill, expect_flush) in [(sweep + 1, false), (sweep, false), (sweep - 1, true)] {
+            let cost = CostModel {
+                inval_page: INVAL_PAGE,
+                ipi: IPI,
+                flush_refill: refill,
+                ..CostModel::zero()
+            };
+            // scheme-level: the reported outcome is the cheaper path
+            let mut scheme = kind.build_boxed(&m, &hist);
+            let out = scheme.invalidate_range(Asid::ZERO, 0, PAGES, &cost);
+            let expect = if expect_flush { InvalOutcome::Flushed } else { InvalOutcome::Ranged };
+            assert_eq!(out, expect, "{} at refill {refill}", kind.label());
+
+            // engine-level: the chosen path's cycles are charged, and
+            // its semantics are visible — an entry far outside the
+            // range survives the ranged sweep but dies with the flush
+            let view = SpaceView::new(&pt, &hist, &m);
+            let mut eng = Engine::new(kind.build_boxed(&m, &hist)).with_cost(cost);
+            eng.verify = true;
+            eng.access(3000, view); // walk + fills, outside [0, PAGES)
+            eng.invalidate_range(0, PAGES);
+            let charged = if expect_flush { IPI + refill } else { IPI + sweep };
+            assert_eq!(
+                eng.metrics().cycles_shootdown,
+                charged,
+                "{} at refill {refill}: chosen path must be what is charged",
+                kind.label()
+            );
+            eng.access(3000, view);
+            let expect_walks = if expect_flush { 2 } else { 1 };
+            assert_eq!(
+                eng.metrics().walks,
+                expect_walks,
+                "{} at refill {refill}: flush kills out-of-range state, ranged spares it",
+                kind.label()
+            );
+        }
+    }
+}
+
+/// Sharded == serial on *total cycles* under a flush-capable cost
+/// model, with a mutation event exactly on a shard boundary (the
+/// churn path).  `Metrics::accounting` includes the cycle counters,
+/// so this pins shootdown cycles landing in exactly one shard.
+#[test]
+fn sharded_equals_serial_cycles_with_boundary_shootdown() {
+    let mut cfg = base_cfg();
+    cfg.cost = CostModel::realistic();
+    let mut ctx = BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap();
+    let l = ctx.trace.len;
+    ctx.schedule = boundary_schedule(l);
+    let ctx = Arc::new(ctx);
+    let shards = 4usize;
+    for kind in seven() {
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_cell_shard(&ctx, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        let whole = run_cell_shard(&ctx, kind, Shard::WHOLE);
+        assert!(merged.cycles_shootdown > 0, "{}: churn must be priced", kind.label());
+        assert_eq!(
+            merged.invalidations,
+            whole.metrics.invalidations,
+            "{}: every event delivered exactly once",
+            kind.label()
+        );
+        assert_eq!(
+            merged.cycles_shootdown,
+            whole.metrics.cycles_shootdown,
+            "{}: shootdown cycles must be shard-invariant",
+            kind.label()
+        );
+    }
+}
+
+/// Sharded == serial on every accounting counter — total cycles
+/// included — for the tenant path under [`CostModel::realistic`],
+/// with a context switch exactly on each shard boundary and tenant
+/// churn composing in.  The serial reference is one warm engine with
+/// whole-TLB shootdowns at the boundaries (uncharged: boundary
+/// flushes are the simulation device, not workload events).
+#[test]
+fn sharded_equals_serial_cycles_with_boundary_switch() {
+    let mut cfg = base_cfg();
+    cfg.cost = CostModel::realistic();
+    let mix = churny_mix(&cfg);
+    let shards = 4usize;
+    for kind in seven() {
+        // serial: one engine over all shard ranges, flushed between
+        let l = mix.schedule.len();
+        let mut spaces: Vec<AddressSpace> =
+            mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+        let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+        let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
+        eng.verify = true;
+        for (t, space) in spaces.iter().enumerate().skip(1) {
+            eng.register_tenant(Asid::from_index(t), space.view());
+        }
+        eng.set_tenant(Asid::from_index(0));
+        for index in 0..shards {
+            let (s, e) = Shard { index, count: shards }.bounds(l);
+            drive_tenant_span(&mix, &mut spaces, &mut eng, s, e).unwrap();
+            if index + 1 < shards {
+                eng.flush();
+            }
+        }
+        let (sm, _) = eng.finish();
+
+        // sharded: the coordinator's cold-engine path, merged in order
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_tenant_cell_shard(&mix, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        assert!(merged.cycles_switch > 0, "{}: switches must be priced", kind.label());
+        assert!(merged.cycles_shootdown > 0, "{}: tenant churn must be priced", kind.label());
+        assert_eq!(
+            sm.accounting(),
+            merged.accounting(),
+            "{}: sharded tenant merge must equal serial on every counter, cycles included",
+            kind.label()
+        );
+        assert_eq!(sm.cycles_switch, merged.cycles_switch, "{}", kind.label());
+        assert_eq!(sm.tenant_stats, merged.tenant_stats, "{}", kind.label());
+        assert_eq!(
+            merged.context_switches,
+            mix.schedule.switches() as u64,
+            "{}: every switch counted exactly once across shards",
+            kind.label()
+        );
+    }
+}
+
+/// `Metrics::merge` cycle-counter additivity, via the check_cases
+/// harness: for random counter loads, every accounting counter — the
+/// new cycle counters included — and `total_cycles` add exactly.
+#[test]
+fn metrics_merge_adds_cycle_counters() {
+    check_cases(16, 4242, |rng, case| {
+        let mut load = |m: &mut Metrics| {
+            m.accesses = rng.below(1 << 20);
+            m.l1_hits = rng.below(1 << 18);
+            m.l2_regular_hits = rng.below(1 << 16);
+            m.l2_coalesced_hits = rng.below(1 << 16);
+            m.walks = rng.below(1 << 16);
+            m.aligned_probes = rng.below(1 << 16);
+            m.cycles_l1_hit = rng.below(1 << 30);
+            m.cycles_l2_hit = rng.below(1 << 30);
+            m.cycles_coalesced = rng.below(1 << 30);
+            m.cycles_extra_probes = rng.below(1 << 30);
+            m.cycles_walk = rng.below(1 << 30);
+            m.cycles_shootdown = rng.below(1 << 30);
+            m.cycles_switch = rng.below(1 << 30);
+        };
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        load(&mut a);
+        load(&mut b);
+        let (acc_a, acc_b) = (a.accounting(), b.accounting());
+        let (ta, tb) = (a.total_cycles(), b.total_cycles());
+        a.merge(&b);
+        let merged = a.accounting();
+        for i in 0..merged.len() {
+            assert_eq!(merged[i], acc_a[i] + acc_b[i], "counter {i} case {case}");
+        }
+        assert_eq!(a.total_cycles(), ta + tb, "case {case}");
+    });
+}

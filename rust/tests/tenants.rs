@@ -90,7 +90,13 @@ fn boundary_mix(cfg: &Config) -> TenantMixCtx {
         2,
         l,
     );
-    TenantMixCtx { name: "boundary-mix".into(), tenants: vec![a, b], schedule, epoch: cfg.epoch }
+    TenantMixCtx {
+        name: "boundary-mix".into(),
+        tenants: vec![a, b],
+        schedule,
+        epoch: cfg.epoch,
+        cost: cfg.cost,
+    }
 }
 
 /// Serial reference for a tenant mix: one warm engine across all
@@ -312,13 +318,18 @@ fn tenant_churn_composes_with_scheduling() {
         );
         assert_eq!(whole.metrics.accesses, l, "{}", kind.label());
     }
-    // sharded == serial under tenant churn: exact for schemes without
-    // per-ASID *derived* state (K sets / anchor distances / RMM OS
-    // tables re-derive at shard registration from the live space,
-    // while a serial engine refreshes only the current tenant's lane
-    // at epoch ticks — the multi-tenant extension of the module's
-    // epoch-alignment rule)
-    for kind in [SchemeKind::Base, SchemeKind::Colt, SchemeKind::Cluster] {
+    // sharded == serial under tenant churn, for EVERY scheme — the
+    // derived ones included.  This is the ROADMAP-noted tenant-epoch
+    // regression: serial engines used to refresh only the *current*
+    // tenant's derived lane (K set / anchor distance / RMM OS table)
+    // at epoch ticks while shard runners re-derive every lane at
+    // registration, so K-Aligned, Anchor-Dynamic and RMM drifted
+    // across shardings under tenant churn.  The engine now flags the
+    // epoch and `drive_tenant_span` refreshes the descheduled lanes
+    // at the next span boundary (their spaces are frozen off-core, so
+    // the deferral is exact) — the epoch-alignment rule's multi-tenant
+    // caveat is gone.
+    for kind in seven() {
         let sm = serial_with_boundary_flushes(&mix, kind, shards);
         let mut merged: Option<Metrics> = None;
         for index in 0..shards {
