@@ -5,8 +5,8 @@
 use super::report::{bar, pct, ratio, Table};
 use super::{
     run_anchor_static, run_anchor_static_sharded, run_cell, run_cells, run_cells_sharded,
-    run_tenant_cells_sharded, BenchContext, CellResult, Config, SchemeKind, TenantMixCtx,
-    TraceSpec,
+    run_multicore_cell, run_multicore_tenant_cell, run_tenant_cells_sharded, BenchContext,
+    CellResult, Config, McParams, SchemeKind, TenantMixCtx, TraceSpec,
 };
 use crate::error::Result;
 use crate::mem::addrspace::MutationSchedule;
@@ -15,10 +15,11 @@ use crate::mem::mapgen::{self, SyntheticKind};
 use crate::pagetable::aligned::init_cost;
 use crate::pagetable::PageTable;
 use crate::runtime::Runtime;
-use crate::sim::{CostModel, Metrics};
+use crate::sim::{CostModel, IpiPolicy, Metrics};
 use crate::workloads::{all_benchmarks, Workload};
 use crate::bail;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// The scheme columns of Figure 8 / Table 4, in paper order.
 fn prior_schemes() -> Vec<SchemeKind> {
@@ -608,6 +609,192 @@ pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Cores: true multi-core cells over the churn + tenant batteries
+// ---------------------------------------------------------------------------
+
+/// The core counts a `repro cores` sweep reports — the 1/8/64/256
+/// scaling curve, unless the user pinned `--cores N`.
+fn core_counts(cfg: &Config) -> Vec<usize> {
+    if cfg.cores > 1 {
+        vec![cfg.cores]
+    } else {
+        vec![1, 8, 64, 256]
+    }
+}
+
+fn mc_params(cfg: &Config, cores: usize, verify: bool) -> McParams {
+    McParams {
+        cores,
+        policy: if cfg.coalesce_ipi { IpiPolicy::Coalesced } else { IpiPolicy::PerEvent },
+        workers: cfg.effective_workers(),
+        verify,
+    }
+}
+
+fn per_1k(walks: u64, accesses: u64) -> String {
+    if accesses == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.2}", walks as f64 * 1000.0 / accesses as f64)
+    }
+}
+
+fn total_cpa(m: &Metrics) -> String {
+    let (h, w, s, x) = m.cpi_breakdown4(1.0);
+    format!("{:.3}", h + w + s + x)
+}
+
+/// The `repro cores` experiment: the seven contenders on true N-core
+/// cells (private per-core TLBs, shared address space, IPI shootdown
+/// interconnect) at each swept core count, priced by
+/// [`CostModel::realistic`].  Churn tables add the interconnect view —
+/// IPIs delivered, responder fan-out, filtered deliveries — since
+/// mutation events are what generate bus traffic; tenant tables show
+/// gang-scheduled switch scaling instead.  Verification stays ON: at
+/// any core count a filtered (skipped) IPI that left a stale entry
+/// would panic the engine's translation check.
+pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
+    let mut cfg = cfg.clone();
+    cfg.cost = CostModel::realistic();
+    cfg.shards = 1;
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let counts = core_counts(&cfg);
+    let mut out = Vec::new();
+    let cols =
+        ["miss/1k", "core lo", "core hi", "IPIs", "mean fan", "max fan", "filtered", "total c/a"];
+    for (kind, wl) in crate::workloads::churn_workloads() {
+        let ctx = Arc::new(BenchContext::build_churn(wl, kind, &cfg, rt.as_ref())?);
+        let mut t = Table::new(
+            &format!(
+                "Cores [churn {}]: N private TLBs, shared space, IPI shootdowns",
+                kind.label()
+            ),
+            &cols,
+        );
+        for k in churn_schemes() {
+            for &n in &counts {
+                let r = run_multicore_cell(&ctx, k, &mc_params(&cfg, n, true));
+                let m = &r.cell.metrics;
+                let (lo, hi) = r.miss_rate_spread();
+                t.row(
+                    &format!("{} @{}c", r.cell.scheme, n),
+                    vec![
+                        per_1k(m.walks, m.accesses),
+                        format!("{:.2}", lo * 1000.0),
+                        format!("{:.2}", hi * 1000.0),
+                        r.bus.ipis.to_string(),
+                        format!("{:.2}", r.bus.mean_fanout()),
+                        r.bus.max_fanout().to_string(),
+                        r.bus.filtered.to_string(),
+                        total_cpa(m),
+                    ],
+                );
+            }
+        }
+        out.push(t);
+    }
+    let tcols = ["miss/1k", "core lo", "core hi", "switches", "flushes", "total c/a"];
+    for mix in crate::workloads::tenant_mixes() {
+        let ctx = Arc::new(TenantMixCtx::build(&mix, &cfg, rt.as_ref())?);
+        let mut t = Table::new(
+            &format!("Cores [tenants {}]: gang-scheduled N-core mix", ctx.name),
+            &tcols,
+        );
+        for k in churn_schemes() {
+            for &n in &counts {
+                let r = run_multicore_tenant_cell(&ctx, k, &mc_params(&cfg, n, true));
+                let m = &r.cell.metrics;
+                let (lo, hi) = r.miss_rate_spread();
+                t.row(
+                    &format!("{} @{}c", r.cell.scheme, n),
+                    vec![
+                        per_1k(m.walks, m.accesses),
+                        format!("{:.2}", lo * 1000.0),
+                        format!("{:.2}", hi * 1000.0),
+                        m.context_switches.to_string(),
+                        m.switch_flushes.to_string(),
+                        total_cpa(m),
+                    ],
+                );
+            }
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Bench: engine-throughput harness (machine-readable BENCH_6.json)
+// ---------------------------------------------------------------------------
+
+/// The `repro bench` harness: accesses/sec of every contender at each
+/// swept core count over one frozen demand context (no churn — the
+/// work measured is the pure translation hot path; verification off
+/// like the production fast path).  The *work* is fully reproducible —
+/// seeds, partitioning and metrics are deterministic, and the JSON
+/// records them next to the wall-clock numbers so regressions in
+/// either are diffable.  Writes `BENCH_6.json` in the working
+/// directory and returns the human-readable table.
+pub fn bench(cfg: &Config) -> Result<Table> {
+    bench_to(cfg, "BENCH_6.json")
+}
+
+pub fn bench_to(cfg: &Config, path: &str) -> Result<Table> {
+    let mut cfg = cfg.clone();
+    cfg.cost = CostModel::zero();
+    let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
+    let wl = crate::workloads::benchmark("mcf")
+        .ok_or_else(|| crate::anyhow!("bench workload mcf missing"))?;
+    let ctx = BenchContext::build(wl, &cfg, rt.as_ref())?;
+    let counts = core_counts(&cfg);
+    let mut t = Table::new(
+        "Bench: translation throughput (frozen mapping, verification off)",
+        &["accesses", "misses", "ms", "Macc/s"],
+    );
+    let mut entries: Vec<String> = Vec::new();
+    for k in churn_schemes() {
+        for &n in &counts {
+            let p = mc_params(&cfg, n, false);
+            let t0 = Instant::now();
+            let r = run_multicore_cell(&ctx, k, &p);
+            let secs = t0.elapsed().as_secs_f64();
+            let m = &r.cell.metrics;
+            let aps = if secs > 0.0 { m.accesses as f64 / secs } else { 0.0 };
+            t.row(
+                &format!("{} @{}c", r.cell.scheme, n),
+                vec![
+                    m.accesses.to_string(),
+                    m.misses().to_string(),
+                    format!("{:.1}", secs * 1000.0),
+                    format!("{:.2}", aps / 1e6),
+                ],
+            );
+            entries.push(format!(
+                "    {{\"scheme\": {:?}, \"cores\": {}, \"accesses\": {}, \"misses\": {}, \
+                 \"elapsed_ms\": {:.3}, \"accesses_per_sec\": {:.0}}}",
+                r.cell.scheme,
+                n,
+                m.accesses,
+                m.misses(),
+                secs * 1000.0,
+                aps
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"benchmark\": {:?},\n  \"trace_len\": {},\n  \"workers\": {},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        ctx.workload.name,
+        ctx.trace.len,
+        cfg.effective_workers(),
+        entries.join(",\n")
+    );
+    std::fs::write(path, json)
+        .map_err(|e| crate::anyhow!("writing {path}: {e}"))?;
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -713,6 +900,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cores_tables_cover_batteries_and_parse() {
+        let mut cfg = tiny();
+        cfg.max_ws_pages = Some(1 << 13);
+        cfg.cores = 2; // pin the sweep to one cheap core count
+        let tables = cores(&cfg).unwrap();
+        assert_eq!(tables.len(), 3 + 4, "three churn cycles + four tenant mixes");
+        for t in &tables {
+            assert_eq!(t.rows.len(), 7, "seven schemes at one core count: {}", t.title);
+            for (label, cells) in &t.rows {
+                assert!(label.ends_with("@2c"), "{label} in {}", t.title);
+                cells[0].parse::<f64>().expect("miss/1k parses");
+                if t.title.contains("churn") {
+                    cells[3].parse::<u64>().expect("IPIs parse");
+                } else {
+                    let switches: u64 = cells[3].parse().unwrap();
+                    assert!(switches > 0, "{label} in {}: gang switches", t.title);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bench_writes_machine_readable_json() {
+        let mut cfg = tiny();
+        cfg.cores = 2;
+        let path = std::env::temp_dir().join("katlb_bench_test.json");
+        let path = path.to_str().unwrap();
+        let t = bench_to(&cfg, path).unwrap();
+        assert_eq!(t.rows.len(), 7, "seven schemes at one core count");
+        let json = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(json.contains("\"accesses_per_sec\""));
+        assert!(json.contains("\"cores\": 2"));
+        assert!(json.contains("\"trace_len\""));
+        // deterministic work: every row reports the full trace
+        assert!(json.contains(&format!("\"accesses\": {}", cfg.trace_len)));
     }
 
     #[test]

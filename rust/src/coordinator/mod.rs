@@ -67,7 +67,12 @@
 //! via `Engine::set_tenant`, keeping sharded == serial exact.
 
 pub mod experiments;
+pub mod multicore;
 pub mod report;
+
+pub use multicore::{
+    core_seed, part, run_multicore_cell, run_multicore_tenant_cell, McCellResult, McParams,
+};
 
 use crate::error::Result;
 use crate::mem::addrspace::{AddressSpace, MutationSchedule, SpaceView};
@@ -196,6 +201,19 @@ pub struct Config {
     /// and context switches free, bit-identical to the pre-cost
     /// pipeline; `repro cpi` swaps in [`CostModel::realistic`])
     pub cost: CostModel,
+    /// simulated cores for multicore cells (`repro cores` / `repro
+    /// bench`); must be >= 1.  `cores` and `shards` are mutually
+    /// exclusive beyond 1: a shard splits one serial engine's timeline
+    /// into cold segments, while a multicore cell owns the whole
+    /// timeline with N warm engines — combining them has no physical
+    /// reading, so [`Config::validate`] rejects `cores > 1` with
+    /// `shards > 1`.  (Multicore quanta already parallelize over
+    /// `workers`.)
+    pub cores: usize,
+    /// route multicore shootdowns with [`crate::sim::IpiPolicy::Coalesced`]
+    /// (batch all ranges of a quiesce point into one IPI per responder)
+    /// instead of the serial-equivalent per-event policy
+    pub coalesce_ipi: bool,
 }
 
 impl Default for Config {
@@ -209,6 +227,8 @@ impl Default for Config {
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
             cost: CostModel::zero(),
+            cores: 1,
+            coalesce_ipi: false,
         }
     }
 }
@@ -224,7 +244,29 @@ impl Config {
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
             cost: CostModel::zero(),
+            cores: 1,
+            coalesce_ipi: false,
         }
+    }
+
+    /// Reject configurations with no physical reading before any cell
+    /// runs: zero cores, and the `cores`/`shards` combination (see the
+    /// `cores` field docs).
+    pub fn validate(&self) -> Result<()> {
+        if self.cores == 0 {
+            bail!("--cores must be >= 1 (0 cores cannot run any accesses)");
+        }
+        if self.cores > 1 && self.shards > 1 {
+            bail!(
+                "--cores {} cannot combine with --shards {}: shards split one serial \
+                 engine's timeline into cold segments, a multicore cell owns the whole \
+                 timeline with {} warm engines (use --workers for host parallelism)",
+                self.cores,
+                self.shards,
+                self.cores
+            );
+        }
+        Ok(())
     }
 
     pub fn effective_workers(&self) -> usize {
@@ -818,7 +860,7 @@ pub fn run_tenant_cells_sharded(
     merge_shard_results(results, cells.len(), shards)
 }
 
-fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64, u64)> {
+pub(crate) fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> Option<(u64, u64)> {
     match (a, b) {
         (Some((c0, t0)), Some((c1, t1))) => Some((c0 + c1, t0 + t1)),
         (x, None) | (None, x) => x,
@@ -1001,6 +1043,21 @@ mod tests {
             assert_eq!(covered, len);
             assert_eq!(prev_end, len);
         }
+    }
+
+    #[test]
+    fn validate_rejects_zero_cores_and_cores_with_shards() {
+        let mut cfg = tiny_cfg();
+        assert!(cfg.validate().is_ok(), "default composition is valid");
+        cfg.cores = 0;
+        assert!(cfg.validate().is_err(), "0 cores must be rejected");
+        cfg.cores = 4;
+        cfg.shards = 1;
+        assert!(cfg.validate().is_ok(), "multicore with one shard is valid");
+        cfg.shards = 2;
+        assert!(cfg.validate().is_err(), "cores > 1 with shards > 1 must be rejected");
+        cfg.cores = 1;
+        assert!(cfg.validate().is_ok(), "serial engine shards freely");
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! True multi-core cells: N engines with private L1/L2 TLB state over
+//! one shared address space, coupled by the shootdown interconnect
+//! ([`crate::sim::ShootdownBus`]).
+//!
+//! ## Quiesce-at-event protocol
+//!
+//! The global timeline (`trace.len` accesses *total* — strong scaling,
+//! so an N-core cell costs the same trace work as a serial cell) is
+//! cut at mutation/switch timestamps exactly like the serial drivers
+//! cut chunks.  Between consecutive event timestamps the cores run a
+//! *quantum* in parallel over the frozen address space: core `c`
+//! advances its own seeded trace stream by
+//! `part(t1, c, n) - part(t0, c, n)` accesses, where
+//!
+//! ```text
+//! part(x, c, n) = x·(c+1)/n − x·c/n      (integer division)
+//! ```
+//!
+//! is core `c`'s local stream position at global time `x`.  The parts
+//! telescope (`Σ_c part = x`), every core's position is monotone, and
+//! `part(x, 0, 1) = x` — so one core replays the serial pipeline's
+//! stream *bit-identically*, which is the subsystem's oracle.  At a
+//! quiesce point all cores have reached the event's timestamp; the
+//! event mutates the space and its invalidation ranges are routed
+//! single-threadedly in event order, so the simulation is
+//! deterministic regardless of how quanta were banded across OS
+//! threads.
+//!
+//! ## Shootdown routing
+//!
+//! During quanta each core records every page it touches in its
+//! [`PresenceFilter`] (run ∪ max-fill-span block — the conservative
+//! cover proved sound in [`crate::sim::multicore`]).  At a quiesce
+//! point the event's *initiator* core (events rotate round-robin:
+//! `ordinal % n`) invalidates locally — that is the mutation's own
+//! core doing `munmap`, not an IPI — and the bus delivers IPIs only to
+//! remote cores whose filters intersect the range.  Every core
+//! additionally gets an uncharged [`Engine::os_sync_range`]: the OS
+//! software state (RMM's range table) is read coherently by all cores,
+//! unlike the per-core TLB hardware state the IPI invalidates.
+//!
+//! Under [`IpiPolicy::PerEvent`] each (event, range) is one bus unit
+//! and every remote delivery charges the full serial shootdown cost —
+//! `cores = 1` is bit-identical to [`super::run_cell_shard`].  Under
+//! [`IpiPolicy::Coalesced`] all ranges of one quiesce point batch into
+//! a single unit: one IPI initiation per responder, per-range bodies
+//! still charged, responder sets computed from the batch-start filters
+//! (a core that would only have been cleared by an earlier range in
+//! the same batch may be over-delivered — allowed: over-delivery is
+//! sound, under-delivery never happens).
+//!
+//! ## Multi-tenant multicore
+//!
+//! [`run_multicore_tenant_cell`] gang-schedules a tenant mix: every
+//! switch event is delivered to all N cores in event order (real gang
+//! scheduling — `context_switches` scales with N), and a quantum runs
+//! each core's share of the *active tenant's* stream from the tenant's
+//! per-core partitioned position.  Tenant spaces are frozen (asserted)
+//! so no bus traffic arises; the per-core engines still exercise the
+//! full ASID-tagged switch/flush machinery.
+
+use super::{merge_predictor, BenchContext, CellResult, Config, SchemeKind, TenantMixCtx};
+use crate::error::Result;
+use crate::mem::addrspace::{AddressSpace, MutationEvent};
+use crate::runtime::{NativeSource, TraceStream, VpnRemap};
+use crate::schemes::{AnyScheme, Scheme};
+use crate::sim::multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
+use crate::sim::{Engine, InvalOutcome, Metrics};
+use crate::{Asid, Vpn};
+
+/// Per-core trace seed: core 0 keeps the benchmark's seed (the serial
+/// stream — the bit-identity anchor), higher cores decorrelate by a
+/// golden-ratio hash so their reference patterns differ like real
+/// threads' do while staying pure functions of (benchmark, core).
+pub fn core_seed(base: u32, core: usize) -> u32 {
+    if core == 0 {
+        base
+    } else {
+        base ^ 0x9E37_79B9u32.wrapping_mul(core as u32)
+    }
+}
+
+/// Core `c`'s local stream position at global time `x` on `n` cores.
+/// Telescoping (`Σ_c part(x,c,n) = x`), monotone in `x`, and the
+/// identity for `n = 1`.
+pub fn part(x: u64, core: usize, n: usize) -> u64 {
+    let n = n.max(1) as u64;
+    let c = core as u64;
+    x * (c + 1) / n - x * c / n
+}
+
+/// Knobs for one multicore cell.
+#[derive(Clone, Copy, Debug)]
+pub struct McParams {
+    /// simulated cores (engines); `>= 1`
+    pub cores: usize,
+    /// shootdown routing policy
+    pub policy: IpiPolicy,
+    /// OS worker threads banding the cores during quanta (0 =
+    /// available parallelism).  Any value yields the same simulation —
+    /// routing is single-threaded at quiesce points and per-core state
+    /// is private during quanta — which the determinism tests pin.
+    pub workers: usize,
+    /// per-access translation verification (the stale-entry oracle)
+    pub verify: bool,
+}
+
+impl McParams {
+    pub fn new(cores: usize) -> Self {
+        McParams { cores: cores.max(1), policy: IpiPolicy::PerEvent, workers: 0, verify: true }
+    }
+
+    /// Derive from a [`Config`] (`cores`, `coalesce_ipi`, `workers`).
+    pub fn from_config(cfg: &Config) -> Self {
+        McParams {
+            cores: cfg.cores.max(1),
+            policy: if cfg.coalesce_ipi { IpiPolicy::Coalesced } else { IpiPolicy::PerEvent },
+            workers: cfg.effective_workers(),
+            verify: true,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: IpiPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// One multicore cell result: the merged [`CellResult`] (metrics merge
+/// in core order, so the aggregate is deterministic) plus the per-core
+/// metrics and the interconnect accounting.
+#[derive(Clone, Debug)]
+pub struct McCellResult {
+    /// aggregate view — `cell.metrics` is the core-order merge
+    pub cell: CellResult,
+    pub per_core: Vec<Metrics>,
+    pub bus: BusStats,
+    pub cores: usize,
+}
+
+impl McCellResult {
+    /// Per-core L2 miss rates (misses / accesses).
+    pub fn core_miss_rates(&self) -> Vec<f64> {
+        self.per_core
+            .iter()
+            .map(|m| if m.accesses == 0 { 0.0 } else { m.misses() as f64 / m.accesses as f64 })
+            .collect()
+    }
+
+    /// (min, max) of the per-core miss rates — the imbalance band the
+    /// `repro cores` tables report.
+    pub fn miss_rate_spread(&self) -> (f64, f64) {
+        let rates = self.core_miss_rates();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        (if min.is_finite() { min } else { 0.0 }, max)
+    }
+}
+
+struct CoreState {
+    index: usize,
+    eng: Engine<AnyScheme>,
+}
+
+/// Run one multicore cell over the benchmark's whole timeline.  With
+/// an empty mutation schedule this is N cores over a frozen space (no
+/// bus traffic — every quantum is the full trace); with a churn
+/// schedule, quanta interleave with routed shootdowns.
+pub fn run_multicore_cell(ctx: &BenchContext, kind: SchemeKind, p: &McParams) -> McCellResult {
+    let n = p.cores.max(1);
+    let mut aspace = ctx.build_aspace(kind.uses_thp());
+    let mut cores: Vec<CoreState> = (0..n)
+        .map(|c| {
+            let scheme = kind.build(aspace.mapping(), aspace.hist());
+            let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
+            eng.verify = p.verify;
+            CoreState { index: c, eng }
+        })
+        .collect();
+    let mut filters = vec![PresenceFilter::new(); n];
+    let mut bus = ShootdownBus::new(n, p.policy);
+
+    let end = ctx.trace.len;
+    let evs = ctx.schedule.events();
+    let (mut ei, mut pos, mut ordinal) = (0usize, 0u64, 0u64);
+    while pos < end {
+        // quiesce: route every event at this timestamp in event order
+        // (single-threaded — this is what makes the interleave
+        // deterministic across thread schedules)
+        let g0 = ei;
+        while ei < evs.len() && evs[ei].at == pos {
+            ei += 1;
+        }
+        if ei > g0 {
+            route_group(&mut aspace, &mut cores, &mut filters, &mut bus, &evs[g0..ei], &mut ordinal);
+        }
+        let next = if ei < evs.len() { evs[ei].at.min(end) } else { end };
+        run_quantum(ctx, &aspace, &mut cores, &mut filters, pos, next, p.workers);
+        pos = next;
+    }
+    collect(cores, bus, ctx.workload.name.to_string(), kind, ctx.workload.ipa)
+}
+
+/// Gang-scheduled multicore tenant cell: all cores deliver every
+/// switch, quanta run each core's partition of the active tenant's
+/// stream.  Tenant spaces must be frozen (no per-tenant mutation
+/// schedules) — shootdown routing across tenant spaces is not modeled.
+pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McParams) -> McCellResult {
+    let n = p.cores.max(1);
+    for ctx in &mix.tenants {
+        assert!(
+            ctx.schedule.is_empty(),
+            "multicore tenant cells require frozen tenant spaces (tenant {} has mutations)",
+            ctx.workload.name
+        );
+    }
+    let spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    let mut cores: Vec<CoreState> = (0..n)
+        .map(|c| {
+            // replicate the serial tenant-cell init per core: scheme
+            // derived from tenant 0's space, other tenants registered,
+            // the pre-timeline tenant installed silently
+            let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+            let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
+            eng.verify = p.verify;
+            for (t, space) in spaces.iter().enumerate().skip(1) {
+                eng.register_tenant(Asid::from_index(t), space.view());
+            }
+            eng.set_tenant(Asid::from_index(mix.schedule.active_before(0)));
+            CoreState { index: c, eng }
+        })
+        .collect();
+
+    let end = mix.schedule.len();
+    let evs = mix.schedule.events();
+    let mut ei = mix.schedule.first_at_or_after(0);
+    let mut local = vec![0u64; mix.tenants.len()];
+    let mut pos = 0u64;
+    while pos < end {
+        while ei < evs.len() && evs[ei].at == pos {
+            // gang delivery: every core pays the switch
+            for core in cores.iter_mut() {
+                core.eng.switch_to(Asid::from_index(evs[ei].tenant));
+            }
+            ei += 1;
+        }
+        let span_end = if ei < evs.len() { evs[ei].at.min(end) } else { end };
+        let t = mix.schedule.active_at(pos);
+        let (la, lb) = (local[t], local[t] + (span_end - pos));
+        run_tenant_quantum(&mix.tenants[t], &spaces, &mut cores, t, la, lb, p.workers);
+        local[t] = lb;
+        pos = span_end;
+    }
+    collect(cores, ShootdownBus::new(n, p.policy), mix.name.clone(), kind, mix.ipa())
+}
+
+/// Route one quiesce group (all events sharing a timestamp): apply
+/// each op to the shared space and deliver its invalidation ranges per
+/// the bus policy.  Runs single-threaded between quanta.
+fn route_group(
+    aspace: &mut AddressSpace,
+    cores: &mut [CoreState],
+    filters: &mut [PresenceFilter],
+    bus: &mut ShootdownBus,
+    group: &[MutationEvent],
+    ordinal: &mut u64,
+) {
+    let n = cores.len();
+    match bus.policy {
+        IpiPolicy::PerEvent => {
+            for ev in group {
+                if ev.phase_start {
+                    for core in cores.iter_mut() {
+                        core.eng.metrics_mut().mark_phase();
+                    }
+                }
+                let initiator = (*ordinal % n as u64) as usize;
+                *ordinal += 1;
+                let asid = cores[initiator].eng.current_asid();
+                for (v, l) in aspace.apply(&ev.op) {
+                    // remote responder set from the pre-delivery filters
+                    let resp = bus.responders(initiator, asid, v, l, filters);
+                    // the initiator invalidates unconditionally — it is
+                    // the core executing the mutation, and at n = 1
+                    // this is exactly the serial driver's call
+                    let outcome = cores[initiator].eng.invalidate_range(v, l);
+                    apply_outcome(&mut filters[initiator], asid, v, l, outcome);
+                    bus.record_local();
+                    for &c in &resp {
+                        let outcome = cores[c].eng.invalidate_range_as(asid, v, l);
+                        apply_outcome(&mut filters[c], asid, v, l, outcome);
+                    }
+                    bus.record_unit(resp.len());
+                    for core in cores.iter_mut() {
+                        core.eng.os_sync_range(asid, v, l);
+                    }
+                }
+            }
+        }
+        IpiPolicy::Coalesced => {
+            // initiator of the whole batch = the first event's; the
+            // ordinal still advances per event so the rotation stays
+            // aligned with the per-event policy
+            let initiator = (*ordinal % n as u64) as usize;
+            let asid = cores[initiator].eng.current_asid();
+            let mut ranges: Vec<(Asid, Vpn, u64)> = Vec::new();
+            for ev in group {
+                if ev.phase_start {
+                    for core in cores.iter_mut() {
+                        core.eng.metrics_mut().mark_phase();
+                    }
+                }
+                *ordinal += 1;
+                for (v, l) in aspace.apply(&ev.op) {
+                    if l > 0 {
+                        ranges.push((asid, v, l));
+                    }
+                }
+            }
+            if ranges.is_empty() {
+                return;
+            }
+            // responder batches from the batch-start filters (may
+            // over-deliver; never under-delivers)
+            let mut batches: Vec<Vec<(Asid, Vpn, u64)>> = vec![Vec::new(); n];
+            for &(a, v, l) in &ranges {
+                for c in bus.responders(initiator, a, v, l, filters) {
+                    batches[c].push((a, v, l));
+                }
+            }
+            batches[initiator] = ranges.clone();
+            let mut remote = 0usize;
+            for (c, batch) in batches.iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                let flushed = cores[c].eng.invalidate_batch_as(batch);
+                if flushed {
+                    filters[c].clear();
+                } else {
+                    for &(a, v, l) in batch {
+                        filters[c].subtract(a, v, l);
+                    }
+                }
+                if c == initiator {
+                    bus.record_local();
+                } else {
+                    remote += 1;
+                }
+            }
+            bus.record_unit(remote);
+            for &(a, v, l) in &ranges {
+                for core in cores.iter_mut() {
+                    core.eng.os_sync_range(a, v, l);
+                }
+            }
+        }
+    }
+}
+
+fn apply_outcome(filter: &mut PresenceFilter, asid: Asid, v: Vpn, l: u64, outcome: InvalOutcome) {
+    match outcome {
+        InvalOutcome::Ranged => filter.subtract(asid, v, l),
+        InvalOutcome::Flushed => filter.clear(),
+    }
+}
+
+/// How many OS threads band the cores (0 = available parallelism).
+fn band_workers(workers: usize, n: usize) -> usize {
+    let w = if workers == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        workers
+    };
+    w.max(1).min(n.max(1))
+}
+
+/// One parallel quantum over the shared (frozen-for-now) space: cores
+/// are banded across `workers` scoped threads; each core streams its
+/// partition `[part(t0), part(t1))` of its own seeded trace through
+/// the marked chunk runner.
+fn run_quantum(
+    ctx: &BenchContext,
+    aspace: &AddressSpace,
+    cores: &mut [CoreState],
+    filters: &mut [PresenceFilter],
+    t0: u64,
+    t1: u64,
+    workers: usize,
+) {
+    if t0 >= t1 {
+        return;
+    }
+    let n = cores.len();
+    let nw = band_workers(workers, n);
+    if nw == 1 {
+        for (core, filter) in cores.iter_mut().zip(filters.iter_mut()) {
+            run_core_span(ctx, aspace, core, filter, t0, t1, n)
+                .expect("trace stream (mapping validated at context build)");
+        }
+        return;
+    }
+    let per = n.div_ceil(nw);
+    std::thread::scope(|s| {
+        for (cband, fband) in cores.chunks_mut(per).zip(filters.chunks_mut(per)) {
+            s.spawn(move || {
+                for (core, filter) in cband.iter_mut().zip(fband.iter_mut()) {
+                    run_core_span(ctx, aspace, core, filter, t0, t1, n)
+                        .expect("trace stream (mapping validated at context build)");
+                }
+            });
+        }
+    });
+}
+
+fn run_core_span(
+    ctx: &BenchContext,
+    aspace: &AddressSpace,
+    core: &mut CoreState,
+    filter: &mut PresenceFilter,
+    t0: u64,
+    t1: u64,
+    n: usize,
+) -> Result<()> {
+    let (la, lb) = (part(t0, core.index, n), part(t1, core.index, n));
+    if la == lb {
+        return Ok(());
+    }
+    let src = NativeSource::new(core_seed(ctx.trace.seed, core.index), ctx.trace.params, ctx.trace.chunk);
+    let mut stream = TraceStream::new(src, la, lb);
+    let remap = VpnRemap::wrapping(aspace.mapping())?;
+    while let Some(chunk) = stream.next_chunk()? {
+        remap.apply(chunk);
+        core.eng.run_chunk_marked(chunk, aspace.view(), filter);
+    }
+    Ok(())
+}
+
+/// One gang quantum of a tenant mix: each core runs its partition of
+/// the active tenant `t`'s stream `[la, lb)`, then (like the serial
+/// tenant driver) follows up a fired epoch hook by refreshing the
+/// descheduled tenants' derived lanes.
+fn run_tenant_quantum(
+    ctx: &BenchContext,
+    spaces: &[AddressSpace],
+    cores: &mut [CoreState],
+    t: usize,
+    la: u64,
+    lb: u64,
+    workers: usize,
+) {
+    let n = cores.len();
+    let nw = band_workers(workers, n);
+    let run_one = |core: &mut CoreState| -> Result<()> {
+        let (a, b) = (part(la, core.index, n), part(lb, core.index, n));
+        if a < b {
+            let src =
+                NativeSource::new(core_seed(ctx.trace.seed, core.index), ctx.trace.params, ctx.trace.chunk);
+            let mut stream = TraceStream::new(src, a, b);
+            let aspace = &spaces[t];
+            let remap = VpnRemap::wrapping(aspace.mapping())?;
+            while let Some(chunk) = stream.next_chunk()? {
+                remap.apply(chunk);
+                core.eng.run_chunk(chunk, aspace.view());
+            }
+        }
+        if core.eng.take_epoch_pending() {
+            for (o, space) in spaces.iter().enumerate() {
+                if o != t {
+                    core.eng.refresh_lane(Asid::from_index(o), space.view());
+                }
+            }
+        }
+        Ok(())
+    };
+    if nw == 1 {
+        for core in cores.iter_mut() {
+            run_one(core).expect("tenant trace stream (mappings validated at context build)");
+        }
+        return;
+    }
+    let per = n.div_ceil(nw);
+    std::thread::scope(|s| {
+        for cband in cores.chunks_mut(per) {
+            let run_one = &run_one;
+            s.spawn(move || {
+                for core in cband.iter_mut() {
+                    run_one(core).expect("tenant trace stream (mappings validated at context build)");
+                }
+            });
+        }
+    });
+}
+
+/// Core-order merge into one [`CellResult`] plus the per-core and bus
+/// views.
+fn collect(
+    cores: Vec<CoreState>,
+    bus: ShootdownBus,
+    benchmark: String,
+    kind: SchemeKind,
+    ipa: f64,
+) -> McCellResult {
+    let n = cores.len();
+    let mut per_core = Vec::with_capacity(n);
+    let mut merged: Option<Metrics> = None;
+    let mut predictor = None;
+    let mut scheme_name = String::new();
+    let mut kset = None;
+    for (i, core) in cores.into_iter().enumerate() {
+        let (m, scheme) = core.eng.finish();
+        if i == 0 {
+            scheme_name = scheme.name();
+            kset = scheme.kset();
+        }
+        predictor = merge_predictor(predictor, scheme.predictor_stats());
+        match &mut merged {
+            None => merged = Some(m.clone()),
+            Some(acc) => acc.merge(&m),
+        }
+        per_core.push(m);
+    }
+    McCellResult {
+        cell: CellResult {
+            benchmark,
+            scheme: scheme_name,
+            kind,
+            metrics: merged.expect("at least one core"),
+            ipa,
+            predictor,
+            kset,
+            shards: 1,
+        },
+        per_core,
+        bus: bus.stats,
+        cores: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn part_telescopes_and_is_identity_at_one_core() {
+        for n in [1usize, 2, 3, 7, 64, 256] {
+            for x in [0u64, 1, 5, 1000, 100_003] {
+                let sum: u64 = (0..n).map(|c| part(x, c, n)).sum();
+                assert_eq!(sum, x, "n={n} x={x}");
+            }
+            // monotone per core
+            for c in 0..n {
+                let mut prev = 0;
+                for x in 0..200u64 {
+                    let p = part(x, c, n);
+                    assert!(p >= prev, "n={n} c={c} x={x}");
+                    assert!(p <= prev + 1, "a core advances at most one access per tick");
+                    prev = p;
+                }
+            }
+        }
+        for x in [0u64, 17, 4096] {
+            assert_eq!(part(x, 0, 1), x);
+        }
+    }
+
+    #[test]
+    fn core_seeds_are_distinct_and_anchor_core0() {
+        let base = 0xDEAD_BEEFu32;
+        assert_eq!(core_seed(base, 0), base);
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..256 {
+            assert!(seen.insert(core_seed(base, c)), "core {c} seed collides");
+        }
+    }
+}

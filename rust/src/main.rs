@@ -3,7 +3,7 @@
 //!
 //! Usage:
 //!   repro <command> [--quick] [--no-xla] [--trace-len N] [--workers N]
-//!                   [--shards N] [--chunk N]
+//!                   [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
@@ -15,6 +15,12 @@
 //!   cpi        — cycle-accurate cost model over the churn + tenant
 //!                batteries: per-scheme translation cycles per access
 //!                split into hit/walk/shootdown/switch
+//!   cores      — true multi-core cells (N private TLBs over one
+//!                shared space, IPI shootdown interconnect) at
+//!                1/8/64/256 cores (or --cores N): per-core miss
+//!                spread, IPI counts, responder fan-out, CPI
+//!   bench      — reproducible throughput harness (scheme × cores);
+//!                writes machine-readable BENCH_6.json
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
@@ -69,9 +75,17 @@ fn parse_args() -> Result<(String, Config)> {
                     .parse::<usize>()?
                     .max(1)
             }
+            "--cores" => {
+                cfg.cores = args
+                    .next()
+                    .ok_or_else(|| katlb::anyhow!("--cores needs a value"))?
+                    .parse()?
+            }
+            "--coalesce-ipi" => cfg.coalesce_ipi = true,
             other => bail!("unknown flag {other}"),
         }
     }
+    cfg.validate()?;
     Ok((cmd, cfg))
 }
 
@@ -95,9 +109,9 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!(
-                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|cpi|all|smoke> \
+                "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|cpi|cores|bench|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
-                 [--shards N] [--chunk N]"
+                 [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]"
             );
             return Ok(());
         }
@@ -141,6 +155,15 @@ fn main() -> Result<()> {
             for t in experiments::cpi(&cfg)? {
                 println!("{}", t.render());
             }
+        }
+        "cores" => {
+            for t in experiments::cores(&cfg)? {
+                println!("{}", t.render());
+            }
+        }
+        "bench" => {
+            println!("{}", experiments::bench(&cfg)?.render());
+            eprintln!("# wrote BENCH_6.json");
         }
         "fig1" => {
             println!("{}", experiments::fig1(&cfg)?.render());
@@ -201,6 +224,9 @@ fn main() -> Result<()> {
                         println!("{}", t.render());
                     }
                     for t in experiments::cpi(&cfg)? {
+                        println!("{}", t.render());
+                    }
+                    for t in experiments::cores(&cfg)? {
                         println!("{}", t.render());
                     }
                 }

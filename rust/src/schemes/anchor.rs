@@ -57,6 +57,10 @@ pub struct Anchor {
     /// number of distance changes (shootdowns), summed over tenants —
     /// §3.4-style cost
     pub shootdowns: u64,
+    /// high-water mark over every distance any lane has ever used
+    /// (never below the 2MB huge block): the presence-filter span bound
+    /// — older wide anchors may outlive a distance shrink
+    span_hwm: u64,
 }
 
 impl Anchor {
@@ -69,6 +73,7 @@ impl Anchor {
             init_dist: dist,
             mode,
             shootdowns: 0,
+            span_hwm: dist.max(HUGE_PAGES),
         }
     }
 
@@ -124,6 +129,7 @@ impl Anchor {
             return;
         }
         let d = select_distance(view.hist);
+        self.span_hwm = self.span_hwm.max(d);
         let lane = &mut self.lanes[i];
         if d != lane.dist {
             lane.dist = d;
@@ -275,6 +281,16 @@ impl Scheme for Anchor {
     fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
         let i = self.lane_index(asid);
         self.derive_lane(i, view);
+    }
+
+    /// An anchor entry covers `[anchor_vpn, anchor_vpn + contiguity)`
+    /// with `anchor_vpn = vpn & !(dist - 1)` and contiguity ≤ dist, so
+    /// coverage stays inside the accessed page's dist-aligned block.
+    /// The bound is the high-water mark over every distance ever used
+    /// (a dynamic re-selection can shrink `dist` while wide anchors
+    /// remain resident).
+    fn max_fill_span(&self) -> u64 {
+        self.span_hwm
     }
 }
 

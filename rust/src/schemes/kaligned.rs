@@ -63,6 +63,10 @@ pub struct KAligned {
     /// K recomputations that changed some tenant's K (each costs a
     /// per-ASID shootdown), summed over tenants
     pub k_changes: u64,
+    /// high-water mark over `1 << k` for every k any lane has ever
+    /// carried (never below the 2MB huge block): the presence-filter
+    /// span bound — wide aligned entries may outlive a K shrink
+    span_hwm: u64,
 }
 
 impl KAligned {
@@ -70,6 +74,7 @@ impl KAligned {
     pub fn with_k(mut ks: Vec<u32>, psi: usize) -> Self {
         ks.sort_unstable_by(|a, b| b.cmp(a));
         ks.dedup();
+        let span_hwm = ks.first().map_or(HUGE_PAGES, |&k| (1u64 << k).max(HUGE_PAGES));
         KAligned {
             tlb: SetAssocTlb::new(1024, 8),
             lanes: vec![Lane { asid: Asid::ZERO, ks, predictor: AlignPredictor::new() }],
@@ -78,6 +83,7 @@ impl KAligned {
             theta: THETA,
             use_predictor: true,
             k_changes: 0,
+            span_hwm,
         }
     }
 
@@ -147,6 +153,9 @@ impl KAligned {
     /// keep theirs.
     fn derive_lane(&mut self, i: usize, view: SpaceView<'_>) {
         let new_k = determine_k(view.hist, self.theta, self.psi);
+        if let Some(&k) = new_k.first() {
+            self.span_hwm = self.span_hwm.max(1u64 << k);
+        }
         let lane = &mut self.lanes[i];
         if new_k != lane.ks {
             lane.ks = new_k;
@@ -343,6 +352,14 @@ impl Scheme for KAligned {
 
     fn kset(&self) -> Option<Vec<u32>> {
         Some(self.lanes[self.cur].ks.clone())
+    }
+
+    /// A k-bit aligned entry covers `[align_vpn(vpn, k), … + 2^k)` —
+    /// inside the accessed page's `2^k`-aligned block.  The bound is
+    /// the high-water mark over every k ever derived (Algorithm 3 can
+    /// shrink K while wide entries remain resident).
+    fn max_fill_span(&self) -> u64 {
+        self.span_hwm
     }
 }
 

@@ -182,6 +182,31 @@ pub trait Scheme {
     fn kset(&self) -> Option<Vec<u32>> {
         None
     }
+
+    /// Upper bound (a power of two) on how far from an accessed page a
+    /// fill may plant coverage: every entry a fill for `vpn` creates is
+    /// contained in `run(vpn) ∪ aligned_block(vpn, max_fill_span())`.
+    /// The multicore presence filters mark that union per access, so an
+    /// under-reporting scheme would leak stale entries past filtered
+    /// shootdowns — schemes whose entry blocks can exceed the 2MB huge
+    /// region (Anchor with a large distance, K-Aligned with a large K)
+    /// must override this with a high-water mark over every block size
+    /// they have *ever* configured (epochs may shrink the current
+    /// configuration, but older wide entries can still be resident).
+    fn max_fill_span(&self) -> u64 {
+        HUGE_PAGES
+    }
+
+    /// OS-software-state synchronization after a mutation of `[vstart,
+    /// vstart + len)` in `asid`: schemes whose *fill path* consults an
+    /// OS-maintained structure (RMM's per-process range table) must
+    /// trim it here, because on cores that did not receive the TLB
+    /// shootdown (presence-filtered) the fill path would otherwise
+    /// resurrect stale ranges.  This models the OS updating its own
+    /// software tables — visible to every core immediately, no IPI, no
+    /// cycle charge.  Default: nothing (TLB-only schemes keep no such
+    /// state).
+    fn os_sync_range(&mut self, _asid: Asid, _vstart: Vpn, _len: u64) {}
 }
 
 /// Forwarding impl so `Box<S>` (including `Box<dyn Scheme>`) is itself
@@ -240,6 +265,14 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
 
     fn kset(&self) -> Option<Vec<u32>> {
         (**self).kset()
+    }
+
+    fn max_fill_span(&self) -> u64 {
+        (**self).max_fill_span()
+    }
+
+    fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        (**self).os_sync_range(asid, vstart, len)
     }
 }
 
@@ -325,6 +358,14 @@ impl Scheme for AnyScheme {
 
     fn kset(&self) -> Option<Vec<u32>> {
         on_scheme!(self, s => s.kset())
+    }
+
+    fn max_fill_span(&self) -> u64 {
+        on_scheme!(self, s => s.max_fill_span())
+    }
+
+    fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        on_scheme!(self, s => s.os_sync_range(asid, vstart, len))
     }
 }
 

@@ -246,6 +246,19 @@ impl Scheme for Rmm {
         let i = self.table_index(asid);
         self.tables[i].1 = os_table(view.mapping);
     }
+
+    /// RMM's fill path reads the per-process OS range table, so a
+    /// mutation must trim that table on *every* core — even ones whose
+    /// range TLB holds nothing in the range and receive no IPI — or a
+    /// presence-filtered core would re-insert a stale chunk on its
+    /// next miss.  This is OS software state (the table the paper's
+    /// OS maintains), so the sync is free: no IPI, no cycles.  It also
+    /// keeps every table chunk inside a live run, which is what lets
+    /// the presence filters bound RMM fills by the accessed page's
+    /// run.
+    fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        self.trim_table(asid, vstart, len);
+    }
 }
 
 #[cfg(test)]

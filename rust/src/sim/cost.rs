@@ -131,6 +131,17 @@ impl CostModel {
         self.ipi + self.flush_refill
     }
 
+    /// The body of a shootdown without the IPI initiation — what each
+    /// extra range costs inside a coalesced (batched) IPI, which pays
+    /// [`CostModel::ipi`] once for the whole batch.
+    #[inline]
+    pub fn shootdown_body(&self, outcome: InvalOutcome, pages: u64) -> u64 {
+        match outcome {
+            InvalOutcome::Ranged => self.inval_page.saturating_mul(pages),
+            InvalOutcome::Flushed => self.flush_refill,
+        }
+    }
+
     /// Cycles charged for the shootdown the scheme reported.
     #[inline]
     pub fn shootdown(&self, outcome: InvalOutcome, pages: u64) -> u64 {

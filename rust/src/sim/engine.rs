@@ -277,6 +277,25 @@ impl<S: Scheme> Engine<S> {
         }
     }
 
+    /// [`Engine::run_chunk`] for a multicore quantum: additionally
+    /// record every touched page in the core's presence `filter`
+    /// (conservatively, hit or miss — marking is monotone and sound
+    /// either way) so the shootdown bus can compute responder sets.
+    /// The mark spans the page's run plus the scheme's
+    /// [`Scheme::max_fill_span`] block, queried per access because an
+    /// epoch hook firing mid-chunk may widen it.
+    pub fn run_chunk_marked(
+        &mut self,
+        chunk: &[Vpn],
+        view: SpaceView<'_>,
+        filter: &mut super::multicore::PresenceFilter,
+    ) {
+        for &v in chunk {
+            filter.mark(self.asid, v, view.pt, self.scheme.max_fill_span());
+            self.access(v, view);
+        }
+    }
+
     /// TLB shootdown: clear the L1 and the scheme's L2 state.  Shard
     /// boundaries in the sharded coordinator have exactly these
     /// semantics (each shard's engine starts cold).  Charges no
@@ -297,8 +316,8 @@ impl<S: Scheme> Engine<S> {
     /// `invalidate_range`.  No resident state may translate a page of
     /// the range afterwards — the churn oracle tests assert this for
     /// every scheme.
-    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) {
-        self.invalidate_range_as(self.asid, vstart, len);
+    pub fn invalidate_range(&mut self, vstart: Vpn, len: u64) -> InvalOutcome {
+        self.invalidate_range_as(self.asid, vstart, len)
     }
 
     /// Cross-ASID shootdown (a remote core's munmap IPI): like
@@ -310,10 +329,12 @@ impl<S: Scheme> Engine<S> {
     /// ([`CostModel::prefers_flush`]); the engine mirrors the choice
     /// onto the L1 and charges the chosen path's cycles.  Under the
     /// zero-cost default the choice is always ranged, reproducing the
-    /// pre-cost pipeline exactly.
-    pub fn invalidate_range_as(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+    /// pre-cost pipeline exactly.  Returns the outcome so the
+    /// multicore shootdown bus can trim or clear the delivering core's
+    /// presence filter to match.
+    pub fn invalidate_range_as(&mut self, asid: Asid, vstart: Vpn, len: u64) -> InvalOutcome {
         if len == 0 {
-            return;
+            return InvalOutcome::Ranged;
         }
         let outcome = self.scheme.invalidate_range(asid, vstart, len, &self.cost);
         match outcome {
@@ -321,6 +342,44 @@ impl<S: Scheme> Engine<S> {
             InvalOutcome::Flushed => self.l1.flush(),
         }
         self.metrics.record_invalidation(self.cost.shootdown(outcome, len));
+        outcome
+    }
+
+    /// Deliver one *coalesced* IPI carrying a batch of shootdown
+    /// ranges: the IPI initiation is charged once for the whole batch,
+    /// each range still counts as an invalidation and charges its body
+    /// ([`CostModel::shootdown_body`]).  Returns whether any range in
+    /// the batch ended in a whole-TLB flush (the bus clears the core's
+    /// presence filter instead of trimming per range).
+    pub fn invalidate_batch_as(&mut self, batch: &[(Asid, Vpn, u64)]) -> bool {
+        let live: Vec<_> = batch.iter().filter(|&&(_, _, l)| l > 0).collect();
+        if live.is_empty() {
+            return false;
+        }
+        self.metrics.record_ipi_charge(self.cost.ipi);
+        let mut any_flush = false;
+        for &&(asid, vstart, len) in &live {
+            let outcome = self.scheme.invalidate_range(asid, vstart, len, &self.cost);
+            match outcome {
+                InvalOutcome::Ranged => self.l1.invalidate_range(asid, vstart, len),
+                InvalOutcome::Flushed => {
+                    self.l1.flush();
+                    any_flush = true;
+                }
+            }
+            self.metrics.record_invalidation(self.cost.shootdown_body(outcome, len));
+        }
+        any_flush
+    }
+
+    /// OS-software-state synchronization after a mutation: schemes
+    /// whose fill path consults an OS-maintained table (RMM's range
+    /// table) trim it here.  Broadcast to cores that did *not* receive
+    /// the TLB shootdown — the OS table is software state every core
+    /// reads consistently, distinct from the per-core TLB hardware
+    /// state the IPI invalidates — and charges nothing.
+    pub fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        self.scheme.os_sync_range(asid, vstart, len);
     }
 
     #[inline]

@@ -183,6 +183,13 @@ impl Metrics {
         self.cycles_shootdown += cycles;
     }
 
+    /// Charge IPI-initiation cycles without counting an invalidation —
+    /// the once-per-batch charge of a coalesced shootdown (the ranges
+    /// inside it each count via [`Metrics::record_invalidation`]).
+    pub(crate) fn record_ipi_charge(&mut self, cycles: u64) {
+        self.cycles_shootdown += cycles;
+    }
+
     pub(crate) fn record_shootdown(&mut self) {
         self.shootdowns += 1;
     }

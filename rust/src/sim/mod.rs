@@ -9,10 +9,12 @@ pub mod cost;
 pub mod engine;
 pub mod latency;
 pub mod metrics;
+pub mod multicore;
 pub mod tenants;
 
 pub use cost::{CostModel, InvalOutcome};
 pub use engine::Engine;
 pub use latency::Latency;
 pub use metrics::Metrics;
+pub use multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
 pub use tenants::{SwitchEvent, TenantSchedule};

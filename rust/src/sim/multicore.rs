@@ -1,0 +1,451 @@
+//! The shootdown interconnect for true multi-core simulation: per-core
+//! TLB **presence filters** and the [`ShootdownBus`] that routes a
+//! mutation event's invalidation ranges as IPIs to exactly the cores
+//! whose filters admit they may hold stale entries for the range.
+//!
+//! ## Presence-filter soundness
+//!
+//! A filter is a conservative per-ASID interval set over VPNs: it may
+//! over-approximate (costing spurious IPIs) but must never
+//! under-approximate (a skipped IPI would leave a stale translating
+//! entry — the churn oracle's `verify` would panic).  The invariant
+//! maintained is
+//!
+//! > every resident L1/L2 entry's VA coverage is contained in the
+//! > core's filter intervals for that ASID.
+//!
+//! Two facts make a cheap cover possible.  First, every scheme's
+//! coalesced entries require PA contiguity, so a fill triggered by an
+//! access to `vpn` covers pages inside the maximal VA+PA-contiguous
+//! *run* containing the entry's base.  Second, every entry base is
+//! block-aligned relative to the accessed page: regular entries sit at
+//! `vpn` itself, huge entries at the 512-page block, COLT/Cluster
+//! groups at the 8-page block, anchor entries at the anchor-distance
+//! block, k-bit aligned entries at the `2^k` block — and their
+//! recorded contiguity never escapes that block.  RMM's ranges are the
+//! OS table's chunks, which are always contained in a live run of the
+//! accessed page (the table is trimmed on every mutation).  So
+//!
+//! > cover(vpn) = run(vpn) ∪ aligned_block(vpn, max_fill_span)
+//!
+//! is a sound mark, where [`crate::schemes::Scheme::max_fill_span`] is
+//! the scheme's high-water block size (≥ 512 for the huge-page L1
+//! lane).  Marks are computed against the pre-mutation page table —
+//! quanta run strictly between mutation events — and are subtracted
+//! again exactly when an invalidation for the range is delivered to
+//! the core (entries in the range are gone; entries outside keep their
+//! surviving intervals), or cleared wholesale when the delivery ended
+//! in a whole-TLB flush.
+//!
+//! ## IPI policies
+//!
+//! [`IpiPolicy::PerEvent`] delivers one IPI per (event, range, remote
+//! responder) — the serial pipeline's accounting, which is what keeps
+//! `cores = 1` bit-identical.  [`IpiPolicy::Coalesced`] batches all
+//! ranges of one quiesce point into a single IPI per responder core
+//! (initiation paid once, per-range bodies still charged), trading
+//! strictly fewer IPIs for the same final TLB state.
+
+use crate::pagetable::PageTable;
+use crate::{Asid, Vpn};
+use std::collections::BTreeMap;
+
+/// How the bus turns one quiesce point's invalidation ranges into
+/// IPIs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IpiPolicy {
+    /// One IPI per (event, range, responder) — serial-equivalent
+    /// accounting, the `cores = 1` bit-identity anchor.
+    PerEvent,
+    /// All ranges of a quiesce point merge into one IPI per responder
+    /// core: initiation charged once, per-range invalidation bodies
+    /// still charged.  Strictly fewer IPIs, identical final TLB state.
+    Coalesced,
+}
+
+/// The maximal VA+PA-contiguous run containing `vpn`: forward extent
+/// from the page table's incremental run lengths, backward extent by
+/// walking predecessors while they map to adjacent frames.  Returns
+/// `(start, len)`; an unmapped `vpn` is its own single-page "run"
+/// (nothing can have been filled from it, but the mark keeps the
+/// filter monotone).
+pub fn run_bounds(pt: &PageTable, vpn: Vpn) -> (Vpn, u64) {
+    let fwd = pt.run_len(vpn) as u64;
+    if fwd == 0 {
+        return (vpn, 1);
+    }
+    let mut start = vpn;
+    let mut ppn = pt.translate(vpn).expect("run_len > 0 implies mapped");
+    while start > 0 {
+        match pt.entry(start - 1) {
+            Some(e) if e.ppn + 1 == ppn => {
+                start -= 1;
+                ppn = e.ppn;
+            }
+            _ => break,
+        }
+    }
+    (start, (vpn - start) + fwd)
+}
+
+/// One core's conservative record of which (ASID, VPN-interval)s its
+/// TLBs may hold entries for.  Intervals are kept disjoint and sorted
+/// (merge-on-insert), so membership and overlap tests are
+/// `O(log n + k)`; a one-interval cache serves the hot mark path
+/// (consecutive accesses land in the same run).
+#[derive(Clone, Debug, Default)]
+pub struct PresenceFilter {
+    /// `(asid, start) -> end` (end exclusive); disjoint per ASID.
+    intervals: BTreeMap<(u16, Vpn), Vpn>,
+    /// last interval a mark landed in: `(asid, start, end)`
+    cache: Option<(u16, Vpn, Vpn)>,
+}
+
+impl PresenceFilter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of recorded intervals (diagnostics).
+    pub fn len(&self) -> usize {
+        self.intervals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.intervals.is_empty()
+    }
+
+    /// Does the filter already cover `vpn` for `asid`?
+    fn covers(&self, asid: u16, vpn: Vpn) -> bool {
+        if let Some((a, s, e)) = self.cache {
+            if a == asid && s <= vpn && vpn < e {
+                return true;
+            }
+        }
+        match self.intervals.range((asid, 0)..=(asid, vpn)).next_back() {
+            Some((&(_, _s), &e)) => vpn < e,
+            None => false,
+        }
+    }
+
+    /// Record that an access to `vpn` under `asid` may have filled
+    /// entries covering `run(vpn) ∪ aligned_block(vpn, span)`.  `span`
+    /// is the scheme's [`crate::schemes::Scheme::max_fill_span`]
+    /// (power of two).
+    pub fn mark(&mut self, asid: Asid, vpn: Vpn, pt: &PageTable, span: u64) {
+        let a = asid.0;
+        if self.covers(a, vpn) {
+            // refresh the cache from the covering interval
+            if self.cache.map_or(true, |(ca, s, e)| ca != a || vpn < s || vpn >= e) {
+                if let Some((&(_, s), &e)) = self.intervals.range((a, 0)..=(a, vpn)).next_back() {
+                    self.cache = Some((a, s, e));
+                }
+            }
+            return;
+        }
+        let span = span.max(1).next_power_of_two();
+        let (r0, rl) = run_bounds(pt, vpn);
+        let b0 = vpn & !(span - 1);
+        let start = r0.min(b0);
+        let end = (r0 + rl).max(b0.saturating_add(span));
+        self.insert(a, start, end);
+        self.cache = Some((a, start, end));
+    }
+
+    /// Insert `[start, end)` for `asid`, merging any overlapping or
+    /// adjacent intervals so the set stays disjoint.
+    fn insert(&mut self, asid: u16, mut start: Vpn, mut end: Vpn) {
+        // absorb a predecessor that reaches into (or touches) us
+        if let Some((&(_, ps), &pe)) = self.intervals.range((asid, 0)..=(asid, start)).next_back()
+        {
+            if pe >= start {
+                start = ps;
+                end = end.max(pe);
+                self.intervals.remove(&(asid, ps));
+            }
+        }
+        // absorb successors we reach into (or touch)
+        loop {
+            let Some((&(_, ns), &ne)) =
+                self.intervals.range((asid, start)..=(asid, end)).next()
+            else {
+                break;
+            };
+            end = end.max(ne);
+            self.intervals.remove(&(asid, ns));
+        }
+        self.intervals.insert((asid, start), end);
+    }
+
+    /// Could the core hold entries of `asid` translating any page of
+    /// `[vstart, vstart + len)`?
+    pub fn intersects(&self, asid: Asid, vstart: Vpn, len: u64) -> bool {
+        if len == 0 {
+            return false;
+        }
+        let a = asid.0;
+        let vend = vstart.saturating_add(len);
+        if let Some((&(_, _s), &e)) = self.intervals.range((a, 0)..=(a, vstart)).next_back() {
+            if e > vstart {
+                return true;
+            }
+        }
+        self.intervals.range((a, vstart)..(a, vend)).next().is_some()
+    }
+
+    /// An invalidation of `[vstart, vstart + len)` was delivered:
+    /// entries of `asid` in the range are gone, so subtract it from
+    /// the interval set (splitting partial overlaps — coverage outside
+    /// the range survives the ranged shootdown).
+    pub fn subtract(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let a = asid.0;
+        let vend = vstart.saturating_add(len);
+        self.cache = None;
+        // predecessor straddling the start
+        if let Some((&(_, ps), &pe)) = self.intervals.range((a, 0)..(a, vstart)).next_back() {
+            if pe > vstart {
+                self.intervals.insert((a, ps), vstart);
+                if pe > vend {
+                    self.intervals.insert((a, vend), pe);
+                    return;
+                }
+            }
+        }
+        // intervals starting inside the range
+        let inside: Vec<(Vpn, Vpn)> = self
+            .intervals
+            .range((a, vstart)..(a, vend))
+            .map(|(&(_, s), &e)| (s, e))
+            .collect();
+        for (s, e) in inside {
+            self.intervals.remove(&(a, s));
+            if e > vend {
+                self.intervals.insert((a, vend), e);
+            }
+        }
+    }
+
+    /// The delivery ended in a whole-TLB flush: every tenant's entries
+    /// are gone.
+    pub fn clear(&mut self) {
+        self.intervals.clear();
+        self.cache = None;
+    }
+}
+
+/// Interconnect accounting for one multicore cell.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BusStats {
+    /// shootdown units routed: ranges under [`IpiPolicy::PerEvent`],
+    /// quiesce-point batches under [`IpiPolicy::Coalesced`]
+    pub units: u64,
+    /// remote IPI deliveries charged (per unit × responder)
+    pub ipis: u64,
+    /// initiator-local invalidations (not IPIs: the initiating core
+    /// invalidates its own TLB as part of the mutation)
+    pub local_deliveries: u64,
+    /// (core, range) deliveries skipped because the presence filter
+    /// proved the core holds nothing in the range
+    pub filtered: u64,
+    /// `fanout[k]` = units delivered to `k` remote responders
+    pub fanout: Vec<u64>,
+}
+
+impl BusStats {
+    pub fn new(ncores: usize) -> Self {
+        BusStats { fanout: vec![0; ncores.max(1)], ..Default::default() }
+    }
+
+    /// Mean remote fan-out per routed unit.
+    pub fn mean_fanout(&self) -> f64 {
+        if self.units == 0 {
+            return 0.0;
+        }
+        self.ipis as f64 / self.units as f64
+    }
+
+    /// Largest remote responder set any unit saw.
+    pub fn max_fanout(&self) -> usize {
+        self.fanout.iter().rposition(|&n| n > 0).unwrap_or(0)
+    }
+
+    pub(crate) fn record_unit(&mut self, remote_responders: usize) {
+        self.units += 1;
+        self.ipis += remote_responders as u64;
+        let k = remote_responders.min(self.fanout.len().saturating_sub(1));
+        self.fanout[k] += 1;
+    }
+}
+
+/// The shootdown interconnect: routing policy + accounting.  The
+/// per-core presence filters live with the cores (they are written on
+/// the cores' own access paths during quanta); the bus reads them at
+/// quiesce points to compute responder sets.
+#[derive(Clone, Debug)]
+pub struct ShootdownBus {
+    pub policy: IpiPolicy,
+    pub stats: BusStats,
+}
+
+impl ShootdownBus {
+    pub fn new(ncores: usize, policy: IpiPolicy) -> Self {
+        ShootdownBus { policy, stats: BusStats::new(ncores) }
+    }
+
+    /// Remote responder set for one range: every core except the
+    /// initiator whose filter intersects it.  Records filtered skips.
+    pub fn responders(
+        &mut self,
+        initiator: usize,
+        asid: Asid,
+        vstart: Vpn,
+        len: u64,
+        filters: &[PresenceFilter],
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (c, f) in filters.iter().enumerate() {
+            if c == initiator {
+                continue;
+            }
+            if f.intersects(asid, vstart, len) {
+                out.push(c);
+            } else {
+                self.stats.filtered += 1;
+            }
+        }
+        out
+    }
+
+    /// Account one routed unit (a range under per-event, a quiesce
+    /// batch under coalesced) delivered to `remote` responders.
+    pub fn record_unit(&mut self, remote: usize) {
+        self.stats.record_unit(remote);
+    }
+
+    /// Account the initiator's own local invalidation.
+    pub fn record_local(&mut self) {
+        self.stats.local_deliveries += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
+
+    fn pt_with_runs(sizes: &[u64]) -> PageTable {
+        let mut pages = Vec::new();
+        let (mut v, mut p) = (0u64, 0u64);
+        for &s in sizes {
+            p += 7; // break PA contiguity between chunks
+            for j in 0..s {
+                pages.push((v + j, p + j));
+            }
+            v += s;
+            p += s;
+        }
+        PageTable::from_mapping(&MemoryMapping::new(pages))
+    }
+
+    #[test]
+    fn run_bounds_find_full_run_from_any_page() {
+        let pt = pt_with_runs(&[16, 8, 32]);
+        for v in 0..16u64 {
+            assert_eq!(run_bounds(&pt, v), (0, 16), "vpn {v}");
+        }
+        for v in 16..24u64 {
+            assert_eq!(run_bounds(&pt, v), (16, 8), "vpn {v}");
+        }
+        assert_eq!(run_bounds(&pt, 55), (24, 32));
+        assert_eq!(run_bounds(&pt, 1000), (1000, 1), "unmapped is a singleton");
+    }
+
+    #[test]
+    fn mark_covers_run_and_block() {
+        let pt = pt_with_runs(&[16]);
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 5, &pt, 8);
+        // run [0,16) ∪ block [0,8) = [0,16)
+        assert!(f.intersects(A0, 0, 1));
+        assert!(f.intersects(A0, 15, 1));
+        assert!(!f.intersects(A0, 16, 4));
+        // a larger span widens the mark past the run
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 5, &pt, 512);
+        assert!(f.intersects(A0, 100, 1), "512-block cover");
+        assert!(!f.intersects(A0, 512, 1));
+    }
+
+    #[test]
+    fn marks_merge_and_cache_hits() {
+        let pt = pt_with_runs(&[64]);
+        let mut f = PresenceFilter::new();
+        for v in 0..64u64 {
+            f.mark(A0, v, &pt, 1);
+        }
+        assert_eq!(f.len(), 1, "one merged interval, not 64");
+        assert!(f.intersects(A0, 0, 64));
+    }
+
+    #[test]
+    fn subtract_splits_and_clear_empties() {
+        let pt = pt_with_runs(&[64]);
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 10, &pt, 1); // [0, 64)
+        f.subtract(A0, 20, 10);
+        assert!(f.intersects(A0, 19, 1));
+        assert!(!f.intersects(A0, 20, 10));
+        assert!(f.intersects(A0, 30, 1));
+        assert_eq!(f.len(), 2, "split into two surviving intervals");
+        f.clear();
+        assert!(f.is_empty());
+        assert!(!f.intersects(A0, 0, 64));
+    }
+
+    #[test]
+    fn asids_are_isolated() {
+        let pt = pt_with_runs(&[32]);
+        let mut f = PresenceFilter::new();
+        f.mark(Asid(1), 4, &pt, 1);
+        assert!(f.intersects(Asid(1), 0, 32));
+        assert!(!f.intersects(Asid(0), 0, 32));
+        assert!(!f.intersects(Asid(2), 0, 32));
+        f.subtract(Asid(1), 0, 32);
+        assert!(!f.intersects(Asid(1), 0, 32));
+    }
+
+    #[test]
+    fn bus_routes_only_to_presence() {
+        let pt = pt_with_runs(&[32, 32]);
+        let mut filters = vec![PresenceFilter::new(), PresenceFilter::new(), PresenceFilter::new()];
+        filters[1].mark(A0, 4, &pt, 1); // run [0, 32)
+        filters[2].mark(A0, 40, &pt, 1); // run [32, 64)
+        let mut bus = ShootdownBus::new(3, IpiPolicy::PerEvent);
+        let r = bus.responders(0, A0, 0, 32, &filters);
+        assert_eq!(r, vec![1], "only core 1 holds [0,32) state");
+        assert_eq!(bus.stats.filtered, 1, "core 2 was filtered");
+        bus.record_unit(r.len());
+        bus.record_local();
+        assert_eq!(bus.stats.ipis, 1);
+        assert_eq!(bus.stats.local_deliveries, 1);
+        assert_eq!(bus.stats.fanout, vec![0, 1, 0]);
+        assert_eq!(bus.stats.max_fanout(), 1);
+    }
+
+    #[test]
+    fn fanout_histogram_saturates() {
+        let mut s = BusStats::new(2);
+        s.record_unit(0);
+        s.record_unit(1);
+        s.record_unit(5); // beyond the histogram: saturates into the top bucket
+        assert_eq!(s.fanout, vec![1, 2]);
+        assert_eq!(s.units, 3);
+        assert_eq!(s.ipis, 6);
+        assert!((s.mean_fanout() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,249 @@
+//! Multi-core subsystem properties: `cores = 1` is bit-identical to
+//! the serial pipeline (churn, frozen, and tenant paths — the
+//! subsystem's oracle), N-core runs are deterministic across OS thread
+//! schedules, every scheme survives the stale-PPN oracle with filtered
+//! IPI delivery, and the coalesced IPI policy charges strictly fewer
+//! IPIs than per-event routing while reaching the identical miss
+//! state.
+
+use katlb::coordinator::{
+    run_cell, run_multicore_cell, run_multicore_tenant_cell, run_tenant_cell, BenchContext,
+    Config, McParams, SchemeKind, TenantMixCtx,
+};
+use katlb::mem::addrspace::{MutationEvent, MutationOp, MutationSchedule};
+use katlb::sim::{CostModel, IpiPolicy};
+use katlb::workloads::{benchmark, tenant_mixes};
+use std::sync::Arc;
+
+/// All seven contenders, as the churn experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+fn cfg() -> Config {
+    Config {
+        trace_len: 1 << 14,
+        epoch: 1 << 12,
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 12),
+        chunk_len: 1 << 11,
+        ..Config::default()
+    }
+}
+
+/// A churn schedule with a multi-event quiesce group at `l/2` (the
+/// coalescing test needs several ranges batched at one timestamp) plus
+/// spread-out single events.
+fn mc_schedule(l: u64) -> MutationSchedule {
+    MutationSchedule::new(vec![
+        MutationEvent::new(l / 4, MutationOp::Remap { selector: 2 }),
+        MutationEvent::phase(l / 2, MutationOp::Munmap { selector: 1 }),
+        MutationEvent::new(l / 2, MutationOp::Munmap { selector: 3 }),
+        MutationEvent::new(l / 2, MutationOp::Mmap { pages: 128 }),
+        MutationEvent::new(5 * l / 8 + 1, MutationOp::Remap { selector: 7 }),
+        MutationEvent::new(3 * l / 4, MutationOp::ThpPromote),
+    ])
+}
+
+fn churn_ctx(name: &str) -> Arc<BenchContext> {
+    let cfg = cfg();
+    let mut ctx = BenchContext::build(benchmark(name).unwrap(), &cfg, None).unwrap();
+    ctx.schedule = mc_schedule(ctx.trace.len);
+    Arc::new(ctx)
+}
+
+/// THE oracle: one core through the multicore runner is bit-identical
+/// to the serial churn pipeline for every scheme — same stream, same
+/// event interleave, same invalidation accounting.
+#[test]
+fn one_core_is_bit_identical_to_serial_under_churn() {
+    let ctx = churn_ctx("gromacs");
+    for kind in seven() {
+        let serial = run_cell(&ctx, kind);
+        let mc = run_multicore_cell(&ctx, kind, &McParams::new(1));
+        assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
+        assert_eq!(mc.per_core.len(), 1);
+        assert_eq!(mc.bus.ipis, 0, "{}: one core has no remote responders", kind.label());
+        assert!(mc.bus.local_deliveries > 0, "{}", kind.label());
+    }
+}
+
+/// Bit-identity also holds under the realistic cost model, where the
+/// cost-aware invalidation path may prefer whole-TLB flushes.
+#[test]
+fn one_core_matches_serial_under_realistic_costs() {
+    let mut c = cfg();
+    c.cost = CostModel::realistic();
+    let mut ctx = BenchContext::build(benchmark("astar").unwrap(), &c, None).unwrap();
+    ctx.schedule = mc_schedule(ctx.trace.len);
+    let ctx = Arc::new(ctx);
+    for kind in [SchemeKind::Rmm, SchemeKind::KAligned(2)] {
+        let serial = run_cell(&ctx, kind);
+        let mc = run_multicore_cell(&ctx, kind, &McParams::new(1));
+        assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
+    }
+}
+
+/// With an empty mutation schedule, one multicore core reproduces the
+/// frozen-mapping fast path bit-for-bit (wrap == clamp because every
+/// trace index addresses a mapped page).
+#[test]
+fn one_core_matches_the_frozen_fast_path() {
+    let c = cfg();
+    let ctx = Arc::new(BenchContext::build(benchmark("hmmer").unwrap(), &c, None).unwrap());
+    for kind in [SchemeKind::Base, SchemeKind::Colt, SchemeKind::KAligned(2)] {
+        let serial = run_cell(&ctx, kind);
+        let mc = run_multicore_cell(&ctx, kind, &McParams::new(1));
+        assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
+        assert_eq!(mc.bus.units, 0, "no events, no bus traffic");
+    }
+}
+
+/// The deterministic-interleave property: the simulation outcome —
+/// merged metrics, per-core metrics, and bus accounting — is a pure
+/// function of (context, scheme, cores, policy), independent of how
+/// many OS threads band the quanta and stable across repeated runs.
+#[test]
+fn n_core_runs_are_deterministic_across_thread_schedules() {
+    let ctx = churn_ctx("sjeng");
+    for kind in [SchemeKind::Cluster, SchemeKind::KAligned(2)] {
+        let mut runs = Vec::new();
+        for workers in [1usize, 3, 8] {
+            let p = McParams { cores: 4, policy: IpiPolicy::PerEvent, workers, verify: true };
+            runs.push(run_multicore_cell(&ctx, kind, &p));
+        }
+        // repeat one worker count: run-to-run stability
+        let p = McParams { cores: 4, policy: IpiPolicy::PerEvent, workers: 3, verify: true };
+        runs.push(run_multicore_cell(&ctx, kind, &p));
+        let r0 = &runs[0];
+        assert_eq!(r0.cell.metrics.accesses, ctx.trace.len, "{}", kind.label());
+        for r in &runs[1..] {
+            assert_eq!(r0.cell.metrics, r.cell.metrics, "{}", kind.label());
+            assert_eq!(r0.per_core, r.per_core, "{}", kind.label());
+            assert_eq!(r0.bus, r.bus, "{}", kind.label());
+        }
+    }
+}
+
+/// Every scheme survives the stale-PPN oracle at N > 1 with *filtered*
+/// IPI delivery: verification is on, so a skipped shootdown that left
+/// a stale translating entry on any core would panic.  The cores
+/// partition the global timeline exactly.
+#[test]
+fn every_scheme_survives_the_stale_oracle_at_four_cores() {
+    let ctx = churn_ctx("gromacs");
+    for kind in seven() {
+        let r = run_multicore_cell(&ctx, kind, &McParams::new(4));
+        assert_eq!(
+            r.cell.metrics.accesses,
+            ctx.trace.len,
+            "{}: cores partition the timeline",
+            kind.label()
+        );
+        assert_eq!(
+            r.per_core.iter().map(|m| m.accesses).sum::<u64>(),
+            ctx.trace.len,
+            "{}",
+            kind.label()
+        );
+        assert!(r.cell.metrics.walks > 0, "{}", kind.label());
+        assert!(r.cell.metrics.invalidations > 0, "{}", kind.label());
+        assert!(r.bus.units > 0, "{}: the schedule produces bus units", kind.label());
+        assert_eq!(r.bus.fanout.len(), 4, "{}", kind.label());
+    }
+}
+
+/// Policy comparison under the zero cost model (no flush preference,
+/// so both policies keep ranged precision): identical access/walk
+/// state per core, strictly fewer IPIs and units under coalescing.
+#[test]
+fn coalesced_ipis_are_strictly_fewer_with_identical_miss_state() {
+    let ctx = churn_ctx("astar");
+    for kind in [SchemeKind::Base, SchemeKind::Rmm, SchemeKind::KAligned(2)] {
+        let per = run_multicore_cell(
+            &ctx,
+            kind,
+            &McParams { cores: 4, policy: IpiPolicy::PerEvent, workers: 2, verify: true },
+        );
+        let coa = run_multicore_cell(
+            &ctx,
+            kind,
+            &McParams { cores: 4, policy: IpiPolicy::Coalesced, workers: 2, verify: true },
+        );
+        assert_eq!(per.cell.metrics.accesses, coa.cell.metrics.accesses, "{}", kind.label());
+        assert_eq!(
+            per.cell.metrics.walks,
+            coa.cell.metrics.walks,
+            "{}: final miss state must be policy-independent",
+            kind.label()
+        );
+        for (a, b) in per.per_core.iter().zip(&coa.per_core) {
+            assert_eq!(a.accesses, b.accesses, "{}", kind.label());
+            assert_eq!(a.walks, b.walks, "{}: per-core miss state must agree", kind.label());
+        }
+        assert!(per.bus.ipis > 0, "{}: the schedule must generate IPI traffic", kind.label());
+        assert!(
+            coa.bus.ipis < per.bus.ipis,
+            "{}: coalescing must charge strictly fewer IPIs ({} vs {})",
+            kind.label(),
+            coa.bus.ipis,
+            per.bus.ipis
+        );
+        assert!(coa.bus.units < per.bus.units, "{}", kind.label());
+    }
+}
+
+/// Tenant oracle: one core through the gang-scheduled tenant runner is
+/// bit-identical to the serial tenant cell.
+#[test]
+fn one_core_tenant_cell_matches_serial() {
+    let c = cfg();
+    let mixes = tenant_mixes();
+    let mix = Arc::new(TenantMixCtx::build(&mixes[0], &c, None).unwrap());
+    for kind in [SchemeKind::Base, SchemeKind::Rmm, SchemeKind::KAligned(2)] {
+        let serial = run_tenant_cell(&mix, kind);
+        let mc = run_multicore_tenant_cell(&mix, kind, &McParams::new(1));
+        assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
+    }
+}
+
+/// Gang scheduling: every core pays every switch (switches scale with
+/// N), accesses still partition the global timeline, ASID-tagged
+/// contenders never flush, and the outcome is worker-count
+/// independent.
+#[test]
+fn gang_scheduling_scales_switches_and_stays_deterministic() {
+    let c = cfg();
+    let mixes = tenant_mixes();
+    let mix = Arc::new(TenantMixCtx::build(&mixes[1], &c, None).unwrap());
+    let serial = run_tenant_cell(&mix, SchemeKind::KAligned(2));
+    let r = run_multicore_tenant_cell(&mix, SchemeKind::KAligned(2), &McParams::new(3));
+    assert_eq!(r.cell.metrics.accesses, mix.schedule.len());
+    assert_eq!(
+        r.cell.metrics.context_switches,
+        3 * serial.metrics.context_switches,
+        "every core delivers every switch"
+    );
+    assert_eq!(r.cell.metrics.switch_flushes, 0, "all contenders are ASID-tagged");
+    let a = run_multicore_tenant_cell(
+        &mix,
+        SchemeKind::Cluster,
+        &McParams { cores: 4, policy: IpiPolicy::PerEvent, workers: 1, verify: true },
+    );
+    let b = run_multicore_tenant_cell(
+        &mix,
+        SchemeKind::Cluster,
+        &McParams { cores: 4, policy: IpiPolicy::PerEvent, workers: 4, verify: true },
+    );
+    assert_eq!(a.cell.metrics, b.cell.metrics);
+    assert_eq!(a.per_core, b.per_core);
+}
