@@ -614,12 +614,12 @@ pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
 // ---------------------------------------------------------------------------
 
 /// The core counts a `repro cores` sweep reports — the 1/8/64/256
-/// scaling curve, unless the user pinned `--cores N`.
+/// scaling curve, unless the user pinned `--cores N` (any explicit
+/// value pins, including `--cores 1`).
 fn core_counts(cfg: &Config) -> Vec<usize> {
-    if cfg.cores > 1 {
-        vec![cfg.cores]
-    } else {
-        vec![1, 8, 64, 256]
+    match cfg.cores {
+        Some(n) => vec![n.max(1)],
+        None => vec![1, 8, 64, 256],
     }
 }
 
@@ -903,10 +903,20 @@ mod tests {
     }
 
     #[test]
+    fn core_counts_pin_on_any_explicit_value() {
+        let mut cfg = tiny();
+        assert_eq!(core_counts(&cfg), vec![1, 8, 64, 256], "unpinned runs the full curve");
+        cfg.cores = Some(1);
+        assert_eq!(core_counts(&cfg), vec![1], "an explicit --cores 1 pins");
+        cfg.cores = Some(64);
+        assert_eq!(core_counts(&cfg), vec![64]);
+    }
+
+    #[test]
     fn cores_tables_cover_batteries_and_parse() {
         let mut cfg = tiny();
         cfg.max_ws_pages = Some(1 << 13);
-        cfg.cores = 2; // pin the sweep to one cheap core count
+        cfg.cores = Some(2); // pin the sweep to one cheap core count
         let tables = cores(&cfg).unwrap();
         assert_eq!(tables.len(), 3 + 4, "three churn cycles + four tenant mixes");
         for t in &tables {
@@ -927,7 +937,7 @@ mod tests {
     #[test]
     fn bench_writes_machine_readable_json() {
         let mut cfg = tiny();
-        cfg.cores = 2;
+        cfg.cores = Some(2);
         let path = std::env::temp_dir().join("katlb_bench_test.json");
         let path = path.to_str().unwrap();
         let t = bench_to(&cfg, path).unwrap();

@@ -202,14 +202,17 @@ pub struct Config {
     /// pipeline; `repro cpi` swaps in [`CostModel::realistic`])
     pub cost: CostModel,
     /// simulated cores for multicore cells (`repro cores` / `repro
-    /// bench`); must be >= 1.  `cores` and `shards` are mutually
-    /// exclusive beyond 1: a shard splits one serial engine's timeline
-    /// into cold segments, while a multicore cell owns the whole
-    /// timeline with N warm engines — combining them has no physical
-    /// reading, so [`Config::validate`] rejects `cores > 1` with
-    /// `shards > 1`.  (Multicore quanta already parallelize over
-    /// `workers`.)
-    pub cores: usize,
+    /// bench`): `None` = not pinned (the sweeps run their default
+    /// 1/8/64/256 curve and every other command runs serially);
+    /// `Some(n)` = the user pinned `--cores n` (any explicit value
+    /// pins, including `--cores 1`) and must be >= 1.  `cores` and
+    /// `shards` are mutually exclusive beyond 1: a shard splits one
+    /// serial engine's timeline into cold segments, while a multicore
+    /// cell owns the whole timeline with N warm engines — combining
+    /// them has no physical reading, so [`Config::validate`] rejects
+    /// `cores > 1` with `shards > 1`.  (Multicore quanta already
+    /// parallelize over `workers`.)
+    pub cores: Option<usize>,
     /// route multicore shootdowns with [`crate::sim::IpiPolicy::Coalesced`]
     /// (batch all ranges of a quiesce point into one IPI per responder)
     /// instead of the serial-equivalent per-event policy
@@ -227,7 +230,7 @@ impl Default for Config {
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
             cost: CostModel::zero(),
-            cores: 1,
+            cores: None,
             coalesce_ipi: false,
         }
     }
@@ -244,7 +247,7 @@ impl Config {
             shards: 1,
             chunk_len: DEFAULT_CHUNK,
             cost: CostModel::zero(),
-            cores: 1,
+            cores: None,
             coalesce_ipi: false,
         }
     }
@@ -253,18 +256,20 @@ impl Config {
     /// runs: zero cores, and the `cores`/`shards` combination (see the
     /// `cores` field docs).
     pub fn validate(&self) -> Result<()> {
-        if self.cores == 0 {
+        if self.cores == Some(0) {
             bail!("--cores must be >= 1 (0 cores cannot run any accesses)");
         }
-        if self.cores > 1 && self.shards > 1 {
-            bail!(
-                "--cores {} cannot combine with --shards {}: shards split one serial \
-                 engine's timeline into cold segments, a multicore cell owns the whole \
-                 timeline with {} warm engines (use --workers for host parallelism)",
-                self.cores,
-                self.shards,
-                self.cores
-            );
+        if let Some(cores) = self.cores {
+            if cores > 1 && self.shards > 1 {
+                bail!(
+                    "--cores {} cannot combine with --shards {}: shards split one serial \
+                     engine's timeline into cold segments, a multicore cell owns the whole \
+                     timeline with {} warm engines (use --workers for host parallelism)",
+                    cores,
+                    self.shards,
+                    cores
+                );
+            }
         }
         Ok(())
     }
@@ -1049,14 +1054,16 @@ mod tests {
     fn validate_rejects_zero_cores_and_cores_with_shards() {
         let mut cfg = tiny_cfg();
         assert!(cfg.validate().is_ok(), "default composition is valid");
-        cfg.cores = 0;
+        cfg.cores = Some(0);
         assert!(cfg.validate().is_err(), "0 cores must be rejected");
-        cfg.cores = 4;
+        cfg.cores = Some(4);
         cfg.shards = 1;
         assert!(cfg.validate().is_ok(), "multicore with one shard is valid");
         cfg.shards = 2;
         assert!(cfg.validate().is_err(), "cores > 1 with shards > 1 must be rejected");
-        cfg.cores = 1;
+        cfg.cores = Some(1);
+        assert!(cfg.validate().is_ok(), "an explicitly pinned single core shards freely");
+        cfg.cores = None;
         assert!(cfg.validate().is_ok(), "serial engine shards freely");
     }
 

@@ -110,10 +110,11 @@ impl McParams {
         McParams { cores: cores.max(1), policy: IpiPolicy::PerEvent, workers: 0, verify: true }
     }
 
-    /// Derive from a [`Config`] (`cores`, `coalesce_ipi`, `workers`).
+    /// Derive from a [`Config`] (`cores`, `coalesce_ipi`, `workers`);
+    /// an unpinned `cores` runs one core.
     pub fn from_config(cfg: &Config) -> Self {
         McParams {
-            cores: cfg.cores.max(1),
+            cores: cfg.cores.unwrap_or(1).max(1),
             policy: if cfg.coalesce_ipi { IpiPolicy::Coalesced } else { IpiPolicy::PerEvent },
             workers: cfg.effective_workers(),
             verify: true,
@@ -301,9 +302,11 @@ fn route_group(
         IpiPolicy::Coalesced => {
             // initiator of the whole batch = the first event's; the
             // ordinal still advances per event so the rotation stays
-            // aligned with the per-event policy
+            // aligned with the per-event policy, and each range is
+            // tagged with *its* event's rotating core's ASID (not the
+            // batch-start core's) so coalescing never mis-tags
+            // invalidations if cores ever run different tenants
             let initiator = (*ordinal % n as u64) as usize;
-            let asid = cores[initiator].eng.current_asid();
             let mut ranges: Vec<(Asid, Vpn, u64)> = Vec::new();
             for ev in group {
                 if ev.phase_start {
@@ -311,6 +314,8 @@ fn route_group(
                         core.eng.metrics_mut().mark_phase();
                     }
                 }
+                let ev_core = (*ordinal % n as u64) as usize;
+                let asid = cores[ev_core].eng.current_asid();
                 *ordinal += 1;
                 for (v, l) in aspace.apply(&ev.op) {
                     if l > 0 {

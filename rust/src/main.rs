@@ -76,10 +76,11 @@ fn parse_args() -> Result<(String, Config)> {
                     .max(1)
             }
             "--cores" => {
-                cfg.cores = args
-                    .next()
-                    .ok_or_else(|| katlb::anyhow!("--cores needs a value"))?
-                    .parse()?
+                cfg.cores = Some(
+                    args.next()
+                        .ok_or_else(|| katlb::anyhow!("--cores needs a value"))?
+                        .parse()?,
+                )
             }
             "--coalesce-ipi" => cfg.coalesce_ipi = true,
             other => bail!("unknown flag {other}"),

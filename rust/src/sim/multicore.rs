@@ -37,6 +37,15 @@
 //! surviving intervals), or cleared wholesale when the delivery ended
 //! in a whole-TLB flush.
 //!
+//! Crucially the cover is recomputed on *every* mark and a recorded
+//! interval only short-circuits the insert when it contains the whole
+//! current cover: runs grow under `Mmap`/`Remap` events that emit no
+//! invalidation ranges, `max_fill_span` is a high-water mark that
+//! widens at epoch re-derivations, and `subtract` can shrink an
+//! interval whose range is later remapped — so "the interval covers
+//! the accessed page" is never by itself proof that it covers what
+//! this access may fill.
+//!
 //! ## IPI policies
 //!
 //! [`IpiPolicy::PerEvent`] delivers one IPI per (event, range, remote
@@ -65,27 +74,30 @@ pub enum IpiPolicy {
 
 /// The maximal VA+PA-contiguous run containing `vpn`: forward extent
 /// from the page table's incremental run lengths, backward extent by
-/// walking predecessors while they map to adjacent frames.  Returns
-/// `(start, len)`; an unmapped `vpn` is its own single-page "run"
-/// (nothing can have been filled from it, but the mark keeps the
-/// filter monotone).
+/// binary search over the same stored lengths.  `vpn - d` is in the
+/// run iff `run_len(vpn - d) == run_len(vpn) + d` — within the run
+/// the stored forward lengths count down by exactly one per page, and
+/// a run from any earlier page cannot cross this run's start (the
+/// page before the start is unmapped or maps a non-adjacent frame),
+/// so the predicate is monotone in `d` and the start is found in
+/// `O(log run)` lookups.  Returns `(start, len)`; an unmapped `vpn`
+/// is its own single-page "run" (nothing can have been filled from
+/// it, but the mark keeps the filter monotone).
 pub fn run_bounds(pt: &PageTable, vpn: Vpn) -> (Vpn, u64) {
     let fwd = pt.run_len(vpn) as u64;
     if fwd == 0 {
         return (vpn, 1);
     }
-    let mut start = vpn;
-    let mut ppn = pt.translate(vpn).expect("run_len > 0 implies mapped");
-    while start > 0 {
-        match pt.entry(start - 1) {
-            Some(e) if e.ppn + 1 == ppn => {
-                start -= 1;
-                ppn = e.ppn;
-            }
-            _ => break,
+    let (mut lo, mut hi) = (0u64, vpn);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if pt.run_len(vpn - mid) as u64 == fwd + mid {
+            lo = mid;
+        } else {
+            hi = mid - 1;
         }
     }
-    (start, (vpn - start) + fwd)
+    (vpn - lo, lo + fwd)
 }
 
 /// One core's conservative record of which (ASID, VPN-interval)s its
@@ -115,46 +127,50 @@ impl PresenceFilter {
         self.intervals.is_empty()
     }
 
-    /// Does the filter already cover `vpn` for `asid`?
-    fn covers(&self, asid: u16, vpn: Vpn) -> bool {
-        if let Some((a, s, e)) = self.cache {
-            if a == asid && s <= vpn && vpn < e {
-                return true;
-            }
-        }
-        match self.intervals.range((asid, 0)..=(asid, vpn)).next_back() {
-            Some((&(_, _s), &e)) => vpn < e,
-            None => false,
-        }
-    }
-
     /// Record that an access to `vpn` under `asid` may have filled
     /// entries covering `run(vpn) ∪ aligned_block(vpn, span)`.  `span`
     /// is the scheme's [`crate::schemes::Scheme::max_fill_span`]
     /// (power of two).
+    ///
+    /// The full current cover is computed on every mark — soundness
+    /// demands it: an interval recorded earlier can under-represent
+    /// today's cover (the run can grow via `Mmap`/`Remap` events that
+    /// emit no invalidation ranges, `span` is a high-water mark that
+    /// widens at epoch re-derivations, and `subtract` shrinks
+    /// intervals whose range may be remapped later), so "the interval
+    /// covers `vpn`" is *not* enough to skip the insert.  The
+    /// early-return fires only when a recorded interval contains the
+    /// whole cover; the one-interval cache keeps the hot same-run
+    /// case a pair of comparisons past the `O(log run)` bounds
+    /// computation.
     pub fn mark(&mut self, asid: Asid, vpn: Vpn, pt: &PageTable, span: u64) {
         let a = asid.0;
-        if self.covers(a, vpn) {
-            // refresh the cache from the covering interval
-            if self.cache.map_or(true, |(ca, s, e)| ca != a || vpn < s || vpn >= e) {
-                if let Some((&(_, s), &e)) = self.intervals.range((a, 0)..=(a, vpn)).next_back() {
-                    self.cache = Some((a, s, e));
-                }
-            }
-            return;
-        }
         let span = span.max(1).next_power_of_two();
         let (r0, rl) = run_bounds(pt, vpn);
         let b0 = vpn & !(span - 1);
         let start = r0.min(b0);
         let end = (r0 + rl).max(b0.saturating_add(span));
-        self.insert(a, start, end);
-        self.cache = Some((a, start, end));
+        if let Some((ca, s, e)) = self.cache {
+            if ca == a && s <= start && end <= e {
+                return;
+            }
+        }
+        // intervals are disjoint, so only the one starting at or
+        // before `start` can contain the cover
+        if let Some((&(_, s), &e)) = self.intervals.range((a, 0)..=(a, start)).next_back() {
+            if end <= e {
+                self.cache = Some((a, s, e));
+                return;
+            }
+        }
+        let merged = self.insert(a, start, end);
+        self.cache = Some((a, merged.0, merged.1));
     }
 
     /// Insert `[start, end)` for `asid`, merging any overlapping or
-    /// adjacent intervals so the set stays disjoint.
-    fn insert(&mut self, asid: u16, mut start: Vpn, mut end: Vpn) {
+    /// adjacent intervals so the set stays disjoint.  Returns the
+    /// final merged interval containing the insertion.
+    fn insert(&mut self, asid: u16, mut start: Vpn, mut end: Vpn) -> (Vpn, Vpn) {
         // absorb a predecessor that reaches into (or touches) us
         if let Some((&(_, ps), &pe)) = self.intervals.range((asid, 0)..=(asid, start)).next_back()
         {
@@ -175,6 +191,7 @@ impl PresenceFilter {
             self.intervals.remove(&(asid, ns));
         }
         self.intervals.insert((asid, start), end);
+        (start, end)
     }
 
     /// Could the core hold entries of `asid` translating any page of
@@ -366,6 +383,19 @@ mod tests {
     }
 
     #[test]
+    fn run_bounds_handle_runs_touching_vpn_zero_and_singletons() {
+        // a run starting at VPN 0 (backward search bounded by vpn)
+        let pt = pt_with_runs(&[8]);
+        assert_eq!(run_bounds(&pt, 0), (0, 8));
+        assert_eq!(run_bounds(&pt, 7), (0, 8));
+        // adjacent single-page runs must not absorb each other
+        let pt = pt_with_runs(&[1, 1, 1]);
+        for v in 0..3u64 {
+            assert_eq!(run_bounds(&pt, v), (v, 1), "vpn {v}");
+        }
+    }
+
+    #[test]
     fn mark_covers_run_and_block() {
         let pt = pt_with_runs(&[16]);
         let mut f = PresenceFilter::new();
@@ -379,6 +409,46 @@ mod tests {
         f.mark(A0, 5, &pt, 512);
         assert!(f.intersects(A0, 100, 1), "512-block cover");
         assert!(!f.intersects(A0, 512, 1));
+    }
+
+    #[test]
+    fn mark_rewidens_when_the_run_grows() {
+        // two runs with a PA break at 8: marking page 4 covers [0, 8)
+        let before = pt_with_runs(&[8, 8]);
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 4, &before, 1);
+        assert!(!f.intersects(A0, 8, 8), "second run not covered yet");
+        // a Remap fuses the runs without emitting invalidation ranges;
+        // a covered page must still re-widen the mark to the new run
+        let after = pt_with_runs(&[16]);
+        f.mark(A0, 4, &after, 1);
+        assert!(f.intersects(A0, 8, 8), "grown run must widen the filter");
+    }
+
+    #[test]
+    fn mark_rewidens_when_span_grows_mid_run() {
+        let pt = pt_with_runs(&[4]);
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 1, &pt, 4); // cover [0, 4)
+        assert!(!f.intersects(A0, 8, 1));
+        // an epoch re-derivation raised the scheme's high-water span
+        f.mark(A0, 1, &pt, 16); // cover widens to [0, 16)
+        assert!(f.intersects(A0, 8, 1), "widened span must widen the filter");
+        assert!(f.intersects(A0, 15, 1));
+    }
+
+    #[test]
+    fn mark_rewidens_after_subtract() {
+        let pt = pt_with_runs(&[16]);
+        let mut f = PresenceFilter::new();
+        f.mark(A0, 2, &pt, 1); // [0, 16)
+        f.subtract(A0, 8, 4); // a delivered shootdown: [0,8) ∪ [12,16)
+        assert!(!f.intersects(A0, 8, 4));
+        // the next access in the run can refill the whole run again;
+        // a still-covered page must not short-circuit the re-mark
+        f.mark(A0, 2, &pt, 1);
+        assert!(f.intersects(A0, 8, 4), "re-fill must restore full-run coverage");
+        assert_eq!(f.len(), 1, "merged back into one interval");
     }
 
     #[test]
