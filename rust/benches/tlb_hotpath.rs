@@ -164,4 +164,27 @@ fn main() {
         })
         .print(Some((N as u64, "acc")));
     }
+
+    // batched vs scalar reference loop — the hot-path A/B.  Epoch
+    // bookkeeping on with a period that does not divide the chunk, so
+    // the batched loop's sub-chunk splitting sits in the measured
+    // path; verify on/off isolates what the const-generic
+    // monomorphization removes from the per-access body.
+    println!();
+    println!("# batched vs reference chunk loop (epoch=3000, same 64K trace)");
+    for (label, reference, verify) in [
+        ("batched   verify=off", false, false),
+        ("reference verify=off", true, false),
+        ("batched   verify=on", false, true),
+        ("reference verify=on", true, true),
+    ] {
+        let mut eng =
+            Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4))).with_epoch(3000);
+        eng.verify = verify;
+        eng.reference = reference;
+        bench(&format!("engine [kaligned] {label}"), 3, 15, || {
+            eng.run_chunk(&vpns, view);
+        })
+        .print(Some((N as u64, "acc")));
+    }
 }

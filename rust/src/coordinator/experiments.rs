@@ -77,6 +77,7 @@ pub fn synthetic_context(
         epoch: cfg.epoch.max(1),
         schedule: MutationSchedule::default(),
         cost: cfg.cost,
+        engine: cfg.engine,
     }))
 }
 
@@ -725,8 +726,27 @@ pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
 }
 
 // ---------------------------------------------------------------------------
-// Bench: engine-throughput harness (machine-readable BENCH_6.json)
+// Bench: engine-throughput harness (machine-readable BENCH_7.json)
 // ---------------------------------------------------------------------------
+
+/// Everything `repro bench` produced: the throughput table, the delta
+/// table against the resolved baseline (when one was found), the rows
+/// that regressed by more than 20%, and the JSON path written.  The
+/// CLI decides whether `regressions` is fatal (`--gate`).
+pub struct BenchReport {
+    pub table: Table,
+    pub delta: Option<Table>,
+    pub regressions: Vec<String>,
+    pub path: String,
+}
+
+/// One parsed `BENCH_*.json`: which engine produced it and the
+/// per-(scheme, cores) accesses/sec rows.
+struct Baseline {
+    path: String,
+    engine: String,
+    rows: Vec<(String, u64, f64)>,
+}
 
 /// The `repro bench` harness: accesses/sec of every contender at each
 /// swept core count over one frozen demand context (no churn — the
@@ -734,13 +754,23 @@ pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
 /// like the production fast path).  The *work* is fully reproducible —
 /// seeds, partitioning and metrics are deterministic, and the JSON
 /// records them next to the wall-clock numbers so regressions in
-/// either are diffable.  Writes `BENCH_6.json` in the working
-/// directory and returns the human-readable table.
-pub fn bench(cfg: &Config) -> Result<Table> {
-    bench_to(cfg, "BENCH_6.json")
+/// either are diffable.  Writes `BENCH_7.json` in the working
+/// directory and diffs against `cfg.bench_baseline` (default: the
+/// highest-numbered non-placeholder `BENCH_*.json`, read *before* the
+/// output is overwritten — so a `--engine reference` run followed by
+/// a default run yields the batched-vs-reference A/B speedup).
+pub fn bench(cfg: &Config) -> Result<BenchReport> {
+    bench_to(cfg, "BENCH_7.json")
 }
 
-pub fn bench_to(cfg: &Config, path: &str) -> Result<Table> {
+pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
+    // resolve the baseline before the output file is (over)written;
+    // an explicit --baseline must parse, the default discovery is
+    // best-effort
+    let baseline = match &cfg.bench_baseline {
+        Some(p) => Some(load_baseline(p)?),
+        None => default_baseline().and_then(|p| load_baseline(&p).ok()),
+    };
     let mut cfg = cfg.clone();
     cfg.cost = CostModel::zero();
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
@@ -753,6 +783,7 @@ pub fn bench_to(cfg: &Config, path: &str) -> Result<Table> {
         &["accesses", "misses", "ms", "Macc/s"],
     );
     let mut entries: Vec<String> = Vec::new();
+    let mut current: Vec<(String, u64, f64)> = Vec::new();
     for k in churn_schemes() {
         for &n in &counts {
             let p = mc_params(&cfg, n, false);
@@ -780,19 +811,131 @@ pub fn bench_to(cfg: &Config, path: &str) -> Result<Table> {
                 secs * 1000.0,
                 aps
             ));
+            current.push((r.cell.scheme.clone(), n as u64, aps));
         }
     }
     let json = format!(
-        "{{\n  \"benchmark\": {:?},\n  \"trace_len\": {},\n  \"workers\": {},\n  \
-         \"results\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"benchmark\": {:?},\n  \"engine\": {:?},\n  \"trace_len\": {},\n  \
+         \"workers\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
         ctx.workload.name,
+        cfg.engine.label(),
         ctx.trace.len,
         cfg.effective_workers(),
         entries.join(",\n")
     );
     std::fs::write(path, json)
         .map_err(|e| crate::anyhow!("writing {path}: {e}"))?;
-    Ok(t)
+    let mut delta = None;
+    let mut regressions = Vec::new();
+    if let Some(b) = baseline {
+        let mut dt = Table::new(
+            &format!("Bench delta vs {} ({} engine baseline)", b.path, b.engine),
+            &["base Macc/s", "now Macc/s", "speedup"],
+        );
+        for (scheme, cores, now) in &current {
+            let Some((_, _, was)) =
+                b.rows.iter().find(|(s, c, _)| s == scheme && c == cores)
+            else {
+                continue;
+            };
+            let was = was.max(1.0);
+            dt.row(
+                &format!("{scheme} @{cores}c"),
+                vec![
+                    format!("{:.2}", was / 1e6),
+                    format!("{:.2}", now / 1e6),
+                    format!("{:.2}x", now / was),
+                ],
+            );
+            if *now < was * 0.8 {
+                regressions.push(format!(
+                    "{scheme} @{cores}c: {:.2} -> {:.2} Macc/s ({:.0}% of baseline)",
+                    was / 1e6,
+                    now / 1e6,
+                    100.0 * now / was
+                ));
+            }
+        }
+        if !dt.rows.is_empty() {
+            delta = Some(dt);
+        }
+    }
+    Ok(BenchReport { table: t, delta, regressions, path: path.to_string() })
+}
+
+/// The default diff target: the highest-numbered `BENCH_<n>.json` in
+/// the working directory that is not a committed placeholder.
+fn default_baseline() -> Option<String> {
+    let mut best: Option<(u64, String)> = None;
+    for e in std::fs::read_dir(".").ok()?.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let Some(num) =
+            name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        let Ok(n) = num.parse::<u64>() else { continue };
+        let Ok(body) = std::fs::read_to_string(&name) else { continue };
+        if body.contains("\"placeholder\": true") {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some((b, _)) => n > *b,
+        };
+        if better {
+            best = Some((n, name));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Parse one `BENCH_*.json` without a JSON dependency: the writer
+/// emits one result object per line, so per-row field extraction is a
+/// line scan.  Rejects committed placeholders — diffing wall-clock
+/// numbers against fabricated ones would only mislead.
+fn load_baseline(path: &str) -> Result<Baseline> {
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| crate::anyhow!("reading baseline {path}: {e}"))?;
+    if body.contains("\"placeholder\": true") {
+        bail!("baseline {path} is a placeholder — regenerate it with `repro bench`");
+    }
+    let engine = json_str_field(&body, "engine").unwrap_or_else(|| "unknown".into());
+    let mut rows = Vec::new();
+    for line in body.lines() {
+        if !line.contains("\"scheme\"") {
+            continue;
+        }
+        let (Some(s), Some(c), Some(a)) = (
+            json_str_field(line, "scheme"),
+            json_num_field(line, "cores"),
+            json_num_field(line, "accesses_per_sec"),
+        ) else {
+            continue;
+        };
+        rows.push((s, c as u64, a));
+    }
+    if rows.is_empty() {
+        bail!("baseline {path} holds no results");
+    }
+    Ok(Baseline { path: path.to_string(), engine, rows })
+}
+
+fn json_str_field(text: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let i = text.find(&pat)? + pat.len();
+    let rest = &text[i..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn json_num_field(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let i = text.find(&pat)? + pat.len();
+    let rest = &text[i..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 #[cfg(test)]
@@ -940,15 +1083,59 @@ mod tests {
         cfg.cores = Some(2);
         let path = std::env::temp_dir().join("katlb_bench_test.json");
         let path = path.to_str().unwrap();
-        let t = bench_to(&cfg, path).unwrap();
-        assert_eq!(t.rows.len(), 7, "seven schemes at one core count");
+        let r = bench_to(&cfg, path).unwrap();
+        assert_eq!(r.table.rows.len(), 7, "seven schemes at one core count");
+        assert_eq!(r.path, path);
         let json = std::fs::read_to_string(path).unwrap();
         std::fs::remove_file(path).ok();
         assert!(json.contains("\"accesses_per_sec\""));
+        assert!(json.contains("\"engine\": \"batched\""));
         assert!(json.contains("\"cores\": 2"));
         assert!(json.contains("\"trace_len\""));
         // deterministic work: every row reports the full trace
         assert!(json.contains(&format!("\"accesses\": {}", cfg.trace_len)));
+    }
+
+    #[test]
+    fn bench_diffs_against_explicit_baseline() {
+        let mut cfg = tiny();
+        cfg.cores = Some(2);
+        let p1 = std::env::temp_dir().join("katlb_bench_base.json");
+        let p2 = std::env::temp_dir().join("katlb_bench_head.json");
+        let (p1, p2) = (p1.to_str().unwrap().to_string(), p2.to_str().unwrap().to_string());
+        cfg.engine = crate::coordinator::EngineKind::Reference;
+        bench_to(&cfg, &p1).unwrap();
+        cfg.engine = crate::coordinator::EngineKind::Batched;
+        cfg.bench_baseline = Some(p1.clone());
+        let r = bench_to(&cfg, &p2).unwrap();
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        let d = r.delta.expect("delta table against the explicit baseline");
+        assert_eq!(d.rows.len(), 7, "every (scheme, cores) cell diffed");
+        assert!(d.title.contains("reference engine baseline"), "{}", d.title);
+        for (label, cells) in &d.rows {
+            assert!(cells[2].ends_with('x'), "{label}: speedup column renders as a ratio");
+        }
+    }
+
+    #[test]
+    fn bench_baseline_rejects_placeholders() {
+        let p = std::env::temp_dir().join("katlb_bench_placeholder.json");
+        std::fs::write(&p, "{\n  \"placeholder\": true,\n  \"results\": []\n}\n").unwrap();
+        let err = load_baseline(p.to_str().unwrap()).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(err.to_string().contains("placeholder"), "{err}");
+    }
+
+    #[test]
+    fn bench_json_line_parser_extracts_fields() {
+        let line = "    {\"scheme\": \"K-Aligned(4)\", \"cores\": 8, \"accesses\": 100, \
+                    \"misses\": 5, \"elapsed_ms\": 1.250, \"accesses_per_sec\": 80000}";
+        assert_eq!(json_str_field(line, "scheme").unwrap(), "K-Aligned(4)");
+        assert_eq!(json_num_field(line, "cores").unwrap(), 8.0);
+        assert_eq!(json_num_field(line, "accesses_per_sec").unwrap(), 80000.0);
+        assert_eq!(json_num_field(line, "elapsed_ms").unwrap(), 1.25);
+        assert!(json_num_field(line, "absent").is_none());
     }
 
     #[test]

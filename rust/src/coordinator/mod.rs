@@ -80,7 +80,9 @@ use crate::mem::histogram::ContigHistogram;
 use crate::mem::mapgen;
 use crate::mem::mapping::MemoryMapping;
 use crate::pagetable::PageTable;
-use crate::runtime::{NativeSource, Runtime, TraceSource, TraceStream, VpnRemap, XlaSource};
+use crate::runtime::{
+    NativeSource, PrefetchStream, Runtime, TraceSource, TraceStream, VpnRemap, XlaSource,
+};
 use crate::schemes::anchor::{Anchor, Mode};
 use crate::schemes::base::BaseL2;
 use crate::schemes::cluster::Cluster;
@@ -96,7 +98,7 @@ use crate::workloads::tracegen::TraceParams;
 use crate::workloads::Workload;
 use crate::{bail, Asid, Vpn};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 /// Scheme selector for a cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -176,6 +178,27 @@ impl SchemeKind {
 /// Default streaming chunk (matches the artifact BATCH).
 pub const DEFAULT_CHUNK: usize = 1 << 16;
 
+/// Hot-path selector: every cell runner threads this into its
+/// engines.  `Batched` is the chunk-preamble fast loop; `Reference`
+/// replays the scalar per-access loop (`repro bench --engine
+/// reference`), kept so throughput deltas are measurable in-repo and
+/// the differential suite has a live oracle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    #[default]
+    Batched,
+    Reference,
+}
+
+impl EngineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Batched => "batched",
+            EngineKind::Reference => "reference",
+        }
+    }
+}
+
 /// Global run configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -217,6 +240,17 @@ pub struct Config {
     /// (batch all ranges of a quiesce point into one IPI per responder)
     /// instead of the serial-equivalent per-event policy
     pub coalesce_ipi: bool,
+    /// hot-path selector for every cell's engines (`--engine
+    /// batched|reference`); the two are bit-identical, `Reference`
+    /// exists for throughput A/B runs
+    pub engine: EngineKind,
+    /// `repro bench` only: baseline `BENCH_*.json` to diff against
+    /// (`--baseline PATH`; `None` = newest committed, skipping
+    /// placeholders)
+    pub bench_baseline: Option<String>,
+    /// `repro bench` only: exit non-zero when any scheme × cores cell
+    /// regresses >20% in accesses/sec vs the baseline (`--gate`)
+    pub bench_gate: bool,
 }
 
 impl Default for Config {
@@ -232,6 +266,9 @@ impl Default for Config {
             cost: CostModel::zero(),
             cores: None,
             coalesce_ipi: false,
+            engine: EngineKind::Batched,
+            bench_baseline: None,
+            bench_gate: false,
         }
     }
 }
@@ -249,6 +286,9 @@ impl Config {
             cost: CostModel::zero(),
             cores: None,
             coalesce_ipi: false,
+            engine: EngineKind::Batched,
+            bench_baseline: None,
+            bench_gate: false,
         }
     }
 
@@ -274,12 +314,23 @@ impl Config {
         Ok(())
     }
 
+    /// Worker-thread count: an explicit `--workers` value, else the
+    /// host's available parallelism.  The probe is a syscall on most
+    /// platforms and the value cannot change within a run, so it is
+    /// queried once per process and cached.
     pub fn effective_workers(&self) -> usize {
         if self.workers > 0 {
             return self.workers;
         }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        host_parallelism()
     }
+}
+
+/// Cached `std::thread::available_parallelism` (also the pool-sizing
+/// input for [`multicore::band_workers`]).
+pub(crate) fn host_parallelism() -> usize {
+    static AVAIL: OnceLock<usize> = OnceLock::new();
+    *AVAIL.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
 }
 
 /// The streaming recipe for one benchmark's trace: both backends are
@@ -358,6 +409,9 @@ pub struct BenchContext {
     /// translation cost model for this benchmark's engines (from
     /// [`Config::cost`])
     pub cost: CostModel,
+    /// hot-path selector for this benchmark's engines (from
+    /// [`Config::engine`])
+    pub engine: EngineKind,
 }
 
 impl BenchContext {
@@ -406,6 +460,7 @@ impl BenchContext {
             epoch: cfg.epoch.max(1),
             schedule: MutationSchedule::default(),
             cost: cfg.cost,
+            engine: cfg.engine,
         })
     }
 
@@ -436,7 +491,13 @@ impl BenchContext {
     }
 
     /// Stream the remapped trace range `[start, end)` chunk by chunk
-    /// into `f`.  Peak memory: one chunk.
+    /// into `f`.  Peak memory: one chunk (two when prefetching).
+    ///
+    /// Spans of at least two chunks stream through a
+    /// [`PrefetchStream`], overlapping synthesis of chunk `i+1` with
+    /// the simulation of chunk `i` on a background thread; shorter
+    /// spans have nothing to overlap and skip the thread spawn.  Both
+    /// paths yield bit-identical chunks (pinned by a stream test).
     pub fn for_each_chunk(
         &self,
         start: u64,
@@ -444,11 +505,19 @@ impl BenchContext {
         mut f: impl FnMut(&[Vpn]),
     ) -> Result<()> {
         let src = NativeSource::new(self.trace.seed, self.trace.params, self.trace.chunk);
-        let mut stream = TraceStream::new(src, start, end);
         let remap = VpnRemap::new(&self.mapping)?;
-        while let Some(chunk) = stream.next_chunk()? {
-            remap.apply(chunk);
-            f(chunk);
+        if end.saturating_sub(start) >= 2 * self.trace.chunk as u64 {
+            let mut stream = PrefetchStream::spawn(src, start, end);
+            while let Some(chunk) = stream.next_chunk()? {
+                remap.apply(chunk);
+                f(chunk);
+            }
+        } else {
+            let mut stream = TraceStream::new(src, start, end);
+            while let Some(chunk) = stream.next_chunk()? {
+                remap.apply(chunk);
+                f(chunk);
+            }
         }
         Ok(())
     }
@@ -568,6 +637,7 @@ pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> Cel
     let scheme = kind.build(mapping, hist);
     let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = false; // correctness is covered by tests; keep sims fast
+    eng.reference = ctx.engine == EngineKind::Reference;
     let (start, end) = shard.bounds(ctx.trace.len);
     ctx.for_each_chunk(start, end, |chunk| eng.run_chunk(chunk, view))
         .expect("trace stream (mapping validated at context build)");
@@ -600,6 +670,7 @@ fn run_churn_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> C
     let scheme = kind.build(aspace.mapping(), aspace.hist());
     let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = true;
+    eng.reference = ctx.engine == EngineKind::Reference;
     drive_span(ctx, &mut aspace, &mut eng, start, end)
         .expect("trace stream (mapping validated at context build)");
     let (metrics, scheme) = eng.finish();
@@ -687,6 +758,9 @@ pub struct TenantMixCtx {
     /// translation cost model for the mix's engines (from
     /// [`Config::cost`])
     pub cost: CostModel,
+    /// hot-path selector for the mix's engines (from
+    /// [`Config::engine`])
+    pub engine: EngineKind,
 }
 
 impl TenantMixCtx {
@@ -712,6 +786,7 @@ impl TenantMixCtx {
             schedule,
             epoch: cfg.epoch.max(1),
             cost: cfg.cost,
+            engine: cfg.engine,
         })
     }
 
@@ -721,12 +796,14 @@ impl TenantMixCtx {
         let len = ctx.trace.len;
         let epoch = ctx.epoch;
         let cost = ctx.cost;
+        let engine = ctx.engine;
         TenantMixCtx {
             name: ctx.workload.name.to_string(),
             tenants: vec![ctx],
             schedule: TenantSchedule::single(len),
             epoch,
             cost,
+            engine,
         }
     }
 
@@ -825,6 +902,7 @@ pub fn run_tenant_cell_shard(mix: &TenantMixCtx, kind: SchemeKind, shard: Shard)
     let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
     let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
     eng.verify = true;
+    eng.reference = mix.engine == EngineKind::Reference;
     for (t, space) in spaces.iter().enumerate().skip(1) {
         eng.register_tenant(Asid::from_index(t), space.view());
     }
@@ -872,32 +950,129 @@ pub(crate) fn merge_predictor(a: Option<(u64, u64)>, b: Option<(u64, u64)>) -> O
     }
 }
 
-/// Fan tasks out over a worker pool (scoped std threads; results come
-/// back in submission order).  Generic over the task type so the
-/// single-space and tenant shard runners share one pool.
-fn run_shard_tasks<T: Sync>(
+/// A persistent worker pool shared by every battery of one `repro`
+/// invocation.  Threads are spawned lazily, grow-only (up to the
+/// largest width any fan-out requests), and park on a job channel
+/// between batteries — so the per-call `thread::scope` spawn cost is
+/// gone from the fan-out path, and a `repro all` run reuses one set of
+/// workers across all its tables.  Workers live for the process (the
+/// sender side sits in a `static`); the OS reaps them at exit.
+struct WorkerPool {
+    tx: Mutex<mpsc::Sender<PoolJob>>,
+    rx: Arc<Mutex<mpsc::Receiver<PoolJob>>>,
+    spawned: Mutex<usize>,
+}
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let (tx, rx) = mpsc::channel::<PoolJob>();
+            WorkerPool { tx: Mutex::new(tx), rx: Arc::new(Mutex::new(rx)), spawned: Mutex::new(0) }
+        })
+    }
+
+    /// Grow the pool to at least `n` threads.
+    fn ensure_workers(&self, n: usize) {
+        let mut spawned = self.spawned.lock().unwrap();
+        while *spawned < n {
+            let rx = Arc::clone(&self.rx);
+            std::thread::Builder::new()
+                .name(format!("katlb-pool-{}", *spawned))
+                .spawn(move || loop {
+                    // hold the receiver lock only while dequeuing
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawn pool worker");
+            *spawned += 1;
+        }
+    }
+
+    fn submit(&self, job: PoolJob) {
+        self.tx.lock().unwrap().send(job).expect("worker pool channel is process-lived");
+    }
+}
+
+/// One fan-out batch on the shared pool: tasks claimed by atomic
+/// cursor, results indexed by task (so ordering is deterministic),
+/// completion signalled when every puller job has drained the cursor.
+struct ShardBatch<T> {
+    tasks: Vec<T>,
+    next: AtomicUsize,
+    results: Vec<Mutex<Option<std::thread::Result<CellResult>>>>,
+    /// puller jobs still running (completion condvar guard)
+    live: Mutex<usize>,
+    done: Condvar,
+}
+
+/// Fan tasks out over the persistent worker pool (results come back in
+/// submission order).  Generic over the task type so the single-space
+/// and tenant shard runners share one pool.  A task panic (e.g. a
+/// verification failure in a churn oracle) is captured and re-raised
+/// on the submitting thread, matching the old scoped-thread semantics.
+fn run_shard_tasks<T: Send + Sync + 'static>(
     tasks: Vec<T>,
     workers: usize,
-    run: impl Fn(&T) -> CellResult + Sync,
+    run: impl Fn(&T) -> CellResult + Send + Sync + 'static,
 ) -> Vec<CellResult> {
     let n = tasks.len();
-    let next = AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<CellResult>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    let nw = workers.max(1).min(n.max(1));
-    std::thread::scope(|s| {
-        for _ in 0..nw {
-            let (tasks, next, results, run) = (&tasks, &next, &results, &run);
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
+    if n == 0 {
+        return Vec::new();
+    }
+    let nw = workers.max(1).min(n);
+    if nw == 1 {
+        // serial path: no pool round-trip
+        return tasks.iter().map(run).collect();
+    }
+    let batch = Arc::new(ShardBatch {
+        tasks,
+        next: AtomicUsize::new(0),
+        results: (0..n).map(|_| Mutex::new(None)).collect(),
+        live: Mutex::new(nw),
+        done: Condvar::new(),
+    });
+    let run = Arc::new(run);
+    let pool = WorkerPool::global();
+    pool.ensure_workers(nw);
+    for _ in 0..nw {
+        let batch = Arc::clone(&batch);
+        let run = Arc::clone(&run);
+        pool.submit(Box::new(move || {
+            loop {
+                let i = batch.next.fetch_add(1, Ordering::Relaxed);
+                if i >= batch.tasks.len() {
                     break;
                 }
-                *results[i].lock().unwrap() = Some(run(&tasks[i]));
-            });
-        }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().expect("cell completed")).collect()
+                let out =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&batch.tasks[i])));
+                *batch.results[i].lock().unwrap() = Some(out);
+            }
+            let mut live = batch.live.lock().unwrap();
+            *live -= 1;
+            if *live == 0 {
+                batch.done.notify_all();
+            }
+        }));
+    }
+    let mut live = batch.live.lock().unwrap();
+    while *live > 0 {
+        live = batch.done.wait(live).unwrap();
+    }
+    drop(live);
+    batch
+        .results
+        .iter()
+        .map(|m| match m.lock().unwrap().take().expect("cell completed") {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        })
+        .collect()
 }
 
 /// Collapse shard-major results back to one [`CellResult`] per cell:

@@ -62,7 +62,7 @@
 use super::{merge_predictor, BenchContext, CellResult, Config, SchemeKind, TenantMixCtx};
 use crate::error::Result;
 use crate::mem::addrspace::{AddressSpace, MutationEvent};
-use crate::runtime::{NativeSource, TraceStream, VpnRemap};
+use crate::runtime::{NativeSource, PrefetchStream, TraceStream, VpnRemap};
 use crate::schemes::{AnyScheme, Scheme};
 use crate::sim::multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
 use crate::sim::{Engine, InvalOutcome, Metrics};
@@ -175,6 +175,7 @@ pub fn run_multicore_cell(ctx: &BenchContext, kind: SchemeKind, p: &McParams) ->
             let scheme = kind.build(aspace.mapping(), aspace.hist());
             let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
             eng.verify = p.verify;
+            eng.reference = ctx.engine == super::EngineKind::Reference;
             CoreState { index: c, eng }
         })
         .collect();
@@ -225,6 +226,7 @@ pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McPar
             let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
             let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
             eng.verify = p.verify;
+            eng.reference = mix.engine == super::EngineKind::Reference;
             for (t, space) in spaces.iter().enumerate().skip(1) {
                 eng.register_tenant(Asid::from_index(t), space.view());
             }
@@ -373,11 +375,7 @@ fn apply_outcome(filter: &mut PresenceFilter, asid: Asid, v: Vpn, l: u64, outcom
 
 /// How many OS threads band the cores (0 = available parallelism).
 fn band_workers(workers: usize, n: usize) -> usize {
-    let w = if workers == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
-    } else {
-        workers
-    };
+    let w = if workers == 0 { super::host_parallelism() } else { workers };
     w.max(1).min(n.max(1))
 }
 
@@ -433,11 +431,22 @@ fn run_core_span(
         return Ok(());
     }
     let src = NativeSource::new(core_seed(ctx.trace.seed, core.index), ctx.trace.params, ctx.trace.chunk);
-    let mut stream = TraceStream::new(src, la, lb);
     let remap = VpnRemap::wrapping(aspace.mapping())?;
-    while let Some(chunk) = stream.next_chunk()? {
-        remap.apply(chunk);
-        core.eng.run_chunk_marked(chunk, aspace.view(), filter);
+    // spans of at least two chunks prefetch on a background thread so
+    // the per-core engine never stalls on synthesis; shorter spans
+    // (e.g. fine-grained shootdown quanta) skip the thread spawn
+    if lb - la >= 2 * ctx.trace.chunk as u64 {
+        let mut stream = PrefetchStream::spawn(src, la, lb);
+        while let Some(chunk) = stream.next_chunk()? {
+            remap.apply(chunk);
+            core.eng.run_chunk_marked(chunk, aspace.view(), filter);
+        }
+    } else {
+        let mut stream = TraceStream::new(src, la, lb);
+        while let Some(chunk) = stream.next_chunk()? {
+            remap.apply(chunk);
+            core.eng.run_chunk_marked(chunk, aspace.view(), filter);
+        }
     }
     Ok(())
 }

@@ -4,6 +4,8 @@
 //! Usage:
 //!   repro <command> [--quick] [--no-xla] [--trace-len N] [--workers N]
 //!                   [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]
+//!                   [--engine batched|reference] [--baseline BENCH_N.json]
+//!                   [--gate]
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
@@ -20,11 +22,15 @@
 //!                1/8/64/256 cores (or --cores N): per-core miss
 //!                spread, IPI counts, responder fan-out, CPI
 //!   bench      — reproducible throughput harness (scheme × cores);
-//!                writes machine-readable BENCH_6.json
+//!                writes machine-readable BENCH_7.json and prints a
+//!                delta table against --baseline (default: newest
+//!                committed BENCH_*.json); --gate fails the run on a
+//!                >20% per-cell regression; --engine reference swaps
+//!                in the scalar hot path for A/B speedup runs
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 
-use katlb::coordinator::{experiments, Config};
+use katlb::coordinator::{experiments, Config, EngineKind};
 use katlb::error::{bail, Result};
 use katlb::runtime::Runtime;
 use std::time::Instant;
@@ -83,6 +89,20 @@ fn parse_args() -> Result<(String, Config)> {
                 )
             }
             "--coalesce-ipi" => cfg.coalesce_ipi = true,
+            "--engine" => {
+                let v = args.next().ok_or_else(|| katlb::anyhow!("--engine needs a value"))?;
+                cfg.engine = match v.as_str() {
+                    "batched" => EngineKind::Batched,
+                    "reference" => EngineKind::Reference,
+                    other => bail!("--engine must be batched|reference, got {other}"),
+                };
+            }
+            "--baseline" => {
+                cfg.bench_baseline = Some(
+                    args.next().ok_or_else(|| katlb::anyhow!("--baseline needs a path"))?,
+                )
+            }
+            "--gate" => cfg.bench_gate = true,
             other => bail!("unknown flag {other}"),
         }
     }
@@ -112,7 +132,8 @@ fn main() -> Result<()> {
             println!(
                 "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|cpi|cores|bench|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
-                 [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]"
+                 [--shards N] [--chunk N] [--cores N] [--coalesce-ipi] \
+                 [--engine batched|reference] [--baseline BENCH_N.json] [--gate]"
             );
             return Ok(());
         }
@@ -163,8 +184,20 @@ fn main() -> Result<()> {
             }
         }
         "bench" => {
-            println!("{}", experiments::bench(&cfg)?.render());
-            eprintln!("# wrote BENCH_6.json");
+            let r = experiments::bench(&cfg)?;
+            println!("{}", r.table.render());
+            if let Some(d) = &r.delta {
+                println!("{}", d.render());
+            }
+            eprintln!("# wrote {} ({} engine)", r.path, cfg.engine.label());
+            if !r.regressions.is_empty() {
+                for line in &r.regressions {
+                    eprintln!("# regression: {line}");
+                }
+                if cfg.bench_gate {
+                    bail!("{} cell(s) regressed >20% vs baseline", r.regressions.len());
+                }
+            }
         }
         "fig1" => {
             println!("{}", experiments::fig1(&cfg)?.render());

@@ -11,7 +11,7 @@ pub mod trace;
 
 pub use client::{default_artifact_dir, Runtime};
 pub use manifest::Manifest;
-pub use stream::{TraceStream, VpnRemap};
+pub use stream::{PrefetchStream, TraceStream, VpnRemap};
 pub use trace::{generate_trace, NativeSource, TraceSource, XlaSource};
 
 use crate::error::Result;

@@ -4,11 +4,14 @@
 //! is the streaming successor of the old whole-trace
 //! `remap_indices_to_vpns` pass — it rewrites each chunk in place, so
 //! no stage of the pipeline ever materializes the full trace.
+//! [`PrefetchStream`] is the double-buffered variant that moves
+//! synthesis onto a background thread for long spans.
 
 use super::trace::TraceSource;
 use crate::error::{anyhow, Result};
 use crate::mem::mapping::MemoryMapping;
 use crate::{Ppn, Vpn};
+use std::sync::mpsc;
 
 /// Chunked view over one access range of a trace source.  Peak memory
 /// is exactly one source chunk, independent of the range length.
@@ -54,6 +57,83 @@ impl<S: TraceSource> TraceStream<S> {
             self.src.seek(self.pos);
         }
         Ok(Some(&mut self.buf[..n]))
+    }
+}
+
+/// Double-buffered prefetching stream: chunk synthesis runs on a
+/// detached generator thread while the consumer simulates the
+/// previous chunk, so hot-path workers never stall on trace
+/// generation.  Two buffers rotate through a pair of channels (a
+/// bounded "full" lane and a recycling "empty" lane), so peak memory
+/// stays two source chunks per stream.
+///
+/// Yields exactly the sequence of `TraceStream::new(src, start, end)`
+/// — a unit test pins the equivalence — so call sites pick either
+/// based on span length without affecting results.  Only `'static`
+/// sources qualify (the native kernel); the XLA-backed source borrows
+/// the runtime and keeps using [`TraceStream`].
+pub struct PrefetchStream {
+    full: mpsc::Receiver<Result<Vec<Vpn>>>,
+    empty: mpsc::Sender<Vec<Vpn>>,
+    cur: Vec<Vpn>,
+}
+
+impl PrefetchStream {
+    /// Stream accesses `[start, end)` off a background generator.
+    pub fn spawn<S: TraceSource + Send + 'static>(mut src: S, start: u64, end: u64) -> Self {
+        debug_assert!(start <= end, "shard range inverted: [{start}, {end})");
+        let chunk = src.chunk_len().max(1);
+        let (full_tx, full_rx) = mpsc::sync_channel(1);
+        let (empty_tx, empty_rx) = mpsc::channel::<Vec<Vpn>>();
+        // prime the recycle lane with both buffers
+        empty_tx.send(Vec::with_capacity(chunk)).expect("receiver held locally");
+        empty_tx.send(Vec::with_capacity(chunk)).expect("receiver held locally");
+        std::thread::Builder::new()
+            .name("katlb-tracegen".into())
+            .spawn(move || {
+                src.seek(start);
+                let mut pos = start;
+                while pos < end {
+                    // blocks until the consumer recycles a buffer, so
+                    // generation runs at most one chunk ahead; if the
+                    // consumer is dropped mid-stream either channel
+                    // closing ends the thread
+                    let Ok(mut buf) = empty_rx.recv() else { return };
+                    buf.resize(chunk, 0);
+                    let r = src.next_chunk_into(&mut buf);
+                    let n = (chunk as u64).min(end - pos) as usize;
+                    buf.truncate(n);
+                    pos += n as u64;
+                    let item = r.map(|()| buf);
+                    let failed = item.is_err();
+                    if full_tx.send(item).is_err() || failed {
+                        return;
+                    }
+                }
+                // dropping full_tx ends the consumer's iteration
+            })
+            .expect("spawn trace generator thread");
+        PrefetchStream { full: full_rx, empty: empty_tx, cur: Vec::new() }
+    }
+
+    /// The next chunk, or `None` once the range is exhausted.
+    /// Mirrors [`TraceStream::next_chunk`]: the final chunk is
+    /// truncated to the range end, and chunks are handed out mutably
+    /// so [`VpnRemap`] rewrites in place.
+    pub fn next_chunk(&mut self) -> Result<Option<&mut [Vpn]>> {
+        if !self.cur.is_empty() {
+            // hand the consumed buffer back; the generator may have
+            // exited already, in which case the send is a no-op
+            let _ = self.empty.send(std::mem::take(&mut self.cur));
+        }
+        match self.full.recv() {
+            Ok(Ok(buf)) => {
+                self.cur = buf;
+                Ok(Some(&mut self.cur))
+            }
+            Ok(Err(e)) => Err(e),
+            Err(_) => Ok(None), // generator exhausted the range
+        }
     }
 }
 
@@ -169,6 +249,22 @@ mod tests {
         let second = stream.next_chunk().unwrap().unwrap().len();
         assert_eq!((first, second), (512, 188));
         assert!(stream.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn prefetch_stream_matches_trace_stream() {
+        for (start, end) in [(0u64, 5000u64), (300, 4900), (42, 42), (0, 100)] {
+            let mut a = TraceStream::new(src(512), start, end);
+            let mut b = PrefetchStream::spawn(src(512), start, end);
+            loop {
+                let ca = a.next_chunk().unwrap().map(|c| c.to_vec());
+                let cb = b.next_chunk().unwrap().map(|c| c.to_vec());
+                assert_eq!(ca, cb, "prefetch diverged in [{start}, {end})");
+                if ca.is_none() {
+                    break;
+                }
+            }
+        }
     }
 
     #[test]

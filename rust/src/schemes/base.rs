@@ -9,7 +9,7 @@ use super::{
 use crate::pagetable::PageTable;
 use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
-use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES, HUGE_SHIFT};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -44,7 +44,7 @@ impl BaseL2 {
 
     #[inline]
     fn set2m(&self, vpn: Vpn) -> usize {
-        ((vpn >> 9) & self.tlb.set_mask()) as usize
+        ((vpn >> HUGE_SHIFT) & self.tlb.set_mask()) as usize
     }
 }
 
@@ -59,6 +59,7 @@ impl Scheme for BaseL2 {
         self.label.to_string()
     }
 
+    #[inline]
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
         // 4KB and 2MB arrays probed in parallel in hardware: one access
         let a = asid_bits(self.asid);

@@ -12,9 +12,10 @@ use super::{
 use crate::pagetable::PageTable;
 use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
-use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES, HUGE_SHIFT};
 
 const GROUP: u64 = 8;
+const GROUP_SHIFT: u32 = GROUP.trailing_zeros();
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -45,7 +46,7 @@ impl Colt {
 
     #[inline]
     fn set2m(&self, vpn: Vpn) -> usize {
-        ((vpn >> 9) & self.tlb.set_mask()) as usize
+        ((vpn >> HUGE_SHIFT) & self.tlb.set_mask()) as usize
     }
 
     #[inline]
@@ -88,6 +89,7 @@ impl Scheme for Colt {
         "COLT".to_string()
     }
 
+    #[inline]
     fn lookup(&mut self, vpn: Vpn) -> Outcome {
         let a = asid_bits(self.asid);
         let set = self.set4k(vpn);
@@ -100,7 +102,7 @@ impl Scheme for Colt {
         }
         // coalesced probe: part of the same physical access in COLT's
         // design (modified index + tag match), so no extra probe cost
-        let group = vpn / GROUP;
+        let group = vpn >> GROUP_SHIFT;
         let set = self.setgrp(group);
         if let Some(&Entry::Coal { start, len, pbase }) =
             self.tlb.lookup(set, tag_group(group) | a)
@@ -123,7 +125,7 @@ impl Scheme for Colt {
         }
         match Self::group_run(pt, vpn) {
             Some((start, len, pbase)) if len >= 2 => {
-                let group = vpn / GROUP;
+                let group = vpn >> GROUP_SHIFT;
                 self.tlb.insert(
                     self.setgrp(group),
                     tag_group(group) | a,

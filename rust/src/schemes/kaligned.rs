@@ -27,7 +27,7 @@ use crate::pagetable::aligned::{align_vpn, select_aligned};
 use crate::pagetable::PageTable;
 use crate::sim::cost::{CostModel, InvalOutcome};
 use crate::tlb::SetAssocTlb;
-use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES, HUGE_SHIFT};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 enum Entry {
@@ -122,7 +122,7 @@ impl KAligned {
 
     #[inline]
     fn set2m(&self, vpn: Vpn) -> usize {
-        ((vpn >> 9) & self.tlb.set_mask()) as usize
+        ((vpn >> HUGE_SHIFT) & self.tlb.set_mask()) as usize
     }
 
     /// Figure 7's modified indexing: a k-bit aligned entry has its k

@@ -85,6 +85,12 @@ pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     /// verify every translation against the page table (cheap enough
     /// to keep on; disable only in throughput benches)
     pub verify: bool,
+    /// replay chunks through the scalar per-access loop instead of the
+    /// batched pipeline (the throughput A/B toggle: `repro bench
+    /// --engine reference`).  Bit-identical to the batched path by
+    /// construction — the differential suite in `tests/hotpath.rs`
+    /// pins it.
+    pub reference: bool,
 }
 
 impl<S: Scheme> Engine<S> {
@@ -101,6 +107,7 @@ impl<S: Scheme> Engine<S> {
             asid: Asid::ZERO,
             tenant_snap: [0, 0],
             verify: cfg!(debug_assertions),
+            reference: false,
         }
     }
 
@@ -210,15 +217,15 @@ impl<S: Scheme> Engine<S> {
         self.tenant_snap = [self.metrics.accesses, self.metrics.walks];
     }
 
-    /// Simulate one memory access to `vpn` against the translation
-    /// ground truth in `view`.
-    #[inline]
-    pub fn access(&mut self, vpn: Vpn, view: SpaceView<'_>) {
+    /// One access minus the epoch tick, monomorphized over `VERIFY` so
+    /// the release bench path carries zero verify branches (the check
+    /// compiles out entirely when `VERIFY` is false).
+    #[inline(always)]
+    fn access_body<const VERIFY: bool>(&mut self, vpn: Vpn, view: SpaceView<'_>) {
         // ---- L1 (latency hidden behind cache access; no page-table
         // probe — the split L1 knows each entry's page size) ----
         if self.l1.lookup(self.asid, vpn).is_some() {
             self.metrics.record_l1_hit(&self.cost);
-            self.tick_epoch(view);
             return;
         }
 
@@ -248,7 +255,9 @@ impl<S: Scheme> Engine<S> {
                         self.scheme.name()
                     )
                 });
-                self.check(vpn, ppn, view);
+                if VERIFY {
+                    self.check(vpn, ppn, view);
+                }
                 match hit {
                     Outcome::Regular { .. } => self.metrics.record_regular_hit(&self.cost),
                     Outcome::Coalesced { probes, .. } => {
@@ -258,6 +267,17 @@ impl<S: Scheme> Engine<S> {
                 }
                 self.fill_l1(vpn, is_huge, view);
             }
+        }
+    }
+
+    /// Simulate one memory access to `vpn` against the translation
+    /// ground truth in `view`.
+    #[inline]
+    pub fn access(&mut self, vpn: Vpn, view: SpaceView<'_>) {
+        if self.verify {
+            self.access_body::<true>(vpn, view);
+        } else {
+            self.access_body::<false>(vpn, view);
         }
         self.tick_epoch(view);
     }
@@ -270,10 +290,51 @@ impl<S: Scheme> Engine<S> {
     /// Batched entry point for the streaming pipeline: one call per
     /// trace chunk (or per event-delimited sub-chunk when a mutation
     /// schedule is active).
+    ///
+    /// The chunk is split at epoch boundaries: each sub-chunk runs at
+    /// most `epoch_len - since_epoch` accesses through the monomorphized
+    /// fast loop with no per-access epoch bookkeeping, then the epoch
+    /// hook (if due) fires between sub-chunks.  The hook thus fires
+    /// after exactly the same access as the scalar per-access loop —
+    /// bit-identical timing, hoisted counter.
     #[inline]
     pub fn run_chunk(&mut self, chunk: &[Vpn], view: SpaceView<'_>) {
+        if self.reference {
+            self.run_chunk_reference(chunk, view);
+        } else if self.verify {
+            self.run_chunk_inner::<true>(chunk, view);
+        } else {
+            self.run_chunk_inner::<false>(chunk, view);
+        }
+    }
+
+    fn run_chunk_inner<const VERIFY: bool>(&mut self, chunk: &[Vpn], view: SpaceView<'_>) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            let until = self.epoch_len - self.since_epoch;
+            let n = (rest.len() as u64).min(until) as usize;
+            let (seg, tail) = rest.split_at(n);
+            for &v in seg {
+                self.access_body::<VERIFY>(v, view);
+            }
+            self.since_epoch += n as u64;
+            if self.since_epoch >= self.epoch_len {
+                self.epoch_boundary(view);
+            }
+            rest = tail;
+        }
+    }
+
+    /// The pre-batching scalar loop, kept verbatim as the throughput
+    /// baseline and the differential-test oracle.
+    pub fn run_chunk_reference(&mut self, chunk: &[Vpn], view: SpaceView<'_>) {
         for &v in chunk {
-            self.access(v, view);
+            if self.verify {
+                self.access_body::<true>(v, view);
+            } else {
+                self.access_body::<false>(v, view);
+            }
+            self.tick_epoch(view);
         }
     }
 
@@ -282,17 +343,50 @@ impl<S: Scheme> Engine<S> {
     /// (conservatively, hit or miss — marking is monotone and sound
     /// either way) so the shootdown bus can compute responder sets.
     /// The mark spans the page's run plus the scheme's
-    /// [`Scheme::max_fill_span`] block, queried per access because an
-    /// epoch hook firing mid-chunk may widen it.
+    /// [`Scheme::max_fill_span`] block.  The span can only widen at an
+    /// epoch hook (K re-derivation, anchor re-selection), and the
+    /// batched loop splits chunks at epoch boundaries, so one span
+    /// query per sub-chunk is exact — the reference loop re-queries per
+    /// access and the differential suite pins the two equal.
     pub fn run_chunk_marked(
         &mut self,
         chunk: &[Vpn],
         view: SpaceView<'_>,
         filter: &mut super::multicore::PresenceFilter,
     ) {
-        for &v in chunk {
-            filter.mark(self.asid, v, view.pt, self.scheme.max_fill_span());
-            self.access(v, view);
+        if self.reference {
+            for &v in chunk {
+                filter.mark(self.asid, v, view.pt, self.scheme.max_fill_span());
+                self.access(v, view);
+            }
+        } else if self.verify {
+            self.run_chunk_marked_inner::<true>(chunk, view, filter);
+        } else {
+            self.run_chunk_marked_inner::<false>(chunk, view, filter);
+        }
+    }
+
+    fn run_chunk_marked_inner<const VERIFY: bool>(
+        &mut self,
+        chunk: &[Vpn],
+        view: SpaceView<'_>,
+        filter: &mut super::multicore::PresenceFilter,
+    ) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            let until = self.epoch_len - self.since_epoch;
+            let n = (rest.len() as u64).min(until) as usize;
+            let (seg, tail) = rest.split_at(n);
+            let span = self.scheme.max_fill_span();
+            for &v in seg {
+                filter.mark(self.asid, v, view.pt, span);
+                self.access_body::<VERIFY>(v, view);
+            }
+            self.since_epoch += n as u64;
+            if self.since_epoch >= self.epoch_len {
+                self.epoch_boundary(view);
+            }
+            rest = tail;
         }
     }
 
@@ -406,28 +500,37 @@ impl<S: Scheme> Engine<S> {
         }
     }
 
+    /// Translation check; callers gate on the `VERIFY` const (or the
+    /// runtime `verify` flag via [`Engine::access`]'s dispatch), so the
+    /// assert itself is unconditional.
     #[inline]
     fn check(&self, vpn: Vpn, ppn: crate::Ppn, view: SpaceView<'_>) {
-        if self.verify {
-            assert_eq!(
-                Some(ppn),
-                view.pt.translate(vpn),
-                "scheme {} returned wrong translation for vpn {vpn}",
-                self.scheme.name()
-            );
-        }
+        assert_eq!(
+            Some(ppn),
+            view.pt.translate(vpn),
+            "scheme {} returned wrong translation for vpn {vpn}",
+            self.scheme.name()
+        );
     }
 
     #[inline]
     fn tick_epoch(&mut self, view: SpaceView<'_>) {
         self.since_epoch += 1;
         if self.since_epoch >= self.epoch_len {
-            self.since_epoch = 0;
-            self.metrics.record_coverage(self.scheme.coverage_pages());
-            if self.epoch_hooks {
-                self.scheme.epoch(view);
-                self.epoch_pending = true;
-            }
+            self.epoch_boundary(view);
+        }
+    }
+
+    /// Fire the epoch machinery: coverage sample plus (when enabled)
+    /// the scheme's epoch hook.  Reached per access by the scalar
+    /// reference loop and per sub-chunk by the batched loop — at the
+    /// same access either way.
+    fn epoch_boundary(&mut self, view: SpaceView<'_>) {
+        self.since_epoch = 0;
+        self.metrics.record_coverage(self.scheme.coverage_pages());
+        if self.epoch_hooks {
+            self.scheme.epoch(view);
+            self.epoch_pending = true;
         }
     }
 
@@ -576,6 +679,32 @@ mod tests {
         let mut b = Engine::new(Box::new(BaseL2::new()));
         b.run(&trace, f.view());
         assert_eq!(a.metrics(), b.metrics(), "chunking must not change accounting");
+    }
+
+    #[test]
+    fn batched_loop_matches_reference_loop_across_epoch_boundaries() {
+        let f = Fix::identity(2000);
+        let trace: Vec<Vpn> = (0..9000u64).map(|i| (i * 37) % 2000).collect();
+        // epoch 700 with chunk 512: boundaries land mid-chunk; epoch
+        // 512 with chunk 512: boundaries land exactly on chunk edges
+        for (epoch, chunk) in [(700u64, 512usize), (512, 512), (1, 512), (10_000, 512)] {
+            for verify in [false, true] {
+                let mut a = Engine::new(Box::new(BaseL2::new())).with_epoch(epoch);
+                a.verify = verify;
+                for c in trace.chunks(chunk) {
+                    a.run_chunk(c, f.view());
+                }
+                let mut b = Engine::new(Box::new(BaseL2::new())).with_epoch(epoch);
+                b.verify = verify;
+                b.reference = true;
+                for c in trace.chunks(chunk) {
+                    b.run_chunk(c, f.view());
+                }
+                let (ma, _) = a.finish();
+                let (mb, _) = b.finish();
+                assert_eq!(ma, mb, "epoch={epoch} chunk={chunk} verify={verify}");
+            }
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use super::SetAssocTlb;
 use crate::schemes::{asid_bits, tag_asid, TAG_MASK};
-use crate::{Asid, Ppn, Vpn, HUGE_PAGES};
+use crate::{Asid, Ppn, Vpn, HUGE_PAGES, HUGE_SHIFT};
 
 pub struct L1Tlb {
     small: SetAssocTlb<Ppn>,
@@ -39,12 +39,17 @@ impl L1Tlb {
     /// a page-table `is_huge` probe to pick a side — a miss in one
     /// side only advances the LRU clock, never its state, so probing
     /// both is behavior-identical to probing the right one.
+    ///
+    /// Both sides are probed unconditionally (no branch between them,
+    /// mirroring the hardware's parallel probe).  A VPN can never be
+    /// resident at both sizes at once — every invalidation path sweeps
+    /// both structures — so the small-side preference only matters in
+    /// states the simulator cannot reach.
     #[inline]
     pub fn lookup(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
-        if let Some(p) = self.lookup_small(asid, vpn) {
-            return Some(p);
-        }
-        self.lookup_huge(asid, vpn)
+        let small = self.lookup_small(asid, vpn);
+        let huge = self.lookup_huge(asid, vpn);
+        small.or(huge)
     }
 
     /// Look up a 4KB translation for `asid`.
@@ -57,7 +62,7 @@ impl L1Tlb {
     /// Look up a 2MB translation for the region containing `vpn`.
     #[inline]
     pub fn lookup_huge(&mut self, asid: Asid, vpn: Vpn) -> Option<Ppn> {
-        let hv = vpn / HUGE_PAGES;
+        let hv = vpn >> HUGE_SHIFT;
         let set = (hv & self.huge.set_mask()) as usize;
         // returns the base-page PPN of the huge region
         self.huge
@@ -75,7 +80,7 @@ impl L1Tlb {
     /// base page.
     #[inline]
     pub fn fill_huge(&mut self, asid: Asid, vpn: Vpn, ppn_base: Ppn) {
-        let hv = vpn / HUGE_PAGES;
+        let hv = vpn >> HUGE_SHIFT;
         let set = (hv & self.huge.set_mask()) as usize;
         self.huge.insert(set, hv | asid_bits(asid), ppn_base);
     }
@@ -97,7 +102,7 @@ impl L1Tlb {
             tag_asid(tag) != asid || v < vstart || v >= vend
         });
         self.huge.retain(|tag, _| {
-            let base = (tag & TAG_MASK) * HUGE_PAGES;
+            let base = (tag & TAG_MASK) << HUGE_SHIFT;
             tag_asid(tag) != asid || base + HUGE_PAGES <= vstart || base >= vend
         });
     }

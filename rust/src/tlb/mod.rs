@@ -8,24 +8,26 @@ pub mod range;
 pub use l1::L1Tlb;
 pub use range::RangeTlb;
 
-/// One way of a set-associative TLB.
-#[derive(Clone, Debug)]
-struct Slot<P> {
-    valid: bool,
-    tag: u64,
-    lru: u64,
-    data: P,
-}
-
 /// Generic set-associative TLB with true LRU replacement.
 ///
 /// The caller owns the index/tag computation (schemes differ exactly
 /// there — Figure 7's modified indexing for aligned entries), the TLB
 /// owns placement, lookup and replacement.
+///
+/// Storage is structure-of-arrays: tags, LRU stamps and payloads live
+/// in three dense vectors, so the lookup loop scans `ways` adjacent
+/// tags without striding over payload bytes.  Validity is encoded in
+/// the LRU stamp — `lru == 0` means invalid (the tick is incremented
+/// before every assignment, so a live entry always has `lru >= 1`) —
+/// which keeps the way-scan down to one tag compare plus one stamp
+/// compare per way, both branchless.
 pub struct SetAssocTlb<P> {
     sets: usize,
     ways: usize,
-    slots: Vec<Slot<P>>,
+    tags: Vec<u64>,
+    /// LRU stamp per way; 0 = invalid.
+    lru: Vec<u64>,
+    data: Vec<P>,
     tick: u64,
 }
 
@@ -39,10 +41,9 @@ impl<P: Clone + Default> SetAssocTlb<P> {
         SetAssocTlb {
             sets,
             ways,
-            slots: vec![
-                Slot { valid: false, tag: 0, lru: 0, data: P::default() };
-                entries
-            ],
+            tags: vec![0; entries],
+            lru: vec![0; entries],
+            data: vec![P::default(); entries],
             tick: 0,
         }
     }
@@ -53,7 +54,7 @@ impl<P: Clone + Default> SetAssocTlb<P> {
     }
 
     pub fn entries(&self) -> usize {
-        self.slots.len()
+        self.tags.len()
     }
 
     #[inline]
@@ -61,29 +62,37 @@ impl<P: Clone + Default> SetAssocTlb<P> {
         self.sets as u64 - 1
     }
 
+    /// Index of the matching way in `set`, if any.  At most one way
+    /// can match (inserts dedup), so an unconditional scan of all
+    /// `ways` with a conditional-move select is exact.
+    #[inline]
+    fn find(&self, set: usize, tag: u64) -> Option<usize> {
+        let base = set * self.ways;
+        let mut hit = usize::MAX;
+        for w in 0..self.ways {
+            let m = (self.tags[base + w] == tag) & (self.lru[base + w] != 0);
+            hit = if m { base + w } else { hit };
+        }
+        (hit != usize::MAX).then_some(hit)
+    }
+
     /// Look `tag` up in `set`; on hit, refresh LRU and return the data.
     #[inline]
     pub fn lookup(&mut self, set: usize, tag: u64) -> Option<&P> {
         debug_assert!(set < self.sets);
         self.tick += 1;
-        let base = set * self.ways;
-        for w in 0..self.ways {
-            let s = &mut self.slots[base + w];
-            if s.valid && s.tag == tag {
-                s.lru = self.tick;
-                return Some(&self.slots[base + w].data);
+        match self.find(set, tag) {
+            Some(i) => {
+                self.lru[i] = self.tick;
+                Some(&self.data[i])
             }
+            None => None,
         }
-        None
     }
 
     /// Probe without touching LRU (used by stats/tests).
     pub fn peek(&self, set: usize, tag: u64) -> Option<&P> {
-        let base = set * self.ways;
-        (0..self.ways)
-            .map(|w| &self.slots[base + w])
-            .find(|s| s.valid && s.tag == tag)
-            .map(|s| &s.data)
+        self.find(set, tag).map(|i| &self.data[i])
     }
 
     /// Insert (tag, data) into `set`, replacing the LRU way.  If the
@@ -94,42 +103,31 @@ impl<P: Clone + Default> SetAssocTlb<P> {
         self.tick += 1;
         let base = set * self.ways;
         // update in place if present
-        for w in 0..self.ways {
-            let s = &mut self.slots[base + w];
-            if s.valid && s.tag == tag {
-                s.data = data;
-                s.lru = self.tick;
-                return;
-            }
+        if let Some(i) = self.find(set, tag) {
+            self.data[i] = data;
+            self.lru[i] = self.tick;
+            return;
         }
-        // otherwise evict LRU (invalid slots have lru==0, always oldest)
+        // otherwise fill the lowest-index invalid way, or evict the
+        // true LRU way (first-lowest stamp wins ties)
         let mut victim = base;
-        for w in 1..self.ways {
-            let s = &self.slots[base + w];
-            if !s.valid {
-                victim = base + w;
-                break;
-            }
-            if s.lru < self.slots[victim].lru || !self.slots[victim].valid {
-                victim = base + w;
-            }
-        }
-        // ensure invalid-first even if way 0 is valid
         for w in 0..self.ways {
-            if !self.slots[base + w].valid {
+            if self.lru[base + w] == 0 {
                 victim = base + w;
                 break;
             }
+            if self.lru[base + w] < self.lru[victim] {
+                victim = base + w;
+            }
         }
-        self.slots[victim] = Slot { valid: true, tag, lru: self.tick, data };
+        self.tags[victim] = tag;
+        self.lru[victim] = self.tick;
+        self.data[victim] = data;
     }
 
     /// Invalidate everything (TLB shootdown, §3.4).
     pub fn flush(&mut self) {
-        for s in &mut self.slots {
-            s.valid = false;
-            s.lru = 0;
-        }
+        self.lru.fill(0);
     }
 
     /// Selective invalidation: keep each valid entry for which `f`
@@ -139,10 +137,9 @@ impl<P: Clone + Default> SetAssocTlb<P> {
     /// entries.
     pub fn retain(&mut self, mut f: impl FnMut(u64, &mut P) -> bool) -> usize {
         let mut dropped = 0;
-        for s in &mut self.slots {
-            if s.valid && !f(s.tag, &mut s.data) {
-                s.valid = false;
-                s.lru = 0;
+        for i in 0..self.tags.len() {
+            if self.lru[i] != 0 && !f(self.tags[i], &mut self.data[i]) {
+                self.lru[i] = 0;
                 dropped += 1;
             }
         }
@@ -151,13 +148,13 @@ impl<P: Clone + Default> SetAssocTlb<P> {
 
     /// Iterate valid entries as (set, tag, data).
     pub fn iter_valid(&self) -> impl Iterator<Item = (usize, u64, &P)> {
-        self.slots.iter().enumerate().filter(|(_, s)| s.valid).map(move |(i, s)| {
-            (i / self.ways, s.tag, &s.data)
-        })
+        (0..self.tags.len())
+            .filter(move |&i| self.lru[i] != 0)
+            .map(move |i| (i / self.ways, self.tags[i], &self.data[i]))
     }
 
     pub fn occupancy(&self) -> usize {
-        self.slots.iter().filter(|s| s.valid).count()
+        self.lru.iter().filter(|&&l| l != 0).count()
     }
 }
 

@@ -1,0 +1,124 @@
+//! Differential suite for the batched hot path: the monomorphized
+//! branchless chunk loop (`EngineKind::Batched`, the default) must
+//! produce bit-identical `Metrics` to the scalar per-access reference
+//! loop (`EngineKind::Reference`, `--engine reference`) across every
+//! driver — frozen mapping, churn with events landing mid-chunk,
+//! tenant scheduling switching mid-chunk, and true multi-core cells —
+//! for all seven contenders.  These tests are the correctness oracle
+//! that licenses the per-chunk hoists (epoch bookkeeping, fill-span /
+//! presence-filter queries) and the `const VERIFY` monomorphization.
+
+use katlb::coordinator::{
+    run_cell, run_multicore_cell, run_tenant_cell, BenchContext, Config, EngineKind, McParams,
+    SchemeKind, TenantMixCtx,
+};
+use katlb::mem::addrspace::{MutationEvent, MutationOp, MutationSchedule};
+use katlb::workloads::{benchmark, tenant_mixes};
+
+/// All seven contenders, as the churn/tenant experiments run them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Rmm,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(4),
+    ]
+}
+
+/// The epoch deliberately does not divide the chunk length, so epoch
+/// boundaries land mid-chunk and the batched loop's sub-chunk
+/// splitting is exercised on every chunk.
+fn cfg() -> Config {
+    Config {
+        trace_len: 1 << 14,
+        epoch: 3000,
+        workers: 2,
+        use_xla: false,
+        max_ws_pages: Some(1 << 12),
+        chunk_len: 1 << 11,
+        ..Config::default()
+    }
+}
+
+/// A mutation schedule whose timestamps are deliberately *not* chunk
+/// multiples, so events split chunks at arbitrary offsets.
+fn mid_chunk_schedule(l: u64) -> MutationSchedule {
+    MutationSchedule::new(vec![
+        MutationEvent::new(l / 4 + 37, MutationOp::Remap { selector: 2 }),
+        MutationEvent::phase(l / 2 + 101, MutationOp::Munmap { selector: 1 }),
+        MutationEvent::new(l / 2 + 101, MutationOp::Mmap { pages: 128 }),
+        MutationEvent::new(3 * l / 4 + 13, MutationOp::ThpPromote),
+    ])
+}
+
+fn diff_cell(ctx: &mut BenchContext, k: SchemeKind, what: &str) {
+    ctx.engine = EngineKind::Batched;
+    let a = run_cell(ctx, k);
+    ctx.engine = EngineKind::Reference;
+    let b = run_cell(ctx, k);
+    assert_eq!(a.metrics, b.metrics, "{what}: batched != reference for {k:?}");
+}
+
+#[test]
+fn frozen_cells_match_reference() {
+    let mut ctx = BenchContext::build(benchmark("mcf").unwrap(), &cfg(), None).unwrap();
+    for k in seven() {
+        diff_cell(&mut ctx, k, "frozen");
+    }
+}
+
+#[test]
+fn churn_cells_match_reference_with_mid_chunk_events() {
+    let mut ctx = BenchContext::build(benchmark("mcf").unwrap(), &cfg(), None).unwrap();
+    ctx.schedule = mid_chunk_schedule(ctx.trace.len);
+    for k in seven() {
+        diff_cell(&mut ctx, k, "churn");
+    }
+}
+
+#[test]
+fn tenant_cells_match_reference() {
+    let mix = &tenant_mixes()[0];
+    let mut mx = TenantMixCtx::build(mix, &cfg(), None).unwrap();
+    for k in seven() {
+        mx.engine = EngineKind::Batched;
+        let a = run_tenant_cell(&mx, k);
+        mx.engine = EngineKind::Reference;
+        let b = run_tenant_cell(&mx, k);
+        assert_eq!(a.metrics, b.metrics, "tenant {}: batched != reference for {k:?}", mx.name);
+    }
+}
+
+#[test]
+fn multicore_cells_match_reference() {
+    let mut ctx = BenchContext::build(benchmark("mcf").unwrap(), &cfg(), None).unwrap();
+    ctx.schedule = mid_chunk_schedule(ctx.trace.len);
+    let p = McParams::new(4);
+    for k in seven() {
+        ctx.engine = EngineKind::Batched;
+        let a = run_multicore_cell(&ctx, k, &p);
+        ctx.engine = EngineKind::Reference;
+        let b = run_multicore_cell(&ctx, k, &p);
+        assert_eq!(
+            a.cell.metrics, b.cell.metrics,
+            "4-core: batched != reference for {k:?}"
+        );
+        assert_eq!(a.per_core, b.per_core, "4-core per-core metrics diverged for {k:?}");
+    }
+}
+
+#[test]
+fn epoch_exactly_on_chunk_edge_matches_reference() {
+    // the boundary case the sub-chunk splitter must get right: the
+    // epoch hook fires exactly at every chunk edge, so the batched
+    // loop's trailing zero-length sub-chunk logic is on the line
+    let mut c = cfg();
+    c.epoch = c.chunk_len as u64;
+    let mut ctx = BenchContext::build(benchmark("mcf").unwrap(), &c, None).unwrap();
+    for k in [SchemeKind::AnchorDynamic, SchemeKind::KAligned(4), SchemeKind::Colt] {
+        diff_cell(&mut ctx, k, "epoch==chunk");
+    }
+}
