@@ -16,39 +16,52 @@ use katlb::schemes::colt::Colt;
 use katlb::schemes::kaligned::KAligned;
 use katlb::schemes::{AnyScheme, Scheme};
 use katlb::sim::Engine;
+use katlb::tlb::simd::{self, ScanBackend};
 use katlb::tlb::SetAssocTlb;
 
 const N: usize = 1 << 16;
 
 fn main() {
     println!("# tlb_hotpath — L3 microbenchmarks");
+    println!("# scan backends available: {:?}", simd::available());
 
-    // raw set-associative TLB
-    let mut tlb: SetAssocTlb<u64> = SetAssocTlb::new(1024, 8);
+    // raw set-associative TLB, swept per way count and scan backend:
+    // the way-scan is the innermost loop the SIMD backends replace,
+    // and its payoff grows with associativity (4 ways = one AVX2
+    // vector, 16 ways = four)
     let mut rng = Rng::new(1);
     let keys: Vec<u64> = (0..N).map(|_| rng.below(1 << 20)).collect();
-    for &k in &keys {
-        tlb.insert((k & 127) as usize, k, k);
-    }
-    bench("sa_tlb::lookup (64K mixed keys)", 3, 15, || {
-        let mut acc = 0u64;
+    for ways in [4usize, 8, 16] {
+        let sets = 8192 / ways; // constant capacity across the sweep
+        let mut tlb: SetAssocTlb<u64> = SetAssocTlb::new(sets, ways);
         for &k in &keys {
-            if let Some(&v) = tlb.lookup((k & 127) as usize, k) {
-                acc ^= v;
-            }
+            tlb.insert((k & 127) as usize, k, k);
         }
-        black_box(acc);
-    })
-    .print(Some((N as u64, "op")));
+        for backend in simd::available() {
+            assert!(simd::force(Some(backend)));
+            let label = backend.label();
+            bench(&format!("sa_tlb::lookup {ways}-way [{label}] (64K mixed)"), 3, 15, || {
+                let mut acc = 0u64;
+                for &k in &keys {
+                    if let Some(&v) = tlb.lookup((k & 127) as usize, k) {
+                        acc ^= v;
+                    }
+                }
+                black_box(acc);
+            })
+            .print(Some((N as u64, "op")));
 
-    bench("sa_tlb::insert (64K mixed keys)", 3, 15, || {
-        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(1024, 8);
-        for &k in &keys {
-            t.insert((k & 127) as usize, k, k);
+            bench(&format!("sa_tlb::insert {ways}-way [{label}] (64K mixed)"), 3, 15, || {
+                let mut t: SetAssocTlb<u64> = SetAssocTlb::new(sets, ways);
+                for &k in &keys {
+                    t.insert((k & 127) as usize, k, k);
+                }
+                black_box(t.occupancy());
+            })
+            .print(Some((N as u64, "op")));
         }
-        black_box(t.occupancy());
-    })
-    .print(Some((N as u64, "op")));
+        simd::force(None);
+    }
 
     // page-table walk (hashmap translate)
     let mapping = mapgen::synthetic(SyntheticKind::Mixed, 1 << 18, 7);
@@ -165,26 +178,35 @@ fn main() {
         .print(Some((N as u64, "acc")));
     }
 
-    // batched vs scalar reference loop — the hot-path A/B.  Epoch
-    // bookkeeping on with a period that does not divide the chunk, so
-    // the batched loop's sub-chunk splitting sits in the measured
-    // path; verify on/off isolates what the const-generic
-    // monomorphization removes from the per-access body.
+    // batched vs scalar reference loop — the hot-path A/B, crossed
+    // with the TLB scan backend (forced scalar vs each SIMD variant
+    // the host offers).  Epoch bookkeeping on with a period that does
+    // not divide the chunk, so the batched loop's sub-chunk splitting
+    // sits in the measured path; verify on/off isolates what the
+    // const-generic monomorphization removes from the per-access body.
     println!();
-    println!("# batched vs reference chunk loop (epoch=3000, same 64K trace)");
-    for (label, reference, verify) in [
-        ("batched   verify=off", false, false),
-        ("reference verify=off", true, false),
-        ("batched   verify=on", false, true),
-        ("reference verify=on", true, true),
-    ] {
-        let mut eng =
-            Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4))).with_epoch(3000);
-        eng.verify = verify;
-        eng.reference = reference;
-        bench(&format!("engine [kaligned] {label}"), 3, 15, || {
-            eng.run_chunk(&vpns, view);
-        })
-        .print(Some((N as u64, "acc")));
+    println!("# batched vs reference chunk loop x scan backend (epoch=3000, same 64K trace)");
+    for backend in simd::available() {
+        assert!(simd::force(Some(backend)));
+        let scan = backend.label();
+        for (label, reference, verify) in [
+            ("batched   verify=off", false, false),
+            ("reference verify=off", true, false),
+            ("batched   verify=on", false, true),
+            ("reference verify=on", true, true),
+        ] {
+            let mut eng = Engine::new(AnyScheme::KAligned(KAligned::from_histogram(&hist, 4)))
+                .with_epoch(3000);
+            eng.verify = verify;
+            eng.reference = reference;
+            bench(&format!("engine [kaligned] {label} [{scan}]"), 3, 15, || {
+                eng.run_chunk(&vpns, view);
+            })
+            .print(Some((N as u64, "acc")));
+        }
+        if backend == ScanBackend::Scalar && simd::available().len() == 1 {
+            println!("    (no SIMD backend on this host — scalar rows only)");
+        }
     }
+    simd::force(None);
 }

@@ -726,7 +726,7 @@ pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
 }
 
 // ---------------------------------------------------------------------------
-// Bench: engine-throughput harness (machine-readable BENCH_7.json)
+// Bench: engine-throughput harness (machine-readable BENCH_8.json)
 // ---------------------------------------------------------------------------
 
 /// Everything `repro bench` produced: the throughput table, the delta
@@ -754,13 +754,16 @@ struct Baseline {
 /// like the production fast path).  The *work* is fully reproducible —
 /// seeds, partitioning and metrics are deterministic, and the JSON
 /// records them next to the wall-clock numbers so regressions in
-/// either are diffable.  Writes `BENCH_7.json` in the working
+/// either are diffable.  Writes `BENCH_8.json` in the working
 /// directory and diffs against `cfg.bench_baseline` (default: the
 /// highest-numbered non-placeholder `BENCH_*.json`, read *before* the
 /// output is overwritten — so a `--engine reference` run followed by
-/// a default run yields the batched-vs-reference A/B speedup).
+/// a default run yields the batched-vs-reference A/B speedup, and a
+/// `KATLB_FORCE_SCALAR=1` run followed by a default run yields the
+/// SIMD-vs-scalar delta; the active scan backend is recorded in the
+/// JSON's `scan` field).
 pub fn bench(cfg: &Config) -> Result<BenchReport> {
-    bench_to(cfg, "BENCH_7.json")
+    bench_to(cfg, "BENCH_8.json")
 }
 
 pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
@@ -815,10 +818,11 @@ pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
         }
     }
     let json = format!(
-        "{{\n  \"benchmark\": {:?},\n  \"engine\": {:?},\n  \"trace_len\": {},\n  \
-         \"workers\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"benchmark\": {:?},\n  \"engine\": {:?},\n  \"scan\": {:?},\n  \
+         \"trace_len\": {},\n  \"workers\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
         ctx.workload.name,
         cfg.engine.label(),
+        crate::tlb::simd::active().label(),
         ctx.trace.len,
         cfg.effective_workers(),
         entries.join(",\n")
@@ -1090,6 +1094,8 @@ mod tests {
         std::fs::remove_file(path).ok();
         assert!(json.contains("\"accesses_per_sec\""));
         assert!(json.contains("\"engine\": \"batched\""));
+        let scan = crate::tlb::simd::active().label();
+        assert!(json.contains(&format!("\"scan\": \"{scan}\"")), "scan backend recorded");
         assert!(json.contains("\"cores\": 2"));
         assert!(json.contains("\"trace_len\""));
         // deterministic work: every row reports the full trace

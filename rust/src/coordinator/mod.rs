@@ -89,7 +89,7 @@ use crate::schemes::cluster::Cluster;
 use crate::schemes::colt::Colt;
 use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
-use crate::schemes::{AnyScheme, Scheme};
+use crate::schemes::{AnyScheme, ConcreteScheme, Scheme};
 use crate::sim::tenants::TenantSchedule;
 use crate::sim::{CostModel, Engine, Metrics};
 use crate::workloads::churn::{build_schedule, ChurnKind};
@@ -97,6 +97,7 @@ use crate::workloads::tenants::TenantMix;
 use crate::workloads::tracegen::TraceParams;
 use crate::workloads::Workload;
 use crate::{bail, Asid, Vpn};
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
@@ -137,8 +138,12 @@ impl SchemeKind {
         !matches!(self, SchemeKind::Base)
     }
 
-    /// Instantiate the scheme over a mapping — enum-dispatched, so
-    /// `Engine<AnyScheme>` monomorphizes the hot path.
+    /// Instantiate the scheme over a mapping.  This is the uniform
+    /// *constructor* shape: the cell drivers immediately unwrap the
+    /// enum to the concrete scheme ([`ConcreteScheme::from_any`]) and
+    /// run a fully monomorphized `Engine<Concrete>`, while
+    /// `Engine<AnyScheme>` remains the enum-dispatched shape for the
+    /// dyn-vs-enum-vs-concrete A/B benches.
     pub fn build(&self, mapping: &MemoryMapping, hist: &ContigHistogram) -> AnyScheme {
         match *self {
             SchemeKind::Base => AnyScheme::Base(BaseL2::new()),
@@ -173,7 +178,62 @@ impl SchemeKind {
             SchemeKind::KAligned(psi) => Box::new(KAligned::from_histogram(hist, psi)),
         }
     }
+
+    /// Row of this kind's drivers in the monomorphized dispatch
+    /// [`DRIVERS`] table (variants sharing a concrete scheme type
+    /// share a row: Base/THP differ only in mapping and name,
+    /// Anchor-fixed/-dynamic only in constructor arguments).
+    fn table_index(&self) -> usize {
+        match self {
+            SchemeKind::Base | SchemeKind::Thp => 0,
+            SchemeKind::Colt => 1,
+            SchemeKind::Cluster => 2,
+            SchemeKind::Rmm => 3,
+            SchemeKind::AnchorFixed(_) | SchemeKind::AnchorDynamic => 4,
+            SchemeKind::KAligned(_) => 5,
+        }
+    }
+
+    /// This kind's monomorphized cell drivers.
+    pub(crate) fn drivers(&self) -> &'static CellDrivers {
+        &DRIVERS[self.table_index()]
+    }
 }
+
+/// The monomorphized cell drivers of one concrete scheme type: every
+/// driver is the generic runner instantiated at that scheme, so the
+/// inner simulation loop is `Engine<Concrete>` with zero residual
+/// `AnyScheme` branching.  [`SchemeKind::drivers`] indexes the table;
+/// the table itself is built at compile time (fn-item coercion in a
+/// `const fn`), which is as "once per run" as dispatch setup gets.
+pub(crate) struct CellDrivers {
+    pub(crate) frozen: fn(&BenchContext, SchemeKind, Shard) -> CellResult,
+    pub(crate) churn: fn(&BenchContext, SchemeKind, Shard) -> CellResult,
+    pub(crate) tenant: fn(&TenantMixCtx, SchemeKind, Shard) -> CellResult,
+    pub(crate) multicore: fn(&BenchContext, SchemeKind, &McParams) -> McCellResult,
+    pub(crate) mc_tenant: fn(&TenantMixCtx, SchemeKind, &McParams) -> McCellResult,
+}
+
+const fn drivers_of<S: ConcreteScheme>() -> CellDrivers {
+    CellDrivers {
+        frozen: run_cell_shard_g::<S>,
+        churn: run_churn_cell_shard_g::<S>,
+        tenant: run_tenant_cell_shard_g::<S>,
+        multicore: multicore::run_multicore_cell_g::<S>,
+        mc_tenant: multicore::run_multicore_tenant_cell_g::<S>,
+    }
+}
+
+/// One row per concrete scheme type, in [`SchemeKind::table_index`]
+/// order.
+static DRIVERS: [CellDrivers; 6] = [
+    drivers_of::<BaseL2>(),
+    drivers_of::<Colt>(),
+    drivers_of::<Cluster>(),
+    drivers_of::<Rmm>(),
+    drivers_of::<Anchor>(),
+    drivers_of::<KAligned>(),
+];
 
 /// Default streaming chunk (matches the artifact BATCH).
 pub const DEFAULT_CHUNK: usize = 1 << 16;
@@ -331,6 +391,37 @@ impl Config {
 pub(crate) fn host_parallelism() -> usize {
     static AVAIL: OnceLock<usize> = OnceLock::new();
     *AVAIL.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+thread_local! {
+    /// Per-thread chunk-buffer arena.  Pool workers are process-lived,
+    /// so every stream a driver opens after the first recycles a
+    /// warmed buffer instead of allocating — the churn/tenant drivers
+    /// open one short [`TraceStream`] per event-delimited span, which
+    /// without the arena was one heap round-trip per span.  Buffers
+    /// first-touched on a NUMA-pinned worker stay node-local for the
+    /// worker's lifetime (see [`crate::runtime::numa`]).
+    static CHUNK_ARENA: RefCell<Vec<Vec<Vpn>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Arena cap: enough slots for the deepest nesting a worker reaches
+/// (a tenant driver's outer stream plus its per-tenant inner spans).
+const ARENA_SLOTS: usize = 4;
+
+/// Borrow a recycled chunk buffer (empty `Vec` when the arena is dry —
+/// [`TraceStream::with_buf`] sizes it either way).
+pub(crate) fn arena_take() -> Vec<Vpn> {
+    CHUNK_ARENA.with(|a| a.borrow_mut().pop().unwrap_or_default())
+}
+
+/// Return a stream's buffer to the calling thread's arena.
+pub(crate) fn arena_put(buf: Vec<Vpn>) {
+    CHUNK_ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        if a.len() < ARENA_SLOTS {
+            a.push(buf);
+        }
+    });
 }
 
 /// The streaming recipe for one benchmark's trace: both backends are
@@ -513,11 +604,12 @@ impl BenchContext {
                 f(chunk);
             }
         } else {
-            let mut stream = TraceStream::new(src, start, end);
+            let mut stream = TraceStream::with_buf(src, start, end, arena_take());
             while let Some(chunk) = stream.next_chunk()? {
                 remap.apply(chunk);
                 f(chunk);
             }
+            arena_put(stream.into_buf());
         }
         Ok(())
     }
@@ -623,18 +715,30 @@ pub fn run_cell(ctx: &BenchContext, kind: SchemeKind) -> CellResult {
 /// shard's trace range (bounded memory).  With a non-empty mutation
 /// schedule the run is event-interleaved over a live address space;
 /// with an empty one this is the frozen-mapping fast path, bit-
-/// identical to the pre-churn pipeline.
+/// identical to the pre-churn pipeline.  One table lookup here is the
+/// only dispatch the whole shard pays — the driver below it is
+/// monomorphized at the concrete scheme.
 pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> CellResult {
+    let d = kind.drivers();
     if !ctx.schedule.is_empty() {
-        return run_churn_cell_shard(ctx, kind, shard);
+        (d.churn)(ctx, kind, shard)
+    } else {
+        (d.frozen)(ctx, kind, shard)
     }
+}
+
+fn run_cell_shard_g<S: ConcreteScheme>(
+    ctx: &BenchContext,
+    kind: SchemeKind,
+    shard: Shard,
+) -> CellResult {
     let (mapping, hist) = if kind.uses_thp() {
         (&ctx.mapping_thp, &ctx.hist_thp)
     } else {
         (&ctx.mapping, &ctx.hist)
     };
     let view = ctx.static_view(kind.uses_thp());
-    let scheme = kind.build(mapping, hist);
+    let scheme = S::from_any(kind.build(mapping, hist));
     let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = false; // correctness is covered by tests; keep sims fast
     eng.reference = ctx.engine == EngineKind::Reference;
@@ -659,7 +763,11 @@ pub fn run_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> Cel
 /// events interleaved at their timestamps.  Translation verification
 /// stays ON — this is the ground-truth oracle that no scheme ever
 /// returns a stale PPN after an invalidation.
-fn run_churn_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> CellResult {
+fn run_churn_cell_shard_g<S: ConcreteScheme>(
+    ctx: &BenchContext,
+    kind: SchemeKind,
+    shard: Shard,
+) -> CellResult {
     let (start, end) = shard.bounds(ctx.trace.len);
     let mut aspace = ctx.build_aspace(kind.uses_thp());
     // events before this shard mutate the space with no engine
@@ -667,7 +775,7 @@ fn run_churn_cell_shard(ctx: &BenchContext, kind: SchemeKind, shard: Shard) -> C
     for ev in &ctx.schedule.events()[..ctx.schedule.first_at_or_after(start)] {
         aspace.apply(&ev.op);
     }
-    let scheme = kind.build(aspace.mapping(), aspace.hist());
+    let scheme = S::from_any(kind.build(aspace.mapping(), aspace.hist()));
     let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
     eng.verify = true;
     eng.reference = ctx.engine == EngineKind::Reference;
@@ -703,7 +811,7 @@ pub fn drive_span<S: Scheme>(
     let evs = ctx.schedule.events();
     let mut ei = ctx.schedule.first_at_or_after(start);
     let src = NativeSource::new(ctx.trace.seed, ctx.trace.params, ctx.trace.chunk);
-    let mut stream = TraceStream::new(src, start, end);
+    let mut stream = TraceStream::with_buf(src, start, end, arena_take());
     let mut abs = start;
     while let Some(chunk) = stream.next_chunk()? {
         let n = chunk.len();
@@ -725,6 +833,7 @@ pub fn drive_span<S: Scheme>(
         run_segment(aspace, eng, &mut chunk[pos..])?;
         abs += n as u64;
     }
+    arena_put(stream.into_buf());
     Ok(())
 }
 
@@ -887,6 +996,14 @@ pub fn run_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind) -> CellResult {
 /// (an ASID tagging bug) would translate with the wrong tenant's
 /// frames and panic in the engine's check.
 pub fn run_tenant_cell_shard(mix: &TenantMixCtx, kind: SchemeKind, shard: Shard) -> CellResult {
+    (kind.drivers().tenant)(mix, kind, shard)
+}
+
+fn run_tenant_cell_shard_g<S: ConcreteScheme>(
+    mix: &TenantMixCtx,
+    kind: SchemeKind,
+    shard: Shard,
+) -> CellResult {
     let (start, end) = shard.bounds(mix.schedule.len());
     let mut spaces: Vec<AddressSpace> =
         mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
@@ -899,7 +1016,7 @@ pub fn run_tenant_cell_shard(mix: &TenantMixCtx, kind: SchemeKind, shard: Shard)
     // scheme built from tenant 0's space (the single-tenant path),
     // remaining tenants registered so per-ASID configuration is
     // derived from each tenant's own histogram/mapping
-    let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+    let scheme = S::from_any(kind.build(spaces[0].mapping(), spaces[0].hist()));
     let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
     eng.verify = true;
     eng.reference = mix.engine == EngineKind::Reference;
@@ -974,19 +1091,27 @@ impl WorkerPool {
         })
     }
 
-    /// Grow the pool to at least `n` threads.
+    /// Grow the pool to at least `n` threads.  Workers are placed
+    /// round-robin across NUMA nodes (a no-op on single-node hosts —
+    /// see [`crate::runtime::numa`]) *before* their first job, so
+    /// every buffer a worker's arena first-touches is node-local for
+    /// the worker's whole process lifetime.
     fn ensure_workers(&self, n: usize) {
         let mut spawned = self.spawned.lock().unwrap();
         while *spawned < n {
             let rx = Arc::clone(&self.rx);
+            let index = *spawned;
             std::thread::Builder::new()
-                .name(format!("katlb-pool-{}", *spawned))
-                .spawn(move || loop {
-                    // hold the receiver lock only while dequeuing
-                    let job = rx.lock().unwrap().recv();
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break,
+                .name(format!("katlb-pool-{index}"))
+                .spawn(move || {
+                    crate::runtime::numa::pin_worker(index);
+                    loop {
+                        // hold the receiver lock only while dequeuing
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
                     }
                 })
                 .expect("spawn pool worker");
@@ -1240,6 +1365,40 @@ mod tests {
         assert!(cfg.validate().is_ok(), "an explicitly pinned single core shards freely");
         cfg.cores = None;
         assert!(cfg.validate().is_ok(), "serial engine shards freely");
+    }
+
+    #[test]
+    fn mono_dispatch_matches_anyscheme_engine() {
+        // the table-dispatched Engine<Concrete> drivers must be
+        // bit-identical to the enum-dispatched Engine<AnyScheme> the
+        // coordinator ran before monomorphization
+        let cfg = tiny_cfg();
+        let ctx = Arc::new(BenchContext::build(benchmark("omnetpp").unwrap(), &cfg, None).unwrap());
+        for kind in [
+            SchemeKind::Base,
+            SchemeKind::Thp,
+            SchemeKind::Colt,
+            SchemeKind::Cluster,
+            SchemeKind::Rmm,
+            SchemeKind::AnchorDynamic,
+            SchemeKind::KAligned(2),
+        ] {
+            let mono = run_cell(&ctx, kind);
+            let (mapping, hist) = if kind.uses_thp() {
+                (&ctx.mapping_thp, &ctx.hist_thp)
+            } else {
+                (&ctx.mapping, &ctx.hist)
+            };
+            let view = ctx.static_view(kind.uses_thp());
+            let mut eng = Engine::new(kind.build(mapping, hist))
+                .with_epoch(ctx.epoch)
+                .with_cost(ctx.cost);
+            eng.verify = false;
+            ctx.for_each_chunk(0, ctx.trace.len, |chunk| eng.run_chunk(chunk, view)).unwrap();
+            let (metrics, scheme) = eng.finish();
+            assert_eq!(mono.metrics, metrics, "{}", kind.label());
+            assert_eq!(mono.scheme, scheme.name(), "{}", kind.label());
+        }
     }
 
     #[test]

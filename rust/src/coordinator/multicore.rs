@@ -63,7 +63,7 @@ use super::{merge_predictor, BenchContext, CellResult, Config, SchemeKind, Tenan
 use crate::error::Result;
 use crate::mem::addrspace::{AddressSpace, MutationEvent};
 use crate::runtime::{NativeSource, PrefetchStream, TraceStream, VpnRemap};
-use crate::schemes::{AnyScheme, Scheme};
+use crate::schemes::{ConcreteScheme, Scheme};
 use crate::sim::multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
 use crate::sim::{Engine, InvalOutcome, Metrics};
 use crate::{Asid, Vpn};
@@ -158,25 +158,39 @@ impl McCellResult {
     }
 }
 
-struct CoreState {
+struct CoreState<S: Scheme> {
     index: usize,
-    eng: Engine<AnyScheme>,
+    eng: Engine<S>,
+    /// persistent per-core chunk buffer: quantum band threads die at
+    /// every quiesce point, so a thread-local arena would drain with
+    /// them — the buffer lives in the core state instead and recycles
+    /// across all of the core's quanta (zero steady-state allocation)
+    buf: Vec<Vpn>,
 }
 
 /// Run one multicore cell over the benchmark's whole timeline.  With
 /// an empty mutation schedule this is N cores over a frozen space (no
 /// bus traffic — every quantum is the full trace); with a churn
-/// schedule, quanta interleave with routed shootdowns.
+/// schedule, quanta interleave with routed shootdowns.  Dispatches
+/// once through the monomorphized driver table ([`SchemeKind::drivers`]).
 pub fn run_multicore_cell(ctx: &BenchContext, kind: SchemeKind, p: &McParams) -> McCellResult {
+    (kind.drivers().multicore)(ctx, kind, p)
+}
+
+pub(crate) fn run_multicore_cell_g<S: ConcreteScheme>(
+    ctx: &BenchContext,
+    kind: SchemeKind,
+    p: &McParams,
+) -> McCellResult {
     let n = p.cores.max(1);
     let mut aspace = ctx.build_aspace(kind.uses_thp());
-    let mut cores: Vec<CoreState> = (0..n)
+    let mut cores: Vec<CoreState<S>> = (0..n)
         .map(|c| {
-            let scheme = kind.build(aspace.mapping(), aspace.hist());
+            let scheme = S::from_any(kind.build(aspace.mapping(), aspace.hist()));
             let mut eng = Engine::new(scheme).with_epoch(ctx.epoch).with_cost(ctx.cost);
             eng.verify = p.verify;
             eng.reference = ctx.engine == super::EngineKind::Reference;
-            CoreState { index: c, eng }
+            CoreState { index: c, eng, buf: Vec::new() }
         })
         .collect();
     let mut filters = vec![PresenceFilter::new(); n];
@@ -208,6 +222,14 @@ pub fn run_multicore_cell(ctx: &BenchContext, kind: SchemeKind, p: &McParams) ->
 /// stream.  Tenant spaces must be frozen (no per-tenant mutation
 /// schedules) — shootdown routing across tenant spaces is not modeled.
 pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McParams) -> McCellResult {
+    (kind.drivers().mc_tenant)(mix, kind, p)
+}
+
+pub(crate) fn run_multicore_tenant_cell_g<S: ConcreteScheme>(
+    mix: &TenantMixCtx,
+    kind: SchemeKind,
+    p: &McParams,
+) -> McCellResult {
     let n = p.cores.max(1);
     for ctx in &mix.tenants {
         assert!(
@@ -218,12 +240,12 @@ pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McPar
     }
     let spaces: Vec<AddressSpace> =
         mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
-    let mut cores: Vec<CoreState> = (0..n)
+    let mut cores: Vec<CoreState<S>> = (0..n)
         .map(|c| {
             // replicate the serial tenant-cell init per core: scheme
             // derived from tenant 0's space, other tenants registered,
             // the pre-timeline tenant installed silently
-            let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+            let scheme = S::from_any(kind.build(spaces[0].mapping(), spaces[0].hist()));
             let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
             eng.verify = p.verify;
             eng.reference = mix.engine == super::EngineKind::Reference;
@@ -231,7 +253,7 @@ pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McPar
                 eng.register_tenant(Asid::from_index(t), space.view());
             }
             eng.set_tenant(Asid::from_index(mix.schedule.active_before(0)));
-            CoreState { index: c, eng }
+            CoreState { index: c, eng, buf: Vec::new() }
         })
         .collect();
 
@@ -261,9 +283,9 @@ pub fn run_multicore_tenant_cell(mix: &TenantMixCtx, kind: SchemeKind, p: &McPar
 /// Route one quiesce group (all events sharing a timestamp): apply
 /// each op to the shared space and deliver its invalidation ranges per
 /// the bus policy.  Runs single-threaded between quanta.
-fn route_group(
+fn route_group<S: Scheme>(
     aspace: &mut AddressSpace,
-    cores: &mut [CoreState],
+    cores: &mut [CoreState<S>],
     filters: &mut [PresenceFilter],
     bus: &mut ShootdownBus,
     group: &[MutationEvent],
@@ -383,10 +405,10 @@ fn band_workers(workers: usize, n: usize) -> usize {
 /// are banded across `workers` scoped threads; each core streams its
 /// partition `[part(t0), part(t1))` of its own seeded trace through
 /// the marked chunk runner.
-fn run_quantum(
+fn run_quantum<S: Scheme + Send>(
     ctx: &BenchContext,
     aspace: &AddressSpace,
-    cores: &mut [CoreState],
+    cores: &mut [CoreState<S>],
     filters: &mut [PresenceFilter],
     t0: u64,
     t1: u64,
@@ -417,10 +439,10 @@ fn run_quantum(
     });
 }
 
-fn run_core_span(
+fn run_core_span<S: Scheme>(
     ctx: &BenchContext,
     aspace: &AddressSpace,
-    core: &mut CoreState,
+    core: &mut CoreState<S>,
     filter: &mut PresenceFilter,
     t0: u64,
     t1: u64,
@@ -434,7 +456,8 @@ fn run_core_span(
     let remap = VpnRemap::wrapping(aspace.mapping())?;
     // spans of at least two chunks prefetch on a background thread so
     // the per-core engine never stalls on synthesis; shorter spans
-    // (e.g. fine-grained shootdown quanta) skip the thread spawn
+    // (e.g. fine-grained shootdown quanta) skip the thread spawn and
+    // recycle the core's persistent chunk buffer
     if lb - la >= 2 * ctx.trace.chunk as u64 {
         let mut stream = PrefetchStream::spawn(src, la, lb);
         while let Some(chunk) = stream.next_chunk()? {
@@ -442,11 +465,12 @@ fn run_core_span(
             core.eng.run_chunk_marked(chunk, aspace.view(), filter);
         }
     } else {
-        let mut stream = TraceStream::new(src, la, lb);
+        let mut stream = TraceStream::with_buf(src, la, lb, std::mem::take(&mut core.buf));
         while let Some(chunk) = stream.next_chunk()? {
             remap.apply(chunk);
             core.eng.run_chunk_marked(chunk, aspace.view(), filter);
         }
+        core.buf = stream.into_buf();
     }
     Ok(())
 }
@@ -455,10 +479,10 @@ fn run_core_span(
 /// the active tenant `t`'s stream `[la, lb)`, then (like the serial
 /// tenant driver) follows up a fired epoch hook by refreshing the
 /// descheduled tenants' derived lanes.
-fn run_tenant_quantum(
+fn run_tenant_quantum<S: Scheme + Send>(
     ctx: &BenchContext,
     spaces: &[AddressSpace],
-    cores: &mut [CoreState],
+    cores: &mut [CoreState<S>],
     t: usize,
     la: u64,
     lb: u64,
@@ -466,18 +490,19 @@ fn run_tenant_quantum(
 ) {
     let n = cores.len();
     let nw = band_workers(workers, n);
-    let run_one = |core: &mut CoreState| -> Result<()> {
+    let run_one = |core: &mut CoreState<S>| -> Result<()> {
         let (a, b) = (part(la, core.index, n), part(lb, core.index, n));
         if a < b {
             let src =
                 NativeSource::new(core_seed(ctx.trace.seed, core.index), ctx.trace.params, ctx.trace.chunk);
-            let mut stream = TraceStream::new(src, a, b);
+            let mut stream = TraceStream::with_buf(src, a, b, std::mem::take(&mut core.buf));
             let aspace = &spaces[t];
             let remap = VpnRemap::wrapping(aspace.mapping())?;
             while let Some(chunk) = stream.next_chunk()? {
                 remap.apply(chunk);
                 core.eng.run_chunk(chunk, aspace.view());
             }
+            core.buf = stream.into_buf();
         }
         if core.eng.take_epoch_pending() {
             for (o, space) in spaces.iter().enumerate() {
@@ -509,8 +534,8 @@ fn run_tenant_quantum(
 
 /// Core-order merge into one [`CellResult`] plus the per-core and bus
 /// views.
-fn collect(
-    cores: Vec<CoreState>,
+fn collect<S: Scheme>(
+    cores: Vec<CoreState<S>>,
     bus: ShootdownBus,
     benchmark: String,
     kind: SchemeKind,

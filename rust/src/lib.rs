@@ -32,9 +32,12 @@
 //!   TLB hierarchy.
 //!
 //! The simulation hot path is monomorphized: [`sim::Engine`] is
-//! generic over its [`schemes::Scheme`], and the coordinator drives
-//! `Engine<AnyScheme>` (enum dispatch, scheme lookups inlined) instead
-//! of `Engine<Box<dyn Scheme>>` (still available as the escape hatch).
+//! generic over its [`schemes::Scheme`], and the coordinator's cell
+//! drivers dispatch once through a compile-time table of per-scheme
+//! instantiations, so every cell runs `Engine<Concrete>` with scheme
+//! lookups inlined down to the runtime-dispatched SIMD way-scans in
+//! [`tlb::simd`] (`Engine<AnyScheme>` and `Engine<Box<dyn Scheme>>`
+//! remain as the A/B shape and the escape hatch).
 //!
 //! The address space is *mutable and multi-tenant*:
 //! [`mem::addrspace::AddressSpace`] applies deterministic schedules of

@@ -22,11 +22,13 @@
 //!                1/8/64/256 cores (or --cores N): per-core miss
 //!                spread, IPI counts, responder fan-out, CPI
 //!   bench      — reproducible throughput harness (scheme × cores);
-//!                writes machine-readable BENCH_7.json and prints a
-//!                delta table against --baseline (default: newest
-//!                committed BENCH_*.json); --gate fails the run on a
-//!                >20% per-cell regression; --engine reference swaps
-//!                in the scalar hot path for A/B speedup runs
+//!                writes machine-readable BENCH_8.json (including the
+//!                active TLB scan backend) and prints a delta table
+//!                against --baseline (default: newest committed
+//!                BENCH_*.json); --gate fails the run on a >20%
+//!                per-cell regression; --engine reference swaps in
+//!                the per-access hot path, KATLB_FORCE_SCALAR=1 pins
+//!                the scalar way-scan — either gives an A/B speedup run
 //!   all        — everything above, in order
 //!   smoke      — load artifacts, run one XLA trace chunk, print stats
 

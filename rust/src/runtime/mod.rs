@@ -6,6 +6,7 @@
 
 pub mod client;
 pub mod manifest;
+pub mod numa;
 pub mod stream;
 pub mod trace;
 

@@ -25,11 +25,27 @@ pub struct TraceStream<S: TraceSource> {
 impl<S: TraceSource> TraceStream<S> {
     /// Stream accesses `[start, end)`; the source is seeked to
     /// `start`, so shards never generate their prefix.
-    pub fn new(mut src: S, start: u64, end: u64) -> Self {
+    pub fn new(src: S, start: u64, end: u64) -> Self {
+        Self::with_buf(src, start, end, Vec::new())
+    }
+
+    /// Like [`TraceStream::new`], but recycling a caller-owned chunk
+    /// buffer (an arena slot) instead of allocating a fresh one, so
+    /// steady-state driver loops that open many short streams stay
+    /// allocation-free.  Retrieve the buffer with [`into_buf`]
+    /// (`TraceStream::into_buf`) when the stream is done.
+    pub fn with_buf(mut src: S, start: u64, end: u64, mut buf: Vec<Vpn>) -> Self {
         debug_assert!(start <= end, "shard range inverted: [{start}, {end})");
         let chunk = src.chunk_len().max(1);
+        buf.clear();
+        buf.resize(chunk, 0);
         src.seek(start);
-        TraceStream { src, buf: vec![0; chunk], pos: start, end: end.max(start) }
+        TraceStream { src, buf, pos: start, end: end.max(start) }
+    }
+
+    /// Dismantle the stream and hand its chunk buffer back for reuse.
+    pub fn into_buf(self) -> Vec<Vpn> {
+        self.buf
     }
 
     /// Accesses not yet yielded.
@@ -88,9 +104,17 @@ impl PrefetchStream {
         // prime the recycle lane with both buffers
         empty_tx.send(Vec::with_capacity(chunk)).expect("receiver held locally");
         empty_tx.send(Vec::with_capacity(chunk)).expect("receiver held locally");
+        // capture the *consumer's* node before spawning: the generator
+        // first-touches the chunk buffers (`resize` below), so pinning
+        // it to the consumer's node makes the pages the hot path reads
+        // node-local; a no-op on single-node hosts (see runtime::numa)
+        let consumer_node = super::numa::current_node();
         std::thread::Builder::new()
             .name("katlb-tracegen".into())
             .spawn(move || {
+                if let Some(node) = consumer_node {
+                    super::numa::pin_to_node(node);
+                }
                 src.seek(start);
                 let mut pos = start;
                 while pos < end {

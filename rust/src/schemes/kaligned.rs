@@ -188,14 +188,14 @@ impl Scheme for KAligned {
             return Outcome::Regular { ppn: base + (vpn & (HUGE_PAGES - 1)) };
         }
         // --- aligned look-up (Algorithm 2), predictor first (§3.2),
-        // allocation-free (hot path) ---
+        // allocation-free (hot path): a None prediction degrades the
+        // chain below to plain descending-K order, so the ablation
+        // path and the predictor path share one unboxed iterator ---
         let mut probes = 0u32;
         let mut hit: Option<(u32, crate::Ppn)> = None;
-        let order: Box<dyn Iterator<Item = u32> + '_> = if self.use_predictor {
-            Box::new(lane.predictor.probe_iter(&lane.ks))
-        } else {
-            Box::new(lane.ks.iter().copied())
-        };
+        let pred = if self.use_predictor { lane.predictor.prediction(&lane.ks) } else { None };
+        let order =
+            pred.into_iter().chain(lane.ks.iter().copied().filter(move |&k| Some(k) != pred));
         for k in order {
             let av = align_vpn(vpn, k);
             let set = ((vpn >> k) & self.tlb.set_mask()) as usize;

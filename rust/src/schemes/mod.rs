@@ -276,11 +276,14 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
     }
 }
 
-/// Statically dispatched union of every scheme under test.  The
-/// coordinator's hot path runs `Engine<AnyScheme>`: one branch on the
-/// variant and the scheme's lookup/fill inline — no per-access virtual
-/// call.  `Box<dyn Scheme>` stays available as the dynamic escape
-/// hatch (`SchemeKind::build_boxed`) for tests and ad-hoc tooling.
+/// Statically dispatched union of every scheme under test — the
+/// uniform *constructor* type behind `SchemeKind::build`.  The
+/// coordinator's cell drivers immediately unwrap it to a concrete
+/// scheme ([`ConcreteScheme::from_any`]) and run `Engine<Concrete>`,
+/// so not even the variant branch survives into the chunk loop.
+/// `Engine<AnyScheme>` remains a valid (one-branch-per-call) engine
+/// for benches and ad-hoc tooling, and `Box<dyn Scheme>` stays as the
+/// fully dynamic escape hatch (`SchemeKind::build_boxed`).
 pub enum AnyScheme {
     Base(base::BaseL2),
     Colt(colt::Colt),
@@ -368,6 +371,42 @@ impl Scheme for AnyScheme {
         on_scheme!(self, s => s.os_sync_range(asid, vstart, len))
     }
 }
+
+/// A concrete scheme type the coordinator's monomorphized dispatch
+/// table instantiates cell drivers over: the driver builds the scheme
+/// through the enum constructor (`SchemeKind::build`) and immediately
+/// unwraps it to the concrete type, so the driver's whole chunk loop
+/// runs `Engine<Self>` with zero enum branches.  The unwrap is total
+/// by construction — the same `SchemeKind` picks both the table slot
+/// and the built variant — and `from_any` panics loudly if that
+/// invariant is ever broken.
+pub trait ConcreteScheme: Scheme + Send + Sized + 'static {
+    fn from_any(a: AnyScheme) -> Self;
+}
+
+macro_rules! concrete_scheme {
+    ($ty:ty, $variant:ident) => {
+        impl ConcreteScheme for $ty {
+            fn from_any(a: AnyScheme) -> Self {
+                match a {
+                    AnyScheme::$variant(s) => s,
+                    other => panic!(
+                        "dispatch table mismatch: expected {}, built {}",
+                        stringify!($variant),
+                        other.name()
+                    ),
+                }
+            }
+        }
+    };
+}
+
+concrete_scheme!(base::BaseL2, Base);
+concrete_scheme!(colt::Colt, Colt);
+concrete_scheme!(cluster::Cluster, Cluster);
+concrete_scheme!(rmm::Rmm, Rmm);
+concrete_scheme!(anchor::Anchor, Anchor);
+concrete_scheme!(kaligned::KAligned, KAligned);
 
 /// Bit position of the ASID field inside an entry tag.  VPN-derived
 /// tag bits (at most `vpn << 6`, VPNs < 2^42 for 48-bit VAs) never

@@ -17,12 +17,19 @@ impl AlignPredictor {
         Self::default()
     }
 
+    /// The predicted alignment, if it is still in K (stale
+    /// predictions outside the current K set are ignored).
+    #[inline]
+    pub fn prediction(&self, ks_desc: &[u32]) -> Option<u32> {
+        self.last.filter(|p| ks_desc.contains(p))
+    }
+
     /// Order the alignments for the aligned lookup: predicted first,
     /// then the rest of K in the given (descending) order.
     /// Allocation-free — this sits on the per-miss hot path.
     #[inline]
     pub fn probe_iter<'a>(&self, ks_desc: &'a [u32]) -> impl Iterator<Item = u32> + 'a {
-        let pred = self.last.filter(|p| ks_desc.contains(p));
+        let pred = self.prediction(ks_desc);
         pred.into_iter()
             .chain(ks_desc.iter().copied().filter(move |&k| Some(k) != pred))
     }

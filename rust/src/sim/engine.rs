@@ -15,11 +15,15 @@
 //! [`Metrics::cycles_shootdown`] / [`Metrics::cycles_switch`] next to
 //! the access-path cycle counters, feeding the `repro cpi` breakdown.
 //!
-//! The engine is generic over its scheme: `Engine<AnyScheme>` (or a
-//! concrete `Engine<KAligned>`) monomorphizes the per-access loop —
-//! no virtual call, scheme lookups inline — while the default
-//! `Engine<Box<dyn Scheme>>` remains as the dynamic escape hatch for
-//! tests and one-off tooling.
+//! The engine is generic over its scheme: the coordinator's cell
+//! drivers run concrete engines (`Engine<KAligned>` etc.) through the
+//! monomorphized dispatch table in [`crate::coordinator`], so the
+//! per-access loop has no virtual call and no residual enum branch —
+//! scheme lookups inline all the way down to the SIMD way-scans in
+//! [`crate::tlb::simd`].  `Engine<AnyScheme>` (one branch per scheme
+//! call) and the default `Engine<Box<dyn Scheme>>` remain as the A/B
+//! bench shapes and the dynamic escape hatch for tests and one-off
+//! tooling.
 //!
 //! ## Mutable address spaces
 //!

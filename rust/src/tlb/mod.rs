@@ -4,6 +4,7 @@
 
 pub mod l1;
 pub mod range;
+pub mod simd;
 
 pub use l1::L1Tlb;
 pub use range::RangeTlb;
@@ -20,7 +21,9 @@ pub use range::RangeTlb;
 /// the LRU stamp — `lru == 0` means invalid (the tick is incremented
 /// before every assignment, so a live entry always has `lru >= 1`) —
 /// which keeps the way-scan down to one tag compare plus one stamp
-/// compare per way, both branchless.
+/// compare per way.  The scans themselves live in [`simd`]: an AVX2/
+/// NEON vector scan behind once-per-process runtime detection, with
+/// the branchless scalar loop as the always-compiled fallback.
 pub struct SetAssocTlb<P> {
     sets: usize,
     ways: usize,
@@ -63,17 +66,13 @@ impl<P: Clone + Default> SetAssocTlb<P> {
     }
 
     /// Index of the matching way in `set`, if any.  At most one way
-    /// can match (inserts dedup), so an unconditional scan of all
-    /// `ways` with a conditional-move select is exact.
+    /// can match (inserts dedup), so a whole-set vector compare with
+    /// first-set-bit extraction is exact; see [`simd::scan_match`].
     #[inline]
     fn find(&self, set: usize, tag: u64) -> Option<usize> {
         let base = set * self.ways;
-        let mut hit = usize::MAX;
-        for w in 0..self.ways {
-            let m = (self.tags[base + w] == tag) & (self.lru[base + w] != 0);
-            hit = if m { base + w } else { hit };
-        }
-        (hit != usize::MAX).then_some(hit)
+        let end = base + self.ways;
+        simd::scan_match(&self.tags[base..end], &self.lru[base..end], tag).map(|w| base + w)
     }
 
     /// Look `tag` up in `set`; on hit, refresh LRU and return the data.
@@ -110,16 +109,7 @@ impl<P: Clone + Default> SetAssocTlb<P> {
         }
         // otherwise fill the lowest-index invalid way, or evict the
         // true LRU way (first-lowest stamp wins ties)
-        let mut victim = base;
-        for w in 0..self.ways {
-            if self.lru[base + w] == 0 {
-                victim = base + w;
-                break;
-            }
-            if self.lru[base + w] < self.lru[victim] {
-                victim = base + w;
-            }
-        }
+        let victim = base + simd::scan_victim(&self.lru[base..base + self.ways]);
         self.tags[victim] = tag;
         self.lru[victim] = self.tick;
         self.data[victim] = data;
@@ -239,6 +229,38 @@ mod tests {
         t.insert(0, 2, 2);
         assert_eq!(t.occupancy(), 2);
         assert!(t.lookup(0, 1).is_some() && t.lookup(0, 2).is_some());
+    }
+
+    #[test]
+    fn tlb_behaves_identically_under_every_scan_backend() {
+        use crate::prng::Rng;
+        // a run is safe under any backend (they are all bit-identical
+        // by contract — that is exactly what this test checks), so
+        // flipping the global selection mid-test cannot corrupt
+        // concurrently-running tests
+        let run = |b: simd::ScanBackend| -> Vec<Option<u64>> {
+            assert!(simd::force(Some(b)), "{} unavailable", b.label());
+            let mut t: SetAssocTlb<u64> = SetAssocTlb::new(64, 4);
+            let mut rng = Rng::new(7);
+            let mut out = Vec::new();
+            for _ in 0..5_000 {
+                let set = rng.below(16) as usize;
+                let tag = rng.below(40);
+                if rng.chance(1, 3) {
+                    t.insert(set, tag, tag * 3);
+                } else {
+                    out.push(t.lookup(set, tag).copied());
+                }
+            }
+            out.push(Some(t.occupancy() as u64));
+            simd::force(None);
+            out
+        };
+        let backends = simd::available();
+        let want = run(backends[0]);
+        for &b in &backends[1..] {
+            assert_eq!(run(b), want, "{} diverged from scalar", b.label());
+        }
     }
 
     #[test]

@@ -1,0 +1,463 @@
+//! SIMD way scans over the SoA [`SetAssocTlb`](super::SetAssocTlb)
+//! arrays.
+//!
+//! Every scheme's tag match funnels through `SetAssocTlb::find` and
+//! the insert-path victim scan, so vectorizing these two slice
+//! primitives covers the L1 split probe and the Cluster/COLT/
+//! K-Aligned L2 loops in one place.  Three backends:
+//!
+//! * **Scalar** — the portable scan, always compiled; the fallback on
+//!   hosts without the required ISA and the oracle the SIMD paths are
+//!   differentially tested against.
+//! * **Avx2** (x86_64) — 4×u64 lanes, selected when
+//!   `is_x86_feature_detected!("avx2")` holds.
+//! * **Neon** (aarch64) — 2×u64 lanes, selected when
+//!   `is_aarch64_feature_detected!("neon")` holds.
+//!
+//! The backend is chosen **once per process** (first probe), not per
+//! call: [`active`] reads a cached detection result, so the hot path
+//! pays one relaxed atomic load and a predictable branch.  Setting
+//! `KATLB_FORCE_SCALAR=1` in the environment pins the scalar fallback
+//! (the CI forced-scalar job runs the whole test suite this way);
+//! [`force`] overrides the selection at runtime for A/B benches and
+//! the differential suite.
+//!
+//! All backends implement identical semantics, bit-for-bit:
+//!
+//! * `scan_match`: index of the **first** way with `tags[w] == tag`
+//!   and `lru[w] != 0` (at most one way can match under the TLB's
+//!   dedup invariant, so first-match equals only-match).
+//! * `scan_victim`: index of the first invalid way (`lru == 0`),
+//!   else the first way holding the minimum stamp — exactly the
+//!   replacement order of the scalar loop it replaces.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A way-scan implementation. See the module docs for selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ScanBackend {
+    /// Portable scalar scan — always compiled, always correct.
+    Scalar = 0,
+    /// x86_64 AVX2, 4×u64 lanes.
+    Avx2 = 1,
+    /// aarch64 NEON, 2×u64 lanes.
+    Neon = 2,
+}
+
+impl ScanBackend {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScanBackend::Scalar => "scalar",
+            ScanBackend::Avx2 => "avx2",
+            ScanBackend::Neon => "neon",
+        }
+    }
+}
+
+const AUTO: u8 = u8::MAX;
+static OVERRIDE: AtomicU8 = AtomicU8::new(AUTO);
+static DETECTED: OnceLock<ScanBackend> = OnceLock::new();
+
+/// Env + ISA probe; runs once, cached in [`DETECTED`].
+fn detect() -> ScanBackend {
+    if std::env::var("KATLB_FORCE_SCALAR").map(|v| v != "0" && !v.is_empty()).unwrap_or(false) {
+        return ScanBackend::Scalar;
+    }
+    best_available()
+}
+
+/// The widest backend this host can run (ignores the env override).
+fn best_available() -> ScanBackend {
+    #[cfg(target_arch = "x86_64")]
+    if std::is_x86_feature_detected!("avx2") {
+        return ScanBackend::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return ScanBackend::Neon;
+    }
+    ScanBackend::Scalar
+}
+
+/// Every backend that is safe to run on this host (scalar first).
+pub fn available() -> Vec<ScanBackend> {
+    let mut v = vec![ScanBackend::Scalar];
+    let best = best_available();
+    if best != ScanBackend::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+/// The backend the next probe will use.
+#[inline]
+pub fn active() -> ScanBackend {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => ScanBackend::Scalar,
+        1 => ScanBackend::Avx2,
+        2 => ScanBackend::Neon,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// Force the process-wide backend (`None` returns to auto-detection).
+/// Refuses (returns `false`) a backend this host cannot run — forcing
+/// AVX2 without the ISA would be undefined behavior, not a slow path.
+/// Safe to flip concurrently: every backend is bit-identical, so
+/// in-flight probes stay correct whichever selection they observe.
+pub fn force(b: Option<ScanBackend>) -> bool {
+    match b {
+        None => {
+            OVERRIDE.store(AUTO, Ordering::Relaxed);
+            true
+        }
+        Some(b) => {
+            if !available().contains(&b) {
+                return false;
+            }
+            OVERRIDE.store(b as u8, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+/// First way with `tags[w] == tag && lru[w] != 0`, via the active
+/// backend.  `tags` and `lru` are one set's ways (equal lengths).
+#[inline]
+pub fn scan_match(tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+    scan_match_with(active(), tags, lru, tag)
+}
+
+/// First invalid way, else the first way with the minimum LRU stamp,
+/// via the active backend.  `lru` must be non-empty.
+#[inline]
+pub fn scan_victim(lru: &[u64]) -> usize {
+    scan_victim_with(active(), lru)
+}
+
+/// [`scan_match`] through an explicit backend (differential tests,
+/// A/B benches).
+#[inline]
+pub fn scan_match_with(b: ScanBackend, tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+    debug_assert_eq!(tags.len(), lru.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selectable when detection confirmed it.
+        ScanBackend::Avx2 => unsafe { scan_match_avx2(tags, lru, tag) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only selectable when detection confirmed it.
+        ScanBackend::Neon => unsafe { scan_match_neon(tags, lru, tag) },
+        _ => scan_match_scalar(tags, lru, tag),
+    }
+}
+
+/// [`scan_victim`] through an explicit backend.
+#[inline]
+pub fn scan_victim_with(b: ScanBackend, lru: &[u64]) -> usize {
+    debug_assert!(!lru.is_empty());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `scan_match_with`.
+        ScanBackend::Avx2 => unsafe { scan_victim_avx2(lru) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as in `scan_match_with`.
+        ScanBackend::Neon => unsafe { scan_victim_neon(lru) },
+        _ => scan_victim_scalar(lru),
+    }
+}
+
+// ---------------------------------------------------------------- scalar
+
+#[inline]
+fn scan_match_scalar(tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+    let mut hit = usize::MAX;
+    for w in (0..tags.len()).rev() {
+        let m = (tags[w] == tag) & (lru[w] != 0);
+        hit = if m { w } else { hit };
+    }
+    (hit != usize::MAX).then_some(hit)
+}
+
+#[inline]
+fn scan_victim_scalar(lru: &[u64]) -> usize {
+    let mut victim = 0;
+    for (w, &l) in lru.iter().enumerate() {
+        if l == 0 {
+            return w;
+        }
+        if l < lru[victim] {
+            victim = w;
+        }
+    }
+    victim
+}
+
+// ----------------------------------------------------------------- AVX2
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_match_avx2(tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+    use std::arch::x86_64::*;
+    let n = tags.len();
+    let needle = _mm256_set1_epi64x(tag as i64);
+    let zero = _mm256_setzero_si256();
+    let mut w = 0;
+    while w + 4 <= n {
+        let t = _mm256_loadu_si256(tags.as_ptr().add(w) as *const __m256i);
+        let l = _mm256_loadu_si256(lru.as_ptr().add(w) as *const __m256i);
+        let eq = _mm256_cmpeq_epi64(t, needle);
+        let dead = _mm256_cmpeq_epi64(l, zero);
+        // one bit per 64-bit lane: tag match on a live way
+        let m = _mm256_movemask_pd(_mm256_castsi256_pd(_mm256_andnot_si256(dead, eq)));
+        if m != 0 {
+            return Some(w + m.trailing_zeros() as usize);
+        }
+        w += 4;
+    }
+    while w < n {
+        if tags[w] == tag && lru[w] != 0 {
+            return Some(w);
+        }
+        w += 1;
+    }
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_victim_avx2(lru: &[u64]) -> usize {
+    use std::arch::x86_64::*;
+    let n = lru.len();
+    let zero = _mm256_setzero_si256();
+    // pass 1: first invalid way (chunks scanned in order, so the
+    // first set bit of the first non-zero mask is globally first)
+    let mut w = 0;
+    while w + 4 <= n {
+        let l = _mm256_loadu_si256(lru.as_ptr().add(w) as *const __m256i);
+        let m = _mm256_movemask_pd(_mm256_castsi256_pd(_mm256_cmpeq_epi64(l, zero)));
+        if m != 0 {
+            return w + m.trailing_zeros() as usize;
+        }
+        w += 4;
+    }
+    while w < n {
+        if lru[w] == 0 {
+            return w;
+        }
+        w += 1;
+    }
+    // pass 2: all ways live — the minimum stamp.  AVX2 has no
+    // unsigned 64-bit compare, so flip the sign bit and use the
+    // signed one.
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let mut minv = _mm256_set1_epi64x(-1); // u64::MAX lanes
+    let mut w = 0;
+    while w + 4 <= n {
+        let l = _mm256_loadu_si256(lru.as_ptr().add(w) as *const __m256i);
+        let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(minv, sign), _mm256_xor_si256(l, sign));
+        minv = _mm256_blendv_epi8(minv, l, gt);
+        w += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, minv);
+    let mut m = lanes.iter().copied().fold(u64::MAX, u64::min);
+    while w < n {
+        m = m.min(lru[w]);
+        w += 1;
+    }
+    // pass 3: first way holding the minimum (the scalar loop's
+    // strict-< scan keeps the first occurrence — so do we)
+    let needle = _mm256_set1_epi64x(m as i64);
+    let mut w = 0;
+    while w + 4 <= n {
+        let l = _mm256_loadu_si256(lru.as_ptr().add(w) as *const __m256i);
+        let eq = _mm256_movemask_pd(_mm256_castsi256_pd(_mm256_cmpeq_epi64(l, needle)));
+        if eq != 0 {
+            return w + eq.trailing_zeros() as usize;
+        }
+        w += 4;
+    }
+    while w < n {
+        if lru[w] == m {
+            return w;
+        }
+        w += 1;
+    }
+    unreachable!("minimum stamp must be present")
+}
+
+// ----------------------------------------------------------------- NEON
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_match_neon(tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+    use std::arch::aarch64::*;
+    let n = tags.len();
+    let needle = vdupq_n_u64(tag);
+    let zero = vdupq_n_u64(0);
+    let mut w = 0;
+    while w + 2 <= n {
+        let t = vld1q_u64(tags.as_ptr().add(w));
+        let l = vld1q_u64(lru.as_ptr().add(w));
+        let m = vbicq_u64(vceqq_u64(t, needle), vceqq_u64(l, zero));
+        if vgetq_lane_u64(m, 0) != 0 {
+            return Some(w);
+        }
+        if vgetq_lane_u64(m, 1) != 0 {
+            return Some(w + 1);
+        }
+        w += 2;
+    }
+    while w < n {
+        if tags[w] == tag && lru[w] != 0 {
+            return Some(w);
+        }
+        w += 1;
+    }
+    None
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_victim_neon(lru: &[u64]) -> usize {
+    use std::arch::aarch64::*;
+    let n = lru.len();
+    let zero = vdupq_n_u64(0);
+    let mut w = 0;
+    while w + 2 <= n {
+        let l = vld1q_u64(lru.as_ptr().add(w));
+        let inv = vceqq_u64(l, zero);
+        if vgetq_lane_u64(inv, 0) != 0 {
+            return w;
+        }
+        if vgetq_lane_u64(inv, 1) != 0 {
+            return w + 1;
+        }
+        w += 2;
+    }
+    while w < n {
+        if lru[w] == 0 {
+            return w;
+        }
+        w += 1;
+    }
+    // all live: vector min (aarch64 has the unsigned 64-bit compare)
+    let mut minv = vdupq_n_u64(u64::MAX);
+    let mut w = 0;
+    while w + 2 <= n {
+        let l = vld1q_u64(lru.as_ptr().add(w));
+        minv = vbslq_u64(vcgtq_u64(minv, l), l, minv);
+        w += 2;
+    }
+    let mut m = vgetq_lane_u64(minv, 0).min(vgetq_lane_u64(minv, 1));
+    while w < n {
+        m = m.min(lru[w]);
+        w += 1;
+    }
+    let needle = vdupq_n_u64(m);
+    let mut w = 0;
+    while w + 2 <= n {
+        let l = vld1q_u64(lru.as_ptr().add(w));
+        let eq = vceqq_u64(l, needle);
+        if vgetq_lane_u64(eq, 0) != 0 {
+            return w;
+        }
+        if vgetq_lane_u64(eq, 1) != 0 {
+            return w + 1;
+        }
+        w += 2;
+    }
+    while w < n {
+        if lru[w] == m {
+            return w;
+        }
+        w += 1;
+    }
+    unreachable!("minimum stamp must be present")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    /// Oracle mirroring the original per-way loops verbatim.
+    fn match_oracle(tags: &[u64], lru: &[u64], tag: u64) -> Option<usize> {
+        (0..tags.len()).find(|&w| tags[w] == tag && lru[w] != 0)
+    }
+
+    fn victim_oracle(lru: &[u64]) -> usize {
+        let mut victim = 0;
+        for w in 0..lru.len() {
+            if lru[w] == 0 {
+                return w;
+            }
+            if lru[w] < lru[victim] {
+                victim = w;
+            }
+        }
+        victim
+    }
+
+    #[test]
+    fn all_backends_match_oracle_on_random_sets() {
+        let mut rng = Rng::new(42);
+        let backends = available();
+        for &ways in &[1usize, 2, 3, 4, 5, 6, 7, 8, 12, 16] {
+            for _ in 0..2_000 {
+                // small value ranges force zeros, duplicate tags and
+                // LRU stamp ties
+                let tags: Vec<u64> = (0..ways).map(|_| rng.below(4)).collect();
+                let lru: Vec<u64> = (0..ways).map(|_| rng.below(4)).collect();
+                let tag = rng.below(4);
+                let want_m = match_oracle(&tags, &lru, tag);
+                let want_v = victim_oracle(&lru);
+                for &b in &backends {
+                    assert_eq!(
+                        scan_match_with(b, &tags, &lru, tag),
+                        want_m,
+                        "{} match ways={ways} tags={tags:?} lru={lru:?} tag={tag}",
+                        b.label()
+                    );
+                    assert_eq!(
+                        scan_victim_with(b, &lru),
+                        want_v,
+                        "{} victim ways={ways} lru={lru:?}",
+                        b.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn victim_prefers_first_invalid_then_first_minimum() {
+        for &b in &available() {
+            assert_eq!(scan_victim_with(b, &[5, 0, 0, 1]), 1, "{}", b.label());
+            assert_eq!(scan_victim_with(b, &[3, 2, 2, 9]), 1, "{}", b.label());
+            assert_eq!(scan_victim_with(b, &[7, 7, 7, 7]), 0, "{}", b.label());
+        }
+    }
+
+    #[test]
+    fn match_requires_live_way() {
+        for &b in &available() {
+            // tag present on a dead way only
+            assert_eq!(scan_match_with(b, &[9, 9], &[0, 1], 9), Some(1), "{}", b.label());
+            assert_eq!(scan_match_with(b, &[9, 3], &[0, 1], 9), None, "{}", b.label());
+        }
+    }
+
+    #[test]
+    fn force_refuses_unavailable_and_round_trips() {
+        let before = active();
+        assert!(force(Some(ScanBackend::Scalar)));
+        assert_eq!(active(), ScanBackend::Scalar);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(!force(Some(ScanBackend::Neon)));
+        assert!(force(None));
+        let _ = before;
+    }
+}

@@ -7,12 +7,20 @@
 //! for all seven contenders.  These tests are the correctness oracle
 //! that licenses the per-chunk hoists (epoch bookkeeping, fill-span /
 //! presence-filter queries) and the `const VERIFY` monomorphization.
+//!
+//! The second half of the suite repeats the sweep across TLB scan
+//! backends: every SIMD way-scan (`tlb::simd`) must be bit-identical
+//! to the forced-scalar fallback over the same four drivers.  CI also
+//! runs this whole file under `KATLB_FORCE_SCALAR=1`, which pins the
+//! env-var fallback path itself.
 
 use katlb::coordinator::{
     run_cell, run_multicore_cell, run_tenant_cell, BenchContext, Config, EngineKind, McParams,
     SchemeKind, TenantMixCtx,
 };
 use katlb::mem::addrspace::{MutationEvent, MutationOp, MutationSchedule};
+use katlb::sim::Metrics;
+use katlb::tlb::simd::{self, ScanBackend};
 use katlb::workloads::{benchmark, tenant_mixes};
 
 /// All seven contenders, as the churn/tenant experiments run them.
@@ -108,6 +116,48 @@ fn multicore_cells_match_reference() {
         );
         assert_eq!(a.per_core, b.per_core, "4-core per-core metrics diverged for {k:?}");
     }
+}
+
+/// Run every driver shape once for `k` under the currently forced
+/// scan backend and return the metrics in a fixed order: frozen,
+/// churn (mid-chunk events), tenant mix, 4-core multicore aggregate,
+/// then the four per-core metrics.
+fn all_driver_metrics(k: SchemeKind) -> Vec<Metrics> {
+    let mut out = Vec::new();
+    let mut ctx = BenchContext::build(benchmark("mcf").unwrap(), &cfg(), None).unwrap();
+    out.push(run_cell(&ctx, k).metrics);
+    ctx.schedule = mid_chunk_schedule(ctx.trace.len);
+    out.push(run_cell(&ctx, k).metrics);
+    let mx = TenantMixCtx::build(&tenant_mixes()[0], &cfg(), None).unwrap();
+    out.push(run_tenant_cell(&mx, k).metrics);
+    let r = run_multicore_cell(&ctx, k, &McParams::new(4));
+    out.push(r.cell.metrics);
+    out.extend(r.per_core);
+    out
+}
+
+#[test]
+fn simd_backends_match_forced_scalar_across_all_drivers() {
+    // the forced-scalar sweep is the baseline (this is also the
+    // suite's explicit scalar-fallback run); every SIMD backend the
+    // host offers must reproduce it bit-for-bit over all seven
+    // schemes and all four driver shapes.  Flipping the global
+    // override mid-binary is safe precisely because the backends are
+    // bit-identical — the property this test pins.
+    assert!(simd::force(Some(ScanBackend::Scalar)), "scalar is always available");
+    let baseline: Vec<(SchemeKind, Vec<Metrics>)> =
+        seven().into_iter().map(|k| (k, all_driver_metrics(k))).collect();
+    for b in simd::available() {
+        if b == ScanBackend::Scalar {
+            continue;
+        }
+        assert!(simd::force(Some(b)), "{} reported available", b.label());
+        for (k, want) in &baseline {
+            let got = all_driver_metrics(*k);
+            assert_eq!(&got, want, "{} scan diverged from scalar for {k:?}", b.label());
+        }
+    }
+    simd::force(None);
 }
 
 #[test]
