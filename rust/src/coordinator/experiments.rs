@@ -500,6 +500,9 @@ pub fn churn(cfg: &Config) -> Result<Vec<Table>> {
 /// switch-flushes, which is exactly the overcounting the pre-ASID
 /// flush-per-switch model baked in.
 pub fn tenants(cfg: &Config) -> Result<Vec<Table>> {
+    if let Some(n) = cfg.tenants {
+        return tenant_scale(cfg, n);
+    }
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
     let mut out = Vec::new();
     for mix in crate::workloads::tenant_mixes() {
@@ -543,6 +546,53 @@ pub fn tenants(cfg: &Config) -> Result<Vec<Table>> {
         out.push(t);
     }
     Ok(out)
+}
+
+/// The `--tenants n` scale battery: all seven contenders over an
+/// `n`-tenant Zipf-skewed population through the million-tenant scale
+/// driver ([`super::scale::run_tenant_scale`]) — ASID leases from a
+/// 16-bit allocator (generation rollover under pressure), the
+/// configured L2 fairness policy, verification ON.  Priced by
+/// [`CostModel::realistic`] like `repro cpi`, so the per-tenant
+/// p50/p99 translation-CPI tail includes what rollover flushes and
+/// fairness squeezes actually cost.  Schemes fan out over scoped
+/// threads (each run is independent and deterministic, so the table
+/// is reproducible regardless of the interleave).
+fn tenant_scale(cfg: &Config, tenants: usize) -> Result<Vec<Table>> {
+    let mut cfg = cfg.clone();
+    cfg.cost = CostModel::realistic();
+    let p = super::scale::ScaleParams::from_config(&cfg, tenants);
+    let mut t = Table::new(
+        &format!(
+            "Tenants at scale [{} tenants over {} ASIDs, fairness {:?}]: per-tenant CPI tail",
+            tenants, p.asid_slots, cfg.fairness
+        ),
+        &["accesses", "miss/1k", "rollovers", "recycles", "p50 CPI", "p99 CPI"],
+    );
+    let schemes = churn_schemes();
+    let (cfg_ref, p_ref) = (&cfg, &p);
+    let results: Vec<Result<super::scale::ScaleResult>> = std::thread::scope(|s| {
+        let handles: Vec<_> = schemes
+            .iter()
+            .map(|&k| s.spawn(move || super::scale::run_tenant_scale(cfg_ref, k, p_ref)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("scale run panicked")).collect()
+    });
+    for r in results {
+        let r = r?;
+        t.row(
+            &r.scheme,
+            vec![
+                r.metrics.accesses.to_string(),
+                per_1k(r.metrics.walks, r.metrics.accesses),
+                r.rollovers.to_string(),
+                r.recycles.to_string(),
+                format!("{:.3}", r.p50_cpi),
+                format!("{:.3}", r.p99_cpi),
+            ],
+        );
+    }
+    Ok(vec![t])
 }
 
 // ---------------------------------------------------------------------------
@@ -726,7 +776,7 @@ pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
 }
 
 // ---------------------------------------------------------------------------
-// Bench: engine-throughput harness (machine-readable BENCH_8.json)
+// Bench: engine-throughput harness (machine-readable BENCH_9.json)
 // ---------------------------------------------------------------------------
 
 /// Everything `repro bench` produced: the throughput table, the delta
@@ -754,7 +804,7 @@ struct Baseline {
 /// like the production fast path).  The *work* is fully reproducible —
 /// seeds, partitioning and metrics are deterministic, and the JSON
 /// records them next to the wall-clock numbers so regressions in
-/// either are diffable.  Writes `BENCH_8.json` in the working
+/// either are diffable.  Writes `BENCH_9.json` in the working
 /// directory and diffs against `cfg.bench_baseline` (default: the
 /// highest-numbered non-placeholder `BENCH_*.json`, read *before* the
 /// output is overwritten — so a `--engine reference` run followed by
@@ -763,7 +813,7 @@ struct Baseline {
 /// SIMD-vs-scalar delta; the active scan backend is recorded in the
 /// JSON's `scan` field).
 pub fn bench(cfg: &Config) -> Result<BenchReport> {
-    bench_to(cfg, "BENCH_8.json")
+    bench_to(cfg, "BENCH_9.json")
 }
 
 pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
@@ -1020,6 +1070,24 @@ mod tests {
                     assert_ne!(c.as_str(), "-", "{label} in {}: tenant never scheduled", t.title);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn tenant_scale_battery_reports_seven_schemes_with_tail_cpi() {
+        let mut cfg = tiny();
+        cfg.tenants = Some(40);
+        let tables = tenants(&cfg).unwrap();
+        assert_eq!(tables.len(), 1, "--tenants swaps the mixes for one scale table");
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 7, "seven schemes: {}", t.title);
+        for (label, cells) in &t.rows {
+            let accesses: u64 = cells[0].parse().unwrap();
+            let p50: f64 = cells[4].parse().unwrap();
+            let p99: f64 = cells[5].parse().unwrap();
+            assert!(accesses > 0, "{label}: no accesses");
+            assert!(p50 > 0.0, "{label}: zero median CPI");
+            assert!(p99 >= p50, "{label}: tail below median ({p99} < {p50})");
         }
     }
 

@@ -69,6 +69,7 @@
 pub mod experiments;
 pub mod multicore;
 pub mod report;
+pub mod scale;
 
 pub use multicore::{
     core_seed, part, run_multicore_cell, run_multicore_tenant_cell, McCellResult, McParams,
@@ -91,7 +92,7 @@ use crate::schemes::kaligned::KAligned;
 use crate::schemes::rmm::Rmm;
 use crate::schemes::{AnyScheme, ConcreteScheme, Scheme};
 use crate::sim::tenants::TenantSchedule;
-use crate::sim::{CostModel, Engine, Metrics};
+use crate::sim::{AsidAllocator, AsidMode, CostModel, Engine, Metrics};
 use crate::workloads::churn::{build_schedule, ChurnKind};
 use crate::workloads::tenants::TenantMix;
 use crate::workloads::tracegen::TraceParams;
@@ -311,6 +312,14 @@ pub struct Config {
     /// `repro bench` only: exit non-zero when any scheme × cores cell
     /// regresses >20% in accesses/sec vs the baseline (`--gate`)
     pub bench_gate: bool,
+    /// `repro tenants` only: `Some(n)` switches the battery from the
+    /// paper-style mixes to the million-tenant scale driver
+    /// ([`scale::run_tenant_scale`]) over an `n`-tenant population
+    /// (`--tenants n`)
+    pub tenants: Option<usize>,
+    /// per-ASID L2 fairness partitioning policy for the scale battery
+    /// (`--fairness none|quota|missprop`)
+    pub fairness: crate::tlb::FairnessPolicy,
 }
 
 impl Default for Config {
@@ -329,6 +338,8 @@ impl Default for Config {
             engine: EngineKind::Batched,
             bench_baseline: None,
             bench_gate: false,
+            tenants: None,
+            fairness: crate::tlb::FairnessPolicy::None,
         }
     }
 }
@@ -349,6 +360,8 @@ impl Config {
             engine: EngineKind::Batched,
             bench_baseline: None,
             bench_gate: false,
+            tenants: None,
+            fairness: crate::tlb::FairnessPolicy::None,
         }
     }
 
@@ -870,6 +883,11 @@ pub struct TenantMixCtx {
     /// hot-path selector for the mix's engines (from
     /// [`Config::engine`])
     pub engine: EngineKind,
+    /// ASID allocator slot-space size: `Some(slots)` leases hardware
+    /// tags through an [`AsidAllocator`] (generation rollover when the
+    /// space wraps); `None` is the identity map (tenant index == ASID),
+    /// bit-identical to the pre-allocator pipeline
+    pub asid_slots: Option<usize>,
 }
 
 impl TenantMixCtx {
@@ -896,6 +914,7 @@ impl TenantMixCtx {
             epoch: cfg.epoch.max(1),
             cost: cfg.cost,
             engine: cfg.engine,
+            asid_slots: None,
         })
     }
 
@@ -913,6 +932,7 @@ impl TenantMixCtx {
             epoch,
             cost,
             engine,
+            asid_slots: None,
         }
     }
 
@@ -952,7 +972,12 @@ pub fn drive_tenant_span<S: Scheme>(
     let mut pos = start;
     while pos < end {
         while ei < evs.len() && evs[ei].at == pos {
-            eng.switch_to(Asid::from_index(evs[ei].tenant));
+            // a fresh lease (allocator mode only) means the tag's lane
+            // was dropped: re-derive it from the incoming tenant's
+            // space before any of its accesses run
+            if let Some(a) = eng.switch_to_tenant(evs[ei].tenant) {
+                eng.refresh_lane(a, spaces[evs[ei].tenant].view());
+            }
             ei += 1;
         }
         let span_end = if ei < evs.len() { evs[ei].at.min(end) } else { end };
@@ -971,9 +996,14 @@ pub fn drive_tenant_span<S: Scheme>(
             // shard registration (exact shard-invariance of per-ASID
             // derived state under tenant churn).
             for (o, space) in spaces.iter().enumerate() {
-                if o != t {
-                    eng.refresh_lane(Asid::from_index(o), space.view());
+                if o == t {
+                    continue;
                 }
+                // allocator mode: only tenants holding a live lease
+                // have a lane to refresh — a leaseless tenant's lane is
+                // re-derived when it next acquires a tag
+                let Some(a) = eng.asid_of(o) else { continue };
+                eng.refresh_lane(a, space.view());
             }
         }
         local[t] = lb;
@@ -1018,12 +1048,46 @@ fn run_tenant_cell_shard_g<S: ConcreteScheme>(
     // derived from each tenant's own histogram/mapping
     let scheme = S::from_any(kind.build(spaces[0].mapping(), spaces[0].hist()));
     let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
+    if let Some(slots) = mix.asid_slots {
+        // lease state just before `start` is a pure function of the
+        // touch sequence: the initial tenant (tenant 0 runs from index
+        // 0) plus every switch with `at < start`, replayed with no
+        // engine attached — the shard starts cold, so the rollovers
+        // and sweeps the prefix implies have nothing to clean here
+        // (they were delivered live by the shards that own them)
+        let mut alloc = AsidAllocator::new(slots, AsidMode::Rollover);
+        if start > 0 {
+            alloc.touch(0);
+            for ev in &mix.schedule.events()[..mix.schedule.first_at_or_after(start)] {
+                alloc.touch(ev.tenant);
+            }
+        }
+        let live = alloc.live();
+        eng = eng.with_allocator(alloc);
+        if start == 0 {
+            // cold start: lease the initial tenant silently and derive
+            // its lane; everyone else leases on first schedule
+            if let Some(a) = eng.seed_tenant(0) {
+                eng.refresh_lane(a, spaces[0].view());
+            }
+        } else {
+            // re-derive every live lease's lane from its owner's space
+            // (the allocator-world analogue of registering all tenants)
+            for &(t, a) in &live {
+                eng.register_tenant_for(t, a, spaces[t].view());
+            }
+            let cur = mix.schedule.active_before(start);
+            let a = eng.asid_of(cur).expect("the pre-boundary tenant was touched last");
+            eng.set_tenant_for(cur, a);
+        }
+    } else {
+        for (t, space) in spaces.iter().enumerate().skip(1) {
+            eng.register_tenant(Asid::from_index(t), space.view());
+        }
+        eng.set_tenant(Asid::from_index(mix.schedule.active_before(start)));
+    }
     eng.verify = true;
     eng.reference = mix.engine == EngineKind::Reference;
-    for (t, space) in spaces.iter().enumerate().skip(1) {
-        eng.register_tenant(Asid::from_index(t), space.view());
-    }
-    eng.set_tenant(Asid::from_index(mix.schedule.active_before(start)));
     drive_tenant_span(mix, &mut spaces, &mut eng, start, end)
         .expect("tenant trace stream (mappings validated at context build)");
     let (metrics, scheme) = eng.finish();

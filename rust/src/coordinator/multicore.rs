@@ -57,7 +57,11 @@
 //! each core's share of the *active tenant's* stream from the tenant's
 //! per-core partitioned position.  Tenant spaces are frozen (asserted)
 //! so no bus traffic arises; the per-core engines still exercise the
-//! full ASID-tagged switch/flush machinery.
+//! full ASID-tagged switch/flush machinery.  When the mix pins
+//! `asid_slots`, each core carries its own [`AsidAllocator`]; gang
+//! delivery keeps the allocators in lockstep, so generation rollovers
+//! hit every core at the same quantum boundary and `cores = 1` stays
+//! bit-identical to the serial tenant driver.
 
 use super::{merge_predictor, BenchContext, CellResult, Config, SchemeKind, TenantMixCtx};
 use crate::error::Result;
@@ -65,7 +69,7 @@ use crate::mem::addrspace::{AddressSpace, MutationEvent};
 use crate::runtime::{NativeSource, PrefetchStream, TraceStream, VpnRemap};
 use crate::schemes::{ConcreteScheme, Scheme};
 use crate::sim::multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
-use crate::sim::{Engine, InvalOutcome, Metrics};
+use crate::sim::{AsidAllocator, AsidMode, Engine, InvalOutcome, Metrics};
 use crate::{Asid, Vpn};
 
 /// Per-core trace seed: core 0 keeps the benchmark's seed (the serial
@@ -249,10 +253,20 @@ pub(crate) fn run_multicore_tenant_cell_g<S: ConcreteScheme>(
             let mut eng = Engine::new(scheme).with_epoch(mix.epoch).with_cost(mix.cost);
             eng.verify = p.verify;
             eng.reference = mix.engine == super::EngineKind::Reference;
-            for (t, space) in spaces.iter().enumerate().skip(1) {
-                eng.register_tenant(Asid::from_index(t), space.view());
+            if let Some(slots) = mix.asid_slots {
+                // gang scheduling delivers every switch to every core,
+                // so per-core allocators stay in deterministic lockstep
+                // (identical lease/rollover sequences on all cores)
+                eng = eng.with_allocator(AsidAllocator::new(slots, AsidMode::Rollover));
+                if let Some(a) = eng.seed_tenant(0) {
+                    eng.refresh_lane(a, spaces[0].view());
+                }
+            } else {
+                for (t, space) in spaces.iter().enumerate().skip(1) {
+                    eng.register_tenant(Asid::from_index(t), space.view());
+                }
+                eng.set_tenant(Asid::from_index(mix.schedule.active_before(0)));
             }
-            eng.set_tenant(Asid::from_index(mix.schedule.active_before(0)));
             CoreState { index: c, eng, buf: Vec::new() }
         })
         .collect();
@@ -264,9 +278,14 @@ pub(crate) fn run_multicore_tenant_cell_g<S: ConcreteScheme>(
     let mut pos = 0u64;
     while pos < end {
         while ei < evs.len() && evs[ei].at == pos {
-            // gang delivery: every core pays the switch
+            // gang delivery: every core pays the switch (and, under
+            // ASID recycling, every core's allocator advances through
+            // the same lease — rollovers land on all cores at the same
+            // quantum boundary)
             for core in cores.iter_mut() {
-                core.eng.switch_to(Asid::from_index(evs[ei].tenant));
+                if let Some(a) = core.eng.switch_to_tenant(evs[ei].tenant) {
+                    core.eng.refresh_lane(a, spaces[evs[ei].tenant].view());
+                }
             }
             ei += 1;
         }
@@ -506,9 +525,13 @@ fn run_tenant_quantum<S: Scheme + Send>(
         }
         if core.eng.take_epoch_pending() {
             for (o, space) in spaces.iter().enumerate() {
-                if o != t {
-                    core.eng.refresh_lane(Asid::from_index(o), space.view());
+                if o == t {
+                    continue;
                 }
+                // only tenants holding a live ASID lease have a lane to
+                // refresh; recycled tenants re-derive on their next run
+                let Some(a) = core.eng.asid_of(o) else { continue };
+                core.eng.refresh_lane(a, space.view());
             }
         }
         Ok(())

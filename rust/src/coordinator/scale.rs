@@ -1,0 +1,238 @@
+//! Million-tenant scale driver: one TLB hierarchy time-shared by a
+//! tenant population that vastly exceeds the hardware ASID space.
+//!
+//! The per-mix tenant cells ([`super::run_tenant_cell`]) build a full
+//! [`super::BenchContext`] per tenant — perfect for the handful of
+//! tenants in the paper-style mixes, hopeless for a million.  The
+//! scale driver instead shares a small set of contiguity *profiles*
+//! (dense / fragmented / medium — the same diversity the mixes pair)
+//! across the whole population: tenant `t` runs profile `t mod 3`'s
+//! address space with its own decorrelated trace stream and its own
+//! ASID lease.  Per-tenant state is three machine words (stream
+//! position plus the metrics row), so populations in the millions fit
+//! comfortably.
+//!
+//! Scheduling comes from [`crate::workloads::tenant_skew`]: a Zipf
+//! hot set rescheduled constantly over a single in-order sweep of the
+//! whole population.  The sweep marches through the 16-bit tag space
+//! and forces generation rollovers (a million tenants roll the
+//! allocator over ~15 times), while the hot set holds leases across
+//! them — exactly the lease dynamics the ASID subsystem exists for.
+//!
+//! Verification stays ON: profiles alternate per tenant, so a stale
+//! translation surviving a recycled tag maps through a *different*
+//! profile's frames for two out of three neighbour pairs and panics
+//! in the engine's stale-PPN check.
+
+use super::multicore::core_seed;
+use super::{BenchContext, Config, EngineKind, SchemeKind};
+use crate::error::Result;
+use crate::mem::addrspace::AddressSpace;
+use crate::runtime::{NativeSource, TraceStream, VpnRemap};
+use crate::sim::{AsidAllocator, AsidMode, Engine, Metrics};
+use crate::tlb::FairnessPolicy;
+use crate::workloads::{benchmark, zipf_quanta};
+
+/// The shared contiguity profiles (dense, fragmented, medium — the
+/// Figure 2/3 tiers the tenant mixes pair against each other).
+pub const SCALE_PROFILES: [&str; 3] = ["libquantum", "sjeng", "povray"];
+
+/// Knobs for one scale run.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleParams {
+    /// population size (tenant ids `0..tenants`)
+    pub tenants: usize,
+    /// accesses per scheduled quantum
+    pub quantum: u64,
+    /// hardware ASID slot-space size leased by the allocator
+    pub asid_slots: usize,
+    /// lease policy under exhaustion (rollover vs the wide-tag oracle)
+    pub mode: AsidMode,
+    /// L2 fairness partitioning policy
+    pub fairness: FairnessPolicy,
+    /// seed of the skewed schedule
+    pub seed: u64,
+    /// per-access stale-PPN verification
+    pub verify: bool,
+}
+
+impl ScaleParams {
+    pub fn new(tenants: usize) -> Self {
+        ScaleParams {
+            tenants: tenants.max(1),
+            quantum: 64,
+            asid_slots: 1 << 16,
+            mode: AsidMode::Rollover,
+            fairness: FairnessPolicy::None,
+            seed: 0x5CA1E,
+            verify: true,
+        }
+    }
+
+    /// Derive from a [`Config`] (`fairness`; the population size comes
+    /// from the CLI's `--tenants`).
+    pub fn from_config(cfg: &Config, tenants: usize) -> Self {
+        ScaleParams { fairness: cfg.fairness, ..ScaleParams::new(tenants) }
+    }
+}
+
+/// One scale run's outcome: the merged metrics plus the allocator's
+/// pressure counters and the per-tenant translation-CPI tail.
+#[derive(Clone, Debug)]
+pub struct ScaleResult {
+    pub scheme: String,
+    pub kind: SchemeKind,
+    pub tenants: usize,
+    pub metrics: Metrics,
+    /// generation rollovers (broadcast flushes) the run forced
+    pub rollovers: u64,
+    /// recycled leases (tags handed to a new tenant after use)
+    pub recycles: u64,
+    /// median per-tenant translation CPI (cycles / accesses)
+    pub p50_cpi: f64,
+    /// 99th-percentile per-tenant translation CPI — the tail a hot
+    /// tenant pays when rollovers and fairness partitions squeeze it
+    pub p99_cpi: f64,
+}
+
+/// Nearest-rank percentile over an unsorted sample (consumes it).
+fn percentile(mut xs: Vec<f64>, pct: usize) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_unstable_by(f64::total_cmp);
+    xs[(xs.len() - 1) * pct / 100]
+}
+
+/// Run one scheme over the scaled population.  Deterministic in
+/// `(cfg, kind, p)`; the profile contexts are built fresh per call.
+pub fn run_tenant_scale(cfg: &Config, kind: SchemeKind, p: &ScaleParams) -> Result<ScaleResult> {
+    let profiles: Vec<BenchContext> = SCALE_PROFILES
+        .iter()
+        .map(|n| {
+            let w = benchmark(n).expect("scale profile is a known benchmark");
+            BenchContext::build(w, cfg, None)
+        })
+        .collect::<Result<_>>()?;
+    let spaces: Vec<AddressSpace> =
+        profiles.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    let remaps: Vec<VpnRemap<'_>> =
+        spaces.iter().map(|s| VpnRemap::wrapping(s.mapping())).collect::<Result<_>>()?;
+
+    let mut eng = Engine::new(kind.build_boxed(spaces[0].mapping(), spaces[0].hist()))
+        .with_epoch(cfg.epoch.max(1))
+        .with_cost(cfg.cost)
+        .with_allocator(AsidAllocator::new(p.asid_slots, p.mode));
+    eng.verify = p.verify;
+    eng.reference = cfg.engine == EngineKind::Reference;
+    eng.set_fairness(p.fairness);
+    if let Some(a) = eng.seed_tenant(0) {
+        eng.refresh_lane(a, spaces[0].view());
+    }
+
+    let quanta = zipf_quanta(p.tenants, p.seed);
+    let chunk = (p.quantum as usize).clamp(1, 4096);
+    let mut pos = vec![0u64; p.tenants];
+    let mut buf: Vec<crate::Vpn> = Vec::new();
+    for &q in &quanta {
+        let t = q as usize;
+        let prof = t % SCALE_PROFILES.len();
+        if let Some(a) = eng.switch_to_tenant(t) {
+            eng.refresh_lane(a, spaces[prof].view());
+        }
+        let ctx = &profiles[prof];
+        let src = NativeSource::new(core_seed(ctx.trace.seed, t), ctx.trace.params, chunk);
+        let mut stream =
+            TraceStream::with_buf(src, pos[t], pos[t] + p.quantum, std::mem::take(&mut buf));
+        while let Some(chunk) = stream.next_chunk()? {
+            remaps[prof].apply(chunk);
+            eng.run_chunk(chunk, spaces[prof].view());
+        }
+        buf = stream.into_buf();
+        pos[t] += p.quantum;
+        // profile spaces are frozen, so a fired epoch hook has nothing
+        // to re-derive for descheduled leases (their lanes are pure
+        // functions of their unchanging profile spaces) — just clear it
+        let _ = eng.take_epoch_pending();
+    }
+
+    let (rollovers, recycles) = eng.alloc_stats().expect("scale engine runs with an allocator");
+    let (metrics, scheme) = eng.finish();
+    let cpis: Vec<f64> = (0..p.tenants)
+        .map(|t| metrics.tenant_row(t))
+        .filter(|r| r[0] > 0)
+        .map(|r| r[2] as f64 / r[0] as f64)
+        .collect();
+    Ok(ScaleResult {
+        scheme: scheme.name(),
+        kind,
+        tenants: p.tenants,
+        metrics,
+        rollovers,
+        recycles,
+        p50_cpi: percentile(cpis.clone(), 50),
+        p99_cpi: percentile(cpis, 99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params(tenants: usize) -> (Config, ScaleParams) {
+        // price translations so the CPI tail is non-degenerate
+        let cfg = Config {
+            max_ws_pages: Some(4096),
+            cost: crate::sim::CostModel::realistic(),
+            ..Config::quick()
+        };
+        let mut p = ScaleParams::new(tenants);
+        p.quantum = 8;
+        (cfg, p)
+    }
+
+    #[test]
+    fn small_population_reports_tail_cpi() {
+        let (cfg, p) = quick_params(50);
+        let r = run_tenant_scale(&cfg, SchemeKind::Base, &p).unwrap();
+        assert_eq!(r.tenants, 50);
+        assert!(r.metrics.accesses > 0);
+        assert!(r.p50_cpi > 0.0);
+        assert!(r.p99_cpi >= r.p50_cpi, "p99 {} < p50 {}", r.p99_cpi, r.p50_cpi);
+        // 50 tenants fit the default slot space: no pressure
+        assert_eq!((r.rollovers, r.recycles), (0, 0));
+        // every tenant ran (the tail sweep), so every row is populated
+        for t in 0..50 {
+            assert!(r.metrics.tenant_row(t)[0] > 0, "tenant {t} never ran");
+        }
+    }
+
+    #[test]
+    fn tag_pressure_forces_rollovers() {
+        let (cfg, mut p) = quick_params(300);
+        p.asid_slots = 64;
+        let r = run_tenant_scale(&cfg, SchemeKind::Cluster, &p).unwrap();
+        assert!(r.rollovers >= 1, "300 tenants over 64 slots must roll over");
+        assert!(r.recycles > 0);
+        assert!(r.metrics.shootdowns >= r.rollovers);
+    }
+
+    #[test]
+    fn fairness_policies_run_clean() {
+        for fairness in [FairnessPolicy::WayQuota(2), FairnessPolicy::MissProportional] {
+            let (cfg, mut p) = quick_params(120);
+            p.asid_slots = 64;
+            p.fairness = fairness;
+            let r = run_tenant_scale(&cfg, SchemeKind::KAligned(4), &p).unwrap();
+            assert!(r.metrics.accesses > 0, "{fairness:?}");
+            assert!(r.p99_cpi > 0.0, "{fairness:?}");
+        }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(vec![3.0, 1.0, 2.0], 50), 2.0);
+        assert_eq!(percentile(vec![1.0, 2.0], 99), 2.0);
+        assert_eq!(percentile(Vec::new(), 99), 0.0);
+    }
+}

@@ -5,7 +5,7 @@
 //!   repro <command> [--quick] [--no-xla] [--trace-len N] [--workers N]
 //!                   [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]
 //!                   [--engine batched|reference] [--baseline BENCH_N.json]
-//!                   [--gate]
+//!                   [--gate] [--tenants N] [--fairness none|quota|missprop]
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
@@ -13,7 +13,13 @@
 //!                (mmap/munmap/remap/THP events; verification on)
 //!   tenants    — multi-tenant ASID-tagged TLBs: per-tenant and
 //!                aggregate miss rates + context-switch counts under
-//!                seeded tenant scheduling (verification on)
+//!                seeded tenant scheduling (verification on);
+//!                --tenants N swaps in the million-tenant scale
+//!                battery — N tenants lease 16-bit ASIDs through the
+//!                generation-rollover allocator under a Zipf-skewed
+//!                schedule, reporting rollovers/recycles and the
+//!                per-tenant p50/p99 translation-CPI tail
+//!                (--fairness picks the L2 partitioning policy)
 //!   cpi        — cycle-accurate cost model over the churn + tenant
 //!                batteries: per-scheme translation cycles per access
 //!                split into hit/walk/shootdown/switch
@@ -22,7 +28,7 @@
 //!                1/8/64/256 cores (or --cores N): per-core miss
 //!                spread, IPI counts, responder fan-out, CPI
 //!   bench      — reproducible throughput harness (scheme × cores);
-//!                writes machine-readable BENCH_8.json (including the
+//!                writes machine-readable BENCH_9.json (including the
 //!                active TLB scan backend) and prints a delta table
 //!                against --baseline (default: newest committed
 //!                BENCH_*.json); --gate fails the run on a >20%
@@ -35,6 +41,7 @@
 use katlb::coordinator::{experiments, Config, EngineKind};
 use katlb::error::{bail, Result};
 use katlb::runtime::Runtime;
+use katlb::tlb::FairnessPolicy;
 use std::time::Instant;
 
 fn parse_args() -> Result<(String, Config)> {
@@ -105,6 +112,23 @@ fn parse_args() -> Result<(String, Config)> {
                 )
             }
             "--gate" => cfg.bench_gate = true,
+            "--tenants" => {
+                cfg.tenants = Some(
+                    args.next()
+                        .ok_or_else(|| katlb::anyhow!("--tenants needs a value"))?
+                        .parse::<usize>()?
+                        .max(1),
+                )
+            }
+            "--fairness" => {
+                let v = args.next().ok_or_else(|| katlb::anyhow!("--fairness needs a value"))?;
+                cfg.fairness = match v.as_str() {
+                    "none" => FairnessPolicy::None,
+                    "quota" => FairnessPolicy::WayQuota(2),
+                    "missprop" => FairnessPolicy::MissProportional,
+                    other => bail!("--fairness must be none|quota|missprop, got {other}"),
+                };
+            }
             other => bail!("unknown flag {other}"),
         }
     }
@@ -135,7 +159,8 @@ fn main() -> Result<()> {
                 "usage: repro <fig1|fig2|fig3|fig8|fig9|fig10|table4|table5|table6|initcost|ablate|churn|tenants|cpi|cores|bench|all|smoke> \
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
                  [--shards N] [--chunk N] [--cores N] [--coalesce-ipi] \
-                 [--engine batched|reference] [--baseline BENCH_N.json] [--gate]"
+                 [--engine batched|reference] [--baseline BENCH_N.json] [--gate] \
+                 [--tenants N] [--fairness none|quota|missprop]"
             );
             return Ok(());
         }

@@ -49,6 +49,9 @@ pub struct Anchor {
     tlb: SetAssocTlb<Entry>,
     /// per-tenant distances; `cur` indexes the running tenant's
     lanes: Vec<Lane>,
+    /// asid -> lane index: context switches under ASID recycling touch
+    /// thousands of lanes, so lane selection must not scan `lanes`
+    index: std::collections::HashMap<Asid, usize>,
     cur: usize,
     /// construction-time distance — the starting point for tenants
     /// registered later
@@ -69,6 +72,7 @@ impl Anchor {
         Anchor {
             tlb: SetAssocTlb::new(1024, 8),
             lanes: vec![Lane { asid: Asid::ZERO, dist, log2d: dist.trailing_zeros() }],
+            index: std::collections::HashMap::from([(Asid::ZERO, 0)]),
             cur: 0,
             init_dist: dist,
             mode,
@@ -108,14 +112,15 @@ impl Anchor {
     /// time distance on first sight.  Does not touch the ASID register
     /// (`cur`).
     fn lane_index(&mut self, asid: Asid) -> usize {
-        match self.lanes.iter().position(|l| l.asid == asid) {
-            Some(i) => i,
+        match self.index.get(&asid) {
+            Some(&i) => i,
             None => {
                 self.lanes.push(Lane {
                     asid,
                     dist: self.init_dist,
                     log2d: self.init_dist.trailing_zeros(),
                 });
+                self.index.insert(asid, self.lanes.len() - 1);
                 self.lanes.len() - 1
             }
         }
@@ -292,6 +297,26 @@ impl Scheme for Anchor {
     fn max_fill_span(&self) -> u64 {
         self.span_hwm
     }
+
+    /// ASID recycling: the dead tenant's selected distance must not be
+    /// inherited by the tag's new owner — the lane restarts at the
+    /// construction-time distance (exactly what a newly-created lane
+    /// gets) and Dynamic mode re-selects at the owner's next epoch.
+    /// Optionally sweeps the dead tenant's entries; never creates a
+    /// lane.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if let Some(&i) = self.index.get(&asid) {
+            self.lanes[i].dist = self.init_dist;
+            self.lanes[i].log2d = self.init_dist.trailing_zeros();
+        }
+        if sweep {
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.tlb.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]
@@ -421,6 +446,26 @@ mod tests {
         for v in 10..32u64 {
             assert_eq!(s.lookup(v), Outcome::Miss { probes: 1 }, "stale at {v}");
         }
+    }
+
+    #[test]
+    fn drop_lane_resets_distance_and_sweeps_entries() {
+        let (m, pt) = chunked_identityish(&[8, 8, 8, 8]);
+        let mut s = Anchor::new(1024, Mode::Dynamic);
+        s.switch_to(Asid(1));
+        let hist = ContigHistogram::from_sizes(&vec![8u64; 100]);
+        s.epoch(SpaceView::new(&pt, &hist, &m));
+        assert!(s.dist() <= 16, "precondition: dynamic selection moved the distance");
+        s.fill(4, &pt);
+        assert!(s.lookup(4).is_hit());
+        // the tag is recycled to a new tenant: the lane restarts at the
+        // construction distance and the dead tenant's entries are gone
+        s.drop_lane(Asid(1), true);
+        assert_eq!(s.dist(), 1024, "recycled lane must not inherit the distance");
+        assert!(!s.lookup(4).is_hit(), "recycled tag's entries must be swept");
+        let lanes = s.lanes.len();
+        s.drop_lane(Asid(9), true);
+        assert_eq!(s.lanes.len(), lanes, "drop_lane never creates a lane");
     }
 
     #[test]

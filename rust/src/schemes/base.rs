@@ -134,6 +134,18 @@ impl Scheme for BaseL2 {
     fn asid_tagged(&self) -> bool {
         true
     }
+
+    /// ASID recycling: Base keeps no per-ASID derived state, so only
+    /// the (optional) precise sweep of the dead tenant's entries.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if sweep {
+            self.tlb.retain(|tag, _| super::tag_asid(tag) != asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.tlb.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]

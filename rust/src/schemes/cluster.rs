@@ -206,6 +206,21 @@ impl Scheme for Cluster {
     fn asid_tagged(&self) -> bool {
         true
     }
+
+    /// ASID recycling: Cluster keeps no per-ASID derived state, so
+    /// only the (optional) precise sweep of both arrays — cluster tags
+    /// are `group | asid_bits(asid)`, so [`tag_asid`] decodes them too.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if sweep {
+            self.reg.retain(|tag, _| tag_asid(tag) != asid);
+            self.clu.retain(|tag, _| tag_asid(tag) != asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.reg.set_fairness(policy);
+        self.clu.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]

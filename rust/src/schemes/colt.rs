@@ -217,6 +217,19 @@ impl Scheme for Colt {
     fn asid_tagged(&self) -> bool {
         true
     }
+
+    /// ASID recycling: COLT keeps no per-ASID derived state, so only
+    /// the (optional) precise sweep — regular, huge *and* group entries
+    /// all decode their owner via [`tag_asid`].
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if sweep {
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.tlb.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]

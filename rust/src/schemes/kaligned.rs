@@ -55,6 +55,9 @@ pub struct KAligned {
     tlb: SetAssocTlb<Entry>,
     /// per-tenant K sets + predictors; `cur` indexes the running one
     lanes: Vec<Lane>,
+    /// asid -> lane index: context switches under ASID recycling touch
+    /// thousands of lanes, so lane selection must not scan `lanes`
+    index: std::collections::HashMap<Asid, usize>,
     cur: usize,
     psi: usize,
     theta: f64,
@@ -78,6 +81,7 @@ impl KAligned {
         KAligned {
             tlb: SetAssocTlb::new(1024, 8),
             lanes: vec![Lane { asid: Asid::ZERO, ks, predictor: AlignPredictor::new() }],
+            index: std::collections::HashMap::from([(Asid::ZERO, 0)]),
             cur: 0,
             psi,
             theta: THETA,
@@ -139,10 +143,11 @@ impl KAligned {
     /// first derivation) on first sight.  Does not touch the ASID
     /// register (`cur`).
     fn lane_index(&mut self, asid: Asid) -> usize {
-        match self.lanes.iter().position(|l| l.asid == asid) {
-            Some(i) => i,
+        match self.index.get(&asid) {
+            Some(&i) => i,
             None => {
                 self.lanes.push(Lane { asid, ks: Vec::new(), predictor: AlignPredictor::new() });
+                self.index.insert(asid, self.lanes.len() - 1);
                 self.lanes.len() - 1
             }
         }
@@ -361,12 +366,34 @@ impl Scheme for KAligned {
     fn max_fill_span(&self) -> u64 {
         self.span_hwm
     }
+
+    /// ASID recycling: the dead tenant's K set and predictor must not
+    /// be inherited by the tag's new owner — hollow the lane out (the
+    /// new owner's first epoch/refresh re-derives K from *its* own
+    /// histogram) and optionally sweep the dead tenant's entries.
+    /// Never creates a lane: a tag with no lane has nothing to
+    /// inherit.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if let Some(&i) = self.index.get(&asid) {
+            self.lanes[i].ks = Vec::new();
+            self.lanes[i].predictor.reset();
+        }
+        if sweep {
+            self.tlb.retain(|tag, _| tag_asid(tag) != asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.tlb.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mem::mapping::MemoryMapping;
+
+    const A0: Asid = Asid(0);
 
     fn figure4_pt() -> PageTable {
         let ppns = [8u64, 9, 2, 0, 4, 5, 6, 3, 10, 11, 12, 13, 14, 15, 1, 7];
@@ -504,6 +531,23 @@ mod tests {
         assert!(!s.lookup(5).is_hit(), "tenant 1 shot down on K change");
         s.switch_to(Asid(0));
         assert_eq!(s.lookup(5).ppn(), Some(105), "tenant 0 survived tenant 1's K change");
+    }
+
+    #[test]
+    fn drop_lane_resets_k_and_sweeps_entries() {
+        let m = MemoryMapping::new((0..16u64).map(|v| (v, v + 100)).collect());
+        let pt = PageTable::from_mapping(&m);
+        let mut s = KAligned::with_k(vec![4], 4);
+        s.fill(3, &pt);
+        assert!(s.lookup(5).is_hit());
+        // the allocator recycles Asid(0) to a new tenant
+        s.drop_lane(A0, true);
+        assert_eq!(s.kset(), Some(vec![]), "recycled tag re-derives K from scratch");
+        assert!(!s.lookup(5).is_hit(), "dead tenant's entries swept");
+        // drop_lane never creates lanes for unseen tags
+        let lanes_before = s.lanes.len();
+        s.drop_lane(Asid(7), true);
+        assert_eq!(s.lanes.len(), lanes_before);
     }
 
     #[test]

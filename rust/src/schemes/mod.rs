@@ -207,6 +207,31 @@ pub trait Scheme {
     /// cycle charge.  Default: nothing (TLB-only schemes keep no such
     /// state).
     fn os_sync_range(&mut self, _asid: Asid, _vstart: Vpn, _len: u64) {}
+
+    /// The ASID allocator recycled hardware tag `asid` to a *new*
+    /// tenant: any per-ASID derived lane (K set, anchor distance, RMM
+    /// OS table) keyed by that tag belongs to the dead tenant and must
+    /// be reset — never inherited by the tag's next owner.  When
+    /// `sweep` is set the TLB arrays may still hold the dead tenant's
+    /// entries under this tag (no broadcast flush cleaned them since)
+    /// and those must go too, precisely.  Must not *create* lane state
+    /// for tags it has never seen.  The default models untagged
+    /// hardware conservatively: no lanes to reset, and a sweep — which
+    /// cannot be scoped without tags — becomes a whole-TLB flush.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        let _ = asid;
+        if sweep {
+            self.flush();
+        }
+    }
+
+    /// Select the shared-L2 capacity-partitioning policy (multi-tenant
+    /// fairness).  Default: ignored — schemes without a set-associative
+    /// L2 array (or tests that never partition) keep the unpartitioned
+    /// LRU behavior of [`crate::tlb::FairnessPolicy::None`].
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        let _ = policy;
+    }
 }
 
 /// Forwarding impl so `Box<S>` (including `Box<dyn Scheme>`) is itself
@@ -273,6 +298,14 @@ impl<S: Scheme + ?Sized> Scheme for Box<S> {
 
     fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         (**self).os_sync_range(asid, vstart, len)
+    }
+
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        (**self).drop_lane(asid, sweep)
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        (**self).set_fairness(policy)
     }
 }
 
@@ -369,6 +402,14 @@ impl Scheme for AnyScheme {
 
     fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         on_scheme!(self, s => s.os_sync_range(asid, vstart, len))
+    }
+
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        on_scheme!(self, s => s.drop_lane(asid, sweep))
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        on_scheme!(self, s => s.set_fairness(policy))
     }
 }
 

@@ -33,6 +33,9 @@ pub struct Rmm {
     /// vstart (the table the OS maintains per address space; consulted
     /// at fill time only).  Index `cur` is the running tenant's.
     tables: Vec<(Asid, Vec<Chunk>)>,
+    /// asid -> table index: switches under ASID recycling touch
+    /// thousands of tables, so selection must not scan `tables`
+    index: std::collections::HashMap<Asid, usize>,
     cur: usize,
     /// the ASID register
     asid: Asid,
@@ -52,6 +55,7 @@ impl Rmm {
             reg: SetAssocTlb::new(1024, 8),
             ranges: RangeTlb::new(32),
             tables: vec![(Asid::ZERO, os_table(mapping))],
+            index: std::collections::HashMap::from([(Asid::ZERO, 0)]),
             cur: 0,
             asid: Asid::ZERO,
         }
@@ -75,10 +79,11 @@ impl Rmm {
     /// Index of `asid`'s OS table, created empty on first sight.
     /// Does not touch the ASID register (`cur`).
     fn table_index(&mut self, asid: Asid) -> usize {
-        match self.tables.iter().position(|(a, _)| *a == asid) {
-            Some(i) => i,
+        match self.index.get(&asid) {
+            Some(&i) => i,
             None => {
                 self.tables.push((asid, Vec::new()));
+                self.index.insert(asid, self.tables.len() - 1);
                 self.tables.len() - 1
             }
         }
@@ -259,6 +264,26 @@ impl Scheme for Rmm {
     fn os_sync_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
         self.trim_table(asid, vstart, len);
     }
+
+    /// ASID recycling: the dead tenant's OS table must not be consulted
+    /// by the tag's new owner — it is cleared (exactly what a
+    /// newly-created table holds) and the owner re-derives it via
+    /// `refresh_lane`.  Optionally sweeps the dead tenant's regular
+    /// entries and CAM ranges; never creates a table.
+    fn drop_lane(&mut self, asid: Asid, sweep: bool) {
+        if let Some(&i) = self.index.get(&asid) {
+            self.tables[i].1 = Vec::new();
+        }
+        if sweep {
+            self.reg.retain(|tag, _| super::tag_asid(tag) != asid);
+            self.ranges.evict_asid(asid);
+        }
+    }
+
+    fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.reg.set_fairness(policy);
+        self.ranges.set_fairness(policy);
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +417,29 @@ mod tests {
         s.switch_to(Asid(0));
         assert!(s.lookup(10).is_hit(), "tenant 0 retained across switches");
         assert_eq!(s.chunks().len(), 1, "tenant 0's OS table untouched");
+    }
+
+    #[test]
+    fn drop_lane_clears_os_table_and_sweeps_entries() {
+        let m = chunked_mapping(&[600]);
+        let pt = PageTable::from_mapping(&m);
+        let mut s = Rmm::new(&m);
+        s.fill(10, &pt);
+        assert!(s.lookup(10).is_hit());
+        // tag recycled: the dead tenant's OS table and entries vanish,
+        // so a fill by the new owner cannot resurrect a stale range
+        s.drop_lane(A0, true);
+        assert!(s.chunks().is_empty(), "recycled table must be cleared");
+        assert!(!s.lookup(10).is_hit(), "recycled tag's ranges must be swept");
+        s.fill(10, &pt);
+        assert!(s.ranges.lookup(A0, 10).is_none(), "cleared table fills no range");
+        let tables = s.tables.len();
+        s.drop_lane(Asid(9), true);
+        assert_eq!(s.tables.len(), tables, "drop_lane never creates a table");
+        // the owner re-derives via refresh_lane, as the engine does
+        let hist = crate::mem::histogram::ContigHistogram::from_mapping(&m);
+        s.refresh_lane(A0, SpaceView::new(&pt, &hist, &m));
+        assert_eq!(s.chunks().len(), 1);
     }
 
     #[test]

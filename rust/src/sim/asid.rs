@@ -1,0 +1,324 @@
+//! Linux-style ASID allocation: tenant counts vastly exceed the `u16`
+//! hardware tag space, so tags are *leased*, not owned.
+//!
+//! The allocator hands out hardware slots lazily on first use (a
+//! tenant that never runs costs nothing).  When the slot space is
+//! exhausted it performs a **generation rollover**: the generation
+//! counter bumps, every live lease is revoked, and the caller must
+//! broadcast-flush the TLB hierarchy before the first recycled tag is
+//! used — exactly the arm64 `asid_generation` protocol.  Pre-rollover
+//! allocation is dense (tenant `i` touched `i`-th gets `Asid(i)`), so
+//! runs that fit the hardware space are bit-identical to a world
+//! without the allocator.
+//!
+//! A second mode, [`AsidMode::Steal`], never rolls over: it revokes
+//! the least-recently-used lease and hands its slot to the newcomer,
+//! with a *precise* per-ASID sweep instead of a broadcast flush.  Under
+//! guaranteed TLB turnover this is observationally equivalent to an
+//! infinite (wide-tag) ASID space — the differential oracle the
+//! rollover path is tested against (`tests/asid.rs`).
+//!
+//! The allocator is pure bookkeeping: it never touches a TLB.  Each
+//! [`AsidAllocator::touch`] returns a [`Touch`] describing what the
+//! caller (the engine) must do — flush on rollover, sweep a dirty
+//! recycled slot, re-derive per-ASID scheme lanes on any fresh lease.
+
+use crate::Asid;
+use std::collections::{BTreeSet, HashMap};
+
+/// No owner sentinel for [`AsidAllocator`] slot bookkeeping.
+const NO_OWNER: u64 = u64::MAX;
+
+/// Exhaustion policy: what happens when a tenant needs a slot and the
+/// hardware space is full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AsidMode {
+    /// Linux/arm64 protocol: bump the generation, revoke *every* live
+    /// lease, broadcast-flush, restart dense allocation.  Cheap
+    /// bookkeeping, expensive (but rare) rollover events.
+    #[default]
+    Rollover,
+    /// Wide-tag oracle: revoke only the least-recently-used lease and
+    /// sweep exactly that ASID's entries.  Models an unbounded tag
+    /// space; used by the differential oracle tests.
+    Steal,
+}
+
+/// What the engine must do after [`AsidAllocator::touch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Touch {
+    /// The hardware tag leased to the tenant.
+    pub asid: Asid,
+    /// The lease is new this touch: per-ASID scheme lanes must be
+    /// dropped and re-derived — the tag may have belonged to someone
+    /// else, and lane state must never be inherited.
+    pub fresh: bool,
+    /// A generation rollover happened: broadcast-flush the whole TLB
+    /// hierarchy *before* using the returned tag.
+    pub rollover: bool,
+    /// The slot may still hold a previous owner's TLB entries (no
+    /// flush cleaned it since): sweep this ASID precisely.
+    pub sweep: bool,
+}
+
+/// Lease-based ASID allocator over a bounded hardware slot space.
+///
+/// `slots` is the hardware tag space size (≤ 65536 = the `u16` space;
+/// tests shrink it to force rollover pressure).  Tenants are dense
+/// `usize` ids with no upper bound.
+pub struct AsidAllocator {
+    slots: usize,
+    mode: AsidMode,
+    /// live leases: tenant -> slot
+    map: HashMap<usize, u16>,
+    /// slot -> owning tenant ([`NO_OWNER`] when unowned)
+    owner: Vec<u64>,
+    /// slot was ever leased (drives the recycle counter)
+    used_ever: Vec<bool>,
+    /// slot may hold TLB entries of a previous owner (cleared only by
+    /// a rollover broadcast flush; set on every lease)
+    dirty: Vec<bool>,
+    /// slots returned by [`AsidAllocator::drop_tenant`], reused first
+    free: Vec<u16>,
+    /// next never-leased slot this generation
+    next: usize,
+    /// current generation (bumps on rollover)
+    generation: u64,
+    /// slot -> last-touch tick (Steal-mode victim selection)
+    stamp: Vec<u64>,
+    /// (tick, slot) ordered set: O(log n) LRU victim in Steal mode
+    lru: BTreeSet<(u64, u16)>,
+    tick: u64,
+    /// generation rollovers performed
+    pub rollovers: u64,
+    /// leases that recycled a previously-used slot
+    pub recycles: u64,
+}
+
+impl AsidAllocator {
+    /// `slots` must be in `1..=65536`.
+    pub fn new(slots: usize, mode: AsidMode) -> Self {
+        assert!((1..=1 << 16).contains(&slots), "slots must fit the u16 space");
+        AsidAllocator {
+            slots,
+            mode,
+            map: HashMap::new(),
+            owner: vec![NO_OWNER; slots],
+            used_ever: vec![false; slots],
+            dirty: vec![false; slots],
+            free: Vec::new(),
+            next: 0,
+            generation: 0,
+            stamp: vec![0; slots],
+            lru: BTreeSet::new(),
+            tick: 0,
+            rollovers: 0,
+            recycles: 0,
+        }
+    }
+
+    /// Current generation (bumps by one per rollover).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Hardware slot space size.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Lease lookup without refreshing recency (read-only probes).
+    pub fn asid_of(&self, tenant: usize) -> Option<Asid> {
+        self.map.get(&tenant).map(|&s| Asid(s))
+    }
+
+    /// Live leases in slot order: `(tenant, asid)` pairs.  Slot order
+    /// makes iteration deterministic regardless of `HashMap` state.
+    pub fn live(&self) -> Vec<(usize, Asid)> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| t != NO_OWNER)
+            .map(|(s, &t)| (t as usize, Asid(s as u16)))
+            .collect()
+    }
+
+    /// Tenant `tenant` is scheduled: return its lease, allocating (and
+    /// possibly rolling over or stealing) if it has none.
+    pub fn touch(&mut self, tenant: usize) -> Touch {
+        self.tick += 1;
+        if let Some(&slot) = self.map.get(&tenant) {
+            self.refresh(slot);
+            return Touch { asid: Asid(slot), fresh: false, rollover: false, sweep: false };
+        }
+        let (slot, rollover, sweep) = if let Some(slot) = self.free.pop() {
+            // a dropped tenant's slot: its entries were never swept
+            (slot, false, self.dirty[slot as usize])
+        } else if self.next < self.slots {
+            // never leased this generation; may still be dirty from a
+            // pre-rollover owner whose entries a flush already cleaned
+            let slot = self.next as u16;
+            self.next += 1;
+            (slot, false, self.dirty[slot as usize])
+        } else {
+            match self.mode {
+                AsidMode::Rollover => {
+                    // generation bump: revoke every lease, restart
+                    // dense; the broadcast flush the caller performs
+                    // cleans every slot at once
+                    self.generation += 1;
+                    self.rollovers += 1;
+                    self.map.clear();
+                    self.free.clear();
+                    self.lru.clear();
+                    self.owner.fill(NO_OWNER);
+                    self.dirty.fill(false);
+                    self.next = 1;
+                    (0, true, false)
+                }
+                AsidMode::Steal => {
+                    let &(_, slot) = self.lru.iter().next().expect("slots >= 1");
+                    let victim = self.owner[slot as usize];
+                    debug_assert_ne!(victim, NO_OWNER);
+                    self.map.remove(&(victim as usize));
+                    self.lru.remove(&(self.stamp[slot as usize], slot));
+                    (slot, false, true)
+                }
+            }
+        };
+        let s = slot as usize;
+        self.recycles += self.used_ever[s] as u64;
+        self.used_ever[s] = true;
+        self.dirty[s] = true;
+        self.owner[s] = tenant as u64;
+        self.map.insert(tenant, slot);
+        self.stamp[s] = self.tick;
+        self.lru.insert((self.tick, slot));
+        Touch { asid: Asid(slot), fresh: true, rollover, sweep }
+    }
+
+    /// Tenant exits: release its lease.  The slot goes on the free
+    /// list still dirty — its next lessee gets `sweep = true` unless a
+    /// rollover flush intervenes.
+    pub fn drop_tenant(&mut self, tenant: usize) {
+        if let Some(slot) = self.map.remove(&tenant) {
+            let s = slot as usize;
+            self.lru.remove(&(self.stamp[s], slot));
+            self.owner[s] = NO_OWNER;
+            self.free.push(slot);
+        }
+    }
+
+    fn refresh(&mut self, slot: u16) {
+        let s = slot as usize;
+        self.lru.remove(&(self.stamp[s], slot));
+        self.stamp[s] = self.tick;
+        self.lru.insert((self.tick, slot));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_first_use_matches_tenant_order() {
+        let mut a = AsidAllocator::new(16, AsidMode::Rollover);
+        for t in 0..16 {
+            let touch = a.touch(t);
+            let want = Touch { asid: Asid(t as u16), fresh: true, rollover: false, sweep: false };
+            assert_eq!(touch, want);
+        }
+        // re-touch is a no-op lease
+        let touch = a.touch(3);
+        assert!(!touch.fresh && !touch.rollover && !touch.sweep);
+        assert_eq!(touch.asid, Asid(3));
+        assert_eq!(a.rollovers, 0);
+        assert_eq!(a.recycles, 0);
+        assert_eq!(a.generation(), 0);
+    }
+
+    #[test]
+    fn exhaustion_rolls_over_and_restarts_dense() {
+        let mut a = AsidAllocator::new(4, AsidMode::Rollover);
+        for t in 0..4 {
+            a.touch(t);
+        }
+        let touch = a.touch(4);
+        assert_eq!(
+            touch,
+            Touch { asid: Asid(0), fresh: true, rollover: true, sweep: false },
+            "rollover flush cleans everything: no sweep needed"
+        );
+        assert_eq!(a.generation(), 1);
+        assert_eq!(a.rollovers, 1);
+        assert_eq!(a.recycles, 1);
+        // every pre-rollover lease was revoked
+        for t in 0..4 {
+            assert_eq!(a.asid_of(t), None);
+        }
+        // post-rollover allocation is dense again, recycled slots are
+        // clean (the flush swept them) until re-leased
+        let touch = a.touch(5);
+        assert_eq!(touch, Touch { asid: Asid(1), fresh: true, rollover: false, sweep: false });
+        assert_eq!(a.recycles, 2);
+    }
+
+    #[test]
+    fn dropped_slot_is_reused_with_sweep() {
+        let mut a = AsidAllocator::new(4, AsidMode::Rollover);
+        a.touch(0);
+        a.touch(1);
+        a.drop_tenant(0);
+        // slot 0 returns dirty: its next lessee must sweep
+        let touch = a.touch(9);
+        assert_eq!(touch, Touch { asid: Asid(0), fresh: true, rollover: false, sweep: true });
+        assert_eq!(a.rollovers, 0);
+        assert_eq!(a.recycles, 1);
+        assert_eq!(a.asid_of(9), Some(Asid(0)));
+        assert_eq!(a.asid_of(0), None);
+    }
+
+    #[test]
+    fn steal_mode_evicts_least_recently_touched() {
+        let mut a = AsidAllocator::new(3, AsidMode::Steal);
+        a.touch(0);
+        a.touch(1);
+        a.touch(2);
+        a.touch(0); // refresh tenant 0: tenant 1 is now LRU
+        let touch = a.touch(3);
+        assert_eq!(
+            touch,
+            Touch { asid: Asid(1), fresh: true, rollover: false, sweep: true },
+            "steal revokes the LRU lease and sweeps precisely"
+        );
+        assert_eq!(a.asid_of(1), None, "victim lease revoked");
+        assert_eq!(a.asid_of(0), Some(Asid(0)));
+        assert_eq!(a.asid_of(3), Some(Asid(1)));
+        assert_eq!(a.rollovers, 0);
+        assert_eq!(a.recycles, 1);
+    }
+
+    #[test]
+    fn live_iterates_in_slot_order() {
+        let mut a = AsidAllocator::new(8, AsidMode::Rollover);
+        a.touch(30);
+        a.touch(10);
+        a.touch(20);
+        a.drop_tenant(10);
+        assert_eq!(a.live(), vec![(30, Asid(0)), (20, Asid(2))]);
+    }
+
+    #[test]
+    fn single_slot_rollover_storm() {
+        let mut a = AsidAllocator::new(1, AsidMode::Rollover);
+        for t in 0..5 {
+            let touch = a.touch(t);
+            assert_eq!(touch.asid, Asid(0));
+            assert!(touch.fresh);
+            assert_eq!(touch.rollover, t > 0);
+        }
+        assert_eq!(a.rollovers, 4);
+        assert_eq!(a.generation(), 4);
+    }
+}

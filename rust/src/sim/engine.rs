@@ -49,12 +49,26 @@
 //! the shared L1 is ASID-tagged too and a switch retains all state;
 //! for default (untagged) schemes a switch flushes L1 + L2 — exactly
 //! the pre-ASID shard-boundary semantics.  The engine attributes the
-//! (accesses, walks) delta of each scheduling quantum to the tenant
-//! that ran it ([`Metrics::tenant_stats`]); shard runners reconstruct
-//! mid-schedule state on a cold engine with [`Engine::set_tenant`]
-//! (no context-switch accounting — the switch event itself is counted
-//! by the shard that owns its timestamp).
+//! (accesses, walks, cycles) delta of each scheduling quantum to the
+//! tenant that ran it ([`Metrics::tenant_stats`]); shard runners
+//! reconstruct mid-schedule state on a cold engine with
+//! [`Engine::set_tenant`] (no context-switch accounting — the switch
+//! event itself is counted by the shard that owns its timestamp).
+//!
+//! ## ASID recycling
+//!
+//! The hardware tag is 16 bits; tenant counts are not.  With an
+//! [`AsidAllocator`] installed ([`Engine::with_allocator`]) the engine
+//! separates the *tenant id* (unbounded, what metrics attribute to)
+//! from the *ASID* (the leased hardware tag):
+//! [`Engine::switch_to_tenant`] asks the allocator for the tenant's
+//! tag, delivers the generation-rollover broadcast flush when the tag
+//! space wraps, and drops the recycled tag's per-ASID lane so derived
+//! state (K set, anchor distance, RMM OS table) is never inherited
+//! across tenants.  Without an allocator the tenant id *is* the ASID
+//! (`Asid::from_index`), bit-identical to the pre-allocator pipeline.
 
+use super::asid::AsidAllocator;
 use super::cost::{CostModel, InvalOutcome};
 use super::latency::Latency;
 use super::metrics::Metrics;
@@ -83,9 +97,15 @@ pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     epoch_pending: bool,
     /// the ASID register: every access translates under it
     asid: Asid,
-    /// cumulative (accesses, walks) at the last tenant-attribution
-    /// point (context switch or engine start)
-    tenant_snap: [u64; 2],
+    /// the scheduled tenant the current quantum is attributed to
+    /// (equals `asid.index()` whenever no allocator is installed)
+    tenant: usize,
+    /// ASID leasing for tenant counts beyond the tag space; `None` is
+    /// the identity map (tenant id == ASID)
+    alloc: Option<AsidAllocator>,
+    /// cumulative (accesses, walks, cycles) at the last
+    /// tenant-attribution point (context switch or engine start)
+    tenant_snap: [u64; 3],
     /// verify every translation against the page table (cheap enough
     /// to keep on; disable only in throughput benches)
     pub verify: bool,
@@ -109,7 +129,9 @@ impl<S: Scheme> Engine<S> {
             epoch_hooks: false,
             epoch_pending: false,
             asid: Asid::ZERO,
-            tenant_snap: [0, 0],
+            tenant: 0,
+            alloc: None,
+            tenant_snap: [0, 0, 0],
             verify: cfg!(debug_assertions),
             reference: false,
         }
@@ -144,6 +166,26 @@ impl<S: Scheme> Engine<S> {
         &self.cost
     }
 
+    /// Install an ASID allocator: tenant ids handed to
+    /// [`Engine::switch_to_tenant`] may then exceed the hardware tag
+    /// space, with generation rollover + broadcast flush when the
+    /// allocator wraps.
+    pub fn with_allocator(mut self, alloc: AsidAllocator) -> Self {
+        self.alloc = Some(alloc);
+        self
+    }
+
+    /// The installed allocator, if any.
+    pub fn allocator(&self) -> Option<&AsidAllocator> {
+        self.alloc.as_ref()
+    }
+
+    /// Allocator health counters `(rollovers, recycles)`; `None`
+    /// without an allocator.
+    pub fn alloc_stats(&self) -> Option<(u64, u64)> {
+        self.alloc.as_ref().map(|a| (a.rollovers, a.recycles))
+    }
+
     pub fn scheme_name(&self) -> String {
         self.scheme.name()
     }
@@ -160,9 +202,24 @@ impl<S: Scheme> Engine<S> {
         &self.scheme
     }
 
-    /// The ASID register (the tenant every access translates under).
+    /// The ASID register (the tag every access translates under).
     pub fn current_asid(&self) -> Asid {
         self.asid
+    }
+
+    /// The scheduled tenant the current quantum is attributed to.
+    pub fn current_tenant(&self) -> usize {
+        self.tenant
+    }
+
+    /// The hardware tag currently leased to `tenant`: the identity map
+    /// without an allocator, the allocator's live table with one
+    /// (`None` when the tenant holds no live tag).
+    pub fn asid_of(&self, tenant: usize) -> Option<Asid> {
+        match &self.alloc {
+            None => Some(Asid::from_index(tenant)),
+            Some(a) => a.asid_of(tenant),
+        }
     }
 
     /// Deliver a context switch: attribute the outgoing quantum's
@@ -177,7 +234,51 @@ impl<S: Scheme> Engine<S> {
         }
         let tagged = self.scheme.asid_tagged();
         self.metrics.record_context_switch(!tagged, self.cost.switch(!tagged));
-        self.install_tenant(asid, tagged);
+        self.install_tenant(asid.index(), asid, tagged);
+    }
+
+    /// Deliver a context switch to a *tenant id* through the ASID
+    /// allocator.  Without an allocator this is exactly
+    /// [`Engine::switch_to`]`(Asid::from_index(tenant))` — the
+    /// identity map, bit-identical to the pre-allocator pipeline.
+    ///
+    /// With one, the allocator leases a tag: a generation rollover
+    /// broadcast-flushes both TLB levels (every live lease dies), and a
+    /// recycled tag's per-ASID lane is dropped — plus a precise sweep
+    /// of its leftover entries when the allocator could not guarantee
+    /// they are gone — so nothing is inherited from the tag's previous
+    /// owner.  Returns the leased tag when the tenant got a *fresh*
+    /// lease (the caller should follow up with
+    /// [`Engine::refresh_lane`] on the tenant's space so derived state
+    /// is re-computed), `None` for a live lease or the legacy path.
+    pub fn switch_to_tenant(&mut self, tenant: usize) -> Option<Asid> {
+        let touch = match self.alloc.as_mut() {
+            None => {
+                self.switch_to(Asid::from_index(tenant));
+                return None;
+            }
+            Some(alloc) => alloc.touch(tenant),
+        };
+        if touch.rollover {
+            // generation rollover: broadcast flush, priced as a
+            // flush-class shootdown (no per-page body)
+            self.l1.flush();
+            self.scheme.flush();
+            self.metrics.record_shootdown();
+            self.metrics.record_invalidation(self.cost.shootdown(InvalOutcome::Flushed, 0));
+        }
+        if touch.fresh {
+            self.scheme.drop_lane(touch.asid, touch.sweep);
+            if touch.sweep {
+                self.l1.evict_asid(touch.asid);
+            }
+        }
+        if tenant != self.tenant || touch.asid != self.asid {
+            let tagged = self.scheme.asid_tagged();
+            self.metrics.record_context_switch(!tagged, self.cost.switch(!tagged));
+            self.install_tenant(tenant, touch.asid, tagged);
+        }
+        touch.fresh.then_some(touch.asid)
     }
 
     /// Install `asid` as current *without* context-switch accounting.
@@ -189,7 +290,51 @@ impl<S: Scheme> Engine<S> {
             return;
         }
         let tagged = self.scheme.asid_tagged();
-        self.install_tenant(asid, tagged);
+        self.install_tenant(asid.index(), asid, tagged);
+    }
+
+    /// [`Engine::set_tenant`] for the allocator world: install tenant
+    /// id and leased tag as current, silently.  Shard runners use this
+    /// after replaying the allocator's schedule prefix — the lease
+    /// (and any rollover on the way) was decided by the prefix; the
+    /// switch event itself is counted by the shard that owns it.
+    pub fn set_tenant_for(&mut self, tenant: usize, asid: Asid) {
+        if tenant == self.tenant && asid == self.asid {
+            return;
+        }
+        let tagged = self.scheme.asid_tagged();
+        self.install_tenant(tenant, asid, tagged);
+    }
+
+    /// [`Engine::register_tenant`] by tenant id + leased tag: silently
+    /// make the pair current and derive its lane from the tenant's
+    /// space.  Cold-shard reconstruction for the allocator world.
+    pub fn register_tenant_for(&mut self, tenant: usize, asid: Asid, view: SpaceView<'_>) {
+        self.set_tenant_for(tenant, asid);
+        self.scheme.epoch(view);
+    }
+
+    /// Install the schedule's first tenant on a cold engine: touch the
+    /// allocator (the lease decision at replay position zero) with no
+    /// switch accounting — the engine *starts* in this tenant.
+    /// Returns the leased tag when fresh, as
+    /// [`Engine::switch_to_tenant`] does; legacy path falls back to
+    /// the silent [`Engine::set_tenant`].
+    pub fn seed_tenant(&mut self, tenant: usize) -> Option<Asid> {
+        let touch = match self.alloc.as_mut() {
+            None => {
+                self.set_tenant(Asid::from_index(tenant));
+                return None;
+            }
+            Some(alloc) => alloc.touch(tenant),
+        };
+        // a cold engine holds no entries, so fresh leases need no
+        // sweep and a rollover here has nothing to flush
+        if touch.fresh {
+            self.scheme.drop_lane(touch.asid, false);
+        }
+        self.set_tenant_for(tenant, touch.asid);
+        touch.fresh.then_some(touch.asid)
     }
 
     /// Register a tenant before (or while) driving: switch to it and
@@ -203,8 +348,9 @@ impl<S: Scheme> Engine<S> {
         self.scheme.epoch(view);
     }
 
-    fn install_tenant(&mut self, asid: Asid, tagged: bool) {
+    fn install_tenant(&mut self, tenant: usize, asid: Asid, tagged: bool) {
         self.attribute_tenant();
+        self.tenant = tenant;
         self.asid = asid;
         self.scheme.switch_to(asid);
         if !tagged {
@@ -212,13 +358,15 @@ impl<S: Scheme> Engine<S> {
         }
     }
 
-    /// Attribute the (accesses, walks) delta since the last
+    /// Attribute the (accesses, walks, cycles) delta since the last
     /// attribution point to the current tenant.
     fn attribute_tenant(&mut self) {
+        let cycles = self.metrics.total_cycles();
         let da = self.metrics.accesses - self.tenant_snap[0];
         let dw = self.metrics.walks - self.tenant_snap[1];
-        self.metrics.tenant_add(self.asid, da, dw);
-        self.tenant_snap = [self.metrics.accesses, self.metrics.walks];
+        let dc = cycles - self.tenant_snap[2];
+        self.metrics.tenant_add(self.tenant, da, dw, dc);
+        self.tenant_snap = [self.metrics.accesses, self.metrics.walks, cycles];
     }
 
     /// One access minus the epoch tick, monomorphized over `VERIFY` so
@@ -557,6 +705,13 @@ impl<S: Scheme> Engine<S> {
     /// touching the ASID register or any other tenant's state.
     pub fn refresh_lane(&mut self, asid: Asid, view: SpaceView<'_>) {
         self.scheme.refresh_lane(asid, view);
+    }
+
+    /// Set the L2 fairness partitioning policy on the scheme's shared
+    /// arrays (victim selection only; [`crate::tlb::FairnessPolicy::None`]
+    /// is bit-identical to no policy).
+    pub fn set_fairness(&mut self, policy: crate::tlb::FairnessPolicy) {
+        self.scheme.set_fairness(policy);
     }
 
     /// Final coverage sample, tail tenant attribution + metrics
@@ -906,6 +1061,92 @@ mod tests {
         assert_eq!(m.tenant(1), (4, 4));
         assert_eq!(m.accesses, 14);
         assert_eq!(m.context_switches, 1);
+    }
+
+    #[test]
+    fn switch_to_tenant_without_allocator_is_switch_to() {
+        use crate::Asid;
+        let f = Fix::identity(1000);
+        let mut a = Engine::new(BaseL2::new());
+        let mut b = Engine::new(BaseL2::new());
+        for (i, t) in [0usize, 1, 2, 1, 0].into_iter().enumerate() {
+            assert_eq!(a.switch_to_tenant(t), None, "legacy path never reports fresh");
+            b.switch_to(Asid::from_index(t));
+            a.access(i as u64, f.view());
+            b.access(i as u64, f.view());
+        }
+        let (ma, _) = a.finish();
+        let (mb, _) = b.finish();
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn dense_prerollover_allocator_equals_legacy_identity() {
+        use crate::sim::asid::{AsidAllocator, AsidMode};
+        use crate::Asid;
+        let f = Fix::identity(1000);
+        let mut a =
+            Engine::new(BaseL2::new()).with_allocator(AsidAllocator::new(1 << 16, AsidMode::Rollover));
+        let mut b = Engine::new(BaseL2::new());
+        let mut v = 1u64;
+        for i in 0..2000u64 {
+            v = (v.wrapping_mul(6364136223846793005).wrapping_add(i)) % 1000;
+            let t = (v % 7) as usize;
+            a.switch_to_tenant(t);
+            b.switch_to(Asid::from_index(t));
+            a.access(v, f.view());
+            b.access(v, f.view());
+        }
+        let (ma, _) = a.finish();
+        let (mb, _) = b.finish();
+        assert_eq!(ma, mb, "pre-rollover allocator runs are bit-identical to the identity map");
+    }
+
+    #[test]
+    fn rollover_broadcast_flushes_both_levels() {
+        use crate::sim::asid::{AsidAllocator, AsidMode};
+        use crate::Asid;
+        let f = Fix::identity(100);
+        let mut e =
+            Engine::new(BaseL2::new()).with_allocator(AsidAllocator::new(2, AsidMode::Rollover));
+        assert_eq!(e.seed_tenant(0), Some(Asid(0)), "seed leases without accounting");
+        assert_eq!(e.metrics().context_switches, 0);
+        e.access(5, f.view()); // walk 1
+        assert_eq!(e.switch_to_tenant(1), Some(Asid(1)));
+        e.access(6, f.view()); // walk 2
+        // a third tenant exhausts the 2-slot space: generation rollover
+        assert_eq!(e.switch_to_tenant(2), Some(Asid(0)));
+        assert_eq!(e.alloc_stats(), Some((1, 1)));
+        assert_eq!(e.asid_of(1), None, "every pre-rollover lease was revoked");
+        e.access(5, f.view()); // walk 3: the broadcast flush emptied both levels
+        let (m, _) = e.finish();
+        assert_eq!(m.walks, 3);
+        assert_eq!(m.shootdowns, 1, "rollover counts as one broadcast shootdown");
+        // attribution is keyed by tenant id even though 0 and 2 shared a tag
+        assert_eq!(m.tenant(0), (1, 1));
+        assert_eq!(m.tenant(2), (1, 1));
+    }
+
+    #[test]
+    fn steal_mode_sweeps_only_the_recycled_tag() {
+        use crate::sim::asid::{AsidAllocator, AsidMode};
+        use crate::Asid;
+        let f = Fix::identity(100);
+        let mut e =
+            Engine::new(BaseL2::new()).with_allocator(AsidAllocator::new(2, AsidMode::Steal));
+        e.seed_tenant(0);
+        e.access(5, f.view()); // walk 1
+        e.switch_to_tenant(1);
+        e.access(6, f.view()); // walk 2
+        // tenant 2 steals tenant 0's LRU slot: precise sweep of Asid(0)
+        assert_eq!(e.switch_to_tenant(2), Some(Asid(0)));
+        assert_eq!(e.metrics().shootdowns, 0, "steal never broadcast-flushes");
+        e.switch_to_tenant(1);
+        e.access(6, f.view());
+        assert_eq!(e.metrics().walks, 2, "tenant 1 kept its entries across the steal");
+        e.switch_to_tenant(2);
+        e.access(5, f.view());
+        assert_eq!(e.metrics().walks, 3, "the recycled tag's old entries are gone");
     }
 
     #[test]

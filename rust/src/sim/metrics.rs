@@ -3,7 +3,6 @@
 //! behind the `repro cpi` breakdown.
 
 use super::cost::CostModel;
-use crate::Asid;
 
 /// Per-run counters.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -58,10 +57,12 @@ pub struct Metrics {
     /// running the default `switch_to`; tagged schemes retain state
     /// and this stays 0)
     pub switch_flushes: u64,
-    /// per-tenant `[accesses, walks]`, indexed by [`Asid::index`] —
-    /// the engine attributes the counter deltas of each scheduling
-    /// quantum to the tenant that ran it
-    pub tenant_stats: Vec<[u64; 2]>,
+    /// per-tenant `[accesses, walks, cycles]`, indexed by *tenant id*
+    /// (== [`crate::Asid::index`] without an ASID allocator; unbounded
+    /// with one) — the engine attributes the counter deltas of each
+    /// scheduling quantum to the tenant that ran it.  The cycles
+    /// column feeds the per-tenant tail-CPI report (`repro tenants`).
+    pub tenant_stats: Vec<[u64; 3]>,
 
     /// cumulative (accesses, walks) snapshots at phase boundaries —
     /// the basis of the per-phase miss rates `repro churn` reports.
@@ -202,24 +203,29 @@ impl Metrics {
         self.cycles_switch += cycles;
     }
 
-    /// Attribute a quantum's counter deltas to `asid`.  Zero deltas
-    /// are skipped so runs that never touch a tenant do not allocate
-    /// a row for it.
-    pub(crate) fn tenant_add(&mut self, asid: Asid, accesses: u64, walks: u64) {
-        if accesses == 0 && walks == 0 {
+    /// Attribute a quantum's counter deltas to tenant `tenant`.  Zero
+    /// deltas are skipped so runs that never touch a tenant do not
+    /// allocate a row for it.
+    pub(crate) fn tenant_add(&mut self, tenant: usize, accesses: u64, walks: u64, cycles: u64) {
+        if accesses == 0 && walks == 0 && cycles == 0 {
             return;
         }
-        let i = asid.index();
-        if self.tenant_stats.len() <= i {
-            self.tenant_stats.resize(i + 1, [0, 0]);
+        if self.tenant_stats.len() <= tenant {
+            self.tenant_stats.resize(tenant + 1, [0, 0, 0]);
         }
-        self.tenant_stats[i][0] += accesses;
-        self.tenant_stats[i][1] += walks;
+        self.tenant_stats[tenant][0] += accesses;
+        self.tenant_stats[tenant][1] += walks;
+        self.tenant_stats[tenant][2] += cycles;
     }
 
     /// Per-tenant (accesses, walks) for tenant `i`, 0 if never run.
     pub fn tenant(&self, i: usize) -> (u64, u64) {
-        self.tenant_stats.get(i).map(|&[a, w]| (a, w)).unwrap_or((0, 0))
+        self.tenant_stats.get(i).map(|&[a, w, _]| (a, w)).unwrap_or((0, 0))
+    }
+
+    /// Per-tenant `[accesses, walks, cycles]` row, zeros if never run.
+    pub fn tenant_row(&self, i: usize) -> [u64; 3] {
+        self.tenant_stats.get(i).copied().unwrap_or([0, 0, 0])
     }
 
     /// Snapshot the cumulative counters at a phase boundary.
@@ -301,11 +307,12 @@ impl Metrics {
         self.context_switches += o.context_switches;
         self.switch_flushes += o.switch_flushes;
         if self.tenant_stats.len() < o.tenant_stats.len() {
-            self.tenant_stats.resize(o.tenant_stats.len(), [0, 0]);
+            self.tenant_stats.resize(o.tenant_stats.len(), [0, 0, 0]);
         }
         for (mine, theirs) in self.tenant_stats.iter_mut().zip(&o.tenant_stats) {
             mine[0] += theirs[0];
             mine[1] += theirs[1];
+            mine[2] += theirs[2];
         }
     }
 }
@@ -423,28 +430,28 @@ mod tests {
 
     #[test]
     fn merge_adds_context_switch_counters_and_tenant_stats() {
-        use crate::Asid;
         let mut a = Metrics::default();
         a.record_context_switch(false, 20);
-        a.tenant_add(Asid(0), 10, 3);
-        a.tenant_add(Asid(2), 5, 1);
+        a.tenant_add(0, 10, 3, 150);
+        a.tenant_add(2, 5, 1, 50);
         let mut b = Metrics::default();
         b.record_context_switch(true, 660);
         b.record_context_switch(true, 660);
-        b.tenant_add(Asid(0), 7, 2);
-        b.tenant_add(Asid(1), 4, 4);
+        b.tenant_add(0, 7, 2, 100);
+        b.tenant_add(1, 4, 4, 200);
         a.merge(&b);
         assert_eq!(a.context_switches, 3);
         assert_eq!(a.switch_flushes, 2);
         assert_eq!(a.cycles_switch, 1340);
         // tenant rows add element-wise, absent rows count as zero
-        assert_eq!(a.tenant_stats, vec![[17, 5], [4, 4], [5, 1]]);
+        assert_eq!(a.tenant_stats, vec![[17, 5, 250], [4, 4, 200], [5, 1, 50]]);
         assert_eq!(a.tenant(0), (17, 5));
         assert_eq!(a.tenant(1), (4, 4));
         assert_eq!(a.tenant(3), (0, 0), "never-run tenants read as zero");
+        assert_eq!(a.tenant_row(1), [4, 4, 200]);
         // zero deltas never allocate a row
         let mut c = Metrics::default();
-        c.tenant_add(Asid(5), 0, 0);
+        c.tenant_add(5, 0, 0, 0);
         assert!(c.tenant_stats.is_empty());
     }
 

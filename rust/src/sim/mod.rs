@@ -5,6 +5,7 @@
 //! per access, and the deterministic tenant scheduler that interleaves
 //! address spaces over one engine.
 
+pub mod asid;
 pub mod cost;
 pub mod engine;
 pub mod latency;
@@ -12,6 +13,7 @@ pub mod metrics;
 pub mod multicore;
 pub mod tenants;
 
+pub use asid::{AsidAllocator, AsidMode, Touch};
 pub use cost::{CostModel, InvalOutcome};
 pub use engine::Engine;
 pub use latency::Latency;

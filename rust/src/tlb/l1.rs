@@ -90,6 +90,15 @@ impl L1Tlb {
         self.huge.flush();
     }
 
+    /// Drop every entry of `asid`, both page sizes (ASID recycling
+    /// sweep: the tag was leased to a new tenant and the dead tenant's
+    /// translations must not be inherited).  Other tenants keep their
+    /// entries.
+    pub fn evict_asid(&mut self, asid: Asid) {
+        self.small.retain(|tag, _| tag_asid(tag) != asid);
+        self.huge.retain(|tag, _| tag_asid(tag) != asid);
+    }
+
     /// Per-page invalidation of `asid`'s entries in `[vstart, vstart +
     /// len)`: 4KB entries in the range are dropped; a 2MB entry is
     /// dropped if its region overlaps the range at all (the OS shoots
@@ -196,6 +205,20 @@ mod tests {
         assert_eq!(l1.lookup_small(A0, 10), None, "targeted tenant invalidated");
         assert_eq!(l1.lookup_small(A1, 10), Some(200), "other tenant survives");
         assert_eq!(l1.lookup_huge(A1, 700), Some(4096 + (700 - 512)));
+    }
+
+    #[test]
+    fn evict_asid_clears_one_tenant_both_sizes() {
+        let mut l1 = L1Tlb::new();
+        l1.fill_small(A0, 7, 70);
+        l1.fill_huge(A0, 512, 4096);
+        l1.fill_small(A1, 7, 700);
+        l1.fill_huge(A1, 512, 8192);
+        l1.evict_asid(A0);
+        assert_eq!(l1.lookup(A0, 7), None);
+        assert_eq!(l1.lookup(A0, 700), None);
+        assert_eq!(l1.lookup(A1, 7), Some(700), "other tenant's 4KB entry survives");
+        assert_eq!(l1.lookup(A1, 700), Some(8192 + (700 - 512)));
     }
 
     #[test]

@@ -9,6 +9,32 @@ pub mod simd;
 pub use l1::L1Tlb;
 pub use range::RangeTlb;
 
+/// Shared-L2 capacity partitioning across tenants (multi-tenant
+/// fairness).  The policy only changes *victim selection* on insert —
+/// lookup, placement and the LRU clock are untouched — so
+/// [`FairnessPolicy::None`] is bit-identical to the unpartitioned
+/// array.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FairnessPolicy {
+    /// Unpartitioned true LRU (the paper's shared-array model).
+    #[default]
+    None,
+    /// Hard per-tenant way quota: once a tenant owns `q` ways of a
+    /// set, its next insert into that set evicts its *own* LRU way
+    /// instead of another tenant's — no tenant can monopolize a set.
+    WayQuota(u32),
+    /// Miss-rate-proportional: per-tenant insert rates (a decayed
+    /// window) set a per-set occupancy target `ways * rate_i / total`;
+    /// a tenant over its target evicts its own LRU way.  Heavy
+    /// missers get more space, but only in proportion.
+    MissProportional,
+}
+
+/// Decayed per-ASID insert-rate window driving
+/// [`FairnessPolicy::MissProportional`]: all counts halve once the
+/// total reaches this, so rates track the recent mix.
+const FAIRNESS_WINDOW: u64 = 1024;
+
 /// Generic set-associative TLB with true LRU replacement.
 ///
 /// The caller owns the index/tag computation (schemes differ exactly
@@ -32,6 +58,11 @@ pub struct SetAssocTlb<P> {
     lru: Vec<u64>,
     data: Vec<P>,
     tick: u64,
+    fairness: FairnessPolicy,
+    /// per-ASID insert counts (decayed window) for
+    /// [`FairnessPolicy::MissProportional`]; empty under other policies
+    insert_rate: std::collections::HashMap<u16, u64>,
+    insert_total: u64,
 }
 
 impl<P: Clone + Default> SetAssocTlb<P> {
@@ -48,7 +79,18 @@ impl<P: Clone + Default> SetAssocTlb<P> {
             lru: vec![0; entries],
             data: vec![P::default(); entries],
             tick: 0,
+            fairness: FairnessPolicy::None,
+            insert_rate: std::collections::HashMap::new(),
+            insert_total: 0,
         }
+    }
+
+    /// Select the capacity-partitioning policy (victim selection only;
+    /// see [`FairnessPolicy`]).
+    pub fn set_fairness(&mut self, policy: FairnessPolicy) {
+        self.fairness = policy;
+        self.insert_rate.clear();
+        self.insert_total = 0;
     }
 
     #[inline]
@@ -108,11 +150,77 @@ impl<P: Clone + Default> SetAssocTlb<P> {
             return;
         }
         // otherwise fill the lowest-index invalid way, or evict the
-        // true LRU way (first-lowest stamp wins ties)
-        let victim = base + simd::scan_victim(&self.lru[base..base + self.ways]);
+        // victim the fairness policy picks (plain true LRU under
+        // `FairnessPolicy::None`, first-lowest stamp wins ties)
+        let victim = self.pick_victim(base, tag);
+        if self.fairness == FairnessPolicy::MissProportional {
+            self.note_insert((tag >> crate::schemes::ASID_SHIFT) as u16);
+        }
         self.tags[victim] = tag;
         self.lru[victim] = self.tick;
         self.data[victim] = data;
+    }
+
+    /// Victim way for an insert of `tag` into the set at `base`.
+    /// Invalid ways always win (no policy beats free space); under
+    /// [`FairnessPolicy::None`] this is exactly the unpartitioned LRU
+    /// scan, bit-identical to the pre-fairness array.
+    fn pick_victim(&self, base: usize, tag: u64) -> usize {
+        let stamps = &self.lru[base..base + self.ways];
+        match self.fairness {
+            FairnessPolicy::None => base + simd::scan_victim(stamps),
+            _ => {
+                if let Some(w) = stamps.iter().position(|&l| l == 0) {
+                    return base + w;
+                }
+                // full set: a tenant at (or over) its quota evicts its
+                // own LRU way; otherwise plain global LRU
+                let owner = (tag >> crate::schemes::ASID_SHIFT) as u16;
+                let quota = self.quota(owner);
+                let (mut own, mut own_best, mut own_stamp) = (0u64, usize::MAX, u64::MAX);
+                for w in 0..self.ways {
+                    let i = base + w;
+                    if (self.tags[i] >> crate::schemes::ASID_SHIFT) as u16 == owner {
+                        own += 1;
+                        if self.lru[i] < own_stamp {
+                            own_stamp = self.lru[i];
+                            own_best = i;
+                        }
+                    }
+                }
+                if own_best != usize::MAX && own >= quota {
+                    own_best
+                } else {
+                    base + simd::scan_victim(stamps)
+                }
+            }
+        }
+    }
+
+    /// Per-set way budget of `owner` under the current policy.
+    fn quota(&self, owner: u16) -> u64 {
+        match self.fairness {
+            FairnessPolicy::None => self.ways as u64,
+            FairnessPolicy::WayQuota(q) => (q as u64).clamp(1, self.ways as u64),
+            FairnessPolicy::MissProportional => {
+                let total = self.insert_total.max(1);
+                let mine = self.insert_rate.get(&owner).copied().unwrap_or(0);
+                ((self.ways as u64 * mine) / total).max(1)
+            }
+        }
+    }
+
+    /// Account one miss-driven insert by `owner` into the decayed
+    /// rate window ([`FairnessPolicy::MissProportional`] only).
+    fn note_insert(&mut self, owner: u16) {
+        *self.insert_rate.entry(owner).or_insert(0) += 1;
+        self.insert_total += 1;
+        if self.insert_total >= FAIRNESS_WINDOW {
+            for v in self.insert_rate.values_mut() {
+                *v /= 2;
+            }
+            self.insert_total = self.insert_rate.values().sum();
+        }
     }
 
     /// Invalidate everything (TLB shootdown, §3.4).
@@ -220,6 +328,47 @@ mod tests {
         for i in (1..8u64).step_by(2) {
             assert_eq!(t.lookup((i % 4) as usize, i), None, "tag {i}");
         }
+    }
+
+    #[test]
+    fn way_quota_caps_a_greedy_tenant() {
+        use crate::schemes::asid_bits;
+        use crate::Asid;
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(4, 4); // 1 set
+        t.set_fairness(FairnessPolicy::WayQuota(2));
+        let tag = |n: u16, v: u64| (v << 6) | asid_bits(Asid(n));
+        t.insert(0, tag(0, 1), 1);
+        t.insert(0, tag(0, 2), 2);
+        t.insert(0, tag(1, 3), 3);
+        t.insert(0, tag(1, 4), 4);
+        // tenant 0 is at quota: its next insert evicts its *own* LRU
+        // way (tag 1), never tenant 1's entries
+        t.insert(0, tag(0, 5), 5);
+        assert!(t.peek(0, tag(0, 1)).is_none(), "own LRU way evicted");
+        assert!(t.peek(0, tag(0, 2)).is_some());
+        assert!(t.peek(0, tag(1, 3)).is_some());
+        assert!(t.peek(0, tag(1, 4)).is_some());
+        assert!(t.peek(0, tag(0, 5)).is_some());
+    }
+
+    #[test]
+    fn miss_proportional_protects_the_light_tenant() {
+        use crate::schemes::asid_bits;
+        use crate::Asid;
+        let mut t: SetAssocTlb<u64> = SetAssocTlb::new(8, 8); // 1 set
+        t.set_fairness(FairnessPolicy::MissProportional);
+        let tag = |n: u16, v: u64| (v << 6) | asid_bits(Asid(n));
+        // the light tenant takes one way, then a heavy tenant streams:
+        // the heavy tenant's inserts dominate the rate window, so its
+        // target converges to ~all ways minus the floor — but the
+        // light tenant's single resident way is only evictable by the
+        // global-LRU arm, which the over-quota heavy tenant never uses
+        t.insert(0, tag(1, 1000), 0);
+        for v in 0..64u64 {
+            t.insert(0, tag(0, v), v);
+        }
+        assert!(t.peek(0, tag(1, 1000)).is_some(), "light tenant's way survives the stream");
+        assert_eq!(t.occupancy(), 8);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! register alongside the range bounds, so tenants' ranges coexist and
 //! ranged invalidations only split the targeted tenant's entries.
 
+use super::FairnessPolicy;
 use crate::{Asid, Ppn, Vpn};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,11 +32,34 @@ pub struct RangeTlb {
     entries: Vec<(RangeEntry, u64)>, // (entry, lru tick)
     capacity: usize,
     tick: u64,
+    fairness: FairnessPolicy,
 }
 
 impl RangeTlb {
     pub fn new(capacity: usize) -> Self {
-        RangeTlb { entries: Vec::with_capacity(capacity), capacity, tick: 0 }
+        RangeTlb {
+            entries: Vec::with_capacity(capacity),
+            capacity,
+            tick: 0,
+            fairness: FairnessPolicy::None,
+        }
+    }
+
+    /// Capacity partitioning for the fully-associative CAM.  A CAM has
+    /// no sets, so [`FairnessPolicy::WayQuota`] maps to a per-tenant
+    /// *entry* cap of `max(1, capacity * q / 8)` (the quota scaled by
+    /// the L2's 8-way shape); [`FairnessPolicy::MissProportional`] has
+    /// no meaningful window over 32 entries and behaves like
+    /// [`FairnessPolicy::None`].
+    pub fn set_fairness(&mut self, policy: FairnessPolicy) {
+        self.fairness = policy;
+    }
+
+    /// Drop every entry of `asid` (ASID recycling sweep): the tag was
+    /// leased to a new tenant and the dead tenant's ranges must not be
+    /// inherited.
+    pub fn evict_asid(&mut self, asid: Asid) {
+        self.entries.retain(|(e, _)| e.asid != asid);
     }
 
     /// CAM lookup for `asid`: all entries compared in parallel in
@@ -58,6 +82,18 @@ impl RangeTlb {
         if let Some((_, lru)) = self.entries.iter_mut().find(|(x, _)| *x == e) {
             *lru = self.tick;
             return;
+        }
+        if let FairnessPolicy::WayQuota(q) = self.fairness {
+            let cap = (self.capacity * q as usize / 8).max(1);
+            let own: Vec<usize> = (0..self.entries.len())
+                .filter(|&i| self.entries[i].0.asid == e.asid)
+                .collect();
+            if own.len() >= cap {
+                // at quota: replace the tenant's own LRU range
+                let victim = own.into_iter().min_by_key(|&i| self.entries[i].1).unwrap();
+                self.entries[victim] = (e, self.tick);
+                return;
+            }
         }
         if self.entries.len() < self.capacity {
             self.entries.push((e, self.tick));
@@ -213,6 +249,37 @@ mod tests {
         t.invalidate_range(A0, 0, 100);
         assert_eq!(t.occupancy(), 0);
         assert_eq!(t.lookup(A0, 12), None);
+    }
+
+    #[test]
+    fn evict_asid_sweeps_one_tenant() {
+        let mut t = RangeTlb::new(4);
+        t.insert(re(0, 10, 0));
+        t.insert(re(100, 10, 100));
+        t.insert(RangeEntry { asid: A1, vstart: 0, len: 10, pstart: 9000 });
+        t.evict_asid(A0);
+        assert_eq!(t.lookup(A0, 5), None);
+        assert_eq!(t.lookup(A0, 105), None);
+        assert_eq!(t.lookup(A1, 5), Some(9005), "other tenant's ranges survive");
+        assert_eq!(t.occupancy(), 1);
+    }
+
+    #[test]
+    fn way_quota_caps_entries_per_tenant() {
+        let mut t = RangeTlb::new(8);
+        t.set_fairness(FairnessPolicy::WayQuota(2));
+        // cap = max(1, 8 * 2 / 8) = 2 entries for A0
+        t.insert(re(0, 10, 0));
+        t.insert(re(100, 10, 100));
+        t.insert(re(200, 10, 200)); // at quota: replaces own LRU (vstart 0)
+        assert_eq!(t.lookup(A0, 5), None, "own LRU range replaced at quota");
+        assert!(t.lookup(A0, 105).is_some());
+        assert!(t.lookup(A0, 205).is_some());
+        assert_eq!(t.occupancy(), 2, "tenant never exceeds its entry cap");
+        // another tenant still has the rest of the CAM
+        t.insert(RangeEntry { asid: A1, vstart: 0, len: 10, pstart: 9000 });
+        assert_eq!(t.lookup(A1, 5), Some(9005));
+        assert_eq!(t.occupancy(), 3);
     }
 
     #[test]

@@ -7,10 +7,12 @@
 
 pub mod churn;
 pub mod spec;
+pub mod tenant_skew;
 pub mod tenants;
 pub mod tracegen;
 
 pub use churn::{build_schedule, churn_workloads, ChurnKind};
 pub use spec::{all_benchmarks, benchmark, Workload};
+pub use tenant_skew::zipf_quanta;
 pub use tenants::{tenant_mixes, TenantMix};
 pub use tracegen::{NativeTraceGen, TraceParams};

@@ -1,0 +1,243 @@
+//! ASID-allocator satellites.
+//!
+//! 1. A seeded property suite driving [`AsidAllocator`] against an
+//!    independent shadow model: no two live tenants ever share a
+//!    `(generation, asid)` pair, every rollover revokes every lease
+//!    before the first recycled tag is reused, steal victims are
+//!    always the least-recently-touched lease, and the sweep/rollover
+//!    flags exactly track which slots may still hold a previous
+//!    owner's TLB entries.
+//!
+//! 2. The >64Ki-tenant differential oracle: the same two-pass tenant
+//!    population run once under [`AsidMode::Rollover`] and once under
+//!    [`AsidMode::Steal`] (the wide-tag oracle).  The schedule
+//!    guarantees full TLB turnover between any tenant's two visits, so
+//!    the rollover broadcast flush refills nothing and every miss
+//!    metric must be *identical* across the modes — for all seven
+//!    schemes, with the stale-PPN verifier on end to end (an entry
+//!    tagged under generation G that survived into G+1, or an unswept
+//!    stolen tag, maps through the wrong profile's frames and panics).
+
+use katlb::coordinator::{BenchContext, Config, SchemeKind};
+use katlb::mem::addrspace::AddressSpace;
+use katlb::prng::Rng;
+use katlb::runtime::VpnRemap;
+use katlb::sim::{AsidAllocator, AsidMode, Engine, Metrics};
+use katlb::workloads::benchmark;
+use katlb::{Asid, Vpn};
+use std::collections::HashMap;
+
+/// All seven contenders, as the tenants experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+/// Seeded shadow-model property suite: random touch/drop traffic over
+/// slot spaces small enough to force constant exhaustion pressure.
+#[test]
+fn allocator_invariants_hold_under_random_traffic() {
+    for mode in [AsidMode::Rollover, AsidMode::Steal] {
+        for (slots, seed) in [(1usize, 11u64), (2, 22), (5, 33), (64, 44)] {
+            let mut a = AsidAllocator::new(slots, mode);
+            let mut rng = Rng::new(seed ^ 0xA51D);
+            // shadow state, maintained independently of the allocator
+            let mut shadow: HashMap<usize, (u64, Asid)> = HashMap::new();
+            let mut ticks: HashMap<usize, u64> = HashMap::new();
+            let mut gen = 0u64;
+            let (mut rollovers, mut recycles) = (0u64, 0u64);
+            let mut used_ever = vec![false; slots];
+            let mut dirty = vec![false; slots];
+            let tenants = slots * 4 + 8;
+            for tick in 0..4096u64 {
+                let t = rng.below(tenants as u64) as usize;
+                if rng.below(8) == 0 {
+                    a.drop_tenant(t);
+                    shadow.remove(&t);
+                    ticks.remove(&t);
+                    continue;
+                }
+                let was_live = shadow.get(&t).copied();
+                let touch = a.touch(t);
+                ticks.insert(t, tick);
+                if let Some((g, asid)) = was_live {
+                    // a live lease is stable: same tag, no action flags
+                    assert!(!touch.fresh && !touch.rollover && !touch.sweep);
+                    assert_eq!(touch.asid, asid);
+                    assert_eq!(g, gen, "live lease survived from a dead generation");
+                } else {
+                    assert!(touch.fresh, "a new lease must re-derive lanes");
+                }
+                if touch.rollover {
+                    assert_eq!(mode, AsidMode::Rollover, "only Rollover mode rolls over");
+                    assert!(!touch.sweep, "the broadcast flush already sweeps everything");
+                    gen += 1;
+                    rollovers += 1;
+                    // every pre-rollover lease is revoked before the
+                    // first recycled tag is used
+                    shadow.clear();
+                    ticks.retain(|k, _| *k == t);
+                    dirty.fill(false);
+                }
+                if touch.fresh {
+                    let s = touch.asid.0 as usize;
+                    assert_eq!(
+                        touch.sweep, dirty[s],
+                        "sweep iff the slot may still hold a previous owner's entries"
+                    );
+                    // a slot collision against a *live* lease is a steal:
+                    // it must pick the least-recently-touched victim
+                    let victim = shadow
+                        .iter()
+                        .find(|(_, &(_, asid))| asid == touch.asid)
+                        .map(|(&tenant, _)| tenant);
+                    if let Some(victim) = victim {
+                        assert_eq!(mode, AsidMode::Steal);
+                        assert!(touch.sweep, "a stolen slot holds the victim's entries");
+                        let vt = ticks[&victim];
+                        assert!(
+                            shadow.keys().all(|k| ticks[k] >= vt),
+                            "steal must evict the LRU lease"
+                        );
+                        shadow.remove(&victim);
+                        ticks.remove(&victim);
+                    }
+                    recycles += used_ever[s] as u64;
+                    used_ever[s] = true;
+                    dirty[s] = true;
+                    shadow.insert(t, (gen, touch.asid));
+                }
+                // no two live tenants share a (generation, asid)
+                let mut tags: Vec<u16> = shadow
+                    .values()
+                    .map(|&(g, asid)| {
+                        assert_eq!(g, gen, "live lease outlived its generation");
+                        asid.0
+                    })
+                    .collect();
+                tags.sort_unstable();
+                tags.dedup();
+                assert_eq!(tags.len(), shadow.len(), "two live tenants share a tag");
+                // the allocator agrees with the shadow exactly
+                assert_eq!(a.generation(), gen);
+                assert_eq!((a.rollovers, a.recycles), (rollovers, recycles));
+                let live = a.live();
+                assert_eq!(live.len(), shadow.len());
+                for (tenant, asid) in live {
+                    assert_eq!(shadow.get(&tenant).map(|&(_, x)| x), Some(asid));
+                    assert_eq!(a.asid_of(tenant), Some(asid));
+                }
+            }
+            match mode {
+                AsidMode::Rollover => {
+                    assert!(a.rollovers > 0, "{slots} slots must see rollover pressure")
+                }
+                AsidMode::Steal => {
+                    assert_eq!(a.rollovers, 0, "Steal mode never rolls over");
+                    assert!(a.recycles > 0, "{slots} slots must see steal pressure");
+                }
+            }
+        }
+    }
+}
+
+/// The shared contiguity profiles, as the scale driver assigns them
+/// (`tenant t` runs profile `t mod 3`).
+const PROFILES: [&str; 3] = ["libquantum", "sjeng", "povray"];
+
+/// Drive a two-pass population through one engine under `mode`: a full
+/// in-order sweep of `tenants`, then a re-visit of the first
+/// `revisit`.  Each quantum touches the tenant's two private pages
+/// twice (2 misses + 2 verified hits), so between any tenant's visits
+/// the whole hierarchy turns over many times — the precondition that
+/// makes rollover-flush refills vanish and the two modes comparable.
+fn drive_population(
+    kind: SchemeKind,
+    mode: AsidMode,
+    tenants: usize,
+    revisit: usize,
+) -> (Metrics, u64, u64) {
+    let cfg = Config {
+        trace_len: 1 << 12,
+        epoch: 1 << 12,
+        workers: 1,
+        use_xla: false,
+        max_ws_pages: Some(1 << 10),
+        chunk_len: 1 << 10,
+        ..Config::default()
+    };
+    let profiles: Vec<BenchContext> = PROFILES
+        .iter()
+        .map(|n| BenchContext::build(benchmark(n).unwrap(), &cfg, None).unwrap())
+        .collect();
+    let spaces: Vec<AddressSpace> =
+        profiles.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    let remaps: Vec<VpnRemap<'_>> =
+        spaces.iter().map(|s| VpnRemap::wrapping(s.mapping()).unwrap()).collect();
+    let mut eng = Engine::new(kind.build_boxed(spaces[0].mapping(), spaces[0].hist()))
+        .with_epoch(1 << 62)
+        .with_allocator(AsidAllocator::new(1 << 16, mode));
+    eng.verify = true;
+    if let Some(a) = eng.seed_tenant(0) {
+        eng.refresh_lane(a, spaces[0].view());
+    }
+    for t in (0..tenants).chain(0..revisit) {
+        let prof = t % PROFILES.len();
+        if let Some(a) = eng.switch_to_tenant(t) {
+            eng.refresh_lane(a, spaces[prof].view());
+        }
+        let base = (t as u64) * 2;
+        let mut chunk: [Vpn; 4] = [base, base + 1, base, base + 1];
+        remaps[prof].apply(&mut chunk);
+        eng.run_chunk(&chunk, spaces[prof].view());
+    }
+    let (rollovers, recycles) = eng.alloc_stats().expect("oracle engine runs with an allocator");
+    (eng.finish().0, rollovers, recycles)
+}
+
+/// The differential oracle: 65536 + 512 tenants (past the whole `u16`
+/// tag space) under generation rollover vs the wide-tag Steal oracle,
+/// for all seven schemes.  Every miss metric and the whole per-tenant
+/// attribution table must be identical; only the pressure counters
+/// (shootdowns/rollovers vs steals) may differ.
+#[test]
+fn rollover_matches_the_wide_tag_oracle_past_64ki_tenants() {
+    const TENANTS: usize = (1 << 16) + 512;
+    const REVISIT: usize = 1024;
+    for kind in seven() {
+        let (ro, ro_rolls, ro_recycles) =
+            drive_population(kind, AsidMode::Rollover, TENANTS, REVISIT);
+        let (st, st_rolls, st_recycles) =
+            drive_population(kind, AsidMode::Steal, TENANTS, REVISIT);
+        let label = kind.label();
+        // miss metrics: identical (no rollover-flush refills by design)
+        assert_eq!(ro.accesses, ((TENANTS + REVISIT) * 4) as u64, "{label}");
+        assert_eq!(ro.accesses, st.accesses, "{label}");
+        assert_eq!(ro.walks, st.walks, "{label}: walks must match the wide-tag oracle");
+        assert_eq!(ro.l1_hits, st.l1_hits, "{label}");
+        assert_eq!(ro.l2_regular_hits, st.l2_regular_hits, "{label}");
+        assert_eq!(ro.l2_coalesced_hits, st.l2_coalesced_hits, "{label}");
+        assert_eq!(ro.context_switches, st.context_switches, "{label}");
+        assert_eq!(ro.tenant_stats, st.tenant_stats, "{label}: per-tenant attribution");
+        // a fresh or long-evicted tag cold-misses its first access
+        assert!(ro.walks >= (TENANTS + REVISIT) as u64, "{label}");
+        assert!(ro.l1_hits + ro.l2_regular_hits + ro.l2_coalesced_hits > 0, "{label}");
+        // pressure counters are where the modes must differ
+        assert!(ro_rolls >= 1, "{label}: >64Ki tenants must roll the generation over");
+        assert_eq!(ro.shootdowns, ro_rolls, "{label}: one broadcast flush per rollover");
+        assert!(ro_recycles > 0, "{label}");
+        assert_eq!(st_rolls, 0, "{label}: the wide-tag oracle never rolls over");
+        assert_eq!(st.shootdowns, 0, "{label}: steals sweep precisely, never broadcast");
+        assert!(
+            st_recycles >= (512 + REVISIT) as u64,
+            "{label}: every post-exhaustion visit steals a tag"
+        );
+    }
+}

@@ -104,6 +104,8 @@ fn churny_mix(cfg: &Config) -> TenantMixCtx {
         schedule,
         epoch: cfg.epoch,
         cost: cfg.cost,
+        engine: cfg.engine,
+        asid_slots: None,
     }
 }
 
@@ -123,7 +125,9 @@ fn decisions(
         m.aligned_probes,
         m.invalidations,
         m.context_switches,
-        m.tenant_stats.clone(),
+        // tenant rows carry [accesses, walks, cycles] — project the
+        // cycle column out, it is exactly what charging changes
+        m.tenant_stats.iter().map(|r| [r[0], r[1]]).collect(),
         m.phase_marks.clone(),
     )
 }

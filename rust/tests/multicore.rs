@@ -11,6 +11,7 @@ use katlb::coordinator::{
     Config, McParams, SchemeKind, TenantMixCtx,
 };
 use katlb::mem::addrspace::{MutationEvent, MutationOp, MutationSchedule};
+use katlb::sim::tenants::{SwitchEvent, TenantSchedule};
 use katlb::sim::{CostModel, IpiPolicy};
 use katlb::workloads::{benchmark, tenant_mixes};
 use std::sync::Arc;
@@ -214,6 +215,61 @@ fn one_core_tenant_cell_matches_serial() {
         let mc = run_multicore_tenant_cell(&mix, kind, &McParams::new(1));
         assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
     }
+}
+
+/// ASID-recycling satellite: three tenants over a 2-slot allocator,
+/// with the third tenant arriving exactly at a gang quantum boundary —
+/// the generation rollover (bump + broadcast flush) lands at that
+/// boundary on every core.  `cores = 1` stays bit-identical to the
+/// serial tenant cell for every scheme, and at N cores the lockstep
+/// per-core allocators multiply the switch *and* rollover accounting
+/// by exactly N.
+#[test]
+fn rollover_on_quantum_boundary_matches_serial_and_scales() {
+    let c = cfg();
+    let l = c.trace_len as u64;
+    let tenants: Vec<Arc<BenchContext>> = ["libquantum", "sjeng", "povray"]
+        .iter()
+        .map(|n| Arc::new(BenchContext::build(benchmark(n).unwrap(), &c, None).unwrap()))
+        .collect();
+    let schedule = TenantSchedule::with_events(
+        vec![
+            SwitchEvent { at: l / 4, tenant: 1 },
+            SwitchEvent { at: l / 2, tenant: 2 }, // 3rd tenant: rollover
+            SwitchEvent { at: 5 * l / 8, tenant: 0 },
+            SwitchEvent { at: 3 * l / 4, tenant: 1 }, // exhausted again
+        ],
+        3,
+        l,
+    );
+    let mix = Arc::new(TenantMixCtx {
+        name: "rollover-mix".into(),
+        tenants,
+        schedule,
+        epoch: c.epoch,
+        cost: c.cost,
+        engine: c.engine,
+        asid_slots: Some(2),
+    });
+    for kind in seven() {
+        let serial = run_tenant_cell(&mix, kind);
+        assert_eq!(
+            serial.metrics.shootdowns, 2,
+            "{}: both exhaustions roll the generation over",
+            kind.label()
+        );
+        let mc = run_multicore_tenant_cell(&mix, kind, &McParams::new(1));
+        assert_eq!(serial.metrics, mc.cell.metrics, "{}", kind.label());
+    }
+    let serial = run_tenant_cell(&mix, SchemeKind::KAligned(2));
+    let r = run_multicore_tenant_cell(&mix, SchemeKind::KAligned(2), &McParams::new(3));
+    assert_eq!(r.cell.metrics.context_switches, 3 * serial.metrics.context_switches);
+    assert_eq!(
+        r.cell.metrics.shootdowns,
+        3 * serial.metrics.shootdowns,
+        "lockstep allocators roll over on every core at the same boundary"
+    );
+    assert_eq!(r.cell.metrics.switch_flushes, 0, "recycling never falls back to switch-flushes");
 }
 
 /// Gang scheduling: every core pays every switch (switches scale with

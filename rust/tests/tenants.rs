@@ -14,7 +14,7 @@ use katlb::pagetable::PageTable;
 use katlb::schemes::base::BaseL2;
 use katlb::schemes::{Outcome, Scheme};
 use katlb::sim::tenants::{SwitchEvent, TenantSchedule};
-use katlb::sim::{Engine, Metrics};
+use katlb::sim::{AsidAllocator, AsidMode, Engine, Metrics};
 use katlb::workloads::benchmark;
 use katlb::{Asid, Vpn};
 use std::sync::Arc;
@@ -96,6 +96,8 @@ fn boundary_mix(cfg: &Config) -> TenantMixCtx {
         schedule,
         epoch: cfg.epoch,
         cost: cfg.cost,
+        engine: cfg.engine,
+        asid_slots: None,
     }
 }
 
@@ -179,6 +181,180 @@ fn sharded_equals_serial_with_tenant_schedule() {
         let par = run_tenant_cells_sharded(vec![(Arc::clone(&mix), kind)], shards, 3);
         assert_eq!(par[0].metrics, merged, "{}: pool vs serial shard loop", kind.label());
         assert_eq!(par[0].shards, shards);
+    }
+}
+
+/// ASID-allocator satellite: with the full 16-bit tag space and fewer
+/// tenants than slots, the generation allocator leases tags densely in
+/// first-touch order — which on this mix coincides with the legacy
+/// `Asid::from_index` identity — and never rolls over, so the run is
+/// bit-identical to the pre-allocator pipeline, full [`Metrics`]
+/// equality included.
+#[test]
+fn wide_allocator_is_bit_identical_to_legacy_identity() {
+    let cfg = tenant_cfg();
+    let legacy = Arc::new(boundary_mix(&cfg));
+    let mut wide = boundary_mix(&cfg);
+    wide.asid_slots = Some(1 << 16);
+    let wide = Arc::new(wide);
+    for kind in seven() {
+        let a = run_tenant_cell(&legacy, kind);
+        let b = run_tenant_cell(&wide, kind);
+        assert_eq!(
+            a.metrics, b.metrics,
+            "{}: no-rollover allocator runs must reproduce the legacy identity bit for bit",
+            kind.label()
+        );
+        assert_eq!(b.metrics.shootdowns, 0, "{}: 2 tenants never exhaust 64Ki tags", kind.label());
+    }
+}
+
+/// Three tenants over a 2-slot allocator, with both tag exhaustions
+/// landing exactly on boundaries of a 4-way shard split.
+fn rollover_boundary_mix(cfg: &Config) -> TenantMixCtx {
+    let tenants: Vec<Arc<BenchContext>> = ["libquantum", "sjeng", "povray"]
+        .iter()
+        .map(|n| Arc::new(BenchContext::build(benchmark(n).unwrap(), cfg, None).unwrap()))
+        .collect();
+    let l = cfg.trace_len as u64;
+    let schedule = TenantSchedule::with_events(
+        vec![
+            SwitchEvent { at: l / 4, tenant: 1 },
+            SwitchEvent { at: l / 2, tenant: 2 }, // rollover, exactly shard 2's start
+            SwitchEvent { at: 5 * l / 8 + 1, tenant: 0 },
+            SwitchEvent { at: 3 * l / 4, tenant: 1 }, // rollover, exactly shard 3's start
+        ],
+        3,
+        l,
+    );
+    TenantMixCtx {
+        name: "rollover-boundary".into(),
+        tenants,
+        schedule,
+        epoch: cfg.epoch,
+        cost: cfg.cost,
+        engine: cfg.engine,
+        asid_slots: Some(2),
+    }
+}
+
+/// Serial reference for an allocator mix: one warm engine (and one
+/// warm allocator) across all shards, with the same silent whole-TLB
+/// flush at each boundary that [`serial_with_boundary_flushes`] uses.
+fn serial_allocator_with_boundary_flushes(
+    mix: &TenantMixCtx,
+    kind: SchemeKind,
+    shards: usize,
+) -> Metrics {
+    let l = mix.schedule.len();
+    let slots = mix.asid_slots.expect("allocator mix");
+    let mut spaces: Vec<AddressSpace> =
+        mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+    let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+    let mut eng = Engine::new(scheme)
+        .with_epoch(mix.epoch)
+        .with_allocator(AsidAllocator::new(slots, AsidMode::Rollover));
+    eng.verify = true;
+    if let Some(a) = eng.seed_tenant(0) {
+        eng.refresh_lane(a, spaces[0].view());
+    }
+    for index in 0..shards {
+        let (s, e) = Shard { index, count: shards }.bounds(l);
+        drive_tenant_span(mix, &mut spaces, &mut eng, s, e).unwrap();
+        if index + 1 < shards {
+            eng.flush();
+        }
+    }
+    eng.finish().0
+}
+
+/// ASID-recycling satellite: sharded == serial when a generation
+/// rollover lands *exactly on a shard boundary*.  The shard that
+/// starts at the boundary replays the allocator prefix, registers the
+/// live leases of the pre-rollover generation, then delivers the
+/// exhausting switch itself — rolling over at the same point the
+/// serial engine does.  Accounting, per-tenant attribution and the
+/// rollover shootdowns must all survive the split, for every scheme.
+#[test]
+fn sharded_equals_serial_with_rollover_on_shard_boundary() {
+    let cfg = tenant_cfg();
+    let mix = Arc::new(rollover_boundary_mix(&cfg));
+    let shards = 4usize;
+    for kind in seven() {
+        let sm = serial_allocator_with_boundary_flushes(&mix, kind, shards);
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_tenant_cell_shard(&mix, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        assert_eq!(
+            sm.accounting(),
+            merged.accounting(),
+            "{}: sharded == serial with a rollover on the shard boundary",
+            kind.label()
+        );
+        assert_eq!(sm.tenant_stats, merged.tenant_stats, "{}", kind.label());
+        assert_eq!(sm.shootdowns, merged.shootdowns, "{}", kind.label());
+        assert_eq!(
+            merged.shootdowns, 2,
+            "{}: both tag exhaustions roll the generation over",
+            kind.label()
+        );
+        assert_eq!(merged.context_switches, mix.schedule.switches() as u64, "{}", kind.label());
+        assert_eq!(merged.switch_flushes, 0, "{}", kind.label());
+        // and the parallel fan-out is deterministic too
+        let par = run_tenant_cells_sharded(vec![(Arc::clone(&mix), kind)], shards, 3);
+        assert_eq!(par[0].metrics, merged, "{}: pool vs serial shard loop", kind.label());
+    }
+}
+
+/// Lane-recycling regression for the derived schemes (K-Aligned,
+/// Anchor-Dynamic, RMM): a 1-slot allocator turns *every* switch into
+/// a rollover, so each span starts with a recycled `Asid(0)` whose
+/// lane must be re-derived from the incoming tenant's space — never
+/// inherited from the tag's previous owner.  The whole run must
+/// therefore walk exactly as much as each span replayed on a cold
+/// engine built from just the active tenant's space.
+#[test]
+fn single_slot_rollover_rederives_lanes_from_scratch() {
+    let mut cfg = tenant_cfg();
+    cfg.epoch = cfg.trace_len as u64; // no mid-span epoch ticks: spans stay pure derivations
+    let mut mix = boundary_mix(&cfg);
+    mix.asid_slots = Some(1);
+    let mix = Arc::new(mix);
+    for kind in [SchemeKind::KAligned(2), SchemeKind::AnchorDynamic, SchemeKind::Rmm] {
+        let whole = run_tenant_cell(&mix, kind);
+        assert_eq!(
+            whole.metrics.shootdowns,
+            mix.schedule.switches() as u64,
+            "{}: one slot makes every switch a rollover",
+            kind.label()
+        );
+        let evs = mix.schedule.events();
+        let mut pos = 0u64;
+        let mut walks = 0u64;
+        for i in 0..=evs.len() {
+            let end = if i < evs.len() { evs[i].at } else { mix.schedule.len() };
+            let t = mix.schedule.active_at(pos);
+            let la = mix.schedule.local_pos(t, pos);
+            let mut spaces: Vec<AddressSpace> =
+                mix.tenants.iter().map(|c| c.build_aspace(kind.uses_thp())).collect();
+            let scheme = kind.build(spaces[t].mapping(), spaces[t].hist());
+            let mut eng = Engine::new(scheme).with_epoch(mix.epoch);
+            eng.verify = true;
+            drive_span(&mix.tenants[t], &mut spaces[t], &mut eng, la, la + (end - pos)).unwrap();
+            walks += eng.finish().0.walks;
+            pos = end;
+        }
+        assert_eq!(
+            whole.metrics.walks, walks,
+            "{}: a recycled tag's lane is re-derived from scratch, never inherited",
+            kind.label()
+        );
     }
 }
 
