@@ -553,21 +553,22 @@ pub fn tenants(cfg: &Config) -> Result<Vec<Table>> {
 /// driver ([`super::scale::run_tenant_scale`]) — ASID leases from a
 /// 16-bit allocator (generation rollover under pressure), the
 /// configured L2 fairness policy, verification ON.  Priced by
-/// [`CostModel::realistic`] like `repro cpi`, so the per-tenant
+/// [`CostModel::realistic`] like `repro cpi` (or
+/// [`CostModel::hierarchy`] under `--hierarchy`), so the per-tenant
 /// p50/p99 translation-CPI tail includes what rollover flushes and
 /// fairness squeezes actually cost.  Schemes fan out over scoped
 /// threads (each run is independent and deterministic, so the table
 /// is reproducible regardless of the interleave).
 fn tenant_scale(cfg: &Config, tenants: usize) -> Result<Vec<Table>> {
     let mut cfg = cfg.clone();
-    cfg.cost = CostModel::realistic();
+    cfg.cost = battery_cost(&cfg);
     let p = super::scale::ScaleParams::from_config(&cfg, tenants);
     let mut t = Table::new(
         &format!(
             "Tenants at scale [{} tenants over {} ASIDs, fairness {:?}]: per-tenant CPI tail",
             tenants, p.asid_slots, cfg.fairness
         ),
-        &["accesses", "miss/1k", "rollovers", "recycles", "p50 CPI", "p99 CPI"],
+        &["accesses", "miss/1k", "rollovers", "recycles", "p50 CPI", "p99 CPI", "idle"],
     );
     let schemes = churn_schemes();
     let (cfg_ref, p_ref) = (&cfg, &p);
@@ -589,10 +590,23 @@ fn tenant_scale(cfg: &Config, tenants: usize) -> Result<Vec<Table>> {
                 r.recycles.to_string(),
                 format!("{:.3}", r.p50_cpi),
                 format!("{:.3}", r.p99_cpi),
+                r.idle_tenants.to_string(),
             ],
         );
     }
     Ok(vec![t])
+}
+
+/// The cost model a realistic-priced battery runs: `--hierarchy`
+/// upgrades walks to the memory-hierarchy model (PWC + VIPT PTE
+/// fetches); the flush-vs-ranged decision knobs are shared, so the
+/// two prices differ only in cycles, never in decisions.
+fn battery_cost(cfg: &Config) -> CostModel {
+    if cfg.hierarchy {
+        CostModel::hierarchy()
+    } else {
+        CostModel::realistic()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -612,6 +626,34 @@ fn cpi_row(m: &Metrics) -> Vec<String> {
     ]
 }
 
+/// One scheme's walk-hierarchy row under [`CostModel::hierarchy`]:
+/// PWC hit rate over probing walks, PTE-fetch residency in the
+/// modeled VIPT L1D, and per-level walk cycles per walk (L1 = root).
+fn walk_row(m: &Metrics) -> Vec<String> {
+    let mut row = vec![
+        format!("{:.1}%", m.pwc_hit_rate() * 100.0),
+        format!("{:.1}%", m.pte_hit_rate() * 100.0),
+    ];
+    for level in 0..crate::sim::walkcache::WALK_LEVEL_BUCKETS {
+        row.push(format!("{:.2}", m.walk_level_cycles_per_walk(level)));
+    }
+    row
+}
+
+/// The walk-hierarchy companion table of one battery's CPI table —
+/// only emitted under `--hierarchy`, where walks actually probe a PWC
+/// and fetch PTEs through the VIPT model.
+fn walk_table(battery: &str, rows: Vec<(String, Vec<String>)>) -> Table {
+    let mut t = Table::new(
+        &format!("Walk hierarchy [{battery}]: PWC + PTE-fetch locality"),
+        &["PWC hit", "pteL1D hit", "L1 c/w", "L2 c/w", "L3 c/w", "L4 c/w"],
+    );
+    for (scheme, row) in rows {
+        t.row(&scheme, row);
+    }
+    t
+}
+
 /// The `repro cpi` experiment: the seven contenders over the churn
 /// battery (three mutation cycles) and the tenant battery (four
 /// mixes), priced by [`CostModel::realistic`] — walks by page-table
@@ -622,13 +664,17 @@ fn cpi_row(m: &Metrics) -> Vec<String> {
 /// translation cycles per access split into hit / walk / shootdown /
 /// switch: the view under which churn- and tenant-heavy miss-rate
 /// wins can be eaten by coherence traffic that miss tables price at
-/// zero.
+/// zero.  Under `--hierarchy` the price upgrades to
+/// [`CostModel::hierarchy`] (page-walk cache + VIPT PTE-fetch
+/// pricing) and each battery gains a companion table of PWC hit rate
+/// and per-level walk cycles per scheme.
 pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
     let mut cfg = cfg.clone();
-    cfg.cost = CostModel::realistic();
+    cfg.cost = battery_cost(&cfg);
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
     let cols = ["hit c/a", "walk c/a", "shootdown c/a", "switch c/a", "total c/a"];
     let mut out = Vec::new();
+    let mut walk_tables = Vec::new();
     for (kind, wl) in crate::workloads::churn_workloads() {
         let ctx = Arc::new(BenchContext::build_churn(wl, kind, &cfg, rt.as_ref())?);
         let mut t = Table::new(
@@ -640,6 +686,13 @@ pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
         let results = run_cells_sharded(cells, cfg.shards, cfg.effective_workers());
         for r in &results {
             t.row(&r.scheme, cpi_row(&r.metrics));
+        }
+        if cfg.hierarchy {
+            let rows = results
+                .iter()
+                .map(|r| (r.scheme.clone(), walk_row(&r.metrics)))
+                .collect();
+            walk_tables.push(walk_table(&format!("churn {}", kind.label()), rows));
         }
         out.push(t);
     }
@@ -655,8 +708,16 @@ pub fn cpi(cfg: &Config) -> Result<Vec<Table>> {
         for r in &results {
             t.row(&r.scheme, cpi_row(&r.metrics));
         }
+        if cfg.hierarchy {
+            let rows = results
+                .iter()
+                .map(|r| (r.scheme.clone(), walk_row(&r.metrics)))
+                .collect();
+            walk_tables.push(walk_table(&format!("tenants {}", ctx.name), rows));
+        }
         out.push(t);
     }
+    out.extend(walk_tables);
     Ok(out)
 }
 
@@ -707,7 +768,7 @@ fn total_cpa(m: &Metrics) -> String {
 /// would panic the engine's translation check.
 pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
     let mut cfg = cfg.clone();
-    cfg.cost = CostModel::realistic();
+    cfg.cost = battery_cost(&cfg);
     cfg.shards = 1;
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
     let counts = core_counts(&cfg);
@@ -776,7 +837,7 @@ pub fn cores(cfg: &Config) -> Result<Vec<Table>> {
 }
 
 // ---------------------------------------------------------------------------
-// Bench: engine-throughput harness (machine-readable BENCH_9.json)
+// Bench: engine-throughput harness (machine-readable BENCH_10.json)
 // ---------------------------------------------------------------------------
 
 /// Everything `repro bench` produced: the throughput table, the delta
@@ -804,7 +865,7 @@ struct Baseline {
 /// like the production fast path).  The *work* is fully reproducible —
 /// seeds, partitioning and metrics are deterministic, and the JSON
 /// records them next to the wall-clock numbers so regressions in
-/// either are diffable.  Writes `BENCH_9.json` in the working
+/// either are diffable.  Writes `BENCH_10.json` in the working
 /// directory and diffs against `cfg.bench_baseline` (default: the
 /// highest-numbered non-placeholder `BENCH_*.json`, read *before* the
 /// output is overwritten — so a `--engine reference` run followed by
@@ -813,7 +874,7 @@ struct Baseline {
 /// SIMD-vs-scalar delta; the active scan backend is recorded in the
 /// JSON's `scan` field).
 pub fn bench(cfg: &Config) -> Result<BenchReport> {
-    bench_to(cfg, "BENCH_9.json")
+    bench_to(cfg, "BENCH_10.json")
 }
 
 pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
@@ -824,6 +885,17 @@ pub fn bench_to(cfg: &Config, path: &str) -> Result<BenchReport> {
         Some(p) => Some(load_baseline(p)?),
         None => default_baseline().and_then(|p| load_baseline(&p).ok()),
     };
+    // a gate with nothing to gate against must fail loudly: every
+    // committed BENCH_*.json through 9 is a placeholder, so a fresh
+    // checkout's default-baseline search finds nothing and the gate
+    // would otherwise pass vacuously
+    if cfg.bench_gate && baseline.is_none() {
+        bail!(
+            "--gate has no real baseline: every BENCH_*.json in the working \
+             directory is a committed placeholder (or none exists). Run \
+             `repro bench` once to record a real baseline, or pass --baseline PATH."
+        );
+    }
     let mut cfg = cfg.clone();
     cfg.cost = CostModel::zero();
     let rt = if cfg.use_xla { Some(Runtime::load_default()?) } else { None };
@@ -1190,6 +1262,57 @@ mod tests {
         for (label, cells) in &d.rows {
             assert!(cells[2].ends_with('x'), "{label}: speedup column renders as a ratio");
         }
+    }
+
+    #[test]
+    fn hierarchy_cpi_appends_walk_tables() {
+        let mut cfg = tiny();
+        cfg.max_ws_pages = Some(1 << 13);
+        cfg.hierarchy = true;
+        let tables = cpi(&cfg).unwrap();
+        assert_eq!(tables.len(), 7 + 7, "each battery gains a walk-hierarchy companion");
+        let walk: Vec<_> = tables
+            .iter()
+            .filter(|t| t.title.contains("Walk hierarchy"))
+            .collect();
+        assert_eq!(walk.len(), 7);
+        for t in &walk {
+            assert_eq!(t.rows.len(), 7, "seven schemes: {}", t.title);
+            let mut any_pwc_hits = false;
+            for (label, cells) in &t.rows {
+                let pwc: f64 =
+                    cells[0].trim_end_matches('%').parse().expect("PWC hit% parses");
+                assert!((0.0..=100.0).contains(&pwc), "{label} in {}", t.title);
+                any_pwc_hits |= pwc > 0.0;
+                let pte: f64 = cells[1].trim_end_matches('%').parse().unwrap();
+                assert!((0.0..=100.0).contains(&pte), "{label} in {}", t.title);
+                for c in &cells[2..] {
+                    c.parse::<f64>().expect("per-level c/w parses");
+                }
+            }
+            assert!(any_pwc_hits, "{}: no scheme's walks ever hit the PWC", t.title);
+        }
+        // the CPI tables themselves still sum correctly under hierarchy pricing
+        for t in tables.iter().filter(|t| t.title.contains("CPI [")) {
+            for (label, cells) in &t.rows {
+                let col = |i: usize| cells[i].parse::<f64>().unwrap();
+                let total = col(0) + col(1) + col(2) + col(3);
+                assert!((total - col(4)).abs() < 5e-3, "{label} in {}", t.title);
+                assert!(col(1) > 0.0, "{label} in {}: walks still cost cycles", t.title);
+            }
+        }
+    }
+
+    #[test]
+    fn bench_gate_requires_a_real_baseline() {
+        // tests run in rust/, where no BENCH_*.json exists (the
+        // committed placeholders live at the repo root and are skipped
+        // anyway) — the gate must fail loudly rather than pass vacuously
+        let mut cfg = tiny();
+        cfg.cores = Some(1);
+        cfg.bench_gate = true;
+        let err = bench_to(&cfg, "/dev/null").unwrap_err();
+        assert!(err.to_string().contains("no real baseline"), "{err}");
     }
 
     #[test]

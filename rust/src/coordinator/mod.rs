@@ -320,6 +320,12 @@ pub struct Config {
     /// per-ASID L2 fairness partitioning policy for the scale battery
     /// (`--fairness none|quota|missprop`)
     pub fairness: crate::tlb::FairnessPolicy,
+    /// price walks through the memory hierarchy
+    /// ([`CostModel::hierarchy`]: page-walk cache + VIPT PTE-fetch
+    /// pricing) in the batteries that default to
+    /// [`CostModel::realistic`] (`--hierarchy`); `repro cpi` then also
+    /// reports PWC hit rate and per-level walk cycles per scheme
+    pub hierarchy: bool,
 }
 
 impl Default for Config {
@@ -340,6 +346,7 @@ impl Default for Config {
             bench_gate: false,
             tenants: None,
             fairness: crate::tlb::FairnessPolicy::None,
+            hierarchy: false,
         }
     }
 }
@@ -362,6 +369,7 @@ impl Config {
             bench_gate: false,
             tenants: None,
             fairness: crate::tlb::FairnessPolicy::None,
+            hierarchy: false,
         }
     }
 

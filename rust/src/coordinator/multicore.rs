@@ -335,6 +335,14 @@ fn route_group<S: Scheme>(
                         let outcome = cores[c].eng.invalidate_range_as(asid, v, l);
                         apply_outcome(&mut filters[c], asid, v, l, outcome);
                     }
+                    // leaf-filtered cores may still hold *upper-level*
+                    // PWC entries covering the range (a PD entry spans
+                    // 512 pages): drop the coverage uncharged
+                    for (c, core) in cores.iter_mut().enumerate() {
+                        if c != initiator && !resp.contains(&c) {
+                            core.eng.drop_walk_coverage(asid, v, l);
+                        }
+                    }
                     bus.record_unit(resp.len());
                     for core in cores.iter_mut() {
                         core.eng.os_sync_range(asid, v, l);
@@ -370,14 +378,30 @@ fn route_group<S: Scheme>(
                 return;
             }
             // responder batches from the batch-start filters (may
-            // over-deliver; never under-delivers)
+            // over-deliver; never under-delivers); leaf-filtered cores
+            // still shed their upper-level PWC coverage of each missed
+            // range, uncharged (see the per-event path)
             let mut batches: Vec<Vec<(Asid, Vpn, u64)>> = vec![Vec::new(); n];
+            let mut missed: Vec<Vec<(Asid, Vpn, u64)>> = vec![Vec::new(); n];
             for &(a, v, l) in &ranges {
-                for c in bus.responders(initiator, a, v, l, filters) {
-                    batches[c].push((a, v, l));
+                let resp = bus.responders(initiator, a, v, l, filters);
+                for c in 0..n {
+                    if c == initiator {
+                        continue;
+                    }
+                    if resp.contains(&c) {
+                        batches[c].push((a, v, l));
+                    } else {
+                        missed[c].push((a, v, l));
+                    }
                 }
             }
             batches[initiator] = ranges.clone();
+            for (c, ms) in missed.iter().enumerate() {
+                for &(a, v, l) in ms {
+                    cores[c].eng.drop_walk_coverage(a, v, l);
+                }
+            }
             let mut remote = 0usize;
             for (c, batch) in batches.iter().enumerate() {
                 if batch.is_empty() {

@@ -6,6 +6,7 @@
 //!                   [--shards N] [--chunk N] [--cores N] [--coalesce-ipi]
 //!                   [--engine batched|reference] [--baseline BENCH_N.json]
 //!                   [--gate] [--tenants N] [--fairness none|quota|missprop]
+//!                   [--hierarchy]
 //!
 //! Commands:
 //!   fig1 fig2 fig3 fig8 fig9 fig10 table4 table5 table6 initcost
@@ -22,13 +23,16 @@
 //!                (--fairness picks the L2 partitioning policy)
 //!   cpi        — cycle-accurate cost model over the churn + tenant
 //!                batteries: per-scheme translation cycles per access
-//!                split into hit/walk/shootdown/switch
+//!                split into hit/walk/shootdown/switch; --hierarchy
+//!                prices walks through the memory hierarchy (page-walk
+//!                cache + VIPT PTE fetches) and appends per-battery
+//!                tables of PWC hit rate and per-level walk cycles
 //!   cores      — true multi-core cells (N private TLBs over one
 //!                shared space, IPI shootdown interconnect) at
 //!                1/8/64/256 cores (or --cores N): per-core miss
 //!                spread, IPI counts, responder fan-out, CPI
 //!   bench      — reproducible throughput harness (scheme × cores);
-//!                writes machine-readable BENCH_9.json (including the
+//!                writes machine-readable BENCH_10.json (including the
 //!                active TLB scan backend) and prints a delta table
 //!                against --baseline (default: newest committed
 //!                BENCH_*.json); --gate fails the run on a >20%
@@ -129,6 +133,7 @@ fn parse_args() -> Result<(String, Config)> {
                     other => bail!("--fairness must be none|quota|missprop, got {other}"),
                 };
             }
+            "--hierarchy" => cfg.hierarchy = true,
             other => bail!("unknown flag {other}"),
         }
     }
@@ -160,7 +165,7 @@ fn main() -> Result<()> {
                  [--quick] [--no-xla] [--trace-len N] [--workers N] [--max-ws PAGES] \
                  [--shards N] [--chunk N] [--cores N] [--coalesce-ipi] \
                  [--engine batched|reference] [--baseline BENCH_N.json] [--gate] \
-                 [--tenants N] [--fairness none|quota|missprop]"
+                 [--tenants N] [--fairness none|quota|missprop] [--hierarchy]"
             );
             return Ok(());
         }

@@ -55,6 +55,27 @@ pub struct CostModel {
     /// branch's shootdown cost and the extra price of an untagged
     /// context switch
     pub flush_refill: u64,
+
+    // -- walk hierarchy (page-walk cache + VIPT PTE-fetch pricing) --
+    // All zero by default: walks stay priced by `walk_base` and the
+    // engine never builds hierarchy state — bit-identical to the
+    // pre-hierarchy pipeline.  `hierarchy()` turns everything on.
+    /// page-walk-cache capacities for the upper walk levels (depth
+    /// 1..=3 — PML4E / PDPE / PDE split for a 4-level walk); all zero
+    /// = no PWC
+    pub pwc_entries: [u16; 3],
+    /// cycles of a PWC lookup that skips levels (charged once per
+    /// skipping walk)
+    pub pwc_hit: u64,
+    /// VIPT L1D sets for PTE-fetch pricing; 0 = VIPT model off (each
+    /// remaining level then charges the flat `walk_level`)
+    pub pte_sets: u32,
+    /// VIPT L1D associativity (clamped to >= 1 when `pte_sets > 0`)
+    pub pte_ways: u32,
+    /// cycles of a PTE fetch resident in the modeled L1D
+    pub pte_hit: u64,
+    /// cycles of a PTE fetch that misses to the outer hierarchy
+    pub pte_miss: u64,
 }
 
 impl Default for CostModel {
@@ -77,6 +98,12 @@ impl CostModel {
             ipi: 0,
             asid_load: 0,
             flush_refill: 0,
+            pwc_entries: [0, 0, 0],
+            pwc_hit: 0,
+            pte_sets: 0,
+            pte_ways: 0,
+            pte_hit: 0,
+            pte_miss: 0,
         }
     }
 
@@ -88,15 +115,41 @@ impl CostModel {
     /// sweeps lose to a whole flush (`repro cpi` runs this).
     pub fn realistic() -> Self {
         CostModel {
-            lat: Latency::default(),
-            l1_hit: 0,
             walk_level: 13,
-            walk_levels: 4,
             inval_page: 40,
             ipi: 1500,
             asid_load: 20,
             flush_refill: 20_000,
+            ..CostModel::zero()
         }
+    }
+
+    /// [`CostModel::realistic`] plus the memory-hierarchy walk model:
+    /// a small PWC per upper level (x86-style PML4E/PDPE/PDE split)
+    /// and a 64-set 8-way VIPT L1D for PTE fetches (a 32KB/64B-line
+    /// data cache) pricing each remaining level by residency — 4
+    /// cycles resident, 40 to the outer hierarchy.  Walk cost now
+    /// tracks locality: a warm sequential stream walks in a handful
+    /// of cycles, a scattered one pays near-DRAM per level.
+    pub fn hierarchy() -> Self {
+        CostModel {
+            pwc_entries: [4, 8, 32],
+            pwc_hit: 2,
+            pte_sets: 64,
+            pte_ways: 8,
+            pte_hit: 4,
+            pte_miss: 40,
+            ..CostModel::realistic()
+        }
+    }
+
+    /// Whether any walk-hierarchy knob is on — the engine builds (and
+    /// prices walks through) a [`super::walkcache::WalkCache`] exactly
+    /// when this holds; otherwise walks charge [`CostModel::walk_base`]
+    /// unchanged.
+    #[inline]
+    pub fn hierarchy_enabled(&self) -> bool {
+        self.pwc_entries != [0, 0, 0] || self.pte_sets > 0
     }
 
     /// Base walk cost: flat Table 2 when `walk_level == 0`, else
@@ -175,6 +228,24 @@ mod tests {
         assert_eq!(c.switch(false), 0);
         assert!(!c.prefers_flush(u64::MAX), "zero model never flushes");
         assert_eq!(CostModel::default(), c);
+    }
+
+    #[test]
+    fn hierarchy_knobs_default_off_and_preset_on() {
+        assert!(!CostModel::zero().hierarchy_enabled());
+        assert!(!CostModel::realistic().hierarchy_enabled(), "realistic stays pre-hierarchy");
+        let h = CostModel::hierarchy();
+        assert!(h.hierarchy_enabled());
+        assert_eq!(h.pwc_entries, [4, 8, 32]);
+        assert!(h.pte_sets > 0 && h.pte_ways > 0);
+        assert!(h.pte_miss > h.pte_hit);
+        // everything below the hierarchy matches realistic(): the
+        // decision rule (flush-vs-ranged) is unchanged by the preset
+        let r = CostModel::realistic();
+        assert_eq!((h.inval_page, h.ipi, h.flush_refill), (r.inval_page, r.ipi, r.flush_refill));
+        // VIPT-only and PWC-only configs also count as hierarchy
+        assert!(CostModel { pte_sets: 8, ..CostModel::zero() }.hierarchy_enabled());
+        assert!(CostModel { pwc_entries: [0, 0, 1], ..CostModel::zero() }.hierarchy_enabled());
     }
 
     #[test]

@@ -72,6 +72,7 @@ use super::asid::AsidAllocator;
 use super::cost::{CostModel, InvalOutcome};
 use super::latency::Latency;
 use super::metrics::Metrics;
+use super::walkcache::WalkCache;
 use crate::mem::addrspace::SpaceView;
 use crate::schemes::{Outcome, Scheme};
 use crate::tlb::L1Tlb;
@@ -85,6 +86,10 @@ pub struct Engine<S: Scheme = Box<dyn Scheme>> {
     scheme: S,
     l1: L1Tlb,
     cost: CostModel,
+    /// walk-hierarchy state (PWC + VIPT PTE pricing), rebuilt with the
+    /// cost model; disabled (and never consulted) unless the model's
+    /// hierarchy knobs are on
+    walk: WalkCache,
     metrics: Metrics,
     epoch_len: u64,
     since_epoch: u64,
@@ -123,6 +128,7 @@ impl<S: Scheme> Engine<S> {
             scheme,
             l1: L1Tlb::new(),
             cost: CostModel::zero(),
+            walk: WalkCache::new(&CostModel::zero()),
             metrics: Metrics::default(),
             epoch_len: DEFAULT_EPOCH,
             since_epoch: 0,
@@ -158,12 +164,19 @@ impl<S: Scheme> Engine<S> {
     /// which reproduces the pre-cost pipeline bit for bit.
     pub fn with_cost(mut self, cost: CostModel) -> Self {
         self.cost = cost;
+        self.walk = WalkCache::new(&cost);
         self
     }
 
     /// The engine's cost model.
     pub fn cost(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// The engine's walk-hierarchy state (the stale-upper-PTE oracle
+    /// tests inspect PWC coverage through this).
+    pub fn walk_cache(&self) -> &WalkCache {
+        &self.walk
     }
 
     /// Install an ASID allocator: tenant ids handed to
@@ -261,9 +274,13 @@ impl<S: Scheme> Engine<S> {
         };
         if touch.rollover {
             // generation rollover: broadcast flush, priced as a
-            // flush-class shootdown (no per-page body)
+            // flush-class shootdown (no per-page body).  The PWC dies
+            // with the TLBs: every pre-rollover lease is revoked, so a
+            // surviving upper-level entry would be stale state under a
+            // recycled tag.
             self.l1.flush();
             self.scheme.flush();
+            self.walk.flush();
             self.metrics.record_shootdown();
             self.metrics.record_invalidation(self.cost.shootdown(InvalOutcome::Flushed, 0));
         }
@@ -271,6 +288,7 @@ impl<S: Scheme> Engine<S> {
             self.scheme.drop_lane(touch.asid, touch.sweep);
             if touch.sweep {
                 self.l1.evict_asid(touch.asid);
+                self.walk.evict_asid(touch.asid);
             }
         }
         if tenant != self.tenant || touch.asid != self.asid {
@@ -354,7 +372,10 @@ impl<S: Scheme> Engine<S> {
         self.asid = asid;
         self.scheme.switch_to(asid);
         if !tagged {
+            // untagged hardware flushes all translation state on a
+            // switch — the PWC is translation state
             self.l1.flush();
+            self.walk.flush();
         }
     }
 
@@ -389,8 +410,17 @@ impl<S: Scheme> Engine<S> {
                 // page-table walk; PPN delivered to core + L1 directly,
                 // L2 filled by the scheme (Figure 5: off the critical
                 // path for K-Aligned).  An unmapped VPN is a fault:
-                // the walk cost is paid, nothing is filled.
-                self.metrics.record_walk(&self.cost, probes, is_huge);
+                // the walk cost is paid, nothing is filled.  With the
+                // hierarchy model on, the walk starts at the first
+                // level the PWC missed and each remaining PTE fetch is
+                // priced by VIPT residency; off, the flat walk_base
+                // path is untouched.
+                if self.walk.enabled() {
+                    let w = self.walk.charge(self.asid, vpn, is_huge, &self.cost);
+                    self.metrics.record_walk_priced(&self.cost, probes, &w);
+                } else {
+                    self.metrics.record_walk(&self.cost, probes, is_huge);
+                }
                 if let Some(ppn) = view.pt.translate(vpn) {
                     self.fill_l1_with(vpn, ppn, is_huge);
                     self.scheme.fill(vpn, view.pt);
@@ -552,6 +582,7 @@ impl<S: Scheme> Engine<S> {
     pub fn flush(&mut self) {
         self.l1.flush();
         self.scheme.flush();
+        self.walk.flush();
         self.metrics.record_shootdown();
     }
 
@@ -584,8 +615,18 @@ impl<S: Scheme> Engine<S> {
         }
         let outcome = self.scheme.invalidate_range(asid, vstart, len, &self.cost);
         match outcome {
-            InvalOutcome::Ranged => self.l1.invalidate_range(asid, vstart, len),
-            InvalOutcome::Flushed => self.l1.flush(),
+            InvalOutcome::Ranged => {
+                self.l1.invalidate_range(asid, vstart, len);
+                // the PWC caches upper-level PTEs of the range too —
+                // leaving them resident would let a later walk skip
+                // through a freed page-table subtree (stale-upper-PTE
+                // oracle in tests/walkcache.rs)
+                self.walk.invalidate_range(asid, vstart, len);
+            }
+            InvalOutcome::Flushed => {
+                self.l1.flush();
+                self.walk.flush();
+            }
         }
         self.metrics.record_invalidation(self.cost.shootdown(outcome, len));
         outcome
@@ -607,15 +648,32 @@ impl<S: Scheme> Engine<S> {
         for &&(asid, vstart, len) in &live {
             let outcome = self.scheme.invalidate_range(asid, vstart, len, &self.cost);
             match outcome {
-                InvalOutcome::Ranged => self.l1.invalidate_range(asid, vstart, len),
+                InvalOutcome::Ranged => {
+                    self.l1.invalidate_range(asid, vstart, len);
+                    self.walk.invalidate_range(asid, vstart, len);
+                }
                 InvalOutcome::Flushed => {
                     self.l1.flush();
+                    self.walk.flush();
                     any_flush = true;
                 }
             }
             self.metrics.record_invalidation(self.cost.shootdown_body(outcome, len));
         }
         any_flush
+    }
+
+    /// Drop walk-hierarchy (PWC) coverage of a range without charging
+    /// or counting anything.  The multicore bus calls this on cores
+    /// whose *leaf* presence filter proved them IPI-skippable: real
+    /// hardware would still have delivered the shootdown there (a core
+    /// with paging-structure-cache entries for the mm sits in its
+    /// cpumask), but pricing that would change the leaf-driven
+    /// interconnect accounting the filter exists to optimize — so the
+    /// stale coverage dies silently instead.  Free of charge, so every
+    /// decision counter stays identical to the hierarchy-off pipeline.
+    pub fn drop_walk_coverage(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        self.walk.invalidate_range(asid, vstart, len);
     }
 
     /// OS-software-state synchronization after a mutation: schemes

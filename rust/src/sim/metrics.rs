@@ -3,6 +3,7 @@
 //! behind the `repro cpi` breakdown.
 
 use super::cost::CostModel;
+use super::walkcache::{WalkCharge, WALK_LEVEL_BUCKETS};
 
 /// Per-run counters.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -37,6 +38,22 @@ pub struct Metrics {
     /// context-switch cycles: ASID-register load, plus the
     /// flush-refill estimate for untagged (flushing) switches
     pub cycles_switch: u64,
+
+    // walk hierarchy (page-walk cache + VIPT PTE-fetch pricing); all
+    // zero unless the engine runs with a hierarchy-enabled CostModel
+    /// walks where the PWC skipped at least one upper level
+    pub pwc_hits: u64,
+    /// walks that probed a configured PWC and found no covering entry
+    pub pwc_misses: u64,
+    /// PTE fetches that hit the modeled VIPT L1 data cache
+    pub pte_fetch_hits: u64,
+    /// PTE fetches that missed to the outer hierarchy
+    pub pte_fetch_misses: u64,
+    /// PTE fetches per walk depth (index 0 = root level)
+    pub walk_level_fetches: [u64; WALK_LEVEL_BUCKETS],
+    /// fetch cycles per walk depth (a breakdown of the fetch portion
+    /// of [`Metrics::cycles_walk`])
+    pub cycles_walk_level: [u64; WALK_LEVEL_BUCKETS],
 
     // coverage sampling (Table 5)
     pub coverage_samples: u64,
@@ -174,6 +191,59 @@ impl Metrics {
         self.cycles_walk += cost.walk_base(is_huge) + cost.lat.extra_probe * charged as u64;
     }
 
+    /// [`Metrics::record_walk`] with the walk priced by the hierarchy
+    /// model instead of `walk_base`: the engine's
+    /// [`super::walkcache::WalkCache`] decided how deep the walk
+    /// started (PWC) and what each PTE fetch cost (VIPT), and this
+    /// lands the per-level and PWC/VIPT counters next to the cycles.
+    pub(crate) fn record_walk_priced(&mut self, cost: &CostModel, probes: u32, w: &WalkCharge) {
+        self.accesses += 1;
+        self.walks += 1;
+        self.aligned_probes += probes as u64;
+        let charged = if cost.lat.parallel_walk { probes.min(1) } else { probes };
+        self.cycles_walk += w.cycles + cost.lat.extra_probe * charged as u64;
+        if w.pwc_probed {
+            if w.pwc_hit {
+                self.pwc_hits += 1;
+            } else {
+                self.pwc_misses += 1;
+            }
+        }
+        self.pte_fetch_hits += w.pte_hits as u64;
+        self.pte_fetch_misses += w.pte_misses as u64;
+        for i in 0..WALK_LEVEL_BUCKETS {
+            self.walk_level_fetches[i] += w.level_fetches[i];
+            self.cycles_walk_level[i] += w.level_cycles[i];
+        }
+    }
+
+    /// PWC hit rate over the walks that probed one (0 when the PWC
+    /// was never configured).
+    pub fn pwc_hit_rate(&self) -> f64 {
+        let probed = self.pwc_hits + self.pwc_misses;
+        if probed == 0 {
+            return 0.0;
+        }
+        self.pwc_hits as f64 / probed as f64
+    }
+
+    /// VIPT L1D hit rate over all PTE fetches.
+    pub fn pte_hit_rate(&self) -> f64 {
+        let fetches = self.pte_fetch_hits + self.pte_fetch_misses;
+        if fetches == 0 {
+            return 0.0;
+        }
+        self.pte_fetch_hits as f64 / fetches as f64
+    }
+
+    /// Mean fetch cycles per walk spent at depth `level` (0 = root).
+    pub fn walk_level_cycles_per_walk(&self, level: usize) -> f64 {
+        if self.walks == 0 {
+            return 0.0;
+        }
+        self.cycles_walk_level[level.min(WALK_LEVEL_BUCKETS - 1)] as f64 / self.walks as f64
+    }
+
     pub(crate) fn record_coverage(&mut self, pages: u64) {
         self.coverage_samples += 1;
         self.coverage_sum_pages += pages;
@@ -257,8 +327,14 @@ impl Metrics {
     /// on this tuple.  The cost-model cycle counters belong here:
     /// shootdown and switch cycles accrue at schedule events, each
     /// delivered by exactly one shard (engine flushes at shard
-    /// boundaries are a simulation device and charge nothing).
-    pub fn accounting(&self) -> [u64; 13] {
+    /// boundaries are a simulation device and charge nothing).  The
+    /// walk-hierarchy counters belong here too: shard-boundary engine
+    /// flushes clear the PWC and VIPT state exactly as the serial
+    /// reference's boundary flush does, so per-level fetches and
+    /// PWC/VIPT outcomes are shard-invariant.
+    pub fn accounting(&self) -> [u64; 25] {
+        let f = &self.walk_level_fetches;
+        let c = &self.cycles_walk_level;
         [
             self.accesses,
             self.l1_hits,
@@ -273,6 +349,18 @@ impl Metrics {
             self.cycles_walk,
             self.cycles_shootdown,
             self.cycles_switch,
+            self.pwc_hits,
+            self.pwc_misses,
+            self.pte_fetch_hits,
+            self.pte_fetch_misses,
+            f[0],
+            f[1],
+            f[2],
+            f[3],
+            c[0],
+            c[1],
+            c[2],
+            c[3],
         ]
     }
 
@@ -300,6 +388,14 @@ impl Metrics {
         self.cycles_walk += o.cycles_walk;
         self.cycles_shootdown += o.cycles_shootdown;
         self.cycles_switch += o.cycles_switch;
+        self.pwc_hits += o.pwc_hits;
+        self.pwc_misses += o.pwc_misses;
+        self.pte_fetch_hits += o.pte_fetch_hits;
+        self.pte_fetch_misses += o.pte_fetch_misses;
+        for i in 0..WALK_LEVEL_BUCKETS {
+            self.walk_level_fetches[i] += o.walk_level_fetches[i];
+            self.cycles_walk_level[i] += o.cycles_walk_level[i];
+        }
         self.coverage_samples += o.coverage_samples;
         self.coverage_sum_pages += o.coverage_sum_pages;
         self.invalidations += o.invalidations;
@@ -378,6 +474,55 @@ mod tests {
         assert!((w - 19.5).abs() < 1e-12);
         assert!((s - 85.0).abs() < 1e-12);
         assert!((x - 340.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priced_walks_land_per_level_and_pwc_counters() {
+        let cost = CostModel::hierarchy();
+        let mut m = Metrics::default();
+        // a cold full-depth walk: 4 fetches, PWC miss, all VIPT misses
+        let cold = WalkCharge {
+            cycles: 160,
+            skipped: 0,
+            pwc_probed: true,
+            pwc_hit: false,
+            level_fetches: [1, 1, 1, 1],
+            level_cycles: [40, 40, 40, 40],
+            pte_hits: 0,
+            pte_misses: 4,
+        };
+        // a warm neighbour: PD hit in the PWC, leaf fetch hits the L1D
+        let warm = WalkCharge {
+            cycles: 6,
+            skipped: 3,
+            pwc_probed: true,
+            pwc_hit: true,
+            level_fetches: [0, 0, 0, 1],
+            level_cycles: [0, 0, 0, 4],
+            pte_hits: 1,
+            pte_misses: 0,
+        };
+        m.record_walk_priced(&cost, 0, &cold);
+        m.record_walk_priced(&cost, 0, &warm);
+        assert_eq!(m.walks, 2);
+        assert_eq!(m.cycles_walk, 166);
+        assert_eq!((m.pwc_hits, m.pwc_misses), (1, 1));
+        assert!((m.pwc_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!((m.pte_fetch_hits, m.pte_fetch_misses), (1, 4));
+        assert!((m.pte_hit_rate() - 0.2).abs() < 1e-12);
+        assert_eq!(m.walk_level_fetches, [1, 1, 1, 2]);
+        assert_eq!(m.cycles_walk_level, [40, 40, 40, 44]);
+        assert!((m.walk_level_cycles_per_walk(3) - 22.0).abs() < 1e-12);
+        // total_cycles sees the priced walks through cycles_walk
+        assert_eq!(m.total_cycles(), 166);
+        // merge adds every hierarchy counter
+        let mut o = Metrics::default();
+        o.record_walk_priced(&cost, 0, &warm);
+        m.merge(&o);
+        assert_eq!((m.pwc_hits, m.pwc_misses), (2, 1));
+        assert_eq!(m.walk_level_fetches, [1, 1, 1, 3]);
+        assert_eq!(m.cycles_walk_level[3], 48);
+        assert_eq!(m.pte_fetch_hits, 2);
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! switches), metrics (misses, coverage, CPI breakdown, predictor
 //! accuracy), the engine that drives L1 → L2 scheme → page-table walk
 //! per access, and the deterministic tenant scheduler that interleaves
-//! address spaces over one engine.
+//! address spaces over one engine.  The optional walk hierarchy
+//! (page-walk cache + VIPT PTE-fetch pricing) lives in [`walkcache`].
 
 pub mod asid;
 pub mod cost;
@@ -12,6 +13,7 @@ pub mod latency;
 pub mod metrics;
 pub mod multicore;
 pub mod tenants;
+pub mod walkcache;
 
 pub use asid::{AsidAllocator, AsidMode, Touch};
 pub use cost::{CostModel, InvalOutcome};
@@ -20,3 +22,4 @@ pub use latency::Latency;
 pub use metrics::Metrics;
 pub use multicore::{BusStats, IpiPolicy, PresenceFilter, ShootdownBus};
 pub use tenants::{SwitchEvent, TenantSchedule};
+pub use walkcache::{WalkCache, WalkCharge};

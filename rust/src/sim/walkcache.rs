@@ -1,0 +1,542 @@
+//! Memory-hierarchy-aware page-table walks: a modeled page-walk cache
+//! (PWC) plus a small VIPT L1-data-cache latency model for PTE
+//! fetches, so a walk's cost tracks locality instead of being a flat
+//! depth × constant.
+//!
+//! ## The PWC
+//!
+//! Hardware page-walk caches hold *upper-level* PTEs — PML4E / PDPE /
+//! PDE for a 4-level x86 walk — keyed by the VPN prefix each entry
+//! covers, so a walk starts at the first level the PWC *missed*
+//! instead of at the root.  The model mirrors that: one small
+//! fully-associative LRU array per upper depth (capacities from
+//! [`CostModel::pwc_entries`], the configurable PML4/PDP/PD split),
+//! entries tagged `(Asid, prefix)` with `prefix = vpn >> shift(depth)`
+//! under the radix-512 stride (9 VPN bits per level).  A walk probes
+//! deepest-first; a hit at depth `d` skips fetches for depths
+//! `1..=d` and charges [`CostModel::pwc_hit`] once.  Leaf PTEs are
+//! never cached here — that is the TLB's job.
+//!
+//! ## VIPT PTE-fetch pricing
+//!
+//! Each level the walker still has to fetch reads one 8-byte PTE out
+//! of a 64-byte line — 8 sibling PTEs per line — through the L1 data
+//! cache (the gem5 `calculateAccessLatency` structure).  The model
+//! keeps a small set-associative array of PTE lines: the line id is
+//! synthesized deterministically from `(asid, depth, prefix >> 3)`
+//! (page-table pages are placed deterministically in this simulation,
+//! so the virtual index equals the physical index — the VIPT property
+//! holds by construction), the set index walks consecutive lines into
+//! consecutive sets, and a fetch charges [`CostModel::pte_hit`] or
+//! [`CostModel::pte_miss`] cycles by residency.  Sequential access
+//! streams hit the same PTE lines and walk cheaply; scattered streams
+//! pay the miss price per level.
+//!
+//! ## Invalidation contract
+//!
+//! The PWC is TLB-class state: it is **not** coherent, so stale
+//! upper-level PTEs are a correctness bug, not a pricing artifact.
+//! The engine evicts covering entries on every path that kills
+//! translations — ranged shootdowns ([`WalkCache::invalidate_range`]),
+//! whole-TLB flushes and rollover broadcasts ([`WalkCache::flush`]),
+//! untagged context switches, and recycled-tag sweeps
+//! ([`WalkCache::evict_asid`]).  The VIPT array is data-cache state
+//! and *is* hardware-coherent — a munmap updates the PTE line in
+//! place, so ranged invalidations leave it untouched; only the
+//! engine-flush simulation device resets it (shard boundaries must
+//! leave no warm pricing state, or sharded != serial).
+
+use super::cost::CostModel;
+use crate::{Asid, Vpn};
+
+/// Per-depth counter buckets ([`crate::sim::Metrics`] sizes its
+/// per-level walk counters with this); walks deeper than 4 levels
+/// accumulate into the last bucket.
+pub const WALK_LEVEL_BUCKETS: usize = 4;
+
+/// VPN bits per radix level (512-entry tables).
+const LEVEL_BITS: u32 = 9;
+
+/// One priced walk: what the engine hands to the metrics recorder
+/// (`Metrics::record_walk_priced`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WalkCharge {
+    /// total walk cycles (PTE fetches + the PWC lookup charge)
+    pub cycles: u64,
+    /// upper levels served by the PWC (0 = full-depth walk)
+    pub skipped: u32,
+    /// the PWC was probed at all (capacity configured); gates the
+    /// hit/miss counters so VIPT-only configs report no PWC rate
+    pub pwc_probed: bool,
+    /// at least one upper level was served by the PWC
+    pub pwc_hit: bool,
+    /// PTE fetches per depth bucket (index 0 = root)
+    pub level_fetches: [u64; WALK_LEVEL_BUCKETS],
+    /// fetch cycles per depth bucket
+    pub level_cycles: [u64; WALK_LEVEL_BUCKETS],
+    /// PTE fetches that hit the VIPT L1D model
+    pub pte_hits: u32,
+    /// PTE fetches that missed it
+    pub pte_misses: u32,
+}
+
+/// A cached upper-level PTE: the tenant tag, the VPN prefix the entry
+/// covers, and an LRU stamp.
+#[derive(Clone, Copy, Debug)]
+struct PwcEntry {
+    asid: Asid,
+    prefix: u64,
+    stamp: u64,
+}
+
+/// One upper depth's fully-associative LRU array.
+#[derive(Clone, Debug, Default)]
+struct PwcLevel {
+    cap: usize,
+    entries: Vec<PwcEntry>,
+}
+
+impl PwcLevel {
+    fn new(cap: usize) -> Self {
+        PwcLevel { cap, entries: Vec::with_capacity(cap) }
+    }
+
+    /// Probe without touching LRU state (oracle inspection).
+    fn peek(&self, asid: Asid, prefix: u64) -> bool {
+        self.entries.iter().any(|e| e.asid == asid && e.prefix == prefix)
+    }
+
+    /// Probe and refresh the hit entry's LRU stamp.
+    fn touch(&mut self, asid: Asid, prefix: u64, stamp: u64) -> bool {
+        match self.entries.iter_mut().find(|e| e.asid == asid && e.prefix == prefix) {
+            Some(e) => {
+                e.stamp = stamp;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the LRU one at capacity.
+    fn insert(&mut self, asid: Asid, prefix: u64, stamp: u64) {
+        if self.cap == 0 || self.touch(asid, prefix, stamp) {
+            return;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.push(PwcEntry { asid, prefix, stamp });
+            return;
+        }
+        let lru = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(i, _)| i)
+            .expect("non-empty at capacity");
+        self.entries[lru] = PwcEntry { asid, prefix, stamp };
+    }
+
+    fn retain(&mut self, keep: impl Fn(&PwcEntry) -> bool) {
+        self.entries.retain(|e| keep(e));
+    }
+}
+
+/// One resident PTE line in the VIPT model.
+#[derive(Clone, Copy, Debug)]
+struct PteLine {
+    asid: Asid,
+    depth: u32,
+    group: u64,
+    stamp: u64,
+}
+
+/// The set-associative VIPT L1D latency model for PTE fetches.
+#[derive(Clone, Debug)]
+struct Vipt {
+    sets: usize,
+    ways: usize,
+    lines: Vec<Option<PteLine>>,
+}
+
+impl Vipt {
+    fn new(sets: usize, ways: usize) -> Self {
+        Vipt { sets, ways, lines: vec![None; sets * ways] }
+    }
+
+    /// The set a PTE line indexes: consecutive line groups walk
+    /// consecutive sets (the VIPT index), with depth and ASID folded
+    /// in so different tables do not all collide at set 0.
+    fn set_of(&self, asid: Asid, depth: u32, group: u64) -> usize {
+        (group as usize)
+            .wrapping_add(depth as usize * 7)
+            .wrapping_add(asid.index() * 13)
+            % self.sets
+    }
+
+    /// One PTE fetch: true on residency, filling (LRU) on a miss.
+    fn access(&mut self, asid: Asid, depth: u32, group: u64, stamp: u64) -> bool {
+        let set = self.set_of(asid, depth, group);
+        let ways = &mut self.lines[set * self.ways..(set + 1) * self.ways];
+        for slot in ways.iter_mut() {
+            if let Some(l) = slot {
+                if l.asid == asid && l.depth == depth && l.group == group {
+                    l.stamp = stamp;
+                    return true;
+                }
+            }
+        }
+        let victim = ways
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.map(|l| l.stamp).unwrap_or(0))
+            .map(|(i, _)| i)
+            .expect("ways >= 1");
+        ways[victim] = Some(PteLine { asid, depth, group, stamp });
+        false
+    }
+
+    fn flush(&mut self) {
+        self.lines.fill(None);
+    }
+
+    fn evict_asid(&mut self, asid: Asid) {
+        for slot in self.lines.iter_mut() {
+            if slot.map(|l| l.asid == asid).unwrap_or(false) {
+                *slot = None;
+            }
+        }
+    }
+}
+
+/// Per-engine walk-hierarchy state: the PWC arrays plus the VIPT PTE
+/// model, built from a [`CostModel`]'s knobs.  With all knobs at their
+/// zero defaults the cache is disabled and allocation-free, and the
+/// engine never consults it — the pre-hierarchy pipeline bit for bit.
+#[derive(Clone, Debug)]
+pub struct WalkCache {
+    enabled: bool,
+    /// full page-table depth (from [`CostModel::walk_levels`])
+    levels: u32,
+    /// upper-level PWC arrays, index = depth - 1 (depths 1..=3)
+    pwc: [PwcLevel; 3],
+    pwc_capacity: usize,
+    vipt: Option<Vipt>,
+    /// monotone LRU clock (deterministic: advances once per walk)
+    tick: u64,
+}
+
+impl WalkCache {
+    /// Build from the model's knobs; disabled (and allocation-free)
+    /// when [`CostModel::hierarchy_enabled`] is false.
+    pub fn new(cost: &CostModel) -> Self {
+        let enabled = cost.hierarchy_enabled();
+        let caps = if enabled { cost.pwc_entries } else { [0, 0, 0] };
+        let vipt = (enabled && cost.pte_sets > 0)
+            .then(|| Vipt::new(cost.pte_sets as usize, (cost.pte_ways as usize).max(1)));
+        WalkCache {
+            enabled,
+            levels: cost.walk_levels.max(1),
+            pwc: [
+                PwcLevel::new(caps[0] as usize),
+                PwcLevel::new(caps[1] as usize),
+                PwcLevel::new(caps[2] as usize),
+            ],
+            pwc_capacity: caps.iter().map(|&c| c as usize).sum(),
+            vipt,
+            tick: 0,
+        }
+    }
+
+    /// Whether the engine should price walks through this model at
+    /// all; false reproduces the flat [`CostModel::walk_base`] path.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// VPN prefix shift of the entry at 1-based `depth`: the root
+    /// entry covers the widest prefix, the leaf (depth = `levels`)
+    /// covers the page itself.
+    fn shift(&self, depth: u32) -> u32 {
+        LEVEL_BITS * self.levels.saturating_sub(depth)
+    }
+
+    /// Price one walk for `vpn` under `asid` (huge-page walks stop a
+    /// level short), updating PWC and VIPT state.
+    pub fn charge(&mut self, asid: Asid, vpn: Vpn, is_huge: bool, cost: &CostModel) -> WalkCharge {
+        self.tick += 1;
+        let stamp = self.tick;
+        // effective depth: the leaf of a huge-page walk is the PD entry
+        let depth = self.levels.saturating_sub(is_huge as u32).max(1);
+        let mut w = WalkCharge { pwc_probed: self.pwc_capacity > 0, ..WalkCharge::default() };
+
+        // deepest-first PWC probe over the cacheable upper levels
+        if w.pwc_probed {
+            let deepest = depth.saturating_sub(1).min(3);
+            for d in (1..=deepest).rev() {
+                let prefix = vpn >> self.shift(d);
+                if self.pwc[(d - 1) as usize].touch(asid, prefix, stamp) {
+                    w.skipped = d;
+                    break;
+                }
+            }
+            w.pwc_hit = w.skipped > 0;
+        }
+
+        // fetch the remaining levels through the VIPT model (or the
+        // flat per-level constant when the VIPT knobs are off)
+        for d in (w.skipped + 1)..=depth {
+            let hit = match &mut self.vipt {
+                Some(v) => {
+                    let group = vpn >> (self.shift(d) + 3); // 8 PTEs per 64B line
+                    let hit = v.access(asid, d, group, stamp);
+                    if hit {
+                        w.pte_hits += 1;
+                    } else {
+                        w.pte_misses += 1;
+                    }
+                    Some(hit)
+                }
+                None => None,
+            };
+            let cycles = match hit {
+                Some(true) => cost.pte_hit,
+                Some(false) => cost.pte_miss,
+                None => cost.walk_level,
+            };
+            let bucket = ((d - 1) as usize).min(WALK_LEVEL_BUCKETS - 1);
+            w.level_fetches[bucket] += 1;
+            w.level_cycles[bucket] += cycles;
+        }
+        w.cycles = w.level_cycles.iter().sum::<u64>() + if w.pwc_hit { cost.pwc_hit } else { 0 };
+
+        // the walk just read every upper entry it fetched: cache them
+        for d in (w.skipped + 1)..depth.min(4) {
+            let prefix = vpn >> self.shift(d);
+            self.pwc[(d - 1) as usize].insert(asid, prefix, stamp);
+        }
+        w
+    }
+
+    /// Deepest cached upper depth covering `(asid, vpn)` without
+    /// touching LRU state; 0 = no coverage.  The stale-upper-PTE
+    /// oracle tests assert this is 0 for every page of an invalidated
+    /// range.
+    pub fn probe_depth(&self, asid: Asid, vpn: Vpn) -> u32 {
+        let deepest = self.levels.saturating_sub(1).min(3);
+        for d in (1..=deepest).rev() {
+            if self.pwc[(d - 1) as usize].peek(asid, vpn >> self.shift(d)) {
+                return d;
+            }
+        }
+        0
+    }
+
+    /// Whether any PWC entry covers `(asid, vpn)`.
+    pub fn covers(&self, asid: Asid, vpn: Vpn) -> bool {
+        self.probe_depth(asid, vpn) > 0
+    }
+
+    /// Live PWC entries (oracle inspection: rollover must leave 0).
+    pub fn resident(&self) -> usize {
+        self.pwc.iter().map(|l| l.entries.len()).sum()
+    }
+
+    /// Shootdown contract: a munmap/remap of `[vstart, vstart+len)`
+    /// may have freed page-table pages, so every PWC entry of `asid`
+    /// whose covered VA range intersects the dead range is evicted.
+    /// The VIPT array stays: data caches are hardware-coherent, the
+    /// updated PTE lines remain validly resident.
+    pub fn invalidate_range(&mut self, asid: Asid, vstart: Vpn, len: u64) {
+        if !self.enabled || len == 0 {
+            return;
+        }
+        let last = vstart + (len - 1);
+        let deepest = self.levels.saturating_sub(1).min(3);
+        for d in 1..=deepest {
+            let s = self.shift(d);
+            let (lo, hi) = (vstart >> s, last >> s);
+            self.pwc[(d - 1) as usize].retain(|e| e.asid != asid || e.prefix < lo || e.prefix > hi);
+        }
+    }
+
+    /// Drop every entry of one tenant tag (recycled-lease sweeps).
+    /// The VIPT lines go too: a recycled tag means a different page
+    /// table behind the same synthesized line ids.
+    pub fn evict_asid(&mut self, asid: Asid) {
+        if !self.enabled {
+            return;
+        }
+        for l in &mut self.pwc {
+            l.retain(|e| e.asid != asid);
+        }
+        if let Some(v) = &mut self.vipt {
+            v.evict_asid(asid);
+        }
+    }
+
+    /// Whole-TLB flush / engine shard boundary: clear the PWC *and*
+    /// the VIPT pricing state, so a cold shard engine and the serial
+    /// reference flushed at the same boundary agree on every cycle.
+    pub fn flush(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        for l in &mut self.pwc {
+            l.entries.clear();
+        }
+        if let Some(v) = &mut self.vipt {
+            v.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hier() -> CostModel {
+        CostModel::hierarchy()
+    }
+
+    #[test]
+    fn disabled_model_builds_empty_and_stays_inert() {
+        let mut wc = WalkCache::new(&CostModel::zero());
+        assert!(!wc.enabled());
+        assert_eq!(wc.resident(), 0);
+        wc.invalidate_range(Asid::ZERO, 0, 100);
+        wc.flush();
+        assert!(!wc.covers(Asid::ZERO, 5));
+        // realistic() leaves the hierarchy off too
+        assert!(!WalkCache::new(&CostModel::realistic()).enabled());
+    }
+
+    #[test]
+    fn first_walk_is_full_depth_then_pwc_skips() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        let a = Asid::ZERO;
+        let w1 = wc.charge(a, 42, false, &cost);
+        assert!(w1.pwc_probed && !w1.pwc_hit);
+        assert_eq!(w1.skipped, 0);
+        assert_eq!(w1.level_fetches, [1, 1, 1, 1], "cold walk fetches all 4 levels");
+        // the upper entries are now cached: a neighbour page under the
+        // same PD entry skips straight to the leaf fetch
+        let w2 = wc.charge(a, 43, false, &cost);
+        assert!(w2.pwc_hit);
+        assert_eq!(w2.skipped, 3, "PD entry hit: only the leaf PTE is fetched");
+        assert_eq!(w2.level_fetches, [0, 0, 0, 1]);
+        assert!(w2.cycles < w1.cycles, "locality must be cheaper");
+        // a page in a different PD but same PDP skips 2 levels
+        let w3 = wc.charge(a, 42 + (1 << LEVEL_BITS), false, &cost);
+        assert_eq!(w3.skipped, 2);
+        assert_eq!(w3.level_fetches, [0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn huge_walk_stops_at_the_pd_level() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        let w = wc.charge(Asid::ZERO, 42, true, &cost);
+        assert_eq!(w.level_fetches, [1, 1, 1, 0], "huge leaf is the depth-3 PD entry");
+        // the huge walk cached PML4E + PDPE (not its own leaf): a 4KB
+        // walk under the same PDP resumes at the PD fetch
+        let w2 = wc.charge(Asid::ZERO, 42, false, &cost);
+        assert_eq!(w2.skipped, 2);
+        assert_eq!(w2.level_fetches, [0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn pwc_is_asid_tagged() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        wc.charge(Asid(1), 42, false, &cost);
+        assert!(wc.covers(Asid(1), 42));
+        assert!(!wc.covers(Asid(2), 42), "another tenant's walk must not hit");
+        let w = wc.charge(Asid(2), 42, false, &cost);
+        assert_eq!(w.skipped, 0);
+        wc.evict_asid(Asid(1));
+        assert!(!wc.covers(Asid(1), 42));
+        assert!(wc.covers(Asid(2), 42), "sweep is per-tag");
+    }
+
+    #[test]
+    fn vipt_prices_locality() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        let a = Asid::ZERO;
+        wc.charge(a, 0, false, &cost);
+        // sibling leaf PTEs share a 64B line: vpn 1..8 leaf fetches hit
+        let mut hits = 0;
+        for v in 1..8u64 {
+            let w = wc.charge(a, v, false, &cost);
+            hits += w.pte_hits;
+            assert_eq!(w.pte_misses, 0, "vpn {v} shares the cold walk's PTE lines");
+        }
+        assert_eq!(hits, 7);
+        // a far-away page misses its leaf line
+        let w = wc.charge(a, 1 << 20, false, &cost);
+        assert!(w.pte_misses > 0);
+    }
+
+    #[test]
+    fn invalidate_range_evicts_only_covering_entries() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        let a = Asid::ZERO;
+        let far = 1u64 << 30; // different PML4 entry
+        wc.charge(a, 42, false, &cost);
+        wc.charge(a, far, false, &cost);
+        wc.invalidate_range(a, 0, 512);
+        assert!(!wc.covers(a, 42), "dead range must lose all PWC coverage");
+        assert!(wc.covers(a, far), "unrelated prefixes survive");
+        // other tenants' entries survive a ranged kill
+        wc.charge(Asid(7), 42, false, &cost);
+        wc.invalidate_range(a, 0, 512);
+        assert!(wc.covers(Asid(7), 42));
+        // zero-length is a no-op
+        wc.invalidate_range(a, far, 0);
+        assert!(wc.covers(a, far));
+    }
+
+    #[test]
+    fn flush_clears_everything() {
+        let cost = hier();
+        let mut wc = WalkCache::new(&cost);
+        wc.charge(Asid(1), 42, false, &cost);
+        wc.charge(Asid(2), 1 << 28, false, &cost);
+        assert!(wc.resident() > 0);
+        wc.flush();
+        assert_eq!(wc.resident(), 0);
+        let w = wc.charge(Asid(1), 42, false, &cost);
+        assert_eq!(w.skipped, 0, "post-flush walks are cold");
+        assert_eq!(w.pte_hits, 0, "VIPT pricing state resets too");
+    }
+
+    #[test]
+    fn lru_eviction_bounds_capacity() {
+        // PD-only cache (the upper arrays would otherwise keep covering
+        // every probe through the shared PML4/PDP prefixes)
+        let cost = CostModel { pwc_entries: [0, 0, 2], pte_sets: 0, ..CostModel::hierarchy() };
+        let mut wc = WalkCache::new(&cost);
+        let a = Asid::ZERO;
+        // 3 distinct PD prefixes through a 2-entry PD cache
+        for i in 0..3u64 {
+            wc.charge(a, i << LEVEL_BITS, false, &cost);
+        }
+        assert!(wc.pwc[2].entries.len() <= 2);
+        assert!(!wc.covers(a, 0), "the oldest PD entry was evicted");
+        assert!(wc.covers(a, 2 << LEVEL_BITS));
+        assert!(wc.covers(a, 1 << LEVEL_BITS), "the survivors stay probeable");
+    }
+
+    #[test]
+    fn pwc_only_config_charges_walk_level_per_fetch() {
+        let cost = CostModel { pte_sets: 0, ..CostModel::hierarchy() };
+        let mut wc = WalkCache::new(&cost);
+        let w = wc.charge(Asid::ZERO, 42, false, &cost);
+        assert_eq!(w.cycles, 4 * cost.walk_level, "VIPT off: flat per-level constant");
+        let w2 = wc.charge(Asid::ZERO, 43, false, &cost);
+        assert_eq!(w2.cycles, cost.walk_level + cost.pwc_hit);
+    }
+}

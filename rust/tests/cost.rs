@@ -6,8 +6,8 @@
 //! the check_cases harness.
 
 use katlb::coordinator::{
-    drive_tenant_span, run_cell, run_cell_shard, run_tenant_cell, run_tenant_cell_shard,
-    BenchContext, Config, SchemeKind, Shard, TenantMixCtx,
+    drive_tenant_span, run_cell, run_cell_shard, run_multicore_cell, run_tenant_cell,
+    run_tenant_cell_shard, BenchContext, Config, McParams, SchemeKind, Shard, TenantMixCtx,
 };
 use katlb::mem::addrspace::{AddressSpace, MutationEvent, MutationOp, MutationSchedule, SpaceView};
 use katlb::mem::histogram::ContigHistogram;
@@ -360,6 +360,160 @@ fn sharded_equals_serial_cycles_with_boundary_switch() {
     }
 }
 
+/// Every hierarchy counter a run may populate, summed — zero iff the
+/// walk hierarchy never engaged.
+fn hierarchy_counters(m: &Metrics) -> u64 {
+    m.pwc_hits
+        + m.pwc_misses
+        + m.pte_fetch_hits
+        + m.pte_fetch_misses
+        + m.walk_level_fetches.iter().sum::<u64>()
+        + m.cycles_walk_level.iter().sum::<u64>()
+}
+
+/// The walk-hierarchy differential: with the PWC/VIPT knobs at their
+/// zero defaults (both the zero-cost and `realistic()` models) every
+/// hierarchy counter stays zero and walks go down the unchanged
+/// `record_walk` path — the PR 9 pipeline bit for bit.  Turning the
+/// hierarchy ON (`CostModel::hierarchy`) reprices walks but shares
+/// the flush-vs-ranged decision knobs with `realistic()`, so every
+/// simulation *decision* — misses, walks, invalidations, per-tenant
+/// stats, phase marks — is bit-identical; only cycles move.  Checked
+/// across the frozen, churn, tenant and 4-core drivers for all seven
+/// schemes.
+#[test]
+fn hierarchy_off_is_inert_and_on_changes_no_decision() {
+    let mut real_cfg = base_cfg();
+    real_cfg.cost = CostModel::realistic();
+    let mut hier_cfg = base_cfg();
+    hier_cfg.cost = CostModel::hierarchy();
+    assert!(!real_cfg.cost.hierarchy_enabled() && hier_cfg.cost.hierarchy_enabled());
+
+    // --- frozen path ---
+    let mk = |cfg: &Config| {
+        Arc::new(BenchContext::build(benchmark("gromacs").unwrap(), cfg, None).unwrap())
+    };
+    let (z_ctx, r_ctx, h_ctx) = (mk(&base_cfg()), mk(&real_cfg), mk(&hier_cfg));
+    for kind in seven() {
+        let z = run_cell(&z_ctx, kind);
+        let r = run_cell(&r_ctx, kind);
+        let h = run_cell(&h_ctx, kind);
+        assert_eq!(hierarchy_counters(&z.metrics), 0, "{}: zero model", kind.label());
+        assert_eq!(hierarchy_counters(&r.metrics), 0, "{}: realistic model", kind.label());
+        assert!(
+            h.metrics.pwc_hits + h.metrics.pwc_misses > 0,
+            "{}: hierarchy walks must probe the PWC",
+            kind.label()
+        );
+        assert!(h.metrics.walk_level_fetches[0] > 0, "{}: root fetches land", kind.label());
+        assert_eq!(
+            decisions(&r.metrics),
+            decisions(&h.metrics),
+            "{}: hierarchy pricing must not change frozen-path decisions",
+            kind.label()
+        );
+        // the repriced walk cycles are the whole difference
+        assert_ne!(r.metrics.cycles_walk, h.metrics.cycles_walk, "{}", kind.label());
+        assert_eq!(r.metrics.cycles_shootdown, h.metrics.cycles_shootdown, "{}", kind.label());
+    }
+
+    // --- churn path (events on shard boundaries, verify ON) ---
+    let mk_churn = |cfg: &Config| {
+        let mut ctx = BenchContext::build(benchmark("astar").unwrap(), cfg, None).unwrap();
+        ctx.schedule = boundary_schedule(ctx.trace.len);
+        Arc::new(ctx)
+    };
+    let (r_ctx, h_ctx) = (mk_churn(&real_cfg), mk_churn(&hier_cfg));
+    for kind in seven() {
+        let r = run_cell(&r_ctx, kind);
+        let h = run_cell(&h_ctx, kind);
+        assert_eq!(hierarchy_counters(&r.metrics), 0, "{}", kind.label());
+        assert!(h.metrics.pwc_hits > 0, "{}: churn rewalks must hit the PWC", kind.label());
+        assert_eq!(
+            decisions(&r.metrics),
+            decisions(&h.metrics),
+            "{}: hierarchy pricing must not change churn-path decisions",
+            kind.label()
+        );
+    }
+
+    // --- tenant path (switches on shard boundaries + tenant churn) ---
+    let (r_mix, h_mix) = (churny_mix(&real_cfg), churny_mix(&hier_cfg));
+    for kind in seven() {
+        let r = run_tenant_cell(&r_mix, kind);
+        let h = run_tenant_cell(&h_mix, kind);
+        assert_eq!(hierarchy_counters(&r.metrics), 0, "{}", kind.label());
+        assert!(h.metrics.pwc_hits + h.metrics.pwc_misses > 0, "{}", kind.label());
+        assert_eq!(
+            decisions(&r.metrics),
+            decisions(&h.metrics),
+            "{}: hierarchy pricing must not change tenant-path decisions",
+            kind.label()
+        );
+    }
+
+    // --- 4-core path (per-core PWC state, IPI shootdowns, verify ON) ---
+    let mk4 = |cfg: &Config| {
+        let mut ctx = BenchContext::build(benchmark("astar").unwrap(), cfg, None).unwrap();
+        ctx.schedule = boundary_schedule(ctx.trace.len);
+        ctx
+    };
+    let p = McParams {
+        cores: 4,
+        policy: katlb::sim::IpiPolicy::PerEvent,
+        workers: 2,
+        verify: true,
+    };
+    let (r_ctx, h_ctx) = (mk4(&real_cfg), mk4(&hier_cfg));
+    for kind in seven() {
+        let r = run_multicore_cell(&r_ctx, kind, &p);
+        let h = run_multicore_cell(&h_ctx, kind, &p);
+        assert_eq!(hierarchy_counters(&r.cell.metrics), 0, "{}", kind.label());
+        assert!(h.cell.metrics.pwc_hits + h.cell.metrics.pwc_misses > 0, "{}", kind.label());
+        assert_eq!(
+            decisions(&r.cell.metrics),
+            decisions(&h.cell.metrics),
+            "{}: hierarchy pricing must not change 4-core decisions",
+            kind.label()
+        );
+        assert_eq!(r.bus.ipis, h.bus.ipis, "{}: interconnect traffic identical", kind.label());
+    }
+}
+
+/// Sharded == serial holds under the full hierarchy model too: the
+/// PWC and the VIPT PTE cache are flushed at shard boundaries in both
+/// worlds (shard engines start cold; the serial reference flushes),
+/// so every accounting counter — the new hierarchy counters included —
+/// merges shard-invariantly.
+#[test]
+fn sharded_equals_serial_under_hierarchy() {
+    let mut cfg = base_cfg();
+    cfg.cost = CostModel::hierarchy();
+    let mut ctx = BenchContext::build(benchmark("gromacs").unwrap(), &cfg, None).unwrap();
+    ctx.schedule = boundary_schedule(ctx.trace.len);
+    let ctx = Arc::new(ctx);
+    let shards = 4usize;
+    for kind in seven() {
+        let mut merged: Option<Metrics> = None;
+        for index in 0..shards {
+            let r = run_cell_shard(&ctx, kind, Shard { index, count: shards });
+            match &mut merged {
+                None => merged = Some(r.metrics),
+                Some(acc) => acc.merge(&r.metrics),
+            }
+        }
+        let merged = merged.unwrap();
+        let whole = run_cell_shard(&ctx, kind, Shard::WHOLE);
+        assert!(merged.pwc_hits + merged.pwc_misses > 0, "{}", kind.label());
+        assert_eq!(
+            merged.accounting(),
+            whole.metrics.accounting(),
+            "{}: hierarchy counters must be shard-invariant",
+            kind.label()
+        );
+    }
+}
+
 /// `Metrics::merge` cycle-counter additivity, via the check_cases
 /// harness: for random counter loads, every accounting counter — the
 /// new cycle counters included — and `total_cycles` add exactly.
@@ -380,6 +534,14 @@ fn metrics_merge_adds_cycle_counters() {
             m.cycles_walk = rng.below(1 << 30);
             m.cycles_shootdown = rng.below(1 << 30);
             m.cycles_switch = rng.below(1 << 30);
+            m.pwc_hits = rng.below(1 << 16);
+            m.pwc_misses = rng.below(1 << 16);
+            m.pte_fetch_hits = rng.below(1 << 16);
+            m.pte_fetch_misses = rng.below(1 << 16);
+            for i in 0..m.walk_level_fetches.len() {
+                m.walk_level_fetches[i] = rng.below(1 << 16);
+                m.cycles_walk_level[i] = rng.below(1 << 30);
+            }
         };
         let mut a = Metrics::default();
         let mut b = Metrics::default();

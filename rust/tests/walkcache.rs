@@ -1,0 +1,271 @@
+//! Walk-hierarchy correctness tests: THE stale-upper-PTE oracle — a
+//! munmap/remap followed by a walk must never hit a page-walk-cache
+//! entry covering the dead range — exercised per scheme under churn,
+//! under ASID generation rollover, through the coalesced-IPI batch
+//! path, and across the flush-vs-ranged decision boundary.  The
+//! engine runs with `verify = true` throughout, so a stale *leaf*
+//! translation panics in the engine's own check; these tests pin the
+//! upper-level (PWC) half of the contract, which no leaf check sees.
+
+use katlb::coordinator::SchemeKind;
+use katlb::mem::addrspace::{AddressSpace, MutationOp};
+use katlb::mem::mapgen::DemandProfile;
+use katlb::mem::mapping::MemoryMapping;
+use katlb::prng::Rng;
+use katlb::sim::{AsidAllocator, AsidMode, CostModel, Engine};
+use katlb::Asid;
+use katlb::Vpn;
+
+/// All seven contenders, as the cpi experiment runs them.
+fn seven() -> [SchemeKind; 7] {
+    [
+        SchemeKind::Base,
+        SchemeKind::Thp,
+        SchemeKind::Colt,
+        SchemeKind::Cluster,
+        SchemeKind::Rmm,
+        SchemeKind::AnchorDynamic,
+        SchemeKind::KAligned(2),
+    ]
+}
+
+/// THE stale-upper-PTE oracle under churn: after every mutation's
+/// shootdown, no PWC entry may cover any page of the dead ranges —
+/// a covering entry would let a later walk skip through a freed
+/// page-table subtree.  Checked for every scheme with verification ON
+/// (the leaf half of the same contract).
+#[test]
+fn no_stale_upper_pte_after_churn_for_every_scheme() {
+    let profile = DemandProfile::generic(1 << 12);
+    let ops = [
+        MutationOp::Remap { selector: 1 },
+        MutationOp::Munmap { selector: 4 },
+        MutationOp::Mmap { pages: 200 },
+        MutationOp::Remap { selector: 0 },
+        MutationOp::Munmap { selector: 9 },
+        MutationOp::Remap { selector: 6 },
+    ];
+    let cost = CostModel::hierarchy();
+    for kind in seven() {
+        let mut aspace = AddressSpace::from_demand(&profile, 77);
+        if kind.uses_thp() {
+            aspace.promote_thp();
+        }
+        let scheme = kind.build(aspace.mapping(), aspace.hist());
+        let mut eng = Engine::new(scheme).with_cost(cost);
+        eng.verify = true;
+        let mut rng = Rng::new(kind.label().len() as u64);
+        let mut warm = |eng: &mut Engine<_>, aspace: &AddressSpace| {
+            let pages = aspace.mapping().pages();
+            for _ in 0..4_000 {
+                let v = pages[rng.below(pages.len() as u64) as usize].0;
+                eng.access(v, aspace.view());
+            }
+        };
+        warm(&mut eng, &aspace);
+        assert!(
+            eng.walk_cache().resident() > 0,
+            "{}: warm walks must populate the PWC",
+            kind.label()
+        );
+        for op in &ops {
+            let ranges = aspace.apply(op);
+            for &(v, l) in &ranges {
+                eng.invalidate_range(v, l);
+            }
+            // the oracle: before any refill walk, no page of a dead
+            // range may still be covered by an upper-level PWC entry
+            for &(v, l) in &ranges {
+                for d in 0..l.min(128) {
+                    assert!(
+                        !eng.walk_cache().covers(Asid::ZERO, v + d),
+                        "{}: PWC still covers invalidated page {:#x} after {op:?}",
+                        kind.label(),
+                        v + d
+                    );
+                }
+            }
+            aspace.check_invariants().unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+            // sweep the mutated ranges (verify catches stale leaves),
+            // then keep the mixed stream churning the PWC
+            for &(v, l) in &ranges {
+                for d in 0..l.min(64) {
+                    eng.access(v + d, aspace.view());
+                }
+            }
+            warm(&mut eng, &aspace);
+        }
+        assert!(eng.metrics().invalidations > 0, "{}", kind.label());
+        assert!(
+            eng.metrics().pwc_hits > 0,
+            "{}: the churn stream must produce PWC hits",
+            kind.label()
+        );
+    }
+}
+
+/// ASID generation rollover is a broadcast flush: the PWC must come
+/// out empty — a surviving entry would be stale state under a
+/// recycled tag — and recycled-lease sweeps must leave no entry of
+/// the swept tag.
+#[test]
+fn rollover_and_recycled_leases_leave_no_pwc_entries() {
+    let profile = DemandProfile::generic(1 << 10);
+    let spaces: Vec<AddressSpace> = (0..3)
+        .map(|s| AddressSpace::from_demand(&profile, 100 + s))
+        .collect();
+    let cost = CostModel::hierarchy();
+    for kind in seven() {
+        let scheme = kind.build(spaces[0].mapping(), spaces[0].hist());
+        let mut eng = Engine::new(scheme)
+            .with_cost(cost)
+            .with_allocator(AsidAllocator::new(4, AsidMode::Rollover));
+        eng.verify = true;
+        if let Some(a) = eng.seed_tenant(0) {
+            eng.refresh_lane(a, spaces[0].view());
+        }
+        let mut rng = Rng::new(7);
+        let mut rollovers_seen = 0u64;
+        // 24 tenants over 4 slots force multiple generation rollovers
+        for t in 0..24usize {
+            let prof = t % spaces.len();
+            let before = eng.alloc_stats().unwrap().0;
+            if let Some(a) = eng.switch_to_tenant(t) {
+                eng.refresh_lane(a, spaces[prof].view());
+            }
+            let (rolls, recycles) = eng.alloc_stats().unwrap();
+            if rolls > before {
+                rollovers_seen = rolls;
+                assert_eq!(
+                    eng.walk_cache().resident(),
+                    0,
+                    "{}: rollover at tenant {t} must flush the PWC",
+                    kind.label()
+                );
+            } else if recycles > 0 {
+                // recycled-lease sweeps keep the PWC inside its
+                // configured capacity (4 + 8 + 32 entries) — a sweep
+                // that missed entries would let dead tags accumulate
+                assert!(eng.walk_cache().resident() <= 44, "{}", kind.label());
+            }
+            let pages = spaces[prof].mapping().pages();
+            for _ in 0..200 {
+                let v = pages[rng.below(pages.len() as u64) as usize].0;
+                eng.access(v, spaces[prof].view());
+            }
+        }
+        assert!(rollovers_seen > 0, "{}: 24 tenants over 4 slots must roll over", kind.label());
+        assert!(eng.metrics().pwc_hits + eng.metrics().pwc_misses > 0, "{}", kind.label());
+    }
+}
+
+/// A flat two-region mapping with the regions in different PML4
+/// subtrees, so one region's shootdown can never evict the other's
+/// upper-level entries by prefix overlap.
+fn two_region_space() -> AddressSpace {
+    const FAR: Vpn = 1 << 30;
+    let mut pages: Vec<(Vpn, u64)> = (0..64u64).map(|v| (v, 1000 + v)).collect();
+    pages.extend((0..64u64).map(|v| (FAR + v, 2000 + v)));
+    AddressSpace::from_mapping(MemoryMapping::new(pages))
+}
+
+/// The coalesced-IPI batch path evicts covering PWC entries per range
+/// exactly like the per-event path, and a flush-class outcome inside
+/// a batch clears everything.
+#[test]
+fn batched_shootdowns_honour_the_pwc_contract() {
+    const FAR: Vpn = 1 << 30;
+    let cost = CostModel::hierarchy();
+    for kind in seven() {
+        let aspace = two_region_space();
+        let scheme = kind.build(aspace.mapping(), aspace.hist());
+        let mut eng = Engine::new(scheme).with_cost(cost);
+        eng.verify = true;
+        for v in 0..64u64 {
+            eng.access(v, aspace.view());
+            eng.access(FAR + v, aspace.view());
+        }
+        assert!(eng.walk_cache().covers(Asid::ZERO, 0), "{}", kind.label());
+        assert!(eng.walk_cache().covers(Asid::ZERO, FAR), "{}", kind.label());
+
+        // ranged batch over the low region only: 64 pages * 40 c/page
+        // stays under the 20k flush-refill, so the outcome is Ranged
+        let flushed = eng.invalidate_batch_as(&[(Asid::ZERO, 0, 64)]);
+        assert!(!flushed, "{}: 64 pages must stay ranged under hierarchy()", kind.label());
+        for v in 0..64u64 {
+            assert!(
+                !eng.walk_cache().covers(Asid::ZERO, v),
+                "{}: batch left PWC coverage over dead page {v:#x}",
+                kind.label()
+            );
+        }
+        assert!(
+            eng.walk_cache().covers(Asid::ZERO, FAR),
+            "{}: the far subtree must survive a ranged batch",
+            kind.label()
+        );
+
+        // a huge range in the batch prefers the flush, which clears
+        // the whole PWC (the far region included)
+        let flushed = eng.invalidate_batch_as(&[(Asid::ZERO, FAR, 1 << 12)]);
+        assert!(flushed, "{}: 4096 pages must flush under hierarchy()", kind.label());
+        assert_eq!(eng.walk_cache().resident(), 0, "{}", kind.label());
+    }
+}
+
+/// A leaf-filtered multicore delivery still sheds upper-level PWC
+/// coverage: a core that accessed only vpn 0 holds no leaf entries
+/// for [5, 10) — the presence filter skips the IPI — but its PD
+/// entry covers those pages, and the bus's uncharged coverage drop
+/// (`Engine::drop_walk_coverage`) must kill it without moving a
+/// single counter.
+#[test]
+fn filtered_cores_still_lose_pwc_coverage() {
+    let cost = CostModel::hierarchy();
+    let kind = SchemeKind::Base;
+    let aspace = two_region_space();
+    let scheme = kind.build(aspace.mapping(), aspace.hist());
+    let mut eng = Engine::new(scheme).with_cost(cost);
+    eng.verify = true;
+    eng.access(0, aspace.view());
+    assert!(
+        eng.walk_cache().covers(Asid::ZERO, 5),
+        "the PD entry of vpn 0 covers its whole 512-page group"
+    );
+    let before = eng.metrics().clone();
+    eng.drop_walk_coverage(Asid::ZERO, 5, 5);
+    assert!(!eng.walk_cache().covers(Asid::ZERO, 5));
+    assert_eq!(eng.metrics(), &before, "the drop must charge and count nothing");
+}
+
+/// The per-event shootdown path across the flush-vs-ranged decision
+/// boundary: both outcomes kill all PWC coverage of the dead range,
+/// and the ranged one spares unrelated subtrees.
+#[test]
+fn ranged_and_flushed_shootdowns_both_kill_coverage() {
+    const FAR: Vpn = 1 << 30;
+    let cost = CostModel::hierarchy();
+    let kind = SchemeKind::KAligned(2);
+    let aspace = two_region_space();
+    let scheme = kind.build(aspace.mapping(), aspace.hist());
+    let mut eng = Engine::new(scheme).with_cost(cost);
+    eng.verify = true;
+    for v in 0..64u64 {
+        eng.access(v, aspace.view());
+        eng.access(FAR + v, aspace.view());
+    }
+
+    // ranged: precise eviction, far subtree survives
+    eng.invalidate_range(0, 64);
+    assert!(!eng.walk_cache().covers(Asid::ZERO, 0));
+    assert!(eng.walk_cache().covers(Asid::ZERO, FAR));
+
+    // rebuild coverage, then cross the boundary: flush kills all
+    for v in 0..64u64 {
+        eng.access(v, aspace.view());
+    }
+    assert!(eng.walk_cache().covers(Asid::ZERO, 0));
+    eng.invalidate_range(FAR, 1 << 12);
+    assert_eq!(eng.walk_cache().resident(), 0, "flush-class shootdown clears the PWC");
+    assert!(!eng.walk_cache().covers(Asid::ZERO, 0));
+}
